@@ -1,0 +1,150 @@
+//! End-to-end driver: the paper's evaluation (§4, Figs 11–12).
+//!
+//! Runs the Adjoint Tomography inversion workflow on a real (small)
+//! workload through the full stack — Pallas-kernel artifacts executed
+//! by the Rust runtime, orchestrated by the Emerald engine, with steps
+//! 2–4 offloaded to the simulated cloud — twice per mesh: offloading
+//! disabled (local cluster only) vs enabled. Reports the per-iteration
+//! misfit curve and the execution-time reduction.
+//!
+//! ```bash
+//! cargo run --release --example adjoint_tomography -- \
+//!     --mesh small --iters 5 [--no-offload] [--transport tcp]
+//! ```
+
+use std::sync::Arc;
+
+use emerald::cli::Args;
+use emerald::cloud::Platform;
+use emerald::engine::{ActivityRegistry, Engine, Event, Services};
+use emerald::migration::{serve_tcp, CloudWorker, DataPolicy, MigrationManager, TcpTransport};
+use emerald::partitioner;
+use emerald::runtime::Runtime;
+use emerald::{artifact_dir, at};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["no-offload", "verbose"]);
+    args.check_known(&["mesh", "iters", "alpha0", "transport"], &["no-offload", "verbose"])?;
+    let mesh = args.opt("mesh", "demo");
+    let iters: usize = args.opt_parse("iters", 5)?;
+    let alpha0: f64 = args.opt_parse("alpha0", 0.3)?;
+    let transport = args.opt("transport", "inproc");
+
+    println!("Emerald / Adjoint Tomography — mesh={mesh}, {iters} iterations");
+    let runtime = Arc::new(Runtime::new(artifact_dir())?);
+    println!("PJRT platform: {}", runtime.platform());
+
+    let mut cfg = at::InversionConfig::new(&mesh);
+    cfg.iterations = iters;
+    cfg.alpha0 = alpha0;
+    let wf = at::inversion_workflow(&cfg)?;
+    let (partitioned, prep) = partitioner::partition(&wf)?;
+    println!(
+        "partitioner: {} steps -> {} steps, {} migration points",
+        prep.steps_before, prep.steps_after, prep.migration_points
+    );
+
+    let mut registry = ActivityRegistry::new();
+    at::register_activities(&mut registry);
+    let registry = Arc::new(registry);
+
+    let run = |offload: bool| -> anyhow::Result<(f64, Vec<String>)> {
+        let platform = Platform::paper_testbed();
+        let services = Services::with_runtime(runtime.clone(), platform);
+        let mut mgr_handle = None;
+        let engine = if offload {
+            let mgr = match transport.as_str() {
+                "tcp" => {
+                    let worker = CloudWorker::new(services.clone(), registry.clone());
+                    let addr = serve_tcp(worker)?;
+                    println!("cloud worker listening on {addr}");
+                    MigrationManager::new(
+                        services.clone(),
+                        Box::new(TcpTransport::connect(addr)?),
+                        DataPolicy::Mdss,
+                    )
+                }
+                _ => MigrationManager::in_proc(
+                    services.clone(),
+                    registry.clone(),
+                    DataPolicy::Mdss,
+                ),
+            };
+            mgr_handle = Some(mgr.clone());
+            Engine::new(registry.clone(), services.clone()).with_offload(mgr)
+        } else {
+            Engine::new(registry.clone(), services.clone())
+        };
+        let report = engine.run(&partitioned)?;
+        if let Some(mgr) = &mgr_handle {
+            let st = mgr.stats();
+            let ledger = services.platform.network.ledger();
+            println!(
+                "  migration: {} offloads, {} data syncs, {} fresh hits, \
+                 sync_sim={:.2}s, protocol={}B; WAN: {} transfers, {:.1} MiB, {:.2}s sim",
+                st.offloads,
+                st.data_syncs,
+                st.data_hits,
+                st.sync_sim.as_secs_f64(),
+                st.protocol_bytes,
+                ledger.transfers,
+                ledger.bytes as f64 / (1024.0 * 1024.0),
+                ledger.sim_time.as_secs_f64(),
+            );
+        }
+        if args.flag("verbose") {
+            let mut by_step: std::collections::BTreeMap<String, (u64, u64)> = Default::default();
+            for e in &report.events {
+                if let Event::ActivityFinished { step, sim_us } = e {
+                    let ent = by_step.entry(step.clone()).or_default();
+                    ent.0 += 1;
+                    ent.1 += sim_us;
+                }
+            }
+            for (step, (n, us)) in by_step {
+                println!("    {step:<28} x{n}  {:.2}s sim", us as f64 / 1e6);
+            }
+        }
+        let offloads = report.offload_count();
+        let suspensions = report
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Suspended { .. }))
+            .count();
+        println!(
+            "  mode={} sim_time={:.2}s wall={:.2}s offloads={offloads} suspensions={suspensions}",
+            if offload { "OFFLOAD" } else { "LOCAL  " },
+            report.sim_time.as_secs_f64(),
+            report.wall_time.as_secs_f64(),
+        );
+        Ok((report.sim_time.as_secs_f64(), report.lines))
+    };
+
+    if args.flag("no-offload") {
+        let (_, lines) = run(false)?;
+        for l in &lines {
+            println!("  | {l}");
+        }
+        return Ok(());
+    }
+
+    println!("\n-- pass 1: offloading disabled (local cluster) --");
+    let (t_local, lines_local) = run(false)?;
+    println!("\n-- pass 2: offloading enabled (steps 2-4 -> cloud) --");
+    let (t_cloud, lines_cloud) = run(true)?;
+
+    println!("\n-- misfit curve (loss) --");
+    for l in lines_local.iter().filter(|l| l.contains("misfit")) {
+        println!("  local  | {l}");
+    }
+    for l in lines_cloud.iter().filter(|l| l.contains("misfit")) {
+        println!("  cloud  | {l}");
+    }
+
+    let reduction = 100.0 * (1.0 - t_cloud / t_local);
+    println!("\n== RESULT (paper Fig 11/12 shape) ==");
+    println!("  local execution:   {t_local:.2}s (simulated)");
+    println!("  with offloading:   {t_cloud:.2}s (simulated)");
+    println!("  reduction:         {reduction:.1}%  (paper: up to 55%)");
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT compiler: lower the L2 model to HLO-text artifacts for the Rust
+runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (under ``--outdir``, default ``../artifacts``):
+
+* ``{step}_{mesh}.hlo.txt`` — one artifact per AT step per mesh
+  (forward / misfit / frechet / update × demo / small / large).
+* ``vecadd.hlo.txt`` — trivial artifact for runtime smoke tests.
+* ``data/{mesh}_true_c.f32`` — the synthetic "true earth" velocity model
+  (raw little-endian f32, C order); the coordinator simulates the
+  observed data from it at workflow start.
+* ``manifest.json`` — machine-readable index: mesh configs + per-artifact
+  input/output signatures. The Rust runtime loads this instead of
+  hard-coding shapes.
+
+Usage: ``python -m compile.aot [--outdir DIR] [--meshes demo,small]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    """JSON signature entry for a list of ShapeDtypeStructs."""
+    return [["f32", list(a.shape)] for a in args]
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_mesh(spec: model.MeshSpec, outdir: str, manifest: dict) -> None:
+    """Lower the four AT steps for one mesh and register them."""
+    field = _spec(spec.shape)
+    scalar = _spec(())
+    traces = _spec((spec.nt, spec.n_rec))
+    chunk_rows = _spec((spec.chunk, spec.n_rec))
+
+    steps = {
+        f"forward_{spec.name}": (
+            model.make_forward_chunk(spec),
+            [field, field, field, scalar],
+        ),
+        f"misfit_{spec.name}": (model.make_misfit(spec), [traces, traces]),
+        f"frechet_{spec.name}": (
+            model.make_frechet_chunk(spec),
+            [field, field, field, chunk_rows, field, field],
+        ),
+        f"update_{spec.name}": (
+            model.make_model_update(spec),
+            [field, field, scalar],
+        ),
+    }
+
+    for name, (fn, args) in steps.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*args)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": os.path.basename(path),
+            "inputs": _sig(args),
+            "outputs": [["f32", list(o.shape)] for o in out_avals],
+        }
+        print(f"  {name}: {len(text) / 1024:.0f} KiB HLO")
+
+
+def write_true_model(spec: model.MeshSpec, outdir: str) -> str:
+    import numpy as np
+
+    data_dir = os.path.join(outdir, "data")
+    os.makedirs(data_dir, exist_ok=True)
+    path = os.path.join(data_dir, f"{spec.name}_true_c.f32")
+    arr = np.asarray(model.true_model(spec), dtype="<f4")
+    arr.tofile(path)
+    return os.path.join("data", os.path.basename(path))
+
+
+def lower_vecadd(outdir: str, manifest: dict) -> None:
+    def vecadd(x, y):
+        return (x + y,)
+
+    spec = _spec((8,))
+    text = to_hlo_text(jax.jit(vecadd).lower(spec, spec))
+    with open(os.path.join(outdir, "vecadd.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"]["vecadd"] = {
+        "file": "vecadd.hlo.txt",
+        "inputs": [["f32", [8]], ["f32", [8]]],
+        "outputs": [["f32", [8]]],
+    }
+
+
+def mesh_json(spec: model.MeshSpec) -> dict:
+    return {
+        "shape": list(spec.shape),
+        "nt": spec.nt,
+        "chunk": spec.chunk,
+        "dt": spec.dt,
+        "f0": spec.f0,
+        "source": list(spec.source),
+        "receivers": [list(r) for r in spec.receivers],
+        "c_ref": spec.c_ref,
+        "c_min": spec.c_min,
+        "c_max": spec.c_max,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--meshes",
+        default="demo,small,large",
+        help="comma-separated subset of: " + ",".join(model.MESHES),
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {"version": 1, "meshes": {}, "artifacts": {}}
+
+    lower_vecadd(args.outdir, manifest)
+    for name in args.meshes.split(","):
+        spec = model.MESHES[name]
+        print(f"mesh {name} {spec.shape}:")
+        lower_mesh(spec, args.outdir, manifest)
+        entry = mesh_json(spec)
+        entry["true_model_file"] = write_true_model(spec, args.outdir)
+        manifest["meshes"][name] = entry
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

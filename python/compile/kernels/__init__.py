@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for Adjoint Tomography's compute hot-spots.
+
+* ``wave``      — 3-D acoustic leap-frog stencil (forward + adjoint
+                  propagation; >90% of AT's FLOPs)
+* ``correlate`` — zero-lag imaging condition (Frechet accumulator),
+                  slab-tiled via BlockSpec
+* ``smooth``    — separable 3-point gradient smoothing
+* ``ref``       — pure-jnp oracles; pytest asserts allclose agreement
+
+All kernels lower with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); DESIGN.md §Hardware-Adaptation documents the
+TPU mapping (VMEM-resident blocks, VPU-bound stencil).
+"""

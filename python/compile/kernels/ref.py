@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with the exact same
+signature and semantics. pytest (``python/tests/``) asserts
+``assert_allclose(kernel(...), ref(...))`` across shapes/dtypes via
+hypothesis — this is the build-time correctness gate for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+# 4th-order central-difference coefficients for the second derivative.
+# f'' ~ (-1/12 f[-2] + 4/3 f[-1] - 5/2 f[0] + 4/3 f[+1] - 1/12 f[+2]) / dx^2
+C0 = -5.0 / 2.0
+C1 = 4.0 / 3.0
+C2 = -1.0 / 12.0
+
+
+def laplacian4(u):
+    """4th-order 3-D Laplacian with zero-Dirichlet boundary.
+
+    The returned array is zero on the 2-cell boundary shell; interior
+    cells hold the sum of the three axial second derivatives (unit dx —
+    grid spacing is folded into ``c2dt2`` by the caller).
+    """
+    lap = jnp.zeros_like(u)
+    interior = (
+        3.0 * C0 * u[2:-2, 2:-2, 2:-2]
+        + C1 * (u[1:-3, 2:-2, 2:-2] + u[3:-1, 2:-2, 2:-2])
+        + C2 * (u[:-4, 2:-2, 2:-2] + u[4:, 2:-2, 2:-2])
+        + C1 * (u[2:-2, 1:-3, 2:-2] + u[2:-2, 3:-1, 2:-2])
+        + C2 * (u[2:-2, :-4, 2:-2] + u[2:-2, 4:, 2:-2])
+        + C1 * (u[2:-2, 2:-2, 1:-3] + u[2:-2, 2:-2, 3:-1])
+        + C2 * (u[2:-2, 2:-2, :-4] + u[2:-2, 2:-2, 4:])
+    )
+    return lap.at[2:-2, 2:-2, 2:-2].set(interior)
+
+
+def wave_step(u, u_prev, c2dt2, src):
+    """One leap-frog step of the 3-D acoustic wave equation.
+
+    ``u_next = 2 u - u_prev + c2dt2 * lap(u) + src``
+
+    ``c2dt2`` is the per-cell ``(c * dt / dx)**2`` field; ``src`` is the
+    per-cell source injection for this step (all-zero except at the
+    source / adjoint-source cells).
+    """
+    return 2.0 * u - u_prev + c2dt2 * laplacian4(u) + src
+
+
+def imaging_step(k_acc, u_fwd, u_adj):
+    """Zero-lag cross-correlation imaging condition (the Frechet-kernel
+    accumulator): ``K += u_fwd * u_adj``, elementwise."""
+    return k_acc + u_fwd * u_adj
+
+
+def smooth3(g):
+    """Separable 3-point ``[1/4, 1/2, 1/4]`` smoothing along each axis
+    with edge-replicated boundaries (applied axis 0, then 1, then 2)."""
+    for axis in range(3):
+        idx = jnp.arange(g.shape[axis])
+        lo = jnp.take(g, jnp.maximum(idx - 1, 0), axis=axis)
+        hi = jnp.take(g, jnp.minimum(idx + 1, g.shape[axis] - 1), axis=axis)
+        g = 0.25 * lo + 0.5 * g + 0.25 * hi
+    return g

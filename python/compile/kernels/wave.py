@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: one leap-frog step of the 3-D acoustic wave equation.
+
+This is the compute hot-spot of Adjoint Tomography (paper §4): the same
+kernel drives both the forward simulation (AT step 1) and the adjoint
+simulation inside the Frechet-kernel computation (AT step 3).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's AT ran
+on Fermi GPUs with CUDA threadblocks tiling the mesh. On TPU the mesh is
+kept VMEM-resident as a single block (both paper meshes fit: the large
+208x44x46 f32 field is ~1.7 MB, x4 operands ~7 MB < 16 MB VMEM) and the
+4th-order stencil is expressed as whole-block shifted adds — VPU vector
+ops, not MXU matmuls; the kernel is bandwidth-bound (arithmetic
+intensity ~0.5 flop/byte). ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so the kernel lowers to plain
+HLO for the Rust runtime while preserving the block structure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _wave_step_kernel(u_ref, um_ref, c2_ref, src_ref, out_ref):
+    """Pallas kernel body: whole-domain block, 4th-order stencil.
+
+    The stencil is computed on the interior (2-cell halo) with shifted
+    block slices; the boundary shell keeps the Dirichlet zero of the
+    Laplacian (only ``2u - u_prev + src`` survives there).
+    """
+    u = u_ref[...]
+    um = um_ref[...]
+    c2 = c2_ref[...]
+    src = src_ref[...]
+
+    lap_int = (
+        3.0 * ref.C0 * u[2:-2, 2:-2, 2:-2]
+        + ref.C1 * (u[1:-3, 2:-2, 2:-2] + u[3:-1, 2:-2, 2:-2])
+        + ref.C2 * (u[:-4, 2:-2, 2:-2] + u[4:, 2:-2, 2:-2])
+        + ref.C1 * (u[2:-2, 1:-3, 2:-2] + u[2:-2, 3:-1, 2:-2])
+        + ref.C2 * (u[2:-2, :-4, 2:-2] + u[2:-2, 4:, 2:-2])
+        + ref.C1 * (u[2:-2, 2:-2, 1:-3] + u[2:-2, 2:-2, 3:-1])
+        + ref.C2 * (u[2:-2, 2:-2, :-4] + u[2:-2, 2:-2, 4:])
+    )
+    lap = jnp.zeros_like(u).at[2:-2, 2:-2, 2:-2].set(lap_int)
+    out_ref[...] = 2.0 * u - um + c2 * lap + src
+
+
+@functools.partial(jax.jit, static_argnames=())
+def wave_step(u, u_prev, c2dt2, src):
+    """One acoustic leap-frog time step (Pallas, whole-domain block).
+
+    Semantically identical to :func:`ref.wave_step`; pytest enforces
+    allclose agreement across shapes and dtypes.
+    """
+    return pl.pallas_call(
+        _wave_step_kernel,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,
+    )(u, u_prev, c2dt2, src)

@@ -1,0 +1,80 @@
+# pytest: the AOT pipeline — HLO-text emission and the manifest
+# contract the Rust runtime depends on.
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def demo_artifacts(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    manifest = {"version": 1, "meshes": {}, "artifacts": {}}
+    aot.lower_vecadd(str(outdir), manifest)
+    spec = model.MESHES["demo"]
+    aot.lower_mesh(spec, str(outdir), manifest)
+    entry = aot.mesh_json(spec)
+    entry["true_model_file"] = aot.write_true_model(spec, str(outdir))
+    manifest["meshes"]["demo"] = entry
+    with open(outdir / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    return outdir, manifest
+
+
+class TestHloText:
+    def test_artifacts_are_hlo_text(self, demo_artifacts):
+        outdir, manifest = demo_artifacts
+        for name, spec in manifest["artifacts"].items():
+            text = (outdir / spec["file"]).read_text()
+            # HLO text (parseable by the runtime's text parser), not a
+            # serialized proto: must declare an entry computation.
+            assert "HloModule" in text, f"{name} is not HLO text"
+            assert "ENTRY" in text, f"{name} missing entry computation"
+
+    def test_signatures_match_lowering(self, demo_artifacts):
+        _, manifest = demo_artifacts
+        spec = model.MESHES["demo"]
+        fwd = manifest["artifacts"]["forward_demo"]
+        shape = list(spec.shape)
+        assert fwd["inputs"] == [
+            ["f32", shape], ["f32", shape], ["f32", shape], ["f32", []]
+        ]
+        assert fwd["outputs"] == [
+            ["f32", shape], ["f32", shape], ["f32", [spec.chunk, spec.n_rec]]
+        ]
+        mis = manifest["artifacts"]["misfit_demo"]
+        assert mis["outputs"][0] == ["f32", []]
+
+    def test_true_model_file_shape(self, demo_artifacts):
+        import numpy as np
+
+        outdir, manifest = demo_artifacts
+        spec = model.MESHES["demo"]
+        path = outdir / manifest["meshes"]["demo"]["true_model_file"]
+        arr = np.fromfile(path, dtype="<f4")
+        assert arr.size == spec.shape[0] * spec.shape[1] * spec.shape[2]
+        assert arr.min() >= spec.c_ref - 1e-6
+        assert arr.max() <= spec.c_ref + 0.5 + 1e-6
+
+    def test_mesh_json_complete(self):
+        entry = aot.mesh_json(model.MESHES["small"])
+        for key in ("shape", "nt", "chunk", "dt", "f0", "source",
+                    "receivers", "c_ref", "c_min", "c_max"):
+            assert key in entry, key
+        assert entry["shape"] == [104, 23, 24]
+
+
+class TestDeterminism:
+    def test_lowering_is_deterministic(self):
+        spec = model.MESHES["demo"]
+        fn = model.make_misfit(spec)
+        traces = jax.ShapeDtypeStruct((spec.nt, spec.n_rec), jnp.float32)
+        a = aot.to_hlo_text(jax.jit(fn).lower(traces, traces))
+        b = aot.to_hlo_text(jax.jit(fn).lower(traces, traces))
+        assert a == b

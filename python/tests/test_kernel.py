@@ -1,0 +1,142 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness
+# signal for Layer 1. hypothesis sweeps shapes and seeds.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import correlate, ref, smooth, wave
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_field(shape, seed, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+dims = st.integers(min_value=5, max_value=24)
+shapes = st.tuples(dims, dims, dims)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestWaveStep:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, seed=seeds)
+    def test_matches_ref(self, shape, seed):
+        u = rand_field(shape, seed)
+        um = rand_field(shape, seed + 1)
+        c2 = rand_field(shape, seed + 2, 0.05) ** 2
+        src = rand_field(shape, seed + 3, 0.1)
+        got = wave.wave_step(u, um, c2, src)
+        want = ref.wave_step(u, um, c2, src)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_zero_field_stays_zero(self):
+        z = jnp.zeros((8, 8, 8), jnp.float32)
+        c2 = jnp.full((8, 8, 8), 0.1, jnp.float32)
+        out = wave.wave_step(z, z, c2, z)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_source_injection_additive(self):
+        z = jnp.zeros((8, 8, 8), jnp.float32)
+        c2 = jnp.full((8, 8, 8), 0.1, jnp.float32)
+        src = z.at[4, 4, 4].set(1.5)
+        out = wave.wave_step(z, z, c2, src)
+        np.testing.assert_allclose(out, src, atol=0)
+
+    def test_boundary_shell_has_no_laplacian(self):
+        # On the 2-cell boundary shell the update must reduce to
+        # 2u - u_prev + src (zero-Dirichlet Laplacian).
+        u = rand_field((9, 9, 9), 7)
+        um = rand_field((9, 9, 9), 8)
+        c2 = jnp.full((9, 9, 9), 0.2, jnp.float32)
+        out = wave.wave_step(u, um, c2, jnp.zeros_like(u))
+        expect = 2.0 * u - um
+        np.testing.assert_allclose(out[0], expect[0], rtol=1e-6)
+        np.testing.assert_allclose(out[:, 1], expect[:, 1], rtol=1e-6)
+        np.testing.assert_allclose(out[..., -2], expect[..., -2], rtol=1e-6)
+
+    def test_energy_bounded_under_cfl(self):
+        # A stable scheme must not blow up over 100 steps.
+        u = jnp.zeros((16, 16, 16), jnp.float32).at[8, 8, 8].set(1.0)
+        um = u
+        c2 = jnp.full((16, 16, 16), 0.09, jnp.float32)  # courant 0.3
+        z = jnp.zeros_like(u)
+        for _ in range(100):
+            u, um = wave.wave_step(u, um, c2, z), u
+        assert float(jnp.abs(u).max()) < 10.0
+
+
+class TestImagingStep:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, seed=seeds)
+    def test_matches_ref(self, shape, seed):
+        k = rand_field(shape, seed)
+        f = rand_field(shape, seed + 1)
+        a = rand_field(shape, seed + 2)
+        got = correlate.imaging_step(k, f, a)
+        np.testing.assert_allclose(
+            got, ref.imaging_step(k, f, a), rtol=1e-6, atol=1e-6
+        )
+
+    def test_accumulates(self):
+        k = jnp.zeros((8, 8, 8), jnp.float32)
+        f = jnp.ones((8, 8, 8), jnp.float32)
+        a = jnp.full((8, 8, 8), 2.0, jnp.float32)
+        k = correlate.imaging_step(k, f, a)
+        k = correlate.imaging_step(k, f, a)
+        np.testing.assert_allclose(k, jnp.full_like(k, 4.0))
+
+    def test_slab_tiling_covers_odd_sizes(self):
+        # 13 is prime: the BlockSpec tiling must fall back to slab=1 and
+        # still produce the right answer on every plane.
+        k = rand_field((13, 6, 7), 3)
+        f = rand_field((13, 6, 7), 4)
+        a = rand_field((13, 6, 7), 5)
+        np.testing.assert_allclose(
+            correlate.imaging_step(k, f, a),
+            ref.imaging_step(k, f, a),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+class TestSmooth3:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, seed=seeds)
+    def test_matches_ref(self, shape, seed):
+        g = rand_field(shape, seed)
+        np.testing.assert_allclose(
+            smooth.smooth3(g), ref.smooth3(g), rtol=1e-5, atol=1e-6
+        )
+
+    def test_preserves_constants(self):
+        g = jnp.full((10, 9, 8), 3.25, jnp.float32)
+        np.testing.assert_allclose(smooth.smooth3(g), g, rtol=1e-6)
+
+    def test_reduces_total_variation(self):
+        g = rand_field((12, 12, 12), 11)
+        s = smooth.smooth3(g)
+        tv = lambda x: float(jnp.abs(jnp.diff(x, axis=0)).sum())
+        assert tv(s) < tv(g)
+
+
+class TestLaplacianRef:
+    def test_quadratic_has_constant_laplacian(self):
+        # u = x^2 -> d2u/dx2 = 2 exactly under a 4th-order stencil.
+        n = 12
+        x = jnp.arange(n, dtype=jnp.float32)
+        u = jnp.broadcast_to(x[:, None, None] ** 2, (n, n, n))
+        lap = ref.laplacian4(u)
+        np.testing.assert_allclose(
+            lap[2:-2, 2:-2, 2:-2], 2.0, rtol=1e-4, atol=1e-4
+        )
+
+    def test_boundary_shell_zero(self):
+        u = rand_field((10, 10, 10), 2)
+        lap = ref.laplacian4(u)
+        assert float(jnp.abs(lap[:2]).max()) == 0.0
+        assert float(jnp.abs(lap[:, :2]).max()) == 0.0
+        assert float(jnp.abs(lap[..., -2:]).max()) == 0.0

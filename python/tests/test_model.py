@@ -1,0 +1,141 @@
+# pytest: L2 model-level checks — shapes, physics sanity, and an
+# end-to-end mini-inversion on the demo mesh (the reference
+# implementation of the contract the Rust coordinator drives).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = model.MESHES["demo"]
+
+
+@pytest.fixture(scope="module")
+def observed():
+    seis, _ = model.run_forward(SPEC, model.true_model(SPEC))
+    return seis
+
+
+class TestSpecs:
+    def test_mesh_registry_has_paper_meshes(self):
+        assert model.MESHES["small"].shape == (104, 23, 24)
+        assert model.MESHES["large"].shape == (208, 44, 46)
+
+    def test_chunking_divides_nt(self):
+        for spec in model.MESHES.values():
+            assert spec.nt % spec.chunk == 0
+
+    def test_receivers_inside_mesh(self):
+        for spec in model.MESHES.values():
+            for r in spec.receivers:
+                assert all(0 <= r[d] < spec.shape[d] for d in range(3))
+
+
+class TestForward:
+    def test_chunk_shapes(self):
+        fwd = model.make_forward_chunk(SPEC)
+        z = jnp.zeros(SPEC.shape, jnp.float32)
+        c = model.starting_model(SPEC)
+        u, um, seis = fwd(z, z, c, jnp.float32(0.0))
+        assert u.shape == SPEC.shape
+        assert um.shape == SPEC.shape
+        assert seis.shape == (SPEC.chunk, SPEC.n_rec)
+
+    def test_wave_reaches_receivers(self, observed):
+        # The source must actually arrive: traces are non-trivial.
+        assert float(jnp.abs(observed).max()) > 1e-4
+
+    def test_k0_continuation_consistent(self):
+        # Running 2 chunks via the chunk interface == running them as
+        # one longer simulation (the carry contract Rust relies on).
+        c = model.true_model(SPEC)
+        seis, _ = model.run_forward(SPEC, c)
+        fwd = jax.jit(model.make_forward_chunk(SPEC))
+        z = jnp.zeros(SPEC.shape, jnp.float32)
+        u, um = z, z
+        rows = []
+        for ci in range(SPEC.n_chunks):
+            u, um, s = fwd(u, um, c, jnp.float32(ci * SPEC.chunk))
+            rows.append(s)
+        np.testing.assert_allclose(jnp.concatenate(rows, 0), seis, atol=1e-6)
+
+    def test_field_stays_bounded(self):
+        c = model.true_model(SPEC)
+        _, snaps = model.run_forward(SPEC, c)
+        assert float(jnp.abs(snaps[-1]).max()) < 100.0
+
+
+class TestMisfit:
+    def test_zero_for_identical(self, observed):
+        mis = model.make_misfit(SPEC)
+        m, adj = mis(observed, observed)
+        assert float(m) == 0.0
+        assert float(jnp.abs(adj).max()) == 0.0
+
+    def test_positive_for_different(self, observed):
+        mis = model.make_misfit(SPEC)
+        syn, _ = model.run_forward(SPEC, model.starting_model(SPEC))
+        m, adj = mis(syn, observed)
+        assert float(m) > 0.0
+        np.testing.assert_allclose(adj, syn - observed)
+
+
+class TestFrechet:
+    def test_kernel_nonzero_and_finite(self, observed):
+        c0 = model.starting_model(SPEC)
+        syn, snaps = model.run_forward(SPEC, c0)
+        _, adj = model.make_misfit(SPEC)(syn, observed)
+        k = model.run_frechet(SPEC, c0, adj, snaps)
+        assert k.shape == SPEC.shape
+        assert bool(jnp.isfinite(k).all())
+        assert float(jnp.abs(k).max()) > 0.0
+
+    def test_zero_residual_gives_zero_kernel(self, observed):
+        c = model.true_model(SPEC)
+        _, snaps = model.run_forward(SPEC, c)
+        adj = jnp.zeros((SPEC.nt, SPEC.n_rec), jnp.float32)
+        k = model.run_frechet(SPEC, c, adj, snaps)
+        assert float(jnp.abs(k).max()) == 0.0
+
+
+class TestUpdate:
+    def test_respects_clip_bounds(self):
+        upd = model.make_model_update(SPEC)
+        c = model.starting_model(SPEC)
+        k = jnp.ones(SPEC.shape, jnp.float32)
+        c2 = upd(c, k, jnp.float32(100.0))
+        assert float(c2.min()) >= SPEC.c_min - 1e-6
+        assert float(c2.max()) <= SPEC.c_max + 1e-6
+
+    def test_zero_alpha_is_identity(self):
+        upd = model.make_model_update(SPEC)
+        c = model.true_model(SPEC)
+        k = jnp.ones(SPEC.shape, jnp.float32)
+        np.testing.assert_allclose(upd(c, k, jnp.float32(0.0)), c, atol=1e-6)
+
+
+class TestInversionLoop:
+    def test_line_searched_iteration_decreases_misfit(self, observed):
+        # Reference implementation of the L3 loop: one AT iteration with
+        # a signed backtracking line search must reduce the misfit.
+        mis = model.make_misfit(SPEC)
+        upd = jax.jit(model.make_model_update(SPEC))
+        c = model.starting_model(SPEC)
+
+        syn, snaps = model.run_forward(SPEC, c)
+        m0, adj = mis(syn, observed)
+        k = model.run_frechet(SPEC, c, adj, snaps)
+
+        best = float(m0)
+        best_c = c
+        for alpha in (0.2, -0.2, 0.1, -0.1, 0.05, -0.05):
+            c_try = upd(c, k, jnp.float32(alpha))
+            syn_try, _ = model.run_forward(SPEC, c_try)
+            m_try, _ = mis(syn_try, observed)
+            if float(m_try) < best:
+                best, best_c = float(m_try), c_try
+                break
+        assert best < float(m0), "no trial step reduced the misfit"

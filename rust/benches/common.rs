@@ -1,0 +1,127 @@
+//! Shared harness code for the figure benches (E1/E2: paper Figs
+//! 11–12). Not a bench target itself — included via `mod common;`.
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use emerald::cloud::Platform;
+use emerald::engine::{ActivityRegistry, Engine, Event, RunReport, Services};
+use emerald::migration::{DataPolicy, MigrationManager};
+use emerald::partitioner;
+use emerald::runtime::Runtime;
+use emerald::{artifact_dir, at};
+
+/// One AT run: returns the engine report.
+pub fn at_run(
+    runtime: &Arc<Runtime>,
+    mesh: &str,
+    iterations: usize,
+    offload: bool,
+) -> anyhow::Result<RunReport> {
+    let mut cfg = at::InversionConfig::new(mesh);
+    cfg.iterations = iterations;
+    let wf = at::inversion_workflow(&cfg)?;
+    let (partitioned, _) = partitioner::partition(&wf)?;
+
+    let mut registry = ActivityRegistry::new();
+    at::register_activities(&mut registry);
+    let registry = Arc::new(registry);
+
+    let services = Services::with_runtime(runtime.clone(), Platform::paper_testbed());
+    let engine = if offload {
+        let mgr = MigrationManager::in_proc(services.clone(), registry.clone(), DataPolicy::Mdss);
+        Engine::new(registry, services).with_offload(mgr)
+    } else {
+        Engine::new(registry, services)
+    };
+    engine.run(&partitioned)
+}
+
+/// Cumulative simulated time at the end of each inversion iteration,
+/// reconstructed from the event trace (activities + offload round
+/// trips, split at the per-iteration WriteLine markers).
+pub fn cumulative_per_iteration(report: &RunReport) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut acc_us: u64 = 0;
+    for e in &report.events {
+        match e {
+            Event::ActivityFinished { sim_us, .. }
+            | Event::OffloadFinished { sim_us, .. } => acc_us += sim_us,
+            Event::Line { text } if text.starts_with("iter=") => {
+                out.push(acc_us as f64 / 1e6);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Run the Fig-11/12 experiment for one mesh and print the series.
+pub fn figure_bench(figure: &str, mesh: &str, iterations: usize) -> anyhow::Result<()> {
+    println!("== {figure}: AT execution time, mesh={mesh}, {iterations} iterations ==");
+    let runtime = Arc::new(Runtime::new(artifact_dir())?);
+
+    // Warm the executable cache so neither mode pays compilation, then
+    // run one unmeasured iteration to stabilize allocator/cache state
+    // (compute cost is *measured* wall time — see DESIGN.md §5).
+    for step in ["forward", "misfit", "frechet", "update"] {
+        runtime.warm(&format!("{step}_{mesh}"))?;
+    }
+    let _ = at_run(&runtime, mesh, 1, false)?;
+
+    let local = at_run(&runtime, mesh, iterations, false)?;
+    let cloud = at_run(&runtime, mesh, iterations, true)?;
+
+    let local_series = cumulative_per_iteration(&local);
+    let cloud_series = cumulative_per_iteration(&cloud);
+    let labels: Vec<String> = (1..=local_series.len()).map(|i| format!("iter{i}")).collect();
+
+    let mut series = emerald::benchkit::Series::new(
+        &format!("{figure}: AT cumulative execution time ({mesh} mesh)"),
+        "seconds (simulated)",
+    );
+    series.row(
+        "offload OFF (local)",
+        labels.iter().cloned().zip(local_series.iter().copied()).collect(),
+    );
+    series.row(
+        "offload ON (cloud)",
+        labels.iter().cloned().zip(cloud_series.iter().copied()).collect(),
+    );
+    let reductions: Vec<(String, f64)> = labels
+        .iter()
+        .cloned()
+        .zip(
+            local_series
+                .iter()
+                .zip(&cloud_series)
+                .map(|(l, c)| 100.0 * (1.0 - c / l)),
+        )
+        .collect();
+    series.row("reduction %", reductions);
+    series.print();
+
+    let t_local = local.sim_time.as_secs_f64();
+    let t_cloud = cloud.sim_time.as_secs_f64();
+    println!(
+        "\n{figure} headline: local {t_local:.2}s vs offload {t_cloud:.2}s -> {:.1}% reduction (paper: up to 55%)",
+        100.0 * (1.0 - t_cloud / t_local)
+    );
+
+    // Sanity guards: same physics in both modes, offloading must win.
+    let misfits = |r: &RunReport| -> Vec<String> {
+        r.lines.iter().filter(|l| l.starts_with("iter=")).cloned().collect()
+    };
+    assert_eq!(misfits(&local), misfits(&cloud), "numerics must not depend on placement");
+    assert!(t_cloud < t_local, "offloading must reduce execution time on {mesh}");
+    Ok(())
+}
+
+/// Stable-ish wall measurement helper for micro benches.
+pub fn measure<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = std::time::Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}

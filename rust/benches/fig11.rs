@@ -1,0 +1,18 @@
+//! E1 — Paper Figure 11: execution time of AT on the 104x23x24 mesh,
+//! computation offloading disabled vs enabled (steps 2-4 remotable).
+//!
+//! Regenerates the figure's two series (cumulative execution time per
+//! inversion iteration) plus the per-iteration reduction. Absolute
+//! numbers reflect this testbed (DESIGN.md §5); the paper-relevant
+//! *shape* — offloading wins, savings bounded by the ~55% band — is
+//! asserted.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let iters = std::env::var("EMERALD_FIG_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    common::figure_bench("Fig 11", "small", iters)
+}

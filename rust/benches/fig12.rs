@@ -1,0 +1,16 @@
+//! E2 — Paper Figure 12: execution time of AT on the 208x44x46 mesh,
+//! computation offloading disabled vs enabled.
+//!
+//! The larger mesh shifts more weight into the remotable steps, so the
+//! reduction is larger than Fig 11's — the paper's "up to 55%" point
+//! lives here.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let iters = std::env::var("EMERALD_FIG_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    common::figure_bench("Fig 12", "large", iters)
+}

@@ -1,0 +1,106 @@
+//! E7 — Runtime micro-benchmarks (ablation).
+//!
+//! Quantifies the L3 hot-path costs the coordinator adds around the
+//! actual computation: PJRT execute latency per artifact, the
+//! executable-cache saving (compile vs hit), tensor<->literal bridging,
+//! and the offload protocol encode/decode — all of which must be small
+//! next to the remotable compute (DESIGN.md §7).
+
+use std::collections::BTreeMap;
+
+use emerald::benchkit::{fmt_dur, Bench};
+use emerald::expr::Value;
+use emerald::migration::protocol::OffloadRequest;
+use emerald::runtime::{HostTensor, Runtime};
+use emerald::workflow::{Step, StepKind};
+use emerald::{artifact_dir, benchkit};
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Runtime::new(artifact_dir())?;
+    let mut bench = Bench::new("runtime_micro", 3, 20);
+
+    // Cache-miss (compile) cost, measured once per artifact.
+    let t = std::time::Instant::now();
+    runtime.warm("vecadd")?;
+    let compile_vecadd = t.elapsed();
+    let t = std::time::Instant::now();
+    runtime.warm("forward_demo")?;
+    let compile_forward = t.elapsed();
+    println!(
+        "cold compile: vecadd {}  forward_demo {}",
+        fmt_dur(compile_vecadd),
+        fmt_dur(compile_forward)
+    );
+
+    // Hot execute latency.
+    let x = HostTensor::full(&[8], 1.0);
+    let y = HostTensor::full(&[8], 2.0);
+    bench.case("execute vecadd (cache hit)", || {
+        let out = runtime.execute("vecadd", &[x.clone(), y.clone()]).unwrap();
+        assert_eq!(out[0].data()[0], 3.0);
+    });
+
+    let demo = runtime.manifest().mesh("demo")?.clone();
+    let dims: Vec<usize> = demo.shape.to_vec();
+    let u = HostTensor::zeros(&dims);
+    let c = HostTensor::full(&dims, demo.c_ref);
+    bench.case("execute forward_demo chunk (8 steps)", || {
+        let out = runtime
+            .execute(
+                "forward_demo",
+                &[u.clone(), u.clone(), c.clone(), HostTensor::scalar(0.0)],
+            )
+            .unwrap();
+        std::hint::black_box(out);
+    });
+
+    // Tensor bridge: the large-mesh field (1.7 MB) through the
+    // byte-serialization path MDSS uses.
+    let large = runtime.manifest().mesh("large")?.clone();
+    let ldims: Vec<usize> = large.shape.to_vec();
+    let field = HostTensor::full(&ldims, 2.0);
+    bench.case("tensor -> le_bytes -> tensor (1.7 MB)", || {
+        let bytes = field.to_le_bytes();
+        let back = HostTensor::from_le_bytes(&ldims, &bytes).unwrap();
+        std::hint::black_box(back);
+    });
+
+    // Offload protocol encode/decode (task-code packaging).
+    let step = Step::new(
+        "misfit measurement",
+        StepKind::InvokeActivity {
+            activity: "at.misfit".into(),
+            inputs: vec![
+                ("mesh".into(), "mesh".into()),
+                ("syn".into(), "syn".into()),
+                ("obs".into(), "obs".into()),
+                ("iter".into(), "iter".into()),
+            ],
+            outputs: vec![("misfit".into(), "misfit".into()), ("adj".into(), "adj".into())],
+        },
+    );
+    let mut inputs = BTreeMap::new();
+    inputs.insert("mesh".to_string(), Value::Str("large".into()));
+    inputs.insert("syn".to_string(), Value::Uri("mdss://at/large/syn0".into()));
+    inputs.insert("obs".to_string(), Value::Uri("mdss://at/large/obs".into()));
+    inputs.insert("iter".to_string(), Value::Num(0.0));
+    bench.case("offload protocol package+encode+decode", || {
+        let req = OffloadRequest::package(&step, inputs.clone(), &["misfit".into(), "adj".into()]);
+        let bytes = req.encode();
+        let back = OffloadRequest::decode(&bytes).unwrap();
+        std::hint::black_box(back.step().unwrap());
+    });
+
+    // Summary for EXPERIMENTS.md §Perf.
+    let stats: Vec<_> = bench.results().to_vec();
+    let exec_hit = stats[0].1.mean;
+    println!(
+        "\nE7 headline: executable cache turns a {} compile into a {} dispatch \
+         ({}x); protocol overhead {} per offload",
+        fmt_dur(compile_forward),
+        fmt_dur(exec_hit),
+        (compile_forward.as_secs_f64() / exec_hit.as_secs_f64()) as u64,
+        benchkit::fmt_dur(stats[3].1.mean),
+    );
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Adjoint Tomography (AT): the paper's evaluation application (§4).
+//!
+//! AT inverts for a 3-D earth velocity model by iterating four
+//! computational steps until synthetic seismograms match the observed
+//! data:
+//!
+//! 1. **forward** — build synthetic seismograms from the current model
+//!    (3-D acoustic wave equation; L1 Pallas stencil via PJRT);
+//! 2. **misfit** — compare synthetic and observed seismograms;
+//! 3. **frechet** — model perturbation via the adjoint method (adjoint
+//!    propagation + imaging condition);
+//! 4. **update** — apply the smoothed perturbation (with a signed
+//!    backtracking line search, so the misfit decreases monotonically).
+//!
+//! As in the paper's evaluation, steps 2–4 are annotated `Remotable`
+//! and the workflow is driven by Emerald; observed data is synthesized
+//! from a hidden "true earth" model (`artifacts/data/*_true_c.f32`),
+//! standing in for the paper's proprietary seismic data (DESIGN.md §1).
+//!
+//! All tensors move through MDSS URIs of the form
+//! `mdss://at/<mesh>/<item><iter>`; per-iteration items get fresh URIs
+//! so freshness checks are exact.
+
+pub mod steps;
+
+use anyhow::Result;
+
+use crate::engine::ActivityRegistry;
+use crate::workflow::{xaml, Workflow};
+
+/// Register the five AT activities (`at.prepare`, `at.forward`,
+/// `at.misfit`, `at.frechet`, `at.update`).
+pub fn register_activities(reg: &mut ActivityRegistry) {
+    steps::register(reg);
+}
+
+/// Parameters of one AT inversion run.
+#[derive(Debug, Clone)]
+pub struct InversionConfig {
+    /// Mesh name from the artifact manifest (`demo`/`small`/`large`).
+    pub mesh: String,
+    /// Inversion iterations (the x-axis of paper Figs 11–12).
+    pub iterations: usize,
+    /// Initial line-search step length.
+    pub alpha0: f64,
+}
+
+impl InversionConfig {
+    /// Config for a mesh with paper-like defaults.
+    pub fn new(mesh: &str) -> Self {
+        Self { mesh: mesh.to_string(), iterations: 5, alpha0: 0.3 }
+    }
+}
+
+/// Build the AT inversion workflow for a mesh.
+///
+/// The XML below is the developer-facing artifact: annotating steps
+/// 2–4 `Remotable="true"` is the *entire* integration effort Emerald
+/// asks for (paper §1 "developers only need to annotate it as
+/// remotable").
+pub fn inversion_workflow(cfg: &InversionConfig) -> Result<Workflow> {
+    let xml = format!(
+        r#"<Workflow Name="adjoint-tomography-{mesh}">
+  <Workflow.Variables>
+    <Variable Name="mesh" Init="'{mesh}'" />
+    <Variable Name="alpha0" Init="{alpha0}" />
+    <Variable Name="iter" Init="0" />
+    <Variable Name="obs" />
+    <Variable Name="c" />
+    <Variable Name="syn" />
+    <Variable Name="adj" />
+    <Variable Name="kern" />
+    <Variable Name="misfit" />
+  </Workflow.Variables>
+  <Sequence DisplayName="at-main">
+    <InvokeActivity DisplayName="prepare observed data" Activity="at.prepare"
+                    In.mesh="mesh" Out.obs="obs" Out.c="c" />
+    <While Condition="iter &lt; {iters}" MaxIters="{max_iters}">
+      <Sequence DisplayName="at-iteration">
+        <InvokeActivity DisplayName="forward modelling" Activity="at.forward"
+                        In.mesh="mesh" In.c="c" In.iter="iter"
+                        Out.syn="syn" />
+        <InvokeActivity DisplayName="misfit measurement" Activity="at.misfit"
+                        Remotable="true"
+                        In.mesh="mesh" In.syn="syn" In.obs="obs" In.iter="iter"
+                        Out.misfit="misfit" Out.adj="adj" />
+        <InvokeActivity DisplayName="frechet kernel" Activity="at.frechet"
+                        Remotable="true"
+                        In.mesh="mesh" In.c="c" In.adj="adj" In.iter="iter"
+                        Out.kern="kern" />
+        <InvokeActivity DisplayName="model update" Activity="at.update"
+                        Remotable="true"
+                        In.mesh="mesh" In.c="c" In.kern="kern" In.obs="obs"
+                        In.misfit="misfit" In.iter="iter" In.alpha0="alpha0"
+                        Out.c="c" Out.misfit="misfit" />
+        <WriteLine Text="'iter=' + str(iter) + ' misfit=' + str(misfit)" />
+        <Assign To="iter" Value="iter + 1" />
+      </Sequence>
+    </While>
+    <WriteLine Text="'final misfit=' + str(misfit)" />
+  </Sequence>
+</Workflow>"#,
+        mesh = cfg.mesh,
+        alpha0 = cfg.alpha0,
+        iters = cfg.iterations,
+        max_iters = cfg.iterations + 1,
+    );
+    xaml::parse(&xml)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner;
+    use crate::workflow::validate;
+
+    #[test]
+    fn workflow_builds_and_validates() {
+        let wf = inversion_workflow(&InversionConfig::new("demo")).unwrap();
+        let remotable = validate::validate(&wf).unwrap();
+        assert_eq!(remotable.len(), 3, "steps 2-4 are remotable (paper §4)");
+    }
+
+    #[test]
+    fn workflow_partitions_with_three_points() {
+        let wf = inversion_workflow(&InversionConfig::new("small")).unwrap();
+        let (_, report) = partitioner::partition(&wf).unwrap();
+        assert_eq!(report.migration_points, 3);
+    }
+
+    #[test]
+    fn forward_step_stays_local() {
+        let wf = inversion_workflow(&InversionConfig::new("demo")).unwrap();
+        let mut forward_remotable = None;
+        wf.root.walk(&mut |s| {
+            if s.display_name == "forward modelling" {
+                forward_remotable = Some(s.remotable);
+            }
+        });
+        assert_eq!(forward_remotable, Some(false));
+    }
+}

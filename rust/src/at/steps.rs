@@ -1,0 +1,214 @@
+//! The AT computational steps as Emerald activities.
+//!
+//! Each activity executes the corresponding L2 artifact(s) through the
+//! PJRT runtime, moving tensors through MDSS. Compute cost is charged
+//! to the node the activity runs on (local cluster vs cloud VM), which
+//! is how the Fig 11/12 benches observe the offloading speedup.
+//!
+//! The adjoint pass (`at.frechet`) *recomputes* the forward wavefield
+//! chunk-by-chunk instead of shipping stored snapshots — the standard
+//! checkpointed-adjoint trade (compute is cheaper than WAN transfer),
+//! matching how SPECFEM-style AT codes behave on clusters.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::engine::activity::{need_num, need_str, need_uri, ActivityCtx, ActivityRegistry};
+use crate::expr::Value;
+use crate::mdss::Uri;
+use crate::runtime::{HostTensor, MeshSpec};
+
+type Inputs = BTreeMap<String, Value>;
+type Outputs = BTreeMap<String, Value>;
+
+/// Register all AT activities.
+pub fn register(reg: &mut ActivityRegistry) {
+    reg.register_fn("at.prepare", prepare);
+    reg.register_fn("at.forward", forward);
+    reg.register_fn("at.misfit", misfit);
+    reg.register_fn("at.frechet", frechet);
+    reg.register_fn("at.update", update);
+}
+
+fn mesh_spec(ctx: &ActivityCtx, inputs: &Inputs) -> Result<MeshSpec> {
+    let name = need_str(inputs, "mesh")?;
+    Ok(ctx.services.runtime()?.manifest().mesh(&name)?.clone())
+}
+
+fn at_uri(mesh: &str, item: &str) -> Result<Uri> {
+    Uri::new("at", &format!("{mesh}/{item}"))
+}
+
+fn iter_of(inputs: &Inputs) -> Result<i64> {
+    Ok(need_num(inputs, "iter")? as i64)
+}
+
+/// Run a full forward simulation; returns the seismogram traces and,
+/// when `keep_snaps`, the end-of-chunk wavefield snapshots (for the
+/// imaging condition).
+fn run_forward(
+    ctx: &ActivityCtx,
+    spec: &MeshSpec,
+    c: &HostTensor,
+    keep_snaps: bool,
+) -> Result<(HostTensor, Vec<HostTensor>)> {
+    let artifact = format!("forward_{}", spec.name);
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let mut u = HostTensor::zeros(&dims);
+    let mut um = HostTensor::zeros(&dims);
+    let mut rows = Vec::with_capacity(spec.n_chunks());
+    let mut snaps = Vec::new();
+    for ci in 0..spec.n_chunks() {
+        let k0 = HostTensor::scalar((ci * spec.chunk) as f32);
+        let mut out = ctx.execute(&artifact, &[u, um, c.clone(), k0])?;
+        // outputs: (u, u_prev, seis)
+        let seis = out.pop().context("forward artifact returned too few outputs")?;
+        um = out.pop().context("missing u_prev output")?;
+        u = out.pop().context("missing u output")?;
+        if keep_snaps {
+            snaps.push(u.clone());
+        }
+        rows.push(seis);
+    }
+    Ok((HostTensor::concat_rows(&rows)?, snaps))
+}
+
+/// `at.prepare(mesh) -> (obs, c)` — synthesize the observed dataset
+/// from the hidden true model and publish the starting model
+/// (workflow step 0: "dataset selection and integration").
+fn prepare(ctx: &ActivityCtx, inputs: &Inputs) -> Result<Outputs> {
+    let spec = mesh_spec(ctx, inputs)?;
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let true_c = HostTensor::from_raw_file(&dims, &spec.true_model_file)
+        .context("loading true model (run `make artifacts`)")?;
+
+    let (obs, _) = run_forward(ctx, &spec, &true_c, false)?;
+    let obs_uri = at_uri(&spec.name, "obs")?;
+    ctx.write_tensor(&obs_uri, &obs);
+
+    let c0 = HostTensor::full(&dims, spec.c_ref);
+    let c_uri = at_uri(&spec.name, "c0")?;
+    ctx.write_tensor(&c_uri, &c0);
+
+    Ok([
+        ("obs".to_string(), Value::Uri(obs_uri.as_str().to_string())),
+        ("c".to_string(), Value::Uri(c_uri.as_str().to_string())),
+    ]
+    .into())
+}
+
+/// `at.forward(mesh, c, iter) -> syn` — AT step 1 (always local, as in
+/// the paper's evaluation).
+fn forward(ctx: &ActivityCtx, inputs: &Inputs) -> Result<Outputs> {
+    let spec = mesh_spec(ctx, inputs)?;
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let c = ctx.read_tensor(&need_uri(inputs, "c")?, &dims)?;
+    let (syn, _) = run_forward(ctx, &spec, &c, false)?;
+    let syn_uri = at_uri(&spec.name, &format!("syn{}", iter_of(inputs)?))?;
+    ctx.write_tensor(&syn_uri, &syn);
+    Ok([("syn".to_string(), Value::Uri(syn_uri.as_str().to_string()))].into())
+}
+
+/// `at.misfit(mesh, syn, obs, iter) -> (misfit, adj)` — AT step 2.
+fn misfit(ctx: &ActivityCtx, inputs: &Inputs) -> Result<Outputs> {
+    let spec = mesh_spec(ctx, inputs)?;
+    let trace_dims = [spec.nt, spec.n_rec()];
+    let syn = ctx.read_tensor(&need_uri(inputs, "syn")?, &trace_dims)?;
+    let obs = ctx.read_tensor(&need_uri(inputs, "obs")?, &trace_dims)?;
+    let out = ctx.execute(&format!("misfit_{}", spec.name), &[syn, obs])?;
+    let m = out[0].to_scalar()?;
+    let adj_uri = at_uri(&spec.name, &format!("adj{}", iter_of(inputs)?))?;
+    ctx.write_tensor(&adj_uri, &out[1]);
+    Ok([
+        ("misfit".to_string(), Value::Num(m as f64)),
+        ("adj".to_string(), Value::Uri(adj_uri.as_str().to_string())),
+    ]
+    .into())
+}
+
+/// `at.frechet(mesh, c, adj, iter) -> kern` — AT step 3: recompute the
+/// forward wavefield (checkpointed), propagate the adjoint field
+/// backwards, accumulate the imaging condition.
+fn frechet(ctx: &ActivityCtx, inputs: &Inputs) -> Result<Outputs> {
+    let spec = mesh_spec(ctx, inputs)?;
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let c = ctx.read_tensor(&need_uri(inputs, "c")?, &dims)?;
+    let adj = ctx.read_tensor(&need_uri(inputs, "adj")?, &[spec.nt, spec.n_rec()])?;
+
+    // Forward recompute with snapshots.
+    let (_, snaps) = run_forward(ctx, &spec, &c, true)?;
+
+    // Adjoint propagation + imaging.
+    let artifact = format!("frechet_{}", spec.name);
+    let mut a = HostTensor::zeros(&dims);
+    let mut am = HostTensor::zeros(&dims);
+    let mut kern = HostTensor::zeros(&dims);
+    let adj_rev = adj.rows_reversed()?;
+    for ci in 0..spec.n_chunks() {
+        let rows = adj_rev.row_chunk(ci * spec.chunk, spec.chunk)?;
+        let u_snap = snaps[spec.n_chunks() - 1 - ci].clone();
+        let mut out = ctx.execute(&artifact, &[a, am, c.clone(), rows, u_snap, kern])?;
+        kern = out.pop().context("missing kernel output")?;
+        am = out.pop().context("missing a_prev output")?;
+        a = out.pop().context("missing a output")?;
+    }
+
+    let kern_uri = at_uri(&spec.name, &format!("kern{}", iter_of(inputs)?))?;
+    ctx.write_tensor(&kern_uri, &kern);
+    Ok([("kern".to_string(), Value::Uri(kern_uri.as_str().to_string()))].into())
+}
+
+/// `at.update(mesh, c, kern, obs, misfit, iter, alpha0) -> (c, misfit)`
+/// — AT step 4: smoothed steepest-descent update with a signed
+/// backtracking line search (each trial re-runs the forward model and
+/// the misfit, so an accepted model is guaranteed better).
+fn update(ctx: &ActivityCtx, inputs: &Inputs) -> Result<Outputs> {
+    let spec = mesh_spec(ctx, inputs)?;
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let c_uri_in = need_uri(inputs, "c")?;
+    let c = ctx.read_tensor(&c_uri_in, &dims)?;
+    let kern = ctx.read_tensor(&need_uri(inputs, "kern")?, &dims)?;
+    let obs = ctx.read_tensor(&need_uri(inputs, "obs")?, &[spec.nt, spec.n_rec()])?;
+    let m_base = need_num(inputs, "misfit")?;
+    let alpha0 = need_num(inputs, "alpha0")?;
+    let iter = iter_of(inputs)?;
+
+    let update_artifact = format!("update_{}", spec.name);
+    let misfit_artifact = format!("misfit_{}", spec.name);
+
+    let trials = [
+        alpha0,
+        -alpha0,
+        alpha0 / 2.0,
+        -alpha0 / 2.0,
+        alpha0 / 4.0,
+        -alpha0 / 4.0,
+    ];
+    for alpha in trials {
+        let out = ctx.execute(
+            &update_artifact,
+            &[c.clone(), kern.clone(), HostTensor::scalar(alpha as f32)],
+        )?;
+        let c_try = out.into_iter().next().context("missing updated model")?;
+        let (syn_try, _) = run_forward(ctx, &spec, &c_try, false)?;
+        let m_out = ctx.execute(&misfit_artifact, &[syn_try, obs.clone()])?;
+        let m_try = m_out[0].to_scalar()? as f64;
+        if m_try < m_base {
+            let c_uri = at_uri(&spec.name, &format!("c{}", iter + 1))?;
+            ctx.write_tensor(&c_uri, &c_try);
+            return Ok([
+                ("c".to_string(), Value::Uri(c_uri.as_str().to_string())),
+                ("misfit".to_string(), Value::Num(m_try)),
+            ]
+            .into());
+        }
+    }
+
+    // No trial improved: keep the current model (monotone by design).
+    Ok([
+        ("c".to_string(), Value::Uri(c_uri_in.as_str().to_string())),
+        ("misfit".to_string(), Value::Num(m_base)),
+    ]
+    .into())
+}

@@ -1,0 +1,218 @@
+//! Micro/macro benchmark harness (substrate; criterion is not
+//! available offline).
+//!
+//! `cargo bench` binaries use [`Bench`] to time closures with warmup,
+//! report mean/p50/p95, and emit both a human table and a
+//! machine-readable JSON line per entry (consumed by EXPERIMENTS.md
+//! tooling). Figure benches additionally print paper-shaped series via
+//! [`Series`].
+
+use std::time::{Duration, Instant};
+
+use crate::jsonmini::Value;
+
+/// One measured statistic set.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Compute stats from raw samples.
+pub fn stats_of(mut samples: Vec<Duration>) -> Stats {
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    Stats {
+        iters: samples.len(),
+        mean: total / samples.len().max(1) as u32,
+        p50: percentile(&samples, 0.50),
+        p95: percentile(&samples, 0.95),
+        min: samples.first().copied().unwrap_or(Duration::ZERO),
+        max: samples.last().copied().unwrap_or(Duration::ZERO),
+    }
+}
+
+/// Pretty duration (µs/ms/s auto-scale).
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1_000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// A named benchmark group.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<(String, Stats)>,
+}
+
+impl Bench {
+    /// New group; `warmup` unmeasured runs, then `iters` measured runs
+    /// per case. Honours `EMERALD_BENCH_ITERS` for quick CI runs.
+    pub fn new(name: &str, warmup: usize, iters: usize) -> Self {
+        let iters = std::env::var("EMERALD_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(iters);
+        println!("== bench {name} (warmup {warmup}, iters {iters}) ==");
+        Self { name: name.to_string(), warmup, iters, results: Vec::new() }
+    }
+
+    /// Time a closure.
+    pub fn case(&mut self, label: &str, mut f: impl FnMut()) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let st = stats_of(samples);
+        println!(
+            "{label:<44} mean {:>10}  p50 {:>10}  p95 {:>10}",
+            fmt_dur(st.mean),
+            fmt_dur(st.p50),
+            fmt_dur(st.p95)
+        );
+        println!(
+            "BENCH_JSON {}",
+            Value::obj([
+                ("bench", Value::str(self.name.clone())),
+                ("case", Value::str(label)),
+                ("mean_us", Value::num(st.mean.as_secs_f64() * 1e6)),
+                ("p50_us", Value::num(st.p50.as_secs_f64() * 1e6)),
+                ("p95_us", Value::num(st.p95.as_secs_f64() * 1e6)),
+                ("iters", Value::num(st.iters as f64)),
+            ])
+        );
+        self.results.push((label.to_string(), st));
+        st
+    }
+
+    /// Results so far (label, stats).
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+}
+
+/// A paper-figure style series: named rows of (x, value) points —
+/// e.g. execution time per iteration, offloading OFF vs ON.
+pub struct Series {
+    title: String,
+    unit: String,
+    rows: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl Series {
+    /// New series table.
+    pub fn new(title: &str, unit: &str) -> Self {
+        Self { title: title.to_string(), unit: unit.to_string(), rows: Vec::new() }
+    }
+
+    /// Add one named row of points.
+    pub fn row(&mut self, name: &str, points: Vec<(String, f64)>) {
+        self.rows.push((name.to_string(), points));
+    }
+
+    /// Print the table plus a JSON line.
+    pub fn print(&self) {
+        println!("\n-- {} ({}) --", self.title, self.unit);
+        if let Some((_, first)) = self.rows.first() {
+            print!("{:<24}", "");
+            for (x, _) in first {
+                print!("{x:>12}");
+            }
+            println!();
+        }
+        for (name, points) in &self.rows {
+            print!("{name:<24}");
+            for (_, v) in points {
+                print!("{v:>12.3}");
+            }
+            println!();
+        }
+        let rows_json = Value::Arr(
+            self.rows
+                .iter()
+                .map(|(name, pts)| {
+                    Value::obj([
+                        ("name", Value::str(name.clone())),
+                        (
+                            "points",
+                            Value::Arr(
+                                pts.iter()
+                                    .map(|(x, v)| {
+                                        Value::arr([Value::str(x.clone()), Value::num(*v)])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        println!(
+            "SERIES_JSON {}",
+            Value::obj([
+                ("title", Value::str(self.title.clone())),
+                ("unit", Value::str(self.unit.clone())),
+                ("rows", rows_json),
+            ])
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let st = stats_of(vec![
+            Duration::from_micros(1),
+            Duration::from_micros(3),
+            Duration::from_micros(2),
+        ]);
+        assert_eq!(st.iters, 3);
+        assert_eq!(st.p50, Duration::from_micros(2));
+        assert_eq!(st.min, Duration::from_micros(1));
+        assert_eq!(st.max, Duration::from_micros(3));
+        assert_eq!(st.mean, Duration::from_micros(2));
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(1500)), "1.5µs");
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_runs_cases() {
+        let mut b = Bench::new("unit", 0, 3);
+        let mut count = 0;
+        b.case("noop", || count += 1);
+        assert!(count >= 3);
+        assert_eq!(b.results().len(), 1);
+    }
+}

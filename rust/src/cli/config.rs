@@ -1,0 +1,269 @@
+//! Platform/manager configuration files (substrate: a TOML subset —
+//! no toml crate offline).
+//!
+//! A deployable coordinator needs its testbed parameters in a file,
+//! not in code. `emerald ... --platform emerald.toml` loads one:
+//!
+//! ```toml
+//! # emerald.toml
+//! [platform]
+//! local_nodes = 10
+//! local_speed = 1.0
+//! cloud_nodes = 25
+//! cloud_speed = 4.0
+//! wan_mbits = 200.0
+//! wan_latency_ms = 10
+//!
+//! [migration]
+//! policy = "mdss"          # mdss | bundle
+//! decision = "always"      # always | cost
+//! attempts = 1
+//! local_fallback = false
+//! signing_key = ""         # non-empty enables request signing
+//! codec = "raw"            # raw | deflate
+//! ```
+//!
+//! Supported grammar: `[section]` headers, `key = value` with string /
+//! number / boolean values, `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cloud::PlatformConfig;
+use crate::mdss::Codec;
+use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
+
+/// A parsed config file: section -> key -> raw value.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ConfigFile {
+    sections: BTreeMap<String, BTreeMap<String, ConfigValue>>,
+}
+
+/// A config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl ConfigValue {
+    fn kind(&self) -> &'static str {
+        match self {
+            ConfigValue::Str(_) => "string",
+            ConfigValue::Num(_) => "number",
+            ConfigValue::Bool(_) => "boolean",
+        }
+    }
+}
+
+impl ConfigFile {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut out = Self::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {line:?}", lineno + 1);
+            };
+            let key = key.trim().to_string();
+            let value = Self::parse_value(value.trim())
+                .with_context(|| format!("line {}: value for {key}", lineno + 1))?;
+            out.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(out)
+    }
+
+    fn parse_value(raw: &str) -> Result<ConfigValue> {
+        if raw == "true" {
+            return Ok(ConfigValue::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(ConfigValue::Bool(false));
+        }
+        if let Some(s) = raw.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            return Ok(ConfigValue::Str(s.to_string()));
+        }
+        raw.parse::<f64>()
+            .map(ConfigValue::Num)
+            .map_err(|_| anyhow::anyhow!("cannot parse value {raw:?}"))
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    fn get(&self, section: &str, key: &str) -> Option<&ConfigValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    fn num(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(ConfigValue::Num(n)) => Ok(*n),
+            Some(v) => bail!("[{section}] {key} must be a number, got {}", v.kind()),
+        }
+    }
+
+    fn string(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(ConfigValue::Str(s)) => Ok(s.clone()),
+            Some(v) => bail!("[{section}] {key} must be a string, got {}", v.kind()),
+        }
+    }
+
+    fn boolean(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(ConfigValue::Bool(b)) => Ok(*b),
+            Some(v) => bail!("[{section}] {key} must be a boolean, got {}", v.kind()),
+        }
+    }
+
+    /// Build a [`PlatformConfig`] from the `[platform]` section
+    /// (missing keys take paper defaults).
+    pub fn platform(&self) -> Result<PlatformConfig> {
+        let d = PlatformConfig::default();
+        Ok(PlatformConfig {
+            local_nodes: self.num("platform", "local_nodes", d.local_nodes as f64)? as usize,
+            local_speed: self.num("platform", "local_speed", d.local_speed)?,
+            cloud_nodes: self.num("platform", "cloud_nodes", d.cloud_nodes as f64)? as usize,
+            cloud_speed: self.num("platform", "cloud_speed", d.cloud_speed)?,
+            wan_bandwidth: self.num("platform", "wan_mbits", d.wan_bandwidth * 8.0 / 1e6)?
+                * 1e6
+                / 8.0,
+            wan_latency: Duration::from_secs_f64(
+                self.num("platform", "wan_latency_ms", d.wan_latency.as_secs_f64() * 1e3)?
+                    / 1e3,
+            ),
+        })
+    }
+
+    /// Build a [`ManagerConfig`] from the `[migration]` section.
+    pub fn migration(&self) -> Result<ManagerConfig> {
+        let policy = match self.string("migration", "policy", "mdss")?.as_str() {
+            "mdss" => DataPolicy::Mdss,
+            "bundle" => DataPolicy::BundleAlways,
+            other => bail!("[migration] policy must be mdss|bundle, got {other:?}"),
+        };
+        let mut cfg = ManagerConfig::new(policy);
+        cfg.decision = match self.string("migration", "decision", "always")?.as_str() {
+            "always" => Decision::Always,
+            "cost" => Decision::CostBased,
+            other => bail!("[migration] decision must be always|cost, got {other:?}"),
+        };
+        cfg.attempts = self.num("migration", "attempts", 1.0)? as usize;
+        cfg.local_fallback = self.boolean("migration", "local_fallback", false)?;
+        let key = self.string("migration", "signing_key", "")?;
+        if !key.is_empty() {
+            cfg.signing = Some(SigningKey::new(key.into_bytes()));
+        }
+        Ok(cfg)
+    }
+
+    /// MDSS wire codec from the `[migration]` section.
+    pub fn codec(&self) -> Result<Codec> {
+        match self.string("migration", "codec", "raw")?.as_str() {
+            "raw" => Ok(Codec::Raw),
+            "deflate" => Ok(Codec::Deflate),
+            other => bail!("[migration] codec must be raw|deflate, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # testbed
+        [platform]
+        local_nodes = 4
+        cloud_speed = 2.5
+        wan_mbits = 100.0
+        wan_latency_ms = 5
+
+        [migration]
+        policy = "bundle"
+        decision = "cost"
+        attempts = 3
+        local_fallback = true
+        signing_key = "secret"
+        codec = "deflate"
+    "#;
+
+    #[test]
+    fn parses_platform_with_defaults() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        let p = cfg.platform().unwrap();
+        assert_eq!(p.local_nodes, 4);
+        assert_eq!(p.cloud_nodes, 25); // default kept
+        assert_eq!(p.cloud_speed, 2.5);
+        assert_eq!(p.wan_bandwidth, 100.0e6 / 8.0);
+        assert_eq!(p.wan_latency, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn parses_migration_section() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        let m = cfg.migration().unwrap();
+        assert_eq!(m.policy, DataPolicy::BundleAlways);
+        assert_eq!(m.decision, Decision::CostBased);
+        assert_eq!(m.attempts, 3);
+        assert!(m.local_fallback);
+        assert!(m.signing.is_some());
+        assert_eq!(cfg.codec().unwrap(), Codec::Deflate);
+    }
+
+    #[test]
+    fn empty_config_is_all_defaults() {
+        let cfg = ConfigFile::parse("").unwrap();
+        let p = cfg.platform().unwrap();
+        assert_eq!(p.local_nodes, PlatformConfig::default().local_nodes);
+        let m = cfg.migration().unwrap();
+        assert_eq!(m.policy, DataPolicy::Mdss);
+        assert!(m.signing.is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigFile::parse("[platform\nx = 1").is_err());
+        assert!(ConfigFile::parse("[p]\nnot a kv").is_err());
+        assert!(ConfigFile::parse("[p]\nx = @@").is_err());
+        assert!(ConfigFile::parse("[]\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let cfg = ConfigFile::parse("[platform]\nlocal_nodes = \"many\"").unwrap();
+        let err = format!("{:#}", cfg.platform().unwrap_err());
+        assert!(err.contains("must be a number"), "{err}");
+        let cfg = ConfigFile::parse("[migration]\npolicy = \"carrier-pigeon\"").unwrap();
+        assert!(cfg.migration().is_err());
+    }
+
+    #[test]
+    fn comments_and_whitespace_ignored() {
+        let cfg = ConfigFile::parse("  [platform]  # x\n local_speed = 2.0 # fast\n").unwrap();
+        assert_eq!(cfg.platform().unwrap().local_speed, 2.0);
+    }
+}

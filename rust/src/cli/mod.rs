@@ -1,0 +1,162 @@
+//! Command-line argument parsing (substrate; clap is not available
+//! offline) and configuration files ([`config`]).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed accessors and a generated usage
+//! string.
+
+pub mod config;
+
+pub use config::ConfigFile;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Binary name (argv[0]).
+    pub program: String,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from the process environment. `bool_flags` names the
+    /// options that take no value (resolves the `--flag positional`
+    /// ambiguity without a full schema language).
+    pub fn from_env(bool_flags: &[&str]) -> Self {
+        let mut argv = std::env::args();
+        let program = argv.next().unwrap_or_default();
+        Self::parse(program, argv.collect(), bool_flags)
+    }
+
+    /// Parse from an explicit vector (tests).
+    pub fn parse(program: String, argv: Vec<String>, bool_flags: &[&str]) -> Self {
+        let mut out = Self { program, ..Default::default() };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Is a boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with default.
+    pub fn opt(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn require(&self, name: &str) -> Result<String> {
+        self.options
+            .get(name)
+            .cloned()
+            .with_context(|| format!("missing required option --{name}"))
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("option --{name}={raw} is not a valid value")),
+        }
+    }
+
+    /// First positional argument (subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    /// Reject unknown options/flags (catches typos).
+    pub fn check_known(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known_opts.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (known: {})", known_flags.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(
+            "prog".into(),
+            v.iter().map(|s| s.to_string()).collect(),
+            &["offload"],
+        )
+    }
+
+    #[test]
+    fn parse_styles() {
+        let a = args(&["run", "--mesh", "small", "--iters=3", "--offload", "x.xml"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.opt("mesh", "demo"), "small");
+        assert_eq!(a.opt_parse::<usize>("iters", 1).unwrap(), 3);
+        assert!(a.flag("offload"));
+        assert_eq!(a.positional, vec!["run", "x.xml"]);
+    }
+
+    #[test]
+    fn undeclared_flag_at_end_still_flags() {
+        let a = args(&["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = args(&[]);
+        assert_eq!(a.opt("mesh", "demo"), "demo");
+        assert!(a.require("mesh").is_err());
+        assert_eq!(a.opt_parse::<f64>("alpha", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = args(&["--iters", "abc"]);
+        assert!(a.opt_parse::<usize>("iters", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = args(&["--mehs", "small"]);
+        assert!(a.check_known(&["mesh"], &[]).is_err());
+        let b = args(&["--mesh", "small"]);
+        assert!(b.check_known(&["mesh"], &[]).is_ok());
+    }
+}

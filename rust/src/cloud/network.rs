@@ -1,0 +1,104 @@
+//! Simulated WAN between the local cluster and the cloud, with a
+//! transfer ledger.
+//!
+//! The evaluation's offloading overhead is dominated by what crosses
+//! this link; MDSS (paper §3.4, Fig 10) exists precisely to reduce it.
+//! Every byte that migration or MDSS moves is accounted here, so the
+//! E4 bench can report bytes-saved directly from the ledger.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Cumulative transfer statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetworkLedger {
+    /// Total payload bytes moved (both directions).
+    pub bytes: u64,
+    /// Number of transfers.
+    pub transfers: u64,
+    /// Total simulated time spent on the wire.
+    pub sim_time: Duration,
+}
+
+/// The WAN model: `duration = latency + bytes / bandwidth`.
+pub struct SimNetwork {
+    /// Bytes per second.
+    bandwidth: f64,
+    /// One-way latency charged per transfer.
+    latency: Duration,
+    ledger: Mutex<NetworkLedger>,
+}
+
+impl SimNetwork {
+    /// New network with bandwidth (bytes/s) and per-transfer latency.
+    pub fn new(bandwidth: f64, latency: Duration) -> Self {
+        assert!(bandwidth > 0.0);
+        Self { bandwidth, latency, ledger: Mutex::new(NetworkLedger::default()) }
+    }
+
+    /// Simulate one transfer of `bytes`; returns its simulated duration
+    /// and records it in the ledger.
+    pub fn transfer(&self, bytes: u64) -> Duration {
+        let d = self.latency
+            + Duration::from_secs_f64(bytes as f64 / self.bandwidth);
+        let mut ledger = self.ledger.lock().unwrap();
+        ledger.bytes += bytes;
+        ledger.transfers += 1;
+        ledger.sim_time += d;
+        d
+    }
+
+    /// Cost of a transfer without recording it (planning / what-if).
+    pub fn estimate(&self, bytes: u64) -> Duration {
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bandwidth)
+    }
+
+    /// Snapshot of the ledger.
+    pub fn ledger(&self) -> NetworkLedger {
+        *self.ledger.lock().unwrap()
+    }
+
+    /// Reset the ledger (between bench phases).
+    pub fn reset(&self) {
+        *self.ledger.lock().unwrap() = NetworkLedger::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_is_latency_plus_payload() {
+        // 1000 bytes at 1000 B/s + 10 ms latency = 1.01 s.
+        let net = SimNetwork::new(1000.0, Duration::from_millis(10));
+        let d = net.transfer(1000);
+        assert_eq!(d, Duration::from_millis(1010));
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let net = SimNetwork::new(1e6, Duration::ZERO);
+        net.transfer(100);
+        net.transfer(300);
+        let l = net.ledger();
+        assert_eq!(l.bytes, 400);
+        assert_eq!(l.transfers, 2);
+        assert!(l.sim_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn estimate_does_not_record() {
+        let net = SimNetwork::new(1e6, Duration::ZERO);
+        let _ = net.estimate(1_000_000);
+        assert_eq!(net.ledger(), NetworkLedger::default());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let net = SimNetwork::new(1e6, Duration::ZERO);
+        net.transfer(5);
+        net.reset();
+        assert_eq!(net.ledger().bytes, 0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Compute nodes of the simulated platform.
+
+use std::time::Duration;
+
+/// Which tier a node belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Local cluster (paper: Xeon quad-core nodes).
+    Local,
+    /// Cloud VM (paper: Azure D-series).
+    Cloud,
+}
+
+impl std::fmt::Display for NodeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeKind::Local => write!(f, "local"),
+            NodeKind::Cloud => write!(f, "cloud"),
+        }
+    }
+}
+
+/// One compute node with a speed factor relative to the reference
+/// (a local cluster node = 1.0).
+#[derive(Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub index: usize,
+    pub speed: f64,
+}
+
+impl Node {
+    /// New node.
+    pub fn new(kind: NodeKind, index: usize, speed: f64) -> Self {
+        assert!(speed > 0.0, "node speed must be positive");
+        Self { kind, index, speed }
+    }
+
+    /// Convert measured reference wall time into simulated time on
+    /// this node: `sim = wall / speed`.
+    pub fn scale(&self, wall: Duration) -> Duration {
+        Duration::from_secs_f64(wall.as_secs_f64() / self.speed)
+    }
+
+    /// Diagnostic name like `cloud-3`.
+    pub fn name(&self) -> String {
+        format!("{}-{}", self.kind, self.index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_divides_by_speed() {
+        let n = Node::new(NodeKind::Cloud, 0, 4.0);
+        assert_eq!(n.scale(Duration::from_secs(8)), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn local_reference_is_identity() {
+        let n = Node::new(NodeKind::Local, 2, 1.0);
+        let d = Duration::from_millis(123);
+        assert_eq!(n.scale(d), d);
+        assert_eq!(n.name(), "local-2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_speed_rejected() {
+        Node::new(NodeKind::Local, 0, 0.0);
+    }
+}

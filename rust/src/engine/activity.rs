@@ -1,0 +1,288 @@
+//! Activities: the native computation units workflows invoke.
+//!
+//! WF ships a library of activities and lets applications register
+//! their own; Emerald does the same. An activity receives evaluated
+//! input values and returns output values — it never touches the
+//! workflow variable store directly, which is what makes a remotable
+//! `InvokeActivity` step trivially migratable: the cloud side runs the
+//! same registered activity against the shipped inputs (the Emerald
+//! runtime, like the WF assemblies in the paper, is deployed on both
+//! tiers; DESIGN.md §1).
+//!
+//! Large data never rides in input/output values: activities exchange
+//! tensors through MDSS URIs ([`ActivityCtx::read_tensor`] /
+//! [`ActivityCtx::write_tensor`]), so the migration manager's Fig-10
+//! freshness logic governs every byte that crosses the WAN.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cloud::{Node, NodeKind, Platform};
+use crate::expr::Value;
+use crate::mdss::{Mdss, Uri};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Shared services available to activities on both tiers.
+pub struct Services {
+    /// PJRT runtime (None for workflows that don't execute artifacts).
+    pub runtime: Option<Arc<Runtime>>,
+    /// The two-tier data service.
+    pub mdss: Arc<Mdss>,
+    /// The simulated platform (nodes + WAN).
+    pub platform: Arc<Platform>,
+}
+
+impl Services {
+    /// Services with a runtime.
+    pub fn with_runtime(runtime: Arc<Runtime>, platform: Arc<Platform>) -> Arc<Self> {
+        let mdss = Mdss::new(platform.network.clone());
+        Arc::new(Self { runtime: Some(runtime), mdss, platform })
+    }
+
+    /// Services without a PJRT runtime (pure-coordination workflows).
+    pub fn without_runtime(platform: Arc<Platform>) -> Arc<Self> {
+        let mdss = Mdss::new(platform.network.clone());
+        Arc::new(Self { runtime: None, mdss, platform })
+    }
+
+    /// Fully-custom services (runtime optional, explicit MDSS wire
+    /// codec — the E9 compressed-placement ablation).
+    pub fn custom(
+        runtime: Option<Arc<Runtime>>,
+        platform: Arc<Platform>,
+        codec: crate::mdss::Codec,
+    ) -> Arc<Self> {
+        let mdss = Mdss::with_codec(platform.network.clone(), codec);
+        Arc::new(Self { runtime, mdss, platform })
+    }
+
+    /// The runtime or a helpful error.
+    pub fn runtime(&self) -> Result<&Arc<Runtime>> {
+        self.runtime
+            .as_ref()
+            .context("this workflow needs a PJRT runtime (artifacts not loaded)")
+    }
+}
+
+/// Execution context handed to an activity.
+pub struct ActivityCtx {
+    pub services: Arc<Services>,
+    /// The node this activity runs on (its tier decides which MDSS
+    /// store is "ours"; its speed scales compute time).
+    pub node: Arc<Node>,
+    /// Accumulated raw compute wall time (scaled by node speed at
+    /// settlement) and already-simulated extra time (transfers).
+    charges: Mutex<(Duration, Duration)>,
+}
+
+impl ActivityCtx {
+    /// New context on a node.
+    pub fn new(services: Arc<Services>, node: Arc<Node>) -> Self {
+        Self { services, node, charges: Mutex::new((Duration::ZERO, Duration::ZERO)) }
+    }
+
+    /// The tier this activity executes on.
+    pub fn side(&self) -> NodeKind {
+        self.node.kind
+    }
+
+    /// Charge measured compute wall time (reference-node units; the
+    /// engine divides by the node's speed factor).
+    pub fn charge_compute(&self, wall: Duration) {
+        self.charges.lock().unwrap().0 += wall;
+    }
+
+    /// Charge an already-simulated duration (e.g. a metered transfer).
+    pub fn charge_sim(&self, d: Duration) {
+        self.charges.lock().unwrap().1 += d;
+    }
+
+    /// Settle: total simulated time for this activity on its node.
+    pub fn settle(&self) -> Duration {
+        let (wall, sim) = *self.charges.lock().unwrap();
+        self.node.scale(wall) + sim
+    }
+
+    /// Read a tensor from MDSS (on-demand cross-tier pull is metered
+    /// and charged to this activity).
+    pub fn read_tensor(&self, uri: &Uri, dims: &[usize]) -> Result<HostTensor> {
+        let (item, d) = self.services.mdss.get(self.side(), uri)?;
+        self.charge_sim(d);
+        HostTensor::from_le_bytes(dims, &item.payload)
+            .with_context(|| format!("decoding tensor {uri}"))
+    }
+
+    /// Write a tensor to this tier's MDSS store (no network).
+    pub fn write_tensor(&self, uri: &Uri, t: &HostTensor) {
+        self.services.mdss.put(self.side(), uri, t.to_le_bytes());
+    }
+
+    /// Execute a PJRT artifact, charging its compute time here.
+    pub fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let rt = self.services.runtime()?;
+        let (out, stats) = rt.execute_with_stats(artifact, inputs)?;
+        self.charge_compute(stats.compute);
+        Ok(out)
+    }
+}
+
+/// Typed access helpers for activity inputs.
+pub fn need_num(inputs: &BTreeMap<String, Value>, key: &str) -> Result<f64> {
+    match inputs.get(key) {
+        Some(Value::Num(n)) => Ok(*n),
+        Some(v) => bail!("input '{key}' must be a number, got {}", v.kind()),
+        None => bail!("missing input '{key}'"),
+    }
+}
+
+/// Typed access: string input.
+pub fn need_str(inputs: &BTreeMap<String, Value>, key: &str) -> Result<String> {
+    match inputs.get(key) {
+        Some(Value::Str(s)) => Ok(s.clone()),
+        Some(v) => bail!("input '{key}' must be a string, got {}", v.kind()),
+        None => bail!("missing input '{key}'"),
+    }
+}
+
+/// Typed access: URI input (accepts Uri or Str values).
+pub fn need_uri(inputs: &BTreeMap<String, Value>, key: &str) -> Result<Uri> {
+    match inputs.get(key) {
+        Some(Value::Uri(u)) => Uri::parse(u),
+        Some(Value::Str(s)) => Uri::parse(s),
+        Some(v) => bail!("input '{key}' must be a uri, got {}", v.kind()),
+        None => bail!("missing input '{key}'"),
+    }
+}
+
+/// An invocable computation unit.
+pub trait Activity: Send + Sync {
+    /// Run with evaluated inputs; return named outputs.
+    fn run(
+        &self,
+        ctx: &ActivityCtx,
+        inputs: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Value>>;
+}
+
+/// Closure adapter.
+struct FnActivity<F>(F);
+
+impl<F> Activity for FnActivity<F>
+where
+    F: Fn(&ActivityCtx, &BTreeMap<String, Value>) -> Result<BTreeMap<String, Value>>
+        + Send
+        + Sync,
+{
+    fn run(
+        &self,
+        ctx: &ActivityCtx,
+        inputs: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Value>> {
+        (self.0)(ctx, inputs)
+    }
+}
+
+/// Name → activity registry. Both tiers hold the same registry (same
+/// binary), mirroring the paper's deployment of the Emerald runtime on
+/// cluster and cloud.
+#[derive(Default)]
+pub struct ActivityRegistry {
+    map: BTreeMap<String, Arc<dyn Activity>>,
+}
+
+impl ActivityRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a boxed activity.
+    pub fn register(&mut self, name: &str, act: Arc<dyn Activity>) {
+        self.map.insert(name.to_string(), act);
+    }
+
+    /// Register a closure.
+    pub fn register_fn<F>(&mut self, name: &str, f: F)
+    where
+        F: Fn(&ActivityCtx, &BTreeMap<String, Value>) -> Result<BTreeMap<String, Value>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.register(name, Arc::new(FnActivity(f)));
+    }
+
+    /// Lookup.
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Activity>> {
+        self.map
+            .get(name)
+            .cloned()
+            .with_context(|| format!("activity '{name}' is not registered"))
+    }
+
+    /// Registered names (diagnostics).
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::PlatformConfig;
+
+    fn ctx() -> ActivityCtx {
+        let platform = Platform::new(PlatformConfig::default());
+        let node = platform.cloud_node();
+        ActivityCtx::new(Services::without_runtime(platform), node)
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("double", |_ctx, inputs| {
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(2.0 * x))].into())
+        });
+        let act = reg.get("double").unwrap();
+        let out = act
+            .run(&ctx(), &[("x".to_string(), Value::Num(21.0))].into())
+            .unwrap();
+        assert_eq!(out["y"], Value::Num(42.0));
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn settle_scales_compute_by_speed() {
+        let c = ctx(); // cloud node, speed 4.0 (paper testbed default)
+        c.charge_compute(Duration::from_secs(4));
+        c.charge_sim(Duration::from_secs(1));
+        assert_eq!(c.settle(), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn tensor_roundtrip_through_mdss() {
+        let c = ctx();
+        let uri = Uri::parse("mdss://t/x").unwrap();
+        let t = HostTensor::full(&[2, 2], 1.5);
+        c.write_tensor(&uri, &t);
+        let back = c.read_tensor(&uri, &[2, 2]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn typed_input_helpers() {
+        let mut inputs = BTreeMap::new();
+        inputs.insert("n".to_string(), Value::Num(1.0));
+        inputs.insert("s".to_string(), Value::Str("x".into()));
+        inputs.insert("u".to_string(), Value::Uri("mdss://a/b".into()));
+        assert_eq!(need_num(&inputs, "n").unwrap(), 1.0);
+        assert_eq!(need_str(&inputs, "s").unwrap(), "x");
+        assert_eq!(need_uri(&inputs, "u").unwrap().as_str(), "mdss://a/b");
+        assert!(need_num(&inputs, "s").is_err());
+        assert!(need_num(&inputs, "missing").is_err());
+    }
+}

@@ -1,0 +1,668 @@
+//! The workflow execution engine (paper §3.3).
+//!
+//! A tree-walking interpreter over [`crate::workflow::Step`] with:
+//!
+//! * WF-style scoped variables ([`state::VarStore`], Figure 7);
+//! * bookmark-style **suspend/resume** around migration points: when
+//!   execution reaches the temporary step the partitioner inserted, the
+//!   engine suspends the workflow, hands the following remotable step
+//!   to the [`OffloadHandler`] (the migration manager), and resumes
+//!   with the returned outputs re-integrated (Figure 6);
+//! * concurrent `Parallel` branches on real threads — parallel
+//!   remotable steps offload concurrently to distinct cloud nodes
+//!   (Figure 9b);
+//! * **simulated-time accounting**: every step returns its simulated
+//!   duration; sequences add, parallels take the max. Compute cost is
+//!   real (measured PJRT wall time) scaled by node speed; transfer cost
+//!   comes from the metered [`crate::cloud::SimNetwork`].
+
+pub mod activity;
+pub mod state;
+
+pub use activity::{Activity, ActivityCtx, ActivityRegistry, Services};
+pub use state::{FrameId, VarStore};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::expr::{self, Value};
+use crate::workflow::{analysis, Step, StepKind, Workflow};
+
+/// Execution trace events (tests and diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// An activity began on a node.
+    ActivityStarted { step: String, node: String },
+    /// An activity finished; simulated duration in microseconds.
+    ActivityFinished { step: String, sim_us: u64 },
+    /// Workflow suspended at a migration point (paper Fig 6).
+    Suspended { step: String },
+    /// Remotable step handed to the migration manager.
+    OffloadRequested { step: String },
+    /// Offload round-trip complete; simulated duration in microseconds
+    /// (data sync + uplink + remote execution + downlink).
+    OffloadFinished { step: String, sim_us: u64 },
+    /// Workflow resumed after re-integration.
+    Resumed { step: String },
+    /// Remotable step executed locally (offloading disabled).
+    LocalExecution { step: String },
+    /// A WriteLine emitted a line.
+    Line { text: String },
+}
+
+/// Result of one workflow run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Simulated end-to-end execution time on the modeled platform.
+    pub sim_time: Duration,
+    /// Real wall time of this run (diagnostics; not the paper metric).
+    pub wall_time: Duration,
+    /// Lines produced by WriteLine steps (cloud lines prefixed).
+    pub lines: Vec<String>,
+    /// Trace events.
+    pub events: Vec<Event>,
+}
+
+impl RunReport {
+    /// Number of offloaded steps.
+    pub fn offload_count(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, Event::OffloadRequested { .. }))
+            .count()
+    }
+}
+
+/// Outcome of offloading one step (returned by the migration manager).
+#[derive(Debug, Default)]
+pub struct OffloadOutcome {
+    /// Values for the step's written variables, to re-integrate.
+    pub outputs: BTreeMap<String, Value>,
+    /// Simulated duration of the whole round trip (sync + uplink +
+    /// remote execution + downlink).
+    pub sim: Duration,
+    /// WriteLine output produced on the cloud.
+    pub remote_lines: Vec<String>,
+}
+
+/// What the migration manager decided to do with a remotable step.
+#[derive(Debug)]
+pub enum OffloadVerdict {
+    /// The step ran remotely; re-integrate these results.
+    Executed(OffloadOutcome),
+    /// The manager declined (cost model says local is cheaper, or the
+    /// cloud is unreachable and fallback is enabled): the engine runs
+    /// the step locally.
+    Declined { reason: String },
+}
+
+/// The engine's hook into the migration manager (paper §3.3).
+pub trait OffloadHandler: Send + Sync {
+    /// Offload `step`: execute it remotely with the given input
+    /// variable values, returning outputs + simulated cost — or
+    /// decline, sending the step back for local execution.
+    fn offload(
+        &self,
+        step: &Step,
+        inputs: BTreeMap<String, Value>,
+        writes: &[String],
+    ) -> Result<OffloadVerdict>;
+}
+
+/// The workflow execution engine.
+pub struct Engine {
+    registry: Arc<ActivityRegistry>,
+    services: Arc<Services>,
+    offload: Option<Arc<dyn OffloadHandler>>,
+    /// Which tier this engine's activities execute on: the local
+    /// cluster for the main engine, the cloud for the migration
+    /// manager's remote engine.
+    tier: crate::cloud::NodeKind,
+    verbose: bool,
+}
+
+struct Ctx<'e> {
+    store: &'e Mutex<VarStore>,
+    frame: FrameId,
+    lines: &'e Mutex<Vec<String>>,
+    events: &'e Mutex<Vec<Event>>,
+}
+
+impl<'e> Ctx<'e> {
+    fn at(&self, frame: FrameId) -> Ctx<'e> {
+        Ctx { store: self.store, frame, lines: self.lines, events: self.events }
+    }
+
+    fn event(&self, e: Event) {
+        self.events.lock().unwrap().push(e);
+    }
+
+    fn eval(&self, src: &str) -> Result<Value> {
+        let store = self.store;
+        let frame = self.frame;
+        expr::eval_str(src, &move |name| store.lock().unwrap().lookup(frame, name))
+            .with_context(|| format!("evaluating {src:?}"))
+    }
+}
+
+impl Engine {
+    /// New engine (no offloading: remotable steps run locally).
+    pub fn new(registry: Arc<ActivityRegistry>, services: Arc<Services>) -> Self {
+        Self {
+            registry,
+            services,
+            offload: None,
+            tier: crate::cloud::NodeKind::Local,
+            verbose: false,
+        }
+    }
+
+    /// Attach a migration manager.
+    pub fn with_offload(mut self, handler: Arc<dyn OffloadHandler>) -> Self {
+        self.offload = Some(handler);
+        self
+    }
+
+    /// Run activities on a specific tier (the cloud-side migration
+    /// manager sets `NodeKind::Cloud`).
+    pub fn on_tier(mut self, tier: crate::cloud::NodeKind) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    /// Echo WriteLine output to stdout.
+    pub fn verbose(mut self) -> Self {
+        self.verbose = true;
+        self
+    }
+
+    /// Shared services (runtime, MDSS, platform).
+    pub fn services(&self) -> &Arc<Services> {
+        &self.services
+    }
+
+    /// Activity registry.
+    pub fn registry(&self) -> &Arc<ActivityRegistry> {
+        &self.registry
+    }
+
+    /// Execute a workflow to completion.
+    pub fn run(&self, wf: &Workflow) -> Result<RunReport> {
+        let started = Instant::now();
+        let store = Mutex::new(VarStore::new());
+        let lines = Mutex::new(Vec::new());
+        let events = Mutex::new(Vec::new());
+        let ctx = Ctx { store: &store, frame: VarStore::ROOT, lines: &lines, events: &events };
+
+        // Workflow-level variables.
+        for v in &wf.variables {
+            let init = v.init.as_deref().map(|src| ctx.eval(src)).transpose()?;
+            store
+                .lock()
+                .unwrap()
+                .declare(VarStore::ROOT, &v.name, init)
+                .with_context(|| format!("declaring workflow variable '{}'", v.name))?;
+        }
+
+        let sim_time = self
+            .exec(&wf.root, &ctx)
+            .with_context(|| format!("running workflow '{}'", wf.name))?;
+
+        Ok(RunReport {
+            sim_time,
+            wall_time: started.elapsed(),
+            lines: lines.into_inner().unwrap(),
+            events: events.into_inner().unwrap(),
+        })
+    }
+
+    /// Execute one step subtree against an existing store (used by the
+    /// cloud-side migration manager: P3 guarantees no nested offload,
+    /// so the remote engine runs with offloading disabled).
+    pub fn exec_subtree(
+        &self,
+        step: &Step,
+        seed: BTreeMap<String, Value>,
+    ) -> Result<(BTreeMap<String, Value>, Duration, Vec<String>)> {
+        let store = Mutex::new(VarStore::new());
+        let lines = Mutex::new(Vec::new());
+        let events = Mutex::new(Vec::new());
+        {
+            let mut s = store.lock().unwrap();
+            for (name, value) in &seed {
+                s.declare(VarStore::ROOT, name, Some(value.clone()))?;
+            }
+            // Declare write targets that aren't also reads.
+            let io = analysis::step_io(step)?;
+            for w in &io.writes {
+                if !seed.contains_key(w) {
+                    s.declare(VarStore::ROOT, w, None)?;
+                }
+            }
+        }
+        let ctx = Ctx { store: &store, frame: VarStore::ROOT, lines: &lines, events: &events };
+        let sim = self.exec(step, &ctx)?;
+
+        let io = analysis::step_io(step)?;
+        let s = store.lock().unwrap();
+        let mut outputs = BTreeMap::new();
+        for w in &io.writes {
+            if let Some(v) = s.lookup(VarStore::ROOT, w) {
+                outputs.insert(w.clone(), v);
+            }
+        }
+        Ok((outputs, sim, lines.into_inner().unwrap()))
+    }
+
+    fn exec(&self, step: &Step, ctx: &Ctx) -> Result<Duration> {
+        // Open this step's scope if it declares variables.
+        let frame = if step.variables.is_empty() {
+            ctx.frame
+        } else {
+            let mut s = ctx.store.lock().unwrap();
+            let child = s.push_frame(ctx.frame);
+            drop(s);
+            for v in &step.variables {
+                // Init expressions evaluate in the enclosing scope.
+                let init = v.init.as_deref().map(|src| ctx.eval(src)).transpose()?;
+                ctx.store.lock().unwrap().declare(child, &v.name, init)?;
+            }
+            child
+        };
+        let ctx = ctx.at(frame);
+
+        match &step.kind {
+            StepKind::Nop => Ok(Duration::ZERO),
+            StepKind::MigrationPoint => {
+                bail!(
+                    "dangling MigrationPoint '{}' (must precede a step inside a Sequence)",
+                    step.display_name
+                )
+            }
+            StepKind::Assign { to, value } => {
+                let v = ctx.eval(value)?;
+                ctx.store
+                    .lock()
+                    .unwrap()
+                    .set(frame, to, v)
+                    .with_context(|| format!("in step '{}'", step.display_name))?;
+                Ok(Duration::ZERO)
+            }
+            StepKind::WriteLine { text } => {
+                let v = ctx.eval(text)?;
+                let line = v.display_string();
+                if self.verbose {
+                    println!("{line}");
+                }
+                ctx.event(Event::Line { text: line.clone() });
+                ctx.lines.lock().unwrap().push(line);
+                Ok(Duration::ZERO)
+            }
+            StepKind::InvokeActivity { .. } => self.invoke(step, &ctx),
+            StepKind::If { condition, then_branch, else_branch } => {
+                if ctx.eval(condition)?.as_condition()? {
+                    self.exec(then_branch, &ctx)
+                } else if let Some(e) = else_branch {
+                    self.exec(e, &ctx)
+                } else {
+                    Ok(Duration::ZERO)
+                }
+            }
+            StepKind::While { condition, body, max_iters } => {
+                let mut sim = Duration::ZERO;
+                let mut iters = 0usize;
+                while ctx.eval(condition)?.as_condition()? {
+                    if iters >= *max_iters {
+                        bail!(
+                            "while loop '{}' exceeded MaxIters={max_iters}",
+                            step.display_name
+                        );
+                    }
+                    sim += self.exec(body, &ctx)?;
+                    iters += 1;
+                }
+                Ok(sim)
+            }
+            StepKind::Sequence(children) => {
+                let mut sim = Duration::ZERO;
+                let mut i = 0;
+                while i < children.len() {
+                    let child = &children[i];
+                    if matches!(child.kind, StepKind::MigrationPoint) {
+                        let Some(target) = children.get(i + 1) else {
+                            bail!(
+                                "MigrationPoint at end of sequence '{}' has no target",
+                                step.display_name
+                            );
+                        };
+                        sim += self.migrate_or_local(target, &ctx)?;
+                        i += 2;
+                    } else {
+                        sim += self.exec(child, &ctx)?;
+                        i += 1;
+                    }
+                }
+                Ok(sim)
+            }
+            StepKind::Parallel(children) => {
+                // Real threads; shared store; sim time = max of branches
+                // (paper Fig 9b: parallel steps don't affect each other).
+                let results: Vec<Result<Duration>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = children
+                        .iter()
+                        .map(|c| {
+                            let branch_ctx = ctx.at(frame);
+                            scope.spawn(move || self.exec(c, &branch_ctx))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| match h.join() {
+                            Ok(r) => r,
+                            Err(p) => std::panic::resume_unwind(p),
+                        })
+                        .collect()
+                });
+                let mut max = Duration::ZERO;
+                for r in results {
+                    max = max.max(r?);
+                }
+                Ok(max)
+            }
+        }
+    }
+
+    /// Execute a remotable step at a migration point: offload when a
+    /// handler is attached, run locally otherwise (paper §2: a
+    /// remotable step executed locally is "local execution").
+    fn migrate_or_local(&self, target: &Step, ctx: &Ctx) -> Result<Duration> {
+        let Some(handler) = &self.offload else {
+            ctx.event(Event::LocalExecution { step: target.display_name.clone() });
+            return self.exec(target, ctx);
+        };
+
+        ctx.event(Event::Suspended { step: target.display_name.clone() });
+        let io = analysis::step_io(target)?;
+        let mut inputs = BTreeMap::new();
+        {
+            let s = ctx.store.lock().unwrap();
+            for name in &io.reads {
+                match s.lookup(ctx.frame, name) {
+                    Some(v) => {
+                        inputs.insert(name.clone(), v);
+                    }
+                    None => bail!(
+                        "cannot offload '{}': input variable '{name}' has no value",
+                        target.display_name
+                    ),
+                }
+            }
+        }
+        ctx.event(Event::OffloadRequested { step: target.display_name.clone() });
+        let writes: Vec<String> = io.writes.iter().cloned().collect();
+        let verdict = handler
+            .offload(target, inputs, &writes)
+            .with_context(|| format!("offloading step '{}'", target.display_name))?;
+
+        let outcome = match verdict {
+            OffloadVerdict::Executed(outcome) => outcome,
+            OffloadVerdict::Declined { reason } => {
+                // The step falls back to local execution (the workflow
+                // still observes a suspend/resume pair, Fig 6).
+                ctx.event(Event::LocalExecution { step: target.display_name.clone() });
+                ctx.lines
+                    .lock()
+                    .unwrap()
+                    .push(format!("[emerald] offload declined: {reason}"));
+                let sim = self.exec(target, ctx)?;
+                ctx.event(Event::Resumed { step: target.display_name.clone() });
+                return Ok(sim);
+            }
+        };
+
+        {
+            let mut s = ctx.store.lock().unwrap();
+            for (name, value) in outcome.outputs {
+                s.set(ctx.frame, &name, value).with_context(|| {
+                    format!("re-integrating output '{name}' of '{}'", target.display_name)
+                })?;
+            }
+        }
+        for l in outcome.remote_lines {
+            let line = format!("[cloud] {l}");
+            if self.verbose {
+                println!("{line}");
+            }
+            ctx.lines.lock().unwrap().push(line);
+        }
+        ctx.event(Event::OffloadFinished {
+            step: target.display_name.clone(),
+            sim_us: outcome.sim.as_micros() as u64,
+        });
+        ctx.event(Event::Resumed { step: target.display_name.clone() });
+        Ok(outcome.sim)
+    }
+
+    fn invoke(&self, step: &Step, ctx: &Ctx) -> Result<Duration> {
+        let StepKind::InvokeActivity { activity, inputs, outputs } = &step.kind else {
+            unreachable!()
+        };
+        let act = self.registry.get(activity)?;
+        let mut in_vals = BTreeMap::new();
+        for (param, src) in inputs {
+            in_vals.insert(param.clone(), ctx.eval(src)?);
+        }
+        let node = match self.tier {
+            crate::cloud::NodeKind::Local => self.services.platform.local_node(),
+            crate::cloud::NodeKind::Cloud => self.services.platform.cloud_node(),
+        };
+        ctx.event(Event::ActivityStarted {
+            step: step.display_name.clone(),
+            node: node.name(),
+        });
+        let actx = ActivityCtx::new(self.services.clone(), node);
+        let out_vals = act
+            .run(&actx, &in_vals)
+            .with_context(|| format!("activity '{activity}' in step '{}'", step.display_name))?;
+        let sim = actx.settle();
+        for (param, var) in outputs {
+            let v = out_vals.get(param).with_context(|| {
+                format!("activity '{activity}' did not produce output '{param}'")
+            })?;
+            ctx.store.lock().unwrap().set(ctx.frame, var, v.clone())?;
+        }
+        ctx.event(Event::ActivityFinished {
+            step: step.display_name.clone(),
+            sim_us: sim.as_micros() as u64,
+        });
+        Ok(sim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Platform;
+    use crate::workflow::xaml;
+
+    fn engine() -> Engine {
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("math.square", |_c, inputs| {
+            let x = activity::need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x * x))].into())
+        });
+        reg.register_fn("slow.op", |c, _| {
+            c.charge_compute(Duration::from_millis(100));
+            Ok([("done".to_string(), Value::Bool(true))].into())
+        });
+        Engine::new(
+            Arc::new(reg),
+            Services::without_runtime(Platform::paper_testbed()),
+        )
+    }
+
+    fn run(xml: &str) -> RunReport {
+        engine().run(&xaml::parse(xml).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn greeting_workflow_runs() {
+        let report = run(
+            r#"<Workflow Name="greeting">
+                 <Variables><Variable Name="name"/><Variable Name="greeting"/></Variables>
+                 <Sequence>
+                   <Assign To="name" Value="'Ada'"/>
+                   <Assign To="greeting" Value="'Hello, ' + name"/>
+                   <WriteLine Text="greeting"/>
+                 </Sequence>
+               </Workflow>"#,
+        );
+        assert_eq!(report.lines, vec!["Hello, Ada"]);
+    }
+
+    #[test]
+    fn while_and_if() {
+        let report = run(
+            r#"<Workflow>
+                 <Variables><Variable Name="i" Init="0"/><Variable Name="evens" Init="0"/></Variables>
+                 <Sequence>
+                   <While Condition="i &lt; 6" MaxIters="10">
+                     <Sequence>
+                       <If Condition="i % 2 == 0">
+                         <If.Then><Assign To="evens" Value="evens + 1"/></If.Then>
+                       </If>
+                       <Assign To="i" Value="i + 1"/>
+                     </Sequence>
+                   </While>
+                   <WriteLine Text="'evens=' + str(evens)"/>
+                 </Sequence>
+               </Workflow>"#,
+        );
+        assert_eq!(report.lines, vec!["evens=3"]);
+    }
+
+    #[test]
+    fn while_max_iters_guards() {
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="i" Init="0"/></Variables>
+                 <While Condition="true" MaxIters="3"><Assign To="i" Value="i + 1"/></While>
+               </Workflow>"#,
+        )
+        .unwrap();
+        assert!(engine().run(&wf).is_err());
+    }
+
+    #[test]
+    fn activity_invocation_and_outputs() {
+        let report = run(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="math.square" In.x="7" Out.y="y"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#,
+        );
+        assert_eq!(report.lines, vec!["49"]);
+    }
+
+    #[test]
+    fn sequence_sums_parallel_maxes_sim_time() {
+        // 3 sequential slow ops vs 3 parallel slow ops on speed-1 nodes:
+        // sequence = 300 ms sim, parallel = 100 ms sim.
+        let seq = run(
+            r#"<Workflow>
+                 <Variables><Variable Name="d"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="slow.op" Out.done="d"/>
+                   <InvokeActivity Activity="slow.op" Out.done="d"/>
+                   <InvokeActivity Activity="slow.op" Out.done="d"/>
+                 </Sequence>
+               </Workflow>"#,
+        );
+        let par = run(
+            r#"<Workflow>
+                 <Variables><Variable Name="a"/><Variable Name="b"/><Variable Name="c"/></Variables>
+                 <Parallel>
+                   <InvokeActivity Activity="slow.op" Out.done="a"/>
+                   <InvokeActivity Activity="slow.op" Out.done="b"/>
+                   <InvokeActivity Activity="slow.op" Out.done="c"/>
+                 </Parallel>
+               </Workflow>"#,
+        );
+        assert_eq!(seq.sim_time, Duration::from_millis(300));
+        assert_eq!(par.sim_time, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn scoped_variable_initializers() {
+        let report = run(
+            r#"<Workflow>
+                 <Variables><Variable Name="seed" Init="10"/><Variable Name="out"/></Variables>
+                 <Sequence>
+                   <Sequence.Variables><Variable Name="tmp" Init="seed * 2"/></Sequence.Variables>
+                   <Assign To="out" Value="tmp + 1"/>
+                   <WriteLine Text="str(out)"/>
+                 </Sequence>
+               </Workflow>"#,
+        );
+        assert_eq!(report.lines, vec!["21"]);
+    }
+
+    #[test]
+    fn migration_point_without_handler_runs_locally() {
+        let report = run(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <MigrationPoint/>
+                   <InvokeActivity Activity="math.square" In.x="3" Out.y="y" Remotable="true"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#,
+        );
+        assert_eq!(report.lines, vec!["9"]);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::LocalExecution { .. })));
+        assert_eq!(report.offload_count(), 0);
+    }
+
+    #[test]
+    fn assignment_to_undeclared_fails() {
+        let wf = xaml::parse(
+            r#"<Workflow><Sequence><Assign To="ghost" Value="1"/></Sequence></Workflow>"#,
+        )
+        .unwrap();
+        assert!(engine().run(&wf).is_err());
+    }
+
+    #[test]
+    fn dangling_migration_point_fails() {
+        let wf = xaml::parse(
+            r#"<Workflow><Sequence><MigrationPoint/></Sequence></Workflow>"#,
+        )
+        .unwrap();
+        assert!(engine().run(&wf).is_err());
+    }
+
+    #[test]
+    fn exec_subtree_returns_writes() {
+        let step = crate::workflow::Step::new(
+            "grp",
+            StepKind::Sequence(vec![crate::workflow::Step::new(
+                "a",
+                StepKind::Assign { to: "y".into(), value: "x * 10".into() },
+            )]),
+        );
+        let (outputs, _sim, _lines) = engine()
+            .exec_subtree(&step, [("x".to_string(), Value::Num(4.0))].into())
+            .unwrap();
+        assert_eq!(outputs["y"], Value::Num(40.0));
+    }
+}

@@ -1,0 +1,192 @@
+//! Workflow variable state with WF scoping (paper Figure 7).
+//!
+//! Scopes form a *tree*, not a stack: `Parallel` branches each get
+//! their own child frame while sharing ancestor frames, which is
+//! exactly WF's visibility rule — a variable declared at a step is
+//! visible to that step and its nested workflow, and siblings can't see
+//! each other's declarations.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::expr::Value;
+
+/// Frame index into the arena.
+pub type FrameId = usize;
+
+#[derive(Debug, Default)]
+struct Frame {
+    parent: Option<FrameId>,
+    /// Declared variables; `None` = declared but not yet assigned.
+    vars: BTreeMap<String, Option<Value>>,
+}
+
+/// The scope arena for one workflow run.
+#[derive(Debug, Default)]
+pub struct VarStore {
+    frames: Vec<Frame>,
+}
+
+impl VarStore {
+    /// Empty store with a root frame (id 0).
+    pub fn new() -> Self {
+        Self { frames: vec![Frame::default()] }
+    }
+
+    /// Root frame id.
+    pub const ROOT: FrameId = 0;
+
+    /// Create a child frame.
+    pub fn push_frame(&mut self, parent: FrameId) -> FrameId {
+        self.frames.push(Frame { parent: Some(parent), vars: BTreeMap::new() });
+        self.frames.len() - 1
+    }
+
+    /// Declare a variable in a frame (shadows outer declarations).
+    pub fn declare(&mut self, frame: FrameId, name: &str, value: Option<Value>) -> Result<()> {
+        let f = &mut self.frames[frame];
+        if f.vars.contains_key(name) {
+            bail!("variable '{name}' already declared in this scope");
+        }
+        f.vars.insert(name.to_string(), value);
+        Ok(())
+    }
+
+    /// Read a variable, walking ancestor frames.
+    pub fn get(&self, frame: FrameId, name: &str) -> Result<Value> {
+        let mut cur = Some(frame);
+        while let Some(id) = cur {
+            let f = &self.frames[id];
+            if let Some(slot) = f.vars.get(name) {
+                return match slot {
+                    Some(v) => Ok(v.clone()),
+                    None => bail!("variable '{name}' read before assignment"),
+                };
+            }
+            cur = f.parent;
+        }
+        bail!("variable '{name}' is not declared in any enclosing scope (Figure 7)")
+    }
+
+    /// Lookup returning `None` for undeclared/unassigned (expression
+    /// evaluation hook).
+    pub fn lookup(&self, frame: FrameId, name: &str) -> Option<Value> {
+        let mut cur = Some(frame);
+        while let Some(id) = cur {
+            let f = &self.frames[id];
+            if let Some(slot) = f.vars.get(name) {
+                return slot.clone();
+            }
+            cur = f.parent;
+        }
+        None
+    }
+
+    /// Write a variable where it is declared; error when undeclared.
+    pub fn set(&mut self, frame: FrameId, name: &str, value: Value) -> Result<()> {
+        let mut cur = Some(frame);
+        while let Some(id) = cur {
+            let f = &mut self.frames[id];
+            if let Some(slot) = f.vars.get_mut(name) {
+                *slot = Some(value);
+                return Ok(());
+            }
+            cur = self.frames[id].parent;
+        }
+        bail!("cannot assign to undeclared variable '{name}' (declare it at the step's scope)")
+    }
+
+    /// Is a variable declared (any enclosing scope)?
+    pub fn is_declared(&self, frame: FrameId, name: &str) -> bool {
+        let mut cur = Some(frame);
+        while let Some(id) = cur {
+            if self.frames[id].vars.contains_key(name) {
+                return true;
+            }
+            cur = self.frames[id].parent;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declare_get_set() {
+        let mut s = VarStore::new();
+        s.declare(VarStore::ROOT, "x", Some(Value::Num(1.0))).unwrap();
+        assert_eq!(s.get(VarStore::ROOT, "x").unwrap(), Value::Num(1.0));
+        s.set(VarStore::ROOT, "x", Value::Num(2.0)).unwrap();
+        assert_eq!(s.get(VarStore::ROOT, "x").unwrap(), Value::Num(2.0));
+    }
+
+    #[test]
+    fn child_sees_parent_parent_not_child() {
+        // Paper Figure 7: A defined in step 1 is visible to nested a/b;
+        // B defined in a is invisible to the parent.
+        let mut s = VarStore::new();
+        s.declare(VarStore::ROOT, "A", Some(Value::Num(1.0))).unwrap();
+        let child = s.push_frame(VarStore::ROOT);
+        s.declare(child, "B", Some(Value::Num(2.0))).unwrap();
+        assert!(s.get(child, "A").is_ok());
+        assert!(s.get(VarStore::ROOT, "B").is_err());
+    }
+
+    #[test]
+    fn siblings_are_isolated() {
+        let mut s = VarStore::new();
+        let a = s.push_frame(VarStore::ROOT);
+        let b = s.push_frame(VarStore::ROOT);
+        s.declare(a, "B", Some(Value::Bool(true))).unwrap();
+        assert!(s.get(b, "B").is_err());
+    }
+
+    #[test]
+    fn set_writes_to_declaring_frame() {
+        // Paper Figure 7: C at workflow level is writable from any step.
+        let mut s = VarStore::new();
+        s.declare(VarStore::ROOT, "C", Some(Value::Num(0.0))).unwrap();
+        let deep = {
+            let f1 = s.push_frame(VarStore::ROOT);
+            s.push_frame(f1)
+        };
+        s.set(deep, "C", Value::Num(9.0)).unwrap();
+        assert_eq!(s.get(VarStore::ROOT, "C").unwrap(), Value::Num(9.0));
+    }
+
+    #[test]
+    fn shadowing() {
+        let mut s = VarStore::new();
+        s.declare(VarStore::ROOT, "x", Some(Value::Num(1.0))).unwrap();
+        let child = s.push_frame(VarStore::ROOT);
+        s.declare(child, "x", Some(Value::Num(5.0))).unwrap();
+        assert_eq!(s.get(child, "x").unwrap(), Value::Num(5.0));
+        assert_eq!(s.get(VarStore::ROOT, "x").unwrap(), Value::Num(1.0));
+        s.set(child, "x", Value::Num(6.0)).unwrap();
+        assert_eq!(s.get(VarStore::ROOT, "x").unwrap(), Value::Num(1.0));
+    }
+
+    #[test]
+    fn unassigned_read_fails() {
+        let mut s = VarStore::new();
+        s.declare(VarStore::ROOT, "x", None).unwrap();
+        assert!(s.get(VarStore::ROOT, "x").is_err());
+        assert!(s.is_declared(VarStore::ROOT, "x"));
+    }
+
+    #[test]
+    fn duplicate_declaration_rejected() {
+        let mut s = VarStore::new();
+        s.declare(VarStore::ROOT, "x", None).unwrap();
+        assert!(s.declare(VarStore::ROOT, "x", None).is_err());
+    }
+
+    #[test]
+    fn undeclared_assignment_rejected() {
+        let mut s = VarStore::new();
+        assert!(s.set(VarStore::ROOT, "ghost", Value::Num(1.0)).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Tokenizer for the workflow expression language.
+
+use super::EvalError;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Num(f64),
+    Str(String),
+    Ident(String),
+    True,
+    False,
+    LParen,
+    RParen,
+    Comma,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    EqEq,
+    NotEq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    AndAnd,
+    OrOr,
+    Bang,
+}
+
+pub fn lex(src: &str) -> Result<Vec<Tok>, EvalError> {
+    let b = src.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    let err = |msg: String| EvalError::Parse(msg);
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            b',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            b'+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            b'-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            b'*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            b'/' => {
+                out.push(Tok::Slash);
+                i += 1;
+            }
+            b'%' => {
+                out.push(Tok::Percent);
+                i += 1;
+            }
+            b'=' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::EqEq);
+                    i += 2;
+                } else {
+                    return Err(err("single '=' (use '==')".into()));
+                }
+            }
+            b'!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::NotEq);
+                    i += 2;
+                } else {
+                    out.push(Tok::Bang);
+                    i += 1;
+                }
+            }
+            b'<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Le);
+                    i += 2;
+                } else {
+                    out.push(Tok::Lt);
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Tok::Ge);
+                    i += 2;
+                } else {
+                    out.push(Tok::Gt);
+                    i += 1;
+                }
+            }
+            b'&' => {
+                if b.get(i + 1) == Some(&b'&') {
+                    out.push(Tok::AndAnd);
+                    i += 2;
+                } else {
+                    return Err(err("single '&' (use '&&')".into()));
+                }
+            }
+            b'|' => {
+                if b.get(i + 1) == Some(&b'|') {
+                    out.push(Tok::OrOr);
+                    i += 2;
+                } else {
+                    return Err(err("single '|' (use '||')".into()));
+                }
+            }
+            b'\'' | b'"' => {
+                let quote = c;
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != quote {
+                    j += 1;
+                }
+                if j == b.len() {
+                    return Err(err("unterminated string literal".into()));
+                }
+                let s = std::str::from_utf8(&b[start..j])
+                    .map_err(|_| err("non-utf8 string".into()))?;
+                out.push(Tok::Str(s.to_string()));
+                i = j + 1;
+            }
+            b'0'..=b'9' | b'.' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_digit() || b[i] == b'.' || b[i] == b'e' || b[i] == b'E'
+                        || ((b[i] == b'+' || b[i] == b'-')
+                            && i > start
+                            && (b[i - 1] == b'e' || b[i - 1] == b'E')))
+                {
+                    i += 1;
+                }
+                let text = std::str::from_utf8(&b[start..i]).unwrap();
+                let n = text
+                    .parse::<f64>()
+                    .map_err(|_| err(format!("bad number {text:?}")))?;
+                out.push(Tok::Num(n));
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let word = std::str::from_utf8(&b[start..i]).unwrap();
+                out.push(match word {
+                    "true" => Tok::True,
+                    "false" => Tok::False,
+                    _ => Tok::Ident(word.to_string()),
+                });
+            }
+            c => return Err(err(format!("unexpected character {:?}", c as char))),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_mix() {
+        let toks = lex("x1 + 'ab' * 2.5e1 >= true").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("x1".into()),
+                Tok::Plus,
+                Tok::Str("ab".into()),
+                Tok::Star,
+                Tok::Num(25.0),
+                Tok::Ge,
+                Tok::True,
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_rejects() {
+        assert!(lex("a = b").is_err());
+        assert!(lex("a & b").is_err());
+        assert!(lex("'unterminated").is_err());
+        assert!(lex("#").is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Expression language for workflow `Assign` steps and conditions
+//! (substrate).
+//!
+//! WF uses VB/C# expressions inside XAML; Emerald workflows use this
+//! small language instead. It supports numbers, strings, booleans,
+//! variable references, arithmetic (`+ - * / %`), comparisons
+//! (`== != < <= > >=`), logic (`&& || !`), unary minus, parentheses,
+//! string concatenation via `+`, and a few builtins (`len`, `min`,
+//! `max`, `abs`, `str`, `num`).
+//!
+//! Evaluation happens against a [`Scope`]-like lookup function, so the
+//! engine can enforce WF variable-scoping rules (paper Property 2).
+
+mod lexer;
+mod parser;
+
+pub use parser::parse;
+
+use std::fmt;
+
+/// Runtime value of the workflow variable system.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    /// Opaque reference to a data item (MDSS URI) or tensor handle.
+    /// Expressions can pass it around and compare it but not operate
+    /// on its contents.
+    Uri(String),
+}
+
+impl Value {
+    /// Human-readable type name (for error messages).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Bool(_) => "bool",
+            Value::Uri(_) => "uri",
+        }
+    }
+
+    /// Coerce to string (used by `WriteLine` and `str()`).
+    pub fn display_string(&self) -> String {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => {
+                format!("{}", *n as i64)
+            }
+            Value::Num(n) => format!("{n}"),
+            Value::Str(s) => s.clone(),
+            Value::Bool(b) => format!("{b}"),
+            Value::Uri(u) => u.clone(),
+        }
+    }
+
+    /// Truthiness for conditions: only booleans are allowed (no
+    /// implicit coercion — workflow bugs should fail loudly).
+    pub fn as_condition(&self) -> Result<bool, EvalError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => Err(EvalError::Type(format!(
+                "condition must be a bool, got {}",
+                v.kind()
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.display_string())
+    }
+}
+
+/// Parsed expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Lit(Value),
+    Var(String),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Call(String, Vec<Expr>),
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// Errors from parsing or evaluating expressions.
+#[derive(Debug, thiserror::Error)]
+pub enum EvalError {
+    #[error("expression parse error: {0}")]
+    Parse(String),
+    #[error("undefined variable '{0}' (check WF scoping — paper Property 2)")]
+    Undefined(String),
+    #[error("type error: {0}")]
+    Type(String),
+    #[error("unknown function '{0}'")]
+    UnknownFn(String),
+    #[error("division by zero")]
+    DivZero,
+}
+
+impl Expr {
+    /// Evaluate against a variable-lookup function.
+    pub fn eval(&self, lookup: &dyn Fn(&str) -> Option<Value>) -> Result<Value, EvalError> {
+        match self {
+            Expr::Lit(v) => Ok(v.clone()),
+            Expr::Var(name) => {
+                lookup(name).ok_or_else(|| EvalError::Undefined(name.clone()))
+            }
+            Expr::Unary(op, e) => {
+                let v = e.eval(lookup)?;
+                match (op, v) {
+                    (UnOp::Neg, Value::Num(n)) => Ok(Value::Num(-n)),
+                    (UnOp::Not, Value::Bool(b)) => Ok(Value::Bool(!b)),
+                    (op, v) => Err(EvalError::Type(format!(
+                        "cannot apply {op:?} to {}",
+                        v.kind()
+                    ))),
+                }
+            }
+            Expr::Binary(op, a, b) => {
+                // Short-circuit logic first.
+                if matches!(op, BinOp::And | BinOp::Or) {
+                    let lhs = a.eval(lookup)?.as_condition()?;
+                    return match (op, lhs) {
+                        (BinOp::And, false) => Ok(Value::Bool(false)),
+                        (BinOp::Or, true) => Ok(Value::Bool(true)),
+                        _ => Ok(Value::Bool(b.eval(lookup)?.as_condition()?)),
+                    };
+                }
+                let lhs = a.eval(lookup)?;
+                let rhs = b.eval(lookup)?;
+                eval_binary(*op, lhs, rhs)
+            }
+            Expr::Call(name, args) => {
+                let vals = args
+                    .iter()
+                    .map(|a| a.eval(lookup))
+                    .collect::<Result<Vec<_>, _>>()?;
+                eval_call(name, vals)
+            }
+        }
+    }
+
+    /// Free variables referenced by the expression (used by the
+    /// partitioner to validate Property 2).
+    pub fn free_vars(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_vars(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Lit(_) => {}
+            Expr::Var(v) => out.push(v.clone()),
+            Expr::Unary(_, e) => e.collect_vars(out),
+            Expr::Binary(_, a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            Expr::Call(_, args) => args.iter().for_each(|a| a.collect_vars(out)),
+        }
+    }
+}
+
+fn eval_binary(op: BinOp, lhs: Value, rhs: Value) -> Result<Value, EvalError> {
+    use BinOp::*;
+    use Value::*;
+    match (op, &lhs, &rhs) {
+        (Add, Num(a), Num(b)) => Ok(Num(a + b)),
+        (Sub, Num(a), Num(b)) => Ok(Num(a - b)),
+        (Mul, Num(a), Num(b)) => Ok(Num(a * b)),
+        (Div, Num(a), Num(b)) => {
+            if *b == 0.0 {
+                Err(EvalError::DivZero)
+            } else {
+                Ok(Num(a / b))
+            }
+        }
+        (Mod, Num(a), Num(b)) => {
+            if *b == 0.0 {
+                Err(EvalError::DivZero)
+            } else {
+                Ok(Num(a % b))
+            }
+        }
+        // String concatenation: either side a string promotes.
+        (Add, Str(_), _) | (Add, _, Str(_)) => {
+            Ok(Str(lhs.display_string() + &rhs.display_string()))
+        }
+        (Eq, a, b) => Ok(Bool(a == b)),
+        (Ne, a, b) => Ok(Bool(a != b)),
+        (Lt, Num(a), Num(b)) => Ok(Bool(a < b)),
+        (Le, Num(a), Num(b)) => Ok(Bool(a <= b)),
+        (Gt, Num(a), Num(b)) => Ok(Bool(a > b)),
+        (Ge, Num(a), Num(b)) => Ok(Bool(a >= b)),
+        (Lt, Str(a), Str(b)) => Ok(Bool(a < b)),
+        (Le, Str(a), Str(b)) => Ok(Bool(a <= b)),
+        (Gt, Str(a), Str(b)) => Ok(Bool(a > b)),
+        (Ge, Str(a), Str(b)) => Ok(Bool(a >= b)),
+        (op, a, b) => Err(EvalError::Type(format!(
+            "cannot apply {op:?} to {} and {}",
+            a.kind(),
+            b.kind()
+        ))),
+    }
+}
+
+fn eval_call(name: &str, args: Vec<Value>) -> Result<Value, EvalError> {
+    let arity = |n: usize| -> Result<(), EvalError> {
+        if args.len() != n {
+            Err(EvalError::Type(format!(
+                "{name}() takes {n} argument(s), got {}",
+                args.len()
+            )))
+        } else {
+            Ok(())
+        }
+    };
+    match name {
+        "len" => {
+            arity(1)?;
+            match &args[0] {
+                Value::Str(s) => Ok(Value::Num(s.chars().count() as f64)),
+                v => Err(EvalError::Type(format!("len() needs a string, got {}", v.kind()))),
+            }
+        }
+        "abs" => {
+            arity(1)?;
+            match &args[0] {
+                Value::Num(n) => Ok(Value::Num(n.abs())),
+                v => Err(EvalError::Type(format!("abs() needs a number, got {}", v.kind()))),
+            }
+        }
+        "min" | "max" => {
+            arity(2)?;
+            match (&args[0], &args[1]) {
+                (Value::Num(a), Value::Num(b)) => Ok(Value::Num(if name == "min" {
+                    a.min(*b)
+                } else {
+                    a.max(*b)
+                })),
+                _ => Err(EvalError::Type(format!("{name}() needs numbers"))),
+            }
+        }
+        "str" => {
+            arity(1)?;
+            Ok(Value::Str(args[0].display_string()))
+        }
+        "num" => {
+            arity(1)?;
+            match &args[0] {
+                Value::Num(n) => Ok(Value::Num(*n)),
+                Value::Str(s) => s
+                    .trim()
+                    .parse::<f64>()
+                    .map(Value::Num)
+                    .map_err(|_| EvalError::Type(format!("num() cannot parse {s:?}"))),
+                v => Err(EvalError::Type(format!("num() cannot convert {}", v.kind()))),
+            }
+        }
+        "uri" => {
+            arity(1)?;
+            Ok(Value::Uri(args[0].display_string()))
+        }
+        _ => Err(EvalError::UnknownFn(name.to_string())),
+    }
+}
+
+/// Convenience: parse + eval in one call.
+pub fn eval_str(
+    src: &str,
+    lookup: &dyn Fn(&str) -> Option<Value>,
+) -> Result<Value, EvalError> {
+    parse(src)?.eval(lookup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(name: &str) -> Option<Value> {
+        match name {
+            "x" => Some(Value::Num(4.0)),
+            "name" => Some(Value::Str("Ada".into())),
+            "flag" => Some(Value::Bool(true)),
+            _ => None,
+        }
+    }
+
+    fn ev(src: &str) -> Value {
+        eval_str(src, &env).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        assert_eq!(ev("1 + 2 * 3"), Value::Num(7.0));
+        assert_eq!(ev("(1 + 2) * 3"), Value::Num(9.0));
+        assert_eq!(ev("-x + 10 % 3"), Value::Num(-3.0));
+        assert_eq!(ev("8 / 2 / 2"), Value::Num(2.0));
+    }
+
+    #[test]
+    fn string_concat_like_figure3() {
+        // Paper Figure 3: concatenate "Hello" with user's name.
+        assert_eq!(ev("'Hello, ' + name + '!'"), Value::Str("Hello, Ada!".into()));
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        assert_eq!(ev("x >= 4 && flag"), Value::Bool(true));
+        assert_eq!(ev("x < 4 || !flag"), Value::Bool(false));
+        assert_eq!(ev("name == 'Ada'"), Value::Bool(true));
+        assert_eq!(ev("1 == 1 && 2 != 3"), Value::Bool(true));
+    }
+
+    #[test]
+    fn short_circuit_skips_rhs() {
+        // RHS references an undefined var; short-circuit must not eval it.
+        assert_eq!(ev("false && missing"), Value::Bool(false));
+        assert_eq!(ev("true || missing"), Value::Bool(true));
+    }
+
+    #[test]
+    fn builtins() {
+        assert_eq!(ev("len(name)"), Value::Num(3.0));
+        assert_eq!(ev("min(x, 2)"), Value::Num(2.0));
+        assert_eq!(ev("max(x, 2)"), Value::Num(4.0));
+        assert_eq!(ev("abs(0 - 9)"), Value::Num(9.0));
+        assert_eq!(ev("num('2.5') * 2"), Value::Num(5.0));
+        assert_eq!(ev("str(x) + '!'"), Value::Str("4!".into()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(eval_str("missing", &env), Err(EvalError::Undefined(_))));
+        assert!(matches!(eval_str("1 / 0", &env), Err(EvalError::DivZero)));
+        assert!(matches!(eval_str("1 && true", &env), Err(EvalError::Type(_))));
+        assert!(matches!(eval_str("foo(1)", &env), Err(EvalError::UnknownFn(_))));
+        assert!(matches!(eval_str("1 +", &env), Err(EvalError::Parse(_))));
+    }
+
+    #[test]
+    fn free_vars() {
+        let e = parse("x + len(name) * (flag == true)").unwrap();
+        assert_eq!(e.free_vars(), vec!["flag", "name", "x"]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Pratt-style precedence-climbing parser for the expression language.
+
+use super::lexer::{lex, Tok};
+use super::{BinOp, EvalError, Expr, UnOp, Value};
+
+/// Parse an expression string into an AST.
+pub fn parse(src: &str) -> Result<Expr, EvalError> {
+    let toks = lex(src)?;
+    let mut p = P { toks, pos: 0 };
+    let e = p.expr(0)?;
+    if p.pos != p.toks.len() {
+        return Err(EvalError::Parse(format!(
+            "unexpected token {:?} after expression",
+            p.toks[p.pos]
+        )));
+    }
+    Ok(e)
+}
+
+struct P {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+/// (precedence, operator) for binary tokens; higher binds tighter.
+fn binop(t: &Tok) -> Option<(u8, BinOp)> {
+    Some(match t {
+        Tok::OrOr => (1, BinOp::Or),
+        Tok::AndAnd => (2, BinOp::And),
+        Tok::EqEq => (3, BinOp::Eq),
+        Tok::NotEq => (3, BinOp::Ne),
+        Tok::Lt => (4, BinOp::Lt),
+        Tok::Le => (4, BinOp::Le),
+        Tok::Gt => (4, BinOp::Gt),
+        Tok::Ge => (4, BinOp::Ge),
+        Tok::Plus => (5, BinOp::Add),
+        Tok::Minus => (5, BinOp::Sub),
+        Tok::Star => (6, BinOp::Mul),
+        Tok::Slash => (6, BinOp::Div),
+        Tok::Percent => (6, BinOp::Mod),
+        _ => return None,
+    })
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self, min_prec: u8) -> Result<Expr, EvalError> {
+        let mut lhs = self.unary()?;
+        while let Some(t) = self.peek() {
+            let Some((prec, op)) = binop(t) else { break };
+            if prec < min_prec {
+                break;
+            }
+            self.bump();
+            let rhs = self.expr(prec + 1)?; // left-associative
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr, EvalError> {
+        match self.peek() {
+            Some(Tok::Minus) => {
+                self.bump();
+                Ok(Expr::Unary(UnOp::Neg, Box::new(self.unary()?)))
+            }
+            Some(Tok::Bang) => {
+                self.bump();
+                Ok(Expr::Unary(UnOp::Not, Box::new(self.unary()?)))
+            }
+            _ => self.atom(),
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr, EvalError> {
+        match self.bump() {
+            Some(Tok::Num(n)) => Ok(Expr::Lit(Value::Num(n))),
+            Some(Tok::Str(s)) => Ok(Expr::Lit(Value::Str(s))),
+            Some(Tok::True) => Ok(Expr::Lit(Value::Bool(true))),
+            Some(Tok::False) => Ok(Expr::Lit(Value::Bool(false))),
+            Some(Tok::LParen) => {
+                let e = self.expr(0)?;
+                match self.bump() {
+                    Some(Tok::RParen) => Ok(e),
+                    _ => Err(EvalError::Parse("expected ')'".into())),
+                }
+            }
+            Some(Tok::Ident(name)) => {
+                if self.peek() == Some(&Tok::LParen) {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if self.peek() != Some(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr(0)?);
+                            match self.bump() {
+                                Some(Tok::Comma) => continue,
+                                Some(Tok::RParen) => break,
+                                _ => {
+                                    return Err(EvalError::Parse(
+                                        "expected ',' or ')' in call".into(),
+                                    ))
+                                }
+                            }
+                        }
+                    } else {
+                        self.bump();
+                    }
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            t => Err(EvalError::Parse(format!("unexpected token {t:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ast_shape() {
+        let e = parse("1 + 2 * 3").unwrap();
+        assert_eq!(
+            e,
+            Expr::Binary(
+                BinOp::Add,
+                Box::new(Expr::Lit(Value::Num(1.0))),
+                Box::new(Expr::Binary(
+                    BinOp::Mul,
+                    Box::new(Expr::Lit(Value::Num(2.0))),
+                    Box::new(Expr::Lit(Value::Num(3.0))),
+                )),
+            )
+        );
+    }
+
+    #[test]
+    fn left_assoc_subtraction() {
+        let e = parse("10 - 3 - 2").unwrap();
+        assert_eq!(e.eval(&|_| None).unwrap(), Value::Num(5.0));
+    }
+
+    #[test]
+    fn call_no_args_rejected_later() {
+        // zero-arg calls parse; arity is checked at eval time.
+        assert!(parse("len()").is_ok());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse("(1").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("f(1,").is_err());
+        assert!(parse("").is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Minimal JSON codec (substrate).
+//!
+//! serde is not available in this offline environment, so Emerald ships
+//! its own small JSON implementation. It is used for the artifact
+//! manifest (`artifacts/manifest.json`), the migration wire protocol,
+//! and metrics dumps. Supports the full JSON grammar except `\u`
+//! surrogate pairs beyond the BMP (sufficient for our ASCII payloads);
+//! numbers round-trip as `f64`.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects use a `BTreeMap` so serialization is
+/// deterministic (stable hashing for MDSS versions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+/// Errors produced by the parser or by typed accessors.
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    #[error("json parse error at byte {pos}: {msg}")]
+    Parse { pos: usize, msg: String },
+    #[error("json type error: expected {expected}, got {got}")]
+    Type { expected: &'static str, got: &'static str },
+    #[error("json missing key: {0}")]
+    MissingKey(String),
+}
+
+impl Value {
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+
+    /// Typed accessor: number as f64.
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            v => Err(JsonError::Type { expected: "number", got: v.kind() }),
+        }
+    }
+
+    /// Typed accessor: number as usize (must be a non-negative integer).
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(JsonError::Type { expected: "non-negative integer", got: "number" });
+        }
+        Ok(n as usize)
+    }
+
+    /// Typed accessor: i64.
+    pub fn as_i64(&self) -> Result<i64, JsonError> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 {
+            return Err(JsonError::Type { expected: "integer", got: "number" });
+        }
+        Ok(n as i64)
+    }
+
+    /// Typed accessor: string slice.
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => Err(JsonError::Type { expected: "string", got: v.kind() }),
+        }
+    }
+
+    /// Typed accessor: bool.
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => Err(JsonError::Type { expected: "bool", got: v.kind() }),
+        }
+    }
+
+    /// Typed accessor: array slice.
+    pub fn as_arr(&self) -> Result<&[Value], JsonError> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            v => Err(JsonError::Type { expected: "array", got: v.kind() }),
+        }
+    }
+
+    /// Typed accessor: object map.
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>, JsonError> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            v => Err(JsonError::Type { expected: "object", got: v.kind() }),
+        }
+    }
+
+    /// Object field lookup (error when missing).
+    pub fn get(&self, key: &str) -> Result<&Value, JsonError> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| JsonError::MissingKey(key.to_string()))
+    }
+
+    /// Object field lookup returning `None` when absent.
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    /// Builder: object from pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Builder: array of values.
+    pub fn arr(items: impl IntoIterator<Item = Value>) -> Value {
+        Value::Arr(items.into_iter().collect())
+    }
+
+    /// Builder: string value.
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    /// Builder: number value.
+    pub fn num(n: impl Into<f64>) -> Value {
+        Value::Num(n.into())
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&to_string(self))
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let v = Value::obj([
+            ("a", Value::num(1.5)),
+            ("b", Value::arr([Value::Bool(true), Value::Null])),
+            ("c", Value::str("hi\n\"there\"")),
+        ]);
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"x": [1, 2, {"y": -3.5e2}], "z": null}"#).unwrap();
+        assert_eq!(v.get("x").unwrap().as_arr().unwrap()[2].get("y").unwrap().as_f64().unwrap(), -350.0);
+        assert_eq!(v.get("z").unwrap(), &Value::Null);
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let v = parse("[1]").unwrap();
+        assert!(v.as_obj().is_err());
+        assert!(v.as_arr().unwrap()[0].as_str().is_err());
+        assert!(matches!(
+            parse("{}").unwrap().get("nope"),
+            Err(JsonError::MissingKey(_))
+        ));
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert!(parse("1.5").unwrap().as_usize().is_err());
+        assert!(parse("-2").unwrap().as_usize().is_err());
+        assert_eq!(parse("42").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn display_matches_to_string() {
+        let v = parse(r#"{"k": [true, false]}"#).unwrap();
+        assert_eq!(format!("{v}"), to_string(&v));
+    }
+}

@@ -1,0 +1,64 @@
+//! # Emerald
+//!
+//! A reproduction of *"Improving Scientific Workflow with Cloud
+//! Offloading"* (Hao Qian, 2017): a scientific-workflow engine that
+//! automatically offloads computation-intensive steps to a (simulated)
+//! cloud platform.
+//!
+//! The crate is the Layer-3 **Rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (3-D acoustic wave stencil, imaging
+//!   condition, smoothing) authored in `python/compile/kernels/`.
+//! * **L2** — JAX model (the four Adjoint-Tomography steps) in
+//!   `python/compile/model.py`, AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: workflow model + partitioner + execution
+//!   engine + migration manager + MDSS + simulated hybrid platform,
+//!   executing the artifacts through PJRT (`runtime`).
+//!
+//! Python never runs on the request path; `make artifacts` is the only
+//! Python invocation.
+//!
+//! ## Module map
+//!
+//! Paper contributions: [`workflow`] (§3.1–3.2), [`partitioner`]
+//! (§3.1), [`engine`] (§3.3), [`migration`] (§3.3), [`mdss`] (§3.4),
+//! [`cloud`] (§4 testbed), [`at`] (§4 application).
+//!
+//! Substrates (offline environment, see DESIGN.md §1): [`jsonmini`],
+//! [`xmlmini`], [`expr`], [`cli`], [`quickprop`], [`benchkit`],
+//! [`metrics`], [`runtime`].
+
+pub mod benchkit;
+pub mod cli;
+pub mod cloud;
+pub mod engine;
+pub mod expr;
+pub mod jsonmini;
+pub mod mdss;
+pub mod metrics;
+pub mod migration;
+pub mod partitioner;
+pub mod quickprop;
+pub mod runtime;
+pub mod workflow;
+pub mod xmlmini;
+
+pub mod at;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifact directory, resolvable from the repo root or from
+/// target/ subdirectories (tests, benches, examples).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("EMERALD_ARTIFACTS") {
+        return dir.into();
+    }
+    for base in ["artifacts", "../artifacts", "../../artifacts", "../../../artifacts"] {
+        let p = std::path::PathBuf::from(base);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}

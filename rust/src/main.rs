@@ -1,0 +1,248 @@
+//! Emerald leader entrypoint: the `emerald` CLI.
+//!
+//! Subcommands:
+//!
+//! * `validate <wf.xml>` — check the three legal-partition properties.
+//! * `partition <wf.xml> [--out out.xml]` — emit the modified workflow
+//!   with migration points (paper Fig 5).
+//! * `run <wf.xml> [--offload] [--policy mdss|bundle] [--tcp addr]` —
+//!   execute a workflow on the simulated hybrid platform.
+//! * `at --mesh <m> [--iters N] [--offload]` — run the built-in
+//!   Adjoint Tomography application (paper §4).
+//! * `serve` — start a cloud-side worker on loopback TCP and print its
+//!   address (for `run --tcp`).
+//! * `info` — show artifact manifest + platform configuration.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use emerald::cli::Args;
+use emerald::cloud::Platform;
+use emerald::engine::{ActivityRegistry, Engine, Services};
+use emerald::migration::{
+    serve_tcp, CloudWorker, DataPolicy, MigrationManager, TcpTransport,
+};
+use emerald::partitioner;
+use emerald::runtime::Runtime;
+use emerald::workflow::{validate, xaml};
+use emerald::{artifact_dir, at};
+
+const USAGE: &str = "\
+emerald — scientific workflows with cloud offloading (Qian 2017 reproduction)
+
+USAGE:
+  emerald validate <workflow.xml>
+  emerald partition <workflow.xml> [--out <file>]
+  emerald run <workflow.xml> [--offload] [--policy mdss|bundle] [--tcp <addr>]
+  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--alpha0 X]
+  emerald serve
+  emerald info
+";
+
+fn registry_with_at() -> Arc<ActivityRegistry> {
+    let mut reg = ActivityRegistry::new();
+    at::register_activities(&mut reg);
+    Arc::new(reg)
+}
+
+fn load_workflow(args: &Args) -> Result<emerald::workflow::Workflow> {
+    let path = args
+        .positional
+        .get(1)
+        .context("missing <workflow.xml> argument")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading workflow file {path}"))?;
+    xaml::parse(&text)
+}
+
+fn policy_of(args: &Args) -> Result<DataPolicy> {
+    match args.opt("policy", "mdss").as_str() {
+        "mdss" => Ok(DataPolicy::Mdss),
+        "bundle" => Ok(DataPolicy::BundleAlways),
+        other => bail!("unknown --policy {other} (mdss|bundle)"),
+    }
+}
+
+/// `--platform <file>`: load a ConfigFile (empty = all defaults).
+fn config_of(args: &Args) -> Result<emerald::cli::ConfigFile> {
+    match args.options.get("platform") {
+        Some(path) => emerald::cli::ConfigFile::load(path),
+        None => Ok(emerald::cli::ConfigFile::default()),
+    }
+}
+
+/// Build the platform + services from the config file.
+fn services_of(args: &Args, runtime: Option<Arc<Runtime>>) -> Result<Arc<Services>> {
+    let cfg = config_of(args)?;
+    let platform = Platform::new(cfg.platform()?);
+    Ok(Services::custom(runtime, platform, cfg.codec()?))
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let remotable = validate::validate(&wf)?;
+    println!(
+        "OK: workflow '{}' ({} steps) is a legal partition input; {} remotable step(s)",
+        wf.name,
+        wf.size(),
+        remotable.len()
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let (out, report) = partitioner::partition(&wf)?;
+    let xml = xaml::to_xml(&out);
+    match args.options.get("out") {
+        Some(path) => {
+            std::fs::write(path, &xml)?;
+            println!(
+                "wrote {path}: {} -> {} steps, {} migration point(s)",
+                report.steps_before, report.steps_after, report.migration_points
+            );
+        }
+        None => print!("{xml}"),
+    }
+    Ok(())
+}
+
+fn build_engine(args: &Args, services: Arc<Services>, reg: Arc<ActivityRegistry>) -> Result<Engine> {
+    let engine = Engine::new(reg.clone(), services.clone());
+    if !args.flag("offload") {
+        return Ok(engine);
+    }
+    let mut mgr_cfg = config_of(args)?.migration()?;
+    // --policy overrides the config file.
+    if args.options.contains_key("policy") {
+        mgr_cfg.policy = policy_of(args)?;
+    }
+    let mgr = match args.options.get("tcp") {
+        Some(addr) => MigrationManager::with_config(
+            services,
+            Box::new(TcpTransport::connect(addr.parse()?)?),
+            mgr_cfg,
+        ),
+        None => MigrationManager::in_proc_with_config(services, reg, mgr_cfg),
+    };
+    Ok(engine.with_offload(mgr))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let (partitioned, prep) = partitioner::partition(&wf)?;
+    println!("partitioned: {} migration point(s)", prep.migration_points);
+
+    let reg = registry_with_at();
+    // Runtime is optional: pure-coordination workflows don't need it.
+    let runtime = Runtime::new(artifact_dir()).ok().map(Arc::new);
+    let services = services_of(args, runtime)?;
+    let engine = build_engine(args, services.clone(), reg)?.verbose();
+    let report = engine.run(&partitioned)?;
+    println!(
+        "done: sim_time={:.3}s wall={:.3}s offloads={}",
+        report.sim_time.as_secs_f64(),
+        report.wall_time.as_secs_f64(),
+        report.offload_count()
+    );
+    if let Some(path) = args.options.get("metrics") {
+        let metrics = emerald::metrics::RunMetrics::new(&report)
+            .with_sync(services.mdss.stats())
+            .with_network(services.platform.network.ledger());
+        std::fs::write(path, metrics.to_json_string())?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_at(args: &Args) -> Result<()> {
+    let mesh = args.opt("mesh", "demo");
+    let mut cfg = at::InversionConfig::new(&mesh);
+    cfg.iterations = args.opt_parse("iters", 3)?;
+    cfg.alpha0 = args.opt_parse("alpha0", 0.3)?;
+    let wf = at::inversion_workflow(&cfg)?;
+    let (partitioned, _) = partitioner::partition(&wf)?;
+
+    let runtime = Arc::new(Runtime::new(artifact_dir())?);
+    let services = services_of(args, Some(runtime))?;
+    let engine = build_engine(args, services.clone(), registry_with_at())?.verbose();
+    let report = engine.run(&partitioned)?;
+    println!(
+        "done: sim_time={:.3}s offloads={}",
+        report.sim_time.as_secs_f64(),
+        report.offload_count()
+    );
+    if let Some(path) = args.options.get("metrics") {
+        let metrics = emerald::metrics::RunMetrics::new(&report)
+            .with_sync(services.mdss.stats())
+            .with_network(services.platform.network.ledger());
+        std::fs::write(path, metrics.to_json_string())?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(_args: &Args) -> Result<()> {
+    let runtime = Arc::new(Runtime::new(artifact_dir())?);
+    let services = Services::with_runtime(runtime, Platform::paper_testbed());
+    let worker = CloudWorker::new(services, registry_with_at());
+    let addr = serve_tcp(worker)?;
+    println!("cloud worker listening on {addr} (ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let dir = artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("\nmeshes:");
+            for (name, m) in &rt.manifest().meshes {
+                println!(
+                    "  {name:<8} {}x{}x{}  nt={} chunk={} receivers={}",
+                    m.shape[0], m.shape[1], m.shape[2], m.nt, m.chunk, m.n_rec()
+                );
+            }
+            println!("\nartifacts:");
+            for (name, a) in &rt.manifest().artifacts {
+                println!("  {name:<16} {} inputs, {} outputs", a.inputs.len(), a.outputs.len());
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e:#}\n(run `make artifacts`)"),
+    }
+    let cfg = emerald::cloud::PlatformConfig::default();
+    println!(
+        "\nplatform: {} local node(s) @x{}, {} cloud VM(s) @x{}, WAN {} Mbit/s, {}ms latency",
+        cfg.local_nodes,
+        cfg.local_speed,
+        cfg.cloud_nodes,
+        cfg.cloud_speed,
+        (cfg.wan_bandwidth * 8.0 / 1e6) as u64,
+        cfg.wan_latency.as_millis()
+    );
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env(&["offload", "verbose"]);
+    let result = match args.subcommand() {
+        Some("validate") => cmd_validate(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("run") => cmd_run(&args),
+        Some("at") => cmd_at(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,352 @@
+//! Multi-level Data Storage Service (paper §3.4).
+//!
+//! MDSS separates a remotable step's *application data* (large tensors,
+//! images…) from its *task code* (small). Data lives in versioned,
+//! URI-addressed stores — one per tier (local computer / cloud) — and
+//! steps reference it by URI. Before offloading a step, the migration
+//! manager asks MDSS whether the cloud already has the latest version
+//! of the step's data: if yes, only task code crosses the wire; if not,
+//! MDSS synchronizes first (paper Fig 10).
+//!
+//! Semantics implemented exactly as specified in §3.4:
+//! * new data is saved on the generating tier first (always accessible,
+//!   offline-capable); it reaches the other tier on synchronization;
+//! * `synchronize` compares versions and writes the latest updates "as
+//!   necessary to the local copy and the cloud";
+//! * conflict policy is **last-written version wins** (logical clock).
+
+pub mod codec;
+pub mod store;
+pub mod uri;
+
+pub use codec::Codec;
+pub use store::{DataItem, Store, Version};
+pub use uri::Uri;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cloud::{NodeKind, SimNetwork};
+
+/// Freshness of the cloud copy relative to the local one — the
+/// decision input of paper Fig 10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloudState {
+    /// Cloud already has the latest version: offload task code only.
+    Fresh,
+    /// Cloud has an older version: synchronize before offloading.
+    Stale,
+    /// Cloud has no copy at all: full upload needed.
+    Missing,
+    /// Neither side has the item.
+    Unknown,
+}
+
+/// Synchronization statistics (per call and cumulative).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SyncStats {
+    pub uploads: u64,
+    pub downloads: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub sim_time: Duration,
+}
+
+impl SyncStats {
+    fn add(&mut self, other: &SyncStats) {
+        self.uploads += other.uploads;
+        self.downloads += other.downloads;
+        self.bytes_up += other.bytes_up;
+        self.bytes_down += other.bytes_down;
+        self.sim_time += other.sim_time;
+    }
+}
+
+/// The two-tier storage service.
+pub struct Mdss {
+    local: Store,
+    cloud: Store,
+    net: Arc<SimNetwork>,
+    codec: Codec,
+    clock: AtomicU64,
+    stats: Mutex<SyncStats>,
+}
+
+impl Mdss {
+    /// New MDSS over a simulated WAN (raw transfers, as in the paper).
+    pub fn new(net: Arc<SimNetwork>) -> Arc<Self> {
+        Self::with_codec(net, Codec::Raw)
+    }
+
+    /// MDSS with a wire codec (future-work §6 placement strategy:
+    /// compressed transfers).
+    pub fn with_codec(net: Arc<SimNetwork>, codec: Codec) -> Arc<Self> {
+        Arc::new(Self {
+            local: Store::new("local"),
+            cloud: Store::new("cloud"),
+            net,
+            codec,
+            clock: AtomicU64::new(1),
+            stats: Mutex::new(SyncStats::default()),
+        })
+    }
+
+    /// Meter one payload crossing the WAN under the active codec.
+    fn wire_transfer(&self, payload: &[u8]) -> Result<(u64, Duration)> {
+        let wire = self.codec.wire_len(payload)?;
+        Ok((wire, self.net.transfer(wire)))
+    }
+
+    fn tick(&self) -> Version {
+        Version(self.clock.fetch_add(1, Ordering::Relaxed))
+    }
+
+    fn store(&self, side: NodeKind) -> &Store {
+        match side {
+            NodeKind::Local => &self.local,
+            NodeKind::Cloud => &self.cloud,
+        }
+    }
+
+    /// Save data on one tier (no network: paper — "MDSS first saves the
+    /// data on local computer, so data is always accessible").
+    pub fn put(&self, side: NodeKind, uri: &Uri, payload: Vec<u8>) -> Version {
+        let v = self.tick();
+        self.store(side).put(uri, payload, v);
+        v
+    }
+
+    /// Read from one tier only (no network). `None` when absent.
+    pub fn peek(&self, side: NodeKind, uri: &Uri) -> Option<DataItem> {
+        self.store(side).get(uri)
+    }
+
+    /// Copy an item verbatim (same version) from one tier to the
+    /// other, without metering. Used by the no-MDSS bundling baseline,
+    /// which moves the bytes as part of the request payload instead.
+    pub fn replicate(&self, from: NodeKind, to: NodeKind, uri: &Uri) -> Result<()> {
+        let item = self
+            .store(from)
+            .get(uri)
+            .with_context(|| format!("replicate: {uri} not on {from} tier"))?;
+        self.store(to).put_item(item);
+        Ok(())
+    }
+
+    /// Freshness of the cloud copy for one URI (Fig 10 decision).
+    pub fn cloud_state(&self, uri: &Uri) -> CloudState {
+        match (self.local.version(uri), self.cloud.version(uri)) {
+            (None, None) => CloudState::Unknown,
+            (None, Some(_)) => CloudState::Fresh, // cloud-only data
+            (Some(_), None) => CloudState::Missing,
+            (Some(l), Some(c)) if c >= l => CloudState::Fresh,
+            _ => CloudState::Stale,
+        }
+    }
+
+    /// Read with on-demand pull: if this tier's copy is missing or
+    /// older than the other tier's, the newer copy is transferred
+    /// (metered) and cached locally first. Returns the payload and the
+    /// simulated transfer time (zero on cache hit).
+    pub fn get(&self, side: NodeKind, uri: &Uri) -> Result<(DataItem, Duration)> {
+        let other = match side {
+            NodeKind::Local => NodeKind::Cloud,
+            NodeKind::Cloud => NodeKind::Local,
+        };
+        let mine = self.store(side).get(uri);
+        let theirs = self.store(other).get(uri);
+        match (mine, theirs) {
+            (Some(m), None) => Ok((m, Duration::ZERO)),
+            (Some(m), Some(t)) if m.version >= t.version => Ok((m, Duration::ZERO)),
+            (_, Some(t)) => {
+                let (wire, d) = self.wire_transfer(&t.payload)?;
+                self.store(side).put_item(t.clone());
+                let mut s = self.stats.lock().unwrap();
+                match side {
+                    NodeKind::Local => {
+                        s.downloads += 1;
+                        s.bytes_down += wire;
+                    }
+                    NodeKind::Cloud => {
+                        s.uploads += 1;
+                        s.bytes_up += wire;
+                    }
+                }
+                s.sim_time += d;
+                Ok((t, d))
+            }
+            (None, None) => bail!("MDSS: no data for {uri}"),
+        }
+    }
+
+    /// Bidirectional reconciliation of one URI (paper: "reads the
+    /// latest version of the data available in the cloud and compares
+    /// it to the local copy … writes the latest updates as necessary").
+    /// Last-written version wins. Returns per-call stats.
+    pub fn synchronize(&self, uri: &Uri) -> Result<SyncStats> {
+        let mut s = SyncStats::default();
+        let l = self.local.get(uri);
+        let c = self.cloud.get(uri);
+        match (l, c) {
+            (None, None) => bail!("MDSS: cannot synchronize unknown {uri}"),
+            (Some(li), None) => {
+                let (wire, d) = self.wire_transfer(&li.payload)?;
+                s.sim_time += d;
+                s.uploads += 1;
+                s.bytes_up += wire;
+                self.cloud.put_item(li);
+            }
+            (None, Some(ci)) => {
+                let (wire, d) = self.wire_transfer(&ci.payload)?;
+                s.sim_time += d;
+                s.downloads += 1;
+                s.bytes_down += wire;
+                self.local.put_item(ci);
+            }
+            (Some(li), Some(ci)) => {
+                if li.version > ci.version {
+                    let (wire, d) = self.wire_transfer(&li.payload)?;
+                    s.sim_time += d;
+                    s.uploads += 1;
+                    s.bytes_up += wire;
+                    self.cloud.put_item(li);
+                } else if ci.version > li.version {
+                    let (wire, d) = self.wire_transfer(&ci.payload)?;
+                    s.sim_time += d;
+                    s.downloads += 1;
+                    s.bytes_down += wire;
+                    self.local.put_item(ci);
+                }
+                // equal versions: nothing to move
+            }
+        }
+        self.stats.lock().unwrap().add(&s);
+        Ok(s)
+    }
+
+    /// Synchronize every URI known to either tier.
+    pub fn synchronize_all(&self) -> Result<SyncStats> {
+        let mut uris = self.local.uris();
+        for u in self.cloud.uris() {
+            if !uris.contains(&u) {
+                uris.push(u);
+            }
+        }
+        let mut total = SyncStats::default();
+        for uri in uris {
+            total.add(&self.synchronize(&uri)?);
+        }
+        Ok(total)
+    }
+
+    /// Cumulative sync statistics.
+    pub fn stats(&self) -> SyncStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of items on a tier.
+    pub fn count(&self, side: NodeKind) -> usize {
+        self.store(side).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mdss() -> Arc<Mdss> {
+        Mdss::new(Arc::new(SimNetwork::new(1e6, Duration::from_millis(1))))
+    }
+
+    fn u(s: &str) -> Uri {
+        Uri::parse(s).unwrap()
+    }
+
+    #[test]
+    fn local_put_then_cloud_get_pulls() {
+        let m = mdss();
+        let uri = u("mdss://at/model");
+        m.put(NodeKind::Local, &uri, vec![1, 2, 3]);
+        assert_eq!(m.cloud_state(&uri), CloudState::Missing);
+        let (item, d) = m.get(NodeKind::Cloud, &uri).unwrap();
+        assert_eq!(item.payload, vec![1, 2, 3]);
+        assert!(d > Duration::ZERO);
+        // Second read is a cache hit.
+        let (_, d2) = m.get(NodeKind::Cloud, &uri).unwrap();
+        assert_eq!(d2, Duration::ZERO);
+        assert_eq!(m.cloud_state(&uri), CloudState::Fresh);
+    }
+
+    #[test]
+    fn last_writer_wins() {
+        let m = mdss();
+        let uri = u("mdss://x/y");
+        m.put(NodeKind::Local, &uri, vec![1]);
+        m.put(NodeKind::Cloud, &uri, vec![2]); // later write
+        m.synchronize(&uri).unwrap();
+        let (l, _) = m.get(NodeKind::Local, &uri).unwrap();
+        let (c, _) = m.get(NodeKind::Cloud, &uri).unwrap();
+        assert_eq!(l.payload, vec![2]);
+        assert_eq!(c.payload, vec![2]);
+    }
+
+    #[test]
+    fn synchronize_is_idempotent() {
+        let m = mdss();
+        let uri = u("mdss://x/y");
+        m.put(NodeKind::Local, &uri, vec![7; 100]);
+        let s1 = m.synchronize(&uri).unwrap();
+        assert_eq!(s1.uploads, 1);
+        let s2 = m.synchronize(&uri).unwrap();
+        assert_eq!(s2, SyncStats::default()); // nothing moves
+    }
+
+    #[test]
+    fn stale_cloud_detected() {
+        let m = mdss();
+        let uri = u("mdss://x/y");
+        m.put(NodeKind::Local, &uri, vec![1]);
+        m.synchronize(&uri).unwrap();
+        assert_eq!(m.cloud_state(&uri), CloudState::Fresh);
+        m.put(NodeKind::Local, &uri, vec![2]); // local update
+        assert_eq!(m.cloud_state(&uri), CloudState::Stale);
+    }
+
+    #[test]
+    fn unknown_uri_errors() {
+        let m = mdss();
+        assert!(m.get(NodeKind::Local, &u("mdss://nope/x")).is_err());
+        assert!(m.synchronize(&u("mdss://nope/x")).is_err());
+        assert_eq!(m.cloud_state(&u("mdss://nope/x")), CloudState::Unknown);
+    }
+
+    #[test]
+    fn compressed_codec_meters_fewer_bytes() {
+        let net = Arc::new(SimNetwork::new(1e6, Duration::ZERO));
+        let m = Mdss::with_codec(net.clone(), Codec::Deflate);
+        let uri = u("mdss://x/field");
+        // Highly compressible payload (constant field).
+        m.put(NodeKind::Local, &uri, vec![0u8; 100_000]);
+        let s = m.synchronize(&uri).unwrap();
+        assert!(s.bytes_up < 5_000, "compressed bytes: {}", s.bytes_up);
+        // Content is intact on the other tier regardless of codec.
+        let (item, _) = m.get(NodeKind::Cloud, &uri).unwrap();
+        assert_eq!(item.payload.len(), 100_000);
+        assert!(item.verify());
+    }
+
+    #[test]
+    fn synchronize_all_covers_both_tiers() {
+        let m = mdss();
+        m.put(NodeKind::Local, &u("mdss://a/1"), vec![1]);
+        m.put(NodeKind::Cloud, &u("mdss://b/2"), vec![2]);
+        let s = m.synchronize_all().unwrap();
+        assert_eq!(s.uploads, 1);
+        assert_eq!(s.downloads, 1);
+        assert_eq!(m.count(NodeKind::Local), 2);
+        assert_eq!(m.count(NodeKind::Cloud), 2);
+    }
+}

@@ -1,0 +1,139 @@
+//! One MDSS storage tier: versioned, content-hashed items keyed by URI.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use sha2::{Digest, Sha256};
+
+use super::uri::Uri;
+
+/// Monotonic logical version (last-writer-wins ordering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Version(pub u64);
+
+/// A stored data item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataItem {
+    pub uri: Uri,
+    pub version: Version,
+    /// SHA-256 of the payload (integrity + cheap equality).
+    pub hash: [u8; 32],
+    pub payload: Vec<u8>,
+}
+
+impl DataItem {
+    /// Build an item, computing the content hash.
+    pub fn new(uri: Uri, payload: Vec<u8>, version: Version) -> Self {
+        let hash = Sha256::digest(&payload).into();
+        Self { uri, version, hash, payload }
+    }
+
+    /// Verify payload integrity against the stored hash.
+    pub fn verify(&self) -> bool {
+        let h: [u8; 32] = Sha256::digest(&self.payload).into();
+        h == self.hash
+    }
+}
+
+/// A single tier (local computer or cloud).
+pub struct Store {
+    #[allow(dead_code)]
+    name: &'static str,
+    items: Mutex<BTreeMap<Uri, DataItem>>,
+}
+
+impl Store {
+    /// New empty store.
+    pub fn new(name: &'static str) -> Self {
+        Self { name, items: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Insert a fresh payload with an externally-allocated version.
+    pub fn put(&self, uri: &Uri, payload: Vec<u8>, version: Version) {
+        let item = DataItem::new(uri.clone(), payload, version);
+        self.items.lock().unwrap().insert(uri.clone(), item);
+    }
+
+    /// Insert a fully-formed item (replication path).
+    pub fn put_item(&self, item: DataItem) {
+        self.items.lock().unwrap().insert(item.uri.clone(), item);
+    }
+
+    /// Fetch a copy of an item.
+    pub fn get(&self, uri: &Uri) -> Option<DataItem> {
+        self.items.lock().unwrap().get(uri).cloned()
+    }
+
+    /// Version only (freshness checks without copying payloads).
+    pub fn version(&self, uri: &Uri) -> Option<Version> {
+        self.items.lock().unwrap().get(uri).map(|i| i.version)
+    }
+
+    /// All URIs on this tier.
+    pub fn uris(&self) -> Vec<Uri> {
+        self.items.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Number of items.
+    pub fn len(&self) -> usize {
+        self.items.lock().unwrap().len()
+    }
+
+    /// True when the tier holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total payload bytes on this tier.
+    pub fn total_bytes(&self) -> u64 {
+        self.items
+            .lock()
+            .unwrap()
+            .values()
+            .map(|i| i.payload.len() as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u(s: &str) -> Uri {
+        Uri::parse(s).unwrap()
+    }
+
+    #[test]
+    fn put_get_version() {
+        let s = Store::new("t");
+        s.put(&u("mdss://a/b"), vec![1, 2], Version(5));
+        let item = s.get(&u("mdss://a/b")).unwrap();
+        assert_eq!(item.version, Version(5));
+        assert!(item.verify());
+        assert_eq!(s.version(&u("mdss://a/b")), Some(Version(5)));
+        assert_eq!(s.version(&u("mdss://a/c")), None);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s = Store::new("t");
+        s.put(&u("mdss://a/b"), vec![1], Version(1));
+        s.put(&u("mdss://a/b"), vec![2, 3], Version(2));
+        assert_eq!(s.get(&u("mdss://a/b")).unwrap().payload, vec![2, 3]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.total_bytes(), 2);
+    }
+
+    #[test]
+    fn hash_detects_corruption() {
+        let mut item = DataItem::new(u("mdss://a/b"), vec![9, 9], Version(1));
+        assert!(item.verify());
+        item.payload[0] = 0;
+        assert!(!item.verify());
+    }
+
+    #[test]
+    fn versions_order() {
+        assert!(Version(3) > Version(2));
+    }
+}

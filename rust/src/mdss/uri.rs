@@ -1,0 +1,92 @@
+//! MDSS URIs: `mdss://<namespace>/<path...>`.
+//!
+//! Remotable steps reference application data by URI (paper §3.4);
+//! workflow variables carry these as [`crate::expr::Value::Uri`].
+
+use anyhow::{bail, Result};
+
+/// A validated MDSS URI.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Uri {
+    raw: String,
+}
+
+impl Uri {
+    /// Parse and validate.
+    pub fn parse(s: &str) -> Result<Self> {
+        let Some(rest) = s.strip_prefix("mdss://") else {
+            bail!("MDSS URI must start with mdss:// — got {s:?}");
+        };
+        let mut segs = rest.split('/');
+        let ns = segs.next().unwrap_or("");
+        if ns.is_empty() {
+            bail!("MDSS URI needs a namespace: mdss://<ns>/<path> — got {s:?}");
+        }
+        let mut any_path = false;
+        for seg in segs {
+            any_path = true;
+            if seg.is_empty() {
+                bail!("MDSS URI has an empty path segment: {s:?}");
+            }
+            if !seg
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+            {
+                bail!("MDSS URI segment {seg:?} has invalid characters");
+            }
+        }
+        if !any_path {
+            bail!("MDSS URI needs a path: mdss://<ns>/<path> — got {s:?}");
+        }
+        Ok(Self { raw: s.to_string() })
+    }
+
+    /// Build from parts.
+    pub fn new(ns: &str, path: &str) -> Result<Self> {
+        Self::parse(&format!("mdss://{ns}/{path}"))
+    }
+
+    /// Full string form.
+    pub fn as_str(&self) -> &str {
+        &self.raw
+    }
+
+    /// Namespace (first segment).
+    pub fn namespace(&self) -> &str {
+        self.raw["mdss://".len()..].split('/').next().unwrap()
+    }
+}
+
+impl std::fmt::Display for Uri {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_uris() {
+        let u = Uri::parse("mdss://at/model.c").unwrap();
+        assert_eq!(u.namespace(), "at");
+        assert_eq!(u.as_str(), "mdss://at/model.c");
+        assert!(Uri::parse("mdss://ns/a/b/c-1_2").is_ok());
+        assert_eq!(Uri::new("x", "y").unwrap().as_str(), "mdss://x/y");
+    }
+
+    #[test]
+    fn invalid_uris() {
+        for bad in [
+            "http://x/y",
+            "mdss://",
+            "mdss://ns",
+            "mdss://ns/",
+            "mdss://ns//y",
+            "mdss://ns/sp ace",
+        ] {
+            assert!(Uri::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Run metrics: timing helpers plus a machine-readable report that
+//! aggregates everything one workflow execution produced — engine
+//! events, migration statistics, MDSS sync statistics and the WAN
+//! ledger — serialized with `jsonmini` (`emerald at --metrics out.json`
+//! and the bench harnesses consume this).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::cloud::NetworkLedger;
+use crate::engine::{Event, RunReport};
+use crate::jsonmini::Value;
+use crate::mdss::SyncStats;
+use crate::migration::MigrationStats;
+
+/// A simple stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Per-step aggregates extracted from the event trace.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepAgg {
+    pub invocations: u64,
+    pub sim: Duration,
+    pub offloaded: u64,
+}
+
+/// Aggregate activity/offload events by step display name.
+pub fn aggregate_steps(report: &RunReport) -> BTreeMap<String, StepAgg> {
+    let mut out: BTreeMap<String, StepAgg> = BTreeMap::new();
+    for e in &report.events {
+        match e {
+            Event::ActivityFinished { step, sim_us } => {
+                let a = out.entry(step.clone()).or_default();
+                a.invocations += 1;
+                a.sim += Duration::from_micros(*sim_us);
+            }
+            Event::OffloadFinished { step, sim_us } => {
+                let a = out.entry(step.clone()).or_default();
+                a.invocations += 1;
+                a.offloaded += 1;
+                a.sim += Duration::from_micros(*sim_us);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// The full machine-readable record of one run.
+pub struct RunMetrics<'a> {
+    pub report: &'a RunReport,
+    pub migration: Option<MigrationStats>,
+    pub sync: Option<SyncStats>,
+    pub network: Option<NetworkLedger>,
+}
+
+impl<'a> RunMetrics<'a> {
+    /// Wrap a run report.
+    pub fn new(report: &'a RunReport) -> Self {
+        Self { report, migration: None, sync: None, network: None }
+    }
+
+    /// Attach migration-manager statistics.
+    pub fn with_migration(mut self, stats: MigrationStats) -> Self {
+        self.migration = Some(stats);
+        self
+    }
+
+    /// Attach MDSS sync statistics.
+    pub fn with_sync(mut self, stats: SyncStats) -> Self {
+        self.sync = Some(stats);
+        self
+    }
+
+    /// Attach the WAN ledger.
+    pub fn with_network(mut self, ledger: NetworkLedger) -> Self {
+        self.network = Some(ledger);
+        self
+    }
+
+    /// Serialize to a JSON value.
+    pub fn to_json(&self) -> Value {
+        let steps = aggregate_steps(self.report);
+        let steps_json = Value::Obj(
+            steps
+                .iter()
+                .map(|(name, a)| {
+                    (
+                        name.clone(),
+                        Value::obj([
+                            ("invocations", Value::num(a.invocations as f64)),
+                            ("sim_s", Value::num(a.sim.as_secs_f64())),
+                            ("offloaded", Value::num(a.offloaded as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let mut root = vec![
+            ("sim_time_s", Value::num(self.report.sim_time.as_secs_f64())),
+            ("wall_time_s", Value::num(self.report.wall_time.as_secs_f64())),
+            ("offloads", Value::num(self.report.offload_count() as f64)),
+            ("lines", Value::Arr(self.report.lines.iter().map(Value::str).collect())),
+            ("steps", steps_json),
+        ];
+        if let Some(m) = self.migration {
+            root.push((
+                "migration",
+                Value::obj([
+                    ("offloads", Value::num(m.offloads as f64)),
+                    ("protocol_bytes", Value::num(m.protocol_bytes as f64)),
+                    ("data_hits", Value::num(m.data_hits as f64)),
+                    ("data_syncs", Value::num(m.data_syncs as f64)),
+                    ("sync_sim_s", Value::num(m.sync_sim.as_secs_f64())),
+                    ("failed_attempts", Value::num(m.failed_attempts as f64)),
+                    ("declined", Value::num(m.declined as f64)),
+                ]),
+            ));
+        }
+        if let Some(s) = self.sync {
+            root.push((
+                "mdss",
+                Value::obj([
+                    ("uploads", Value::num(s.uploads as f64)),
+                    ("downloads", Value::num(s.downloads as f64)),
+                    ("bytes_up", Value::num(s.bytes_up as f64)),
+                    ("bytes_down", Value::num(s.bytes_down as f64)),
+                    ("sim_s", Value::num(s.sim_time.as_secs_f64())),
+                ]),
+            ));
+        }
+        if let Some(n) = self.network {
+            root.push((
+                "network",
+                Value::obj([
+                    ("bytes", Value::num(n.bytes as f64)),
+                    ("transfers", Value::num(n.transfers as f64)),
+                    ("sim_s", Value::num(n.sim_time.as_secs_f64())),
+                ]),
+            ));
+        }
+        Value::obj(root)
+    }
+
+    /// Serialize to pretty JSON text.
+    pub fn to_json_string(&self) -> String {
+        crate::jsonmini::to_string_pretty(&self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+    }
+
+    fn sample_report() -> RunReport {
+        RunReport {
+            sim_time: Duration::from_millis(1500),
+            wall_time: Duration::from_millis(800),
+            lines: vec!["iter=0 misfit=1".into()],
+            events: vec![
+                Event::ActivityFinished { step: "forward".into(), sim_us: 1000 },
+                Event::ActivityFinished { step: "forward".into(), sim_us: 2000 },
+                Event::OffloadFinished { step: "misfit".into(), sim_us: 500 },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregates_by_step() {
+        let report = sample_report();
+        let agg = aggregate_steps(&report);
+        assert_eq!(agg["forward"].invocations, 2);
+        assert_eq!(agg["forward"].sim, Duration::from_micros(3000));
+        assert_eq!(agg["forward"].offloaded, 0);
+        assert_eq!(agg["misfit"].offloaded, 1);
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_sections() {
+        let report = sample_report();
+        let m = RunMetrics::new(&report)
+            .with_migration(MigrationStats::default())
+            .with_network(NetworkLedger::default());
+        let text = m.to_json_string();
+        let v = crate::jsonmini::parse(&text).unwrap();
+        assert_eq!(v.get("sim_time_s").unwrap().as_f64().unwrap(), 1.5);
+        assert!(v.get("migration").is_ok());
+        assert!(v.get("network").is_ok());
+        assert!(v.get("mdss").is_err()); // not attached
+        assert_eq!(
+            v.get("steps").unwrap().get("forward").unwrap().get("invocations").unwrap().as_usize().unwrap(),
+            2
+        );
+    }
+}

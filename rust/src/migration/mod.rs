@@ -1,0 +1,657 @@
+//! The migration manager (paper §3.3) — both sides.
+//!
+//! **Local side** ([`MigrationManager`], plugged into the engine as its
+//! [`OffloadHandler`]): when the engine suspends at a migration point,
+//! the manager
+//!
+//! 1. checks MDSS freshness for every data URI the step references —
+//!    fresh cloud copies mean only task code crosses the wire, stale or
+//!    missing ones are synchronized first (paper Fig 10);
+//! 2. packages the step (task-code XML + input values) and sends it
+//!    over the [`transport::Transport`], charging the uplink to the
+//!    simulated WAN;
+//! 3. receives the response, charges the downlink, and hands the
+//!    outputs back to the engine for re-integration.
+//!
+//! **Cloud side** ([`CloudWorker`], a [`transport::RequestHandler`]):
+//! deserializes the step, executes it on a cloud node with a remote
+//! engine (offloading disabled — Property 3 guarantees no nesting),
+//! and returns outputs + the remote simulated time.
+
+pub mod protocol;
+pub mod security;
+pub mod transport;
+
+pub use protocol::{OffloadRequest, OffloadResponse};
+pub use security::SigningKey;
+pub use transport::{serve_tcp, InProcTransport, TcpTransport, Transport};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::NodeKind;
+use crate::engine::{
+    ActivityRegistry, Engine, OffloadHandler, OffloadOutcome, OffloadVerdict, Services,
+};
+use crate::expr::Value;
+use crate::mdss::{CloudState, Uri};
+use crate::workflow::Step;
+
+/// Data-placement policy (E4 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPolicy {
+    /// MDSS enabled (the paper's system): transfer application data
+    /// only when the cloud copy is stale or missing.
+    Mdss,
+    /// MDSS disabled baseline: bundle all referenced application data
+    /// with every offload and eagerly ship results back.
+    BundleAlways,
+}
+
+/// Offload-decision policy (E8 ablation; the paper offloads every
+/// remotable step unconditionally).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Paper behaviour: always offload remotable steps.
+    Always,
+    /// Cost model: offload only when the estimated remote round trip
+    /// beats the estimated local execution (per step name, from the
+    /// history of observed costs; first sighting always offloads).
+    CostBased,
+}
+
+/// Fault-handling configuration for the offload path.
+#[derive(Debug, Clone)]
+pub struct ManagerConfig {
+    pub policy: DataPolicy,
+    pub decision: Decision,
+    /// Transport attempts per offload (>= 1).
+    pub attempts: usize,
+    /// After all attempts fail, decline so the engine runs the step
+    /// locally instead of failing the workflow.
+    pub local_fallback: bool,
+    /// Sign requests with this key (worker must hold the same key).
+    pub signing: Option<SigningKey>,
+}
+
+impl ManagerConfig {
+    /// Paper defaults: MDSS placement, always offload, one attempt,
+    /// no fallback, no signing.
+    pub fn new(policy: DataPolicy) -> Self {
+        Self {
+            policy,
+            decision: Decision::Always,
+            attempts: 1,
+            local_fallback: false,
+            signing: None,
+        }
+    }
+}
+
+/// Cumulative migration statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MigrationStats {
+    pub offloads: u64,
+    /// Protocol bytes (task code + values), excluding MDSS data.
+    pub protocol_bytes: u64,
+    /// Offloads where all data URIs were already fresh on the cloud.
+    pub data_hits: u64,
+    /// Offloads that required at least one data synchronization.
+    pub data_syncs: u64,
+    /// Simulated time spent in pre-offload data synchronization.
+    pub sync_sim: Duration,
+    /// Transport attempts that failed (retried or fallen back).
+    pub failed_attempts: u64,
+    /// Offloads declined by the cost model or by fallback.
+    pub declined: u64,
+}
+
+/// Per-step-name cost history for [`Decision::CostBased`].
+#[derive(Debug, Clone, Copy, Default)]
+struct CostRecord {
+    /// Estimated local execution time (reference compute).
+    local_est: Duration,
+    /// Observed remote round-trip time.
+    remote_obs: Duration,
+    seen: bool,
+}
+
+/// Local-side migration manager.
+pub struct MigrationManager {
+    services: Arc<Services>,
+    transport: Box<dyn Transport>,
+    config: ManagerConfig,
+    stats: Mutex<MigrationStats>,
+    history: Mutex<BTreeMap<String, CostRecord>>,
+}
+
+impl MigrationManager {
+    /// New manager over a transport with paper-default behaviour.
+    pub fn new(
+        services: Arc<Services>,
+        transport: Box<dyn Transport>,
+        policy: DataPolicy,
+    ) -> Arc<Self> {
+        Self::with_config(services, transport, ManagerConfig::new(policy))
+    }
+
+    /// New manager with explicit configuration.
+    pub fn with_config(
+        services: Arc<Services>,
+        transport: Box<dyn Transport>,
+        config: ManagerConfig,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            services,
+            transport,
+            config,
+            stats: Mutex::new(Default::default()),
+            history: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Convenience: manager + in-process cloud worker pair sharing the
+    /// same services and registry.
+    pub fn in_proc(
+        services: Arc<Services>,
+        registry: Arc<ActivityRegistry>,
+        policy: DataPolicy,
+    ) -> Arc<Self> {
+        let worker = CloudWorker::new(services.clone(), registry);
+        Self::new(services, Box::new(InProcTransport::new(worker)), policy)
+    }
+
+    /// In-process pair with explicit configuration. The worker gets
+    /// the same signing key when one is configured.
+    pub fn in_proc_with_config(
+        services: Arc<Services>,
+        registry: Arc<ActivityRegistry>,
+        config: ManagerConfig,
+    ) -> Arc<Self> {
+        let mut worker = CloudWorker::new_inner(services.clone(), registry);
+        worker.require_key = config.signing.clone();
+        Self::with_config(
+            services,
+            Box::new(InProcTransport::new(Arc::new(worker))),
+            config,
+        )
+    }
+
+    /// Cumulative statistics.
+    pub fn stats(&self) -> MigrationStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// URIs referenced by the input values.
+    fn data_uris(inputs: &BTreeMap<String, Value>) -> Result<Vec<Uri>> {
+        inputs
+            .values()
+            .filter_map(|v| match v {
+                Value::Uri(u) => Some(Uri::parse(u)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Fig-10 data placement: returns the simulated time spent moving
+    /// application data before the step itself is offloaded.
+    fn place_data(&self, uris: &[Uri], stats: &mut MigrationStats) -> Result<Duration> {
+        let mdss = &self.services.mdss;
+        let mut sim = Duration::ZERO;
+        let mut synced_any = false;
+        for uri in uris {
+            let must_sync = match self.config.policy {
+                DataPolicy::Mdss => !matches!(
+                    mdss.cloud_state(uri),
+                    CloudState::Fresh | CloudState::Unknown
+                ),
+                DataPolicy::BundleAlways => true,
+            };
+            if must_sync {
+                match self.config.policy {
+                    DataPolicy::Mdss => {
+                        let s = mdss.synchronize(uri)?;
+                        sim += s.sim_time;
+                        synced_any = true;
+                    }
+                    DataPolicy::BundleAlways => {
+                        // Bundle the payload with the request even when
+                        // the cloud already has it (version preserved,
+                        // so results are not spuriously shipped back).
+                        if let Some(item) = mdss.peek(NodeKind::Local, uri) {
+                            sim += self
+                                .services
+                                .platform
+                                .network
+                                .transfer(item.payload.len() as u64);
+                            mdss.replicate(NodeKind::Local, NodeKind::Cloud, uri)?;
+                            synced_any = true;
+                        }
+                    }
+                }
+            }
+        }
+        if synced_any {
+            stats.data_syncs += 1;
+        } else if !uris.is_empty() {
+            stats.data_hits += 1;
+        }
+        Ok(sim)
+    }
+}
+
+impl MigrationManager {
+    /// Cost-model gate: should this step be offloaded at all?
+    fn should_offload(&self, step: &Step) -> Option<String> {
+        if self.config.decision == Decision::Always {
+            return None;
+        }
+        let history = self.history.lock().unwrap();
+        match history.get(&step.display_name) {
+            Some(rec) if rec.seen && rec.remote_obs >= rec.local_est => Some(format!(
+                "cost model: remote {:.0}ms >= local {:.0}ms for '{}'",
+                rec.remote_obs.as_secs_f64() * 1e3,
+                rec.local_est.as_secs_f64() * 1e3,
+                step.display_name
+            )),
+            _ => None,
+        }
+    }
+
+    /// Record observed costs for the cost model. The local estimate is
+    /// recovered from the remote compute time (remote ran at
+    /// `cloud_speed`, so local ≈ remote_compute × cloud_speed).
+    fn record_costs(&self, step: &Step, remote_total: Duration, remote_compute: Duration) {
+        let local_est = Duration::from_secs_f64(
+            remote_compute.as_secs_f64() * self.services.platform.config.cloud_speed,
+        );
+        self.history.lock().unwrap().insert(
+            step.display_name.clone(),
+            CostRecord { local_est, remote_obs: remote_total, seen: true },
+        );
+    }
+}
+
+impl OffloadHandler for MigrationManager {
+    fn offload(
+        &self,
+        step: &Step,
+        inputs: BTreeMap<String, Value>,
+        writes: &[String],
+    ) -> Result<OffloadVerdict> {
+        // 0. Cost-model gate (E8; the paper always offloads).
+        if let Some(reason) = self.should_offload(step) {
+            self.stats.lock().unwrap().declined += 1;
+            return Ok(OffloadVerdict::Declined { reason });
+        }
+
+        let net = &self.services.platform.network;
+        let mut stats_delta = MigrationStats::default();
+        let mut sim = Duration::ZERO;
+
+        // 1. Data placement (MDSS freshness / bundling).
+        let uris = Self::data_uris(&inputs)?;
+        let sync_sim = self.place_data(&uris, &mut stats_delta)?;
+        stats_delta.sync_sim = sync_sim;
+        sim += sync_sim;
+
+        // 2. Package (+ sign) + uplink.
+        let mut req = OffloadRequest::package(step, inputs, writes);
+        if let Some(key) = &self.config.signing {
+            req.sign(key);
+        }
+        let req_bytes = req.encode();
+        sim += net.transfer(req_bytes.len() as u64);
+
+        // 3. Remote execution with retries; real bytes through the
+        //    transport either way.
+        let mut last_err = None;
+        let mut resp_bytes = None;
+        for attempt in 0..self.config.attempts.max(1) {
+            match self.transport.request(&req_bytes) {
+                Ok(bytes) => {
+                    resp_bytes = Some(bytes);
+                    break;
+                }
+                Err(e) => {
+                    self.stats.lock().unwrap().failed_attempts += 1;
+                    last_err = Some(e);
+                    if attempt + 1 < self.config.attempts {
+                        continue;
+                    }
+                }
+            }
+        }
+        let Some(resp_bytes) = resp_bytes else {
+            let err = last_err.unwrap();
+            if self.config.local_fallback {
+                self.stats.lock().unwrap().declined += 1;
+                return Ok(OffloadVerdict::Declined {
+                    reason: format!("cloud unreachable after {} attempt(s): {err:#}",
+                        self.config.attempts),
+                });
+            }
+            return Err(err.context("offload transport failed"));
+        };
+        let resp = OffloadResponse::decode(&resp_bytes)?;
+        if let Some(err) = resp.error {
+            bail!("remote execution failed: {err}");
+        }
+        let remote_sim = Duration::from_micros(resp.remote_sim_us);
+        sim += remote_sim;
+
+        // 4. Downlink + re-integration.
+        sim += net.transfer(resp_bytes.len() as u64);
+
+        // 5. BundleAlways baseline also ships result data back eagerly.
+        if self.config.policy == DataPolicy::BundleAlways {
+            let s = self.services.mdss.synchronize_all()?;
+            sim += s.sim_time;
+        }
+
+        self.record_costs(step, sim, remote_sim);
+
+        stats_delta.offloads = 1;
+        stats_delta.protocol_bytes = (req_bytes.len() + resp_bytes.len()) as u64;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.offloads += stats_delta.offloads;
+            st.protocol_bytes += stats_delta.protocol_bytes;
+            st.data_hits += stats_delta.data_hits;
+            st.data_syncs += stats_delta.data_syncs;
+            st.sync_sim += stats_delta.sync_sim;
+        }
+
+        Ok(OffloadVerdict::Executed(OffloadOutcome {
+            outputs: resp.outputs,
+            sim,
+            remote_lines: resp.lines,
+        }))
+    }
+}
+
+/// Cloud-side worker: receives packaged steps and executes them.
+pub struct CloudWorker {
+    engine: Engine,
+    /// When set, reject any request that doesn't carry a valid tag
+    /// (future-work §6 security).
+    pub require_key: Option<SigningKey>,
+}
+
+impl CloudWorker {
+    /// New worker sharing services (MDSS/platform/runtime) and the
+    /// activity registry with the local side.
+    pub fn new(services: Arc<Services>, registry: Arc<ActivityRegistry>) -> Arc<Self> {
+        Arc::new(Self::new_inner(services, registry))
+    }
+
+    /// Unwrapped constructor (callers that need to set `require_key`).
+    pub fn new_inner(services: Arc<Services>, registry: Arc<ActivityRegistry>) -> Self {
+        Self {
+            engine: Engine::new(registry, services).on_tier(NodeKind::Cloud),
+            require_key: None,
+        }
+    }
+
+    /// Execute one request.
+    pub fn execute(&self, req: &OffloadRequest) -> OffloadResponse {
+        if let Some(key) = &self.require_key {
+            if !req.verify(key) {
+                return OffloadResponse::err(
+                    "authentication failed: task code signature invalid or missing".into(),
+                );
+            }
+        }
+        let step = match req.step() {
+            Ok(s) => s,
+            Err(e) => return OffloadResponse::err(format!("{e:#}")),
+        };
+        match self.engine.exec_subtree(&step, req.inputs.clone()) {
+            Ok((mut outputs, sim, lines)) => {
+                // Only the declared writes travel back.
+                outputs.retain(|k, _| req.writes.contains(k));
+                OffloadResponse::ok(outputs, sim, lines)
+            }
+            Err(e) => OffloadResponse::err(format!("{e:#}")),
+        }
+    }
+}
+
+impl transport::RequestHandler for CloudWorker {
+    fn handle(&self, bytes: &[u8]) -> Vec<u8> {
+        match OffloadRequest::decode(bytes) {
+            Ok(req) => self.execute(&req).encode(),
+            Err(e) => OffloadResponse::err(format!("{e:#}")).encode(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Platform;
+    use crate::engine::activity::need_num;
+    use crate::partitioner;
+    use crate::workflow::xaml;
+
+    fn registry() -> Arc<ActivityRegistry> {
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("math.square", |_c, inputs| {
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x * x))].into())
+        });
+        reg.register_fn("heavy.op", |c, inputs| {
+            c.charge_compute(Duration::from_millis(300));
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        Arc::new(reg)
+    }
+
+    fn setup(policy: DataPolicy) -> (Engine, Arc<MigrationManager>) {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let reg = registry();
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), policy);
+        let engine = Engine::new(reg, services).with_offload(mgr.clone());
+        (engine, mgr)
+    }
+
+    #[test]
+    fn offload_roundtrip_via_engine() {
+        let (engine, mgr) = setup(DataPolicy::Mdss);
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity DisplayName="sq" Activity="math.square"
+                                   In.x="6" Out.y="y" Remotable="true"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, rep) = partitioner::partition(&wf).unwrap();
+        assert_eq!(rep.migration_points, 1);
+        let report = engine.run(&part).unwrap();
+        assert_eq!(report.lines, vec!["36"]);
+        assert_eq!(report.offload_count(), 1);
+        assert_eq!(mgr.stats().offloads, 1);
+        assert!(mgr.stats().protocol_bytes > 0);
+    }
+
+    #[test]
+    fn cloud_speedup_reflected_in_sim_time() {
+        // heavy.op = 300 ms reference compute. Local: 300 ms. Cloud
+        // (speed 4): 75 ms + WAN overhead (~20 ms RTT + tiny payload).
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let reg = registry();
+        let local_engine = Engine::new(reg.clone(), services.clone());
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="heavy.op" In.x="1" Out.y="y" Remotable="true"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let local = local_engine.run(&part).unwrap();
+
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let cloud_engine = Engine::new(reg, services).with_offload(mgr);
+        let cloud = cloud_engine.run(&part).unwrap();
+
+        assert_eq!(local.sim_time, Duration::from_millis(300));
+        assert!(cloud.sim_time < local.sim_time, "offload must win: {cloud:?}");
+        assert!(cloud.sim_time >= Duration::from_millis(75));
+    }
+
+    #[test]
+    fn remote_error_propagates() {
+        let (engine, _) = setup(DataPolicy::Mdss);
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="math.square" In.x="'oops'" Out.y="y" Remotable="true"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let err = format!("{:#}", engine.run(&part).unwrap_err());
+        assert!(err.contains("remote execution failed"), "{err}");
+    }
+
+    #[test]
+    fn mdss_policy_skips_fresh_data() {
+        let (engine, mgr) = setup(DataPolicy::Mdss);
+        let services = engine.services().clone();
+        let uri = Uri::parse("mdss://t/data").unwrap();
+        services.mdss.put(NodeKind::Local, &uri, vec![0u8; 100_000]);
+
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables>
+                   <Variable Name="d" Init="uri('mdss://t/data')"/>
+                   <Variable Name="y"/>
+                 </Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="math.square" In.x="2" In.data="d"
+                                   Out.y="y" Remotable="true"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+
+        // First offload: cloud is missing the data -> sync.
+        engine.run(&part).unwrap();
+        assert_eq!(mgr.stats().data_syncs, 1);
+        assert_eq!(mgr.stats().data_hits, 0);
+
+        // Second offload: cloud is fresh -> task code only.
+        engine.run(&part).unwrap();
+        assert_eq!(mgr.stats().data_syncs, 1);
+        assert_eq!(mgr.stats().data_hits, 1);
+    }
+
+    #[test]
+    fn bundle_always_transfers_every_time() {
+        let (engine, mgr) = setup(DataPolicy::BundleAlways);
+        let services = engine.services().clone();
+        let uri = Uri::parse("mdss://t/data").unwrap();
+        services.mdss.put(NodeKind::Local, &uri, vec![0u8; 100_000]);
+
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables>
+                   <Variable Name="d" Init="uri('mdss://t/data')"/>
+                   <Variable Name="y"/>
+                 </Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="math.square" In.x="2" In.data="d"
+                                   Out.y="y" Remotable="true"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        engine.run(&part).unwrap();
+        engine.run(&part).unwrap();
+        // Both offloads moved the payload.
+        assert_eq!(mgr.stats().data_syncs, 2);
+        assert_eq!(mgr.stats().data_hits, 0);
+    }
+
+    #[test]
+    fn parallel_remotable_steps_offload_concurrently() {
+        // Fig 9b through the real migration manager: 4 parallel
+        // remotable steps, each 200 ms reference -> sim time must be
+        // ~one cloud step (50 ms) + WAN, not 4x.
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("slow", |c, inputs| {
+            c.charge_compute(Duration::from_millis(200));
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x))].into())
+        });
+        let reg = Arc::new(reg);
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let engine = Engine::new(reg, services).with_offload(mgr);
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Workflow.Variables>
+                   <Variable Name="a"/><Variable Name="b"/>
+                   <Variable Name="c"/><Variable Name="d"/>
+                 </Workflow.Variables>
+                 <Parallel>
+                   <InvokeActivity Activity="slow" In.x="1" Out.y="a" Remotable="true"/>
+                   <InvokeActivity Activity="slow" In.x="2" Out.y="b" Remotable="true"/>
+                   <InvokeActivity Activity="slow" In.x="3" Out.y="c" Remotable="true"/>
+                   <InvokeActivity Activity="slow" In.x="4" Out.y="d" Remotable="true"/>
+                 </Parallel>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let report = engine.run(&part).unwrap();
+        assert_eq!(report.offload_count(), 4);
+        // One offload ≈ 50 ms remote + ~20 ms WAN; sequential would be
+        // ≥ 280 ms. Parallel must stay well under 2x one offload.
+        assert!(
+            report.sim_time < Duration::from_millis(140),
+            "parallel offloads must overlap: {:?}",
+            report.sim_time
+        );
+    }
+
+    #[test]
+    fn tcp_transport_end_to_end() {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let reg = registry();
+        let worker = CloudWorker::new(services.clone(), reg.clone());
+        let addr = serve_tcp(worker).unwrap();
+        let transport = TcpTransport::connect(addr).unwrap();
+        let mgr = MigrationManager::new(services.clone(), Box::new(transport), DataPolicy::Mdss);
+        let engine = Engine::new(reg, services).with_offload(mgr);
+
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="math.square" In.x="9" Out.y="y" Remotable="true"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let report = engine.run(&part).unwrap();
+        assert_eq!(report.lines, vec!["81"]);
+    }
+}

@@ -1,0 +1,325 @@
+//! Migration wire protocol (paper §3.3).
+//!
+//! A remotable step is *packaged* for the wire as its XAML subtree
+//! ("task code") plus the values of its input variables; application
+//! data does **not** ride in the request — it is referenced by MDSS
+//! URI (paper §3.4) and moved separately, only when stale. Responses
+//! carry the written variable values, the remote simulated time, and
+//! any cloud-side WriteLine output.
+//!
+//! Encoding: JSON (jsonmini) with the step subtree embedded as XML
+//! text, so the exact developer-visible step definition round-trips
+//! ("packaged as before and shipped back").
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::expr::Value;
+use crate::jsonmini::{self, Value as J};
+use crate::workflow::{xaml, Step};
+
+/// Request: offload one step.
+#[derive(Debug, PartialEq)]
+pub struct OffloadRequest {
+    /// The step subtree as XAML text (the "task code").
+    pub step_xml: String,
+    /// Input variable values (reads of the step).
+    pub inputs: BTreeMap<String, Value>,
+    /// Variables the caller expects back (writes of the step).
+    pub writes: Vec<String>,
+    /// Optional authentication tag over task code + inputs + writes
+    /// (future-work §6; see [`super::security`]).
+    pub sig: Option<String>,
+}
+
+/// Response: the re-integration package.
+#[derive(Debug, PartialEq)]
+pub struct OffloadResponse {
+    /// Written variable values (empty on error).
+    pub outputs: BTreeMap<String, Value>,
+    /// Simulated remote execution time in microseconds (cloud-node
+    /// scaled compute + any cloud-side MDSS pulls).
+    pub remote_sim_us: u64,
+    /// Cloud-side WriteLine output.
+    pub lines: Vec<String>,
+    /// Error message when remote execution failed.
+    pub error: Option<String>,
+}
+
+/// Encode a workflow [`Value`] (tagged).
+pub fn value_to_json(v: &Value) -> J {
+    match v {
+        Value::Num(n) => J::obj([("t", J::str("num")), ("v", J::num(*n))]),
+        Value::Str(s) => J::obj([("t", J::str("str")), ("v", J::str(s.clone()))]),
+        Value::Bool(b) => J::obj([("t", J::str("bool")), ("v", J::Bool(*b))]),
+        Value::Uri(u) => J::obj([("t", J::str("uri")), ("v", J::str(u.clone()))]),
+    }
+}
+
+/// Decode a workflow [`Value`].
+pub fn value_from_json(j: &J) -> Result<Value> {
+    let t = j.get("t")?.as_str()?;
+    let v = j.get("v")?;
+    Ok(match t {
+        "num" => Value::Num(v.as_f64()?),
+        "str" => Value::Str(v.as_str()?.to_string()),
+        "bool" => Value::Bool(v.as_bool()?),
+        "uri" => Value::Uri(v.as_str()?.to_string()),
+        other => bail!("unknown value tag {other:?}"),
+    })
+}
+
+fn map_to_json(m: &BTreeMap<String, Value>) -> J {
+    J::Obj(m.iter().map(|(k, v)| (k.clone(), value_to_json(v))).collect())
+}
+
+fn map_from_json(j: &J) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    for (k, v) in j.as_obj()? {
+        out.insert(k.clone(), value_from_json(v)?);
+    }
+    Ok(out)
+}
+
+impl OffloadRequest {
+    /// Package a step for the wire.
+    pub fn package(step: &Step, inputs: BTreeMap<String, Value>, writes: &[String]) -> Self {
+        Self {
+            step_xml: xaml::step_to_xml(step),
+            inputs,
+            writes: writes.to_vec(),
+            sig: None,
+        }
+    }
+
+    /// The canonical byte string authentication covers (everything the
+    /// cloud will act on).
+    pub fn signable(&self) -> Vec<u8> {
+        let mut msg = self.step_xml.clone().into_bytes();
+        msg.extend_from_slice(jsonmini::to_string(&map_to_json(&self.inputs)).as_bytes());
+        for w in &self.writes {
+            msg.extend_from_slice(w.as_bytes());
+            msg.push(0);
+        }
+        msg
+    }
+
+    /// Attach an authentication tag.
+    pub fn sign(&mut self, key: &super::security::SigningKey) {
+        self.sig = Some(key.sign(&self.signable()));
+    }
+
+    /// Verify the tag (false when absent or wrong).
+    pub fn verify(&self, key: &super::security::SigningKey) -> bool {
+        match &self.sig {
+            Some(tag) => key.verify(&self.signable(), tag),
+            None => false,
+        }
+    }
+
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        jsonmini::to_string(&J::obj([
+            ("kind", J::str("offload_request")),
+            ("step_xml", J::str(self.step_xml.clone())),
+            ("inputs", map_to_json(&self.inputs)),
+            (
+                "writes",
+                J::Arr(self.writes.iter().map(|w| J::str(w.clone())).collect()),
+            ),
+            (
+                "sig",
+                match &self.sig {
+                    Some(s) => J::str(s.clone()),
+                    None => J::Null,
+                },
+            ),
+        ]))
+        .into_bytes()
+    }
+
+    /// Deserialize.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes).context("request is not utf-8")?;
+        let j = jsonmini::parse(text).context("parsing offload request")?;
+        if j.get("kind")?.as_str()? != "offload_request" {
+            bail!("not an offload_request");
+        }
+        Ok(Self {
+            step_xml: j.get("step_xml")?.as_str()?.to_string(),
+            inputs: map_from_json(j.get("inputs")?)?,
+            writes: j
+                .get("writes")?
+                .as_arr()?
+                .iter()
+                .map(|w| Ok(w.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            sig: match j.get_opt("sig") {
+                None | Some(J::Null) => None,
+                Some(s) => Some(s.as_str()?.to_string()),
+            },
+        })
+    }
+
+    /// Parse the embedded task code back into a step tree.
+    pub fn step(&self) -> Result<Step> {
+        let el = crate::xmlmini::parse(&self.step_xml)
+            .context("parsing packaged step XML")?;
+        xaml::element_to_step(&el)
+    }
+}
+
+impl OffloadResponse {
+    /// Success response.
+    pub fn ok(
+        outputs: BTreeMap<String, Value>,
+        remote_sim: std::time::Duration,
+        lines: Vec<String>,
+    ) -> Self {
+        Self {
+            outputs,
+            remote_sim_us: remote_sim.as_micros() as u64,
+            lines,
+            error: None,
+        }
+    }
+
+    /// Failure response.
+    pub fn err(msg: String) -> Self {
+        Self { outputs: BTreeMap::new(), remote_sim_us: 0, lines: Vec::new(), error: Some(msg) }
+    }
+
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        jsonmini::to_string(&J::obj([
+            ("kind", J::str("offload_response")),
+            ("outputs", map_to_json(&self.outputs)),
+            ("remote_sim_us", J::num(self.remote_sim_us as f64)),
+            (
+                "lines",
+                J::Arr(self.lines.iter().map(|l| J::str(l.clone())).collect()),
+            ),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => J::str(e.clone()),
+                    None => J::Null,
+                },
+            ),
+        ]))
+        .into_bytes()
+    }
+
+    /// Deserialize.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes).context("response is not utf-8")?;
+        let j = jsonmini::parse(text).context("parsing offload response")?;
+        if j.get("kind")?.as_str()? != "offload_response" {
+            bail!("not an offload_response");
+        }
+        Ok(Self {
+            outputs: map_from_json(j.get("outputs")?)?,
+            remote_sim_us: j.get("remote_sim_us")?.as_f64()? as u64,
+            lines: j
+                .get("lines")?
+                .as_arr()?
+                .iter()
+                .map(|l| Ok(l.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            error: match j.get("error")? {
+                J::Null => None,
+                e => Some(e.as_str()?.to_string()),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::StepKind;
+
+    fn sample_step() -> Step {
+        Step::new(
+            "misfit",
+            StepKind::InvokeActivity {
+                activity: "at.misfit".into(),
+                inputs: vec![("syn".into(), "syn".into()), ("obs".into(), "obs".into())],
+                outputs: vec![("m".into(), "misfit".into())],
+            },
+        )
+        .remotable()
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut inputs = BTreeMap::new();
+        inputs.insert("syn".to_string(), Value::Uri("mdss://at/syn".into()));
+        inputs.insert("k".to_string(), Value::Num(3.5));
+        inputs.insert("quote".to_string(), Value::Str("a\"b\nc".into()));
+        let req = OffloadRequest::package(&sample_step(), inputs, &["misfit".to_string()]);
+        let back = OffloadRequest::decode(&req.encode()).unwrap();
+        assert_eq!(back, req);
+        // Task code round-trips to the same step tree.
+        let step = back.step().unwrap();
+        assert_eq!(step.display_name, "misfit");
+        assert!(step.remotable);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut outputs = BTreeMap::new();
+        outputs.insert("misfit".to_string(), Value::Num(0.25));
+        outputs.insert("done".to_string(), Value::Bool(true));
+        let resp = OffloadResponse::ok(
+            outputs,
+            std::time::Duration::from_micros(12345),
+            vec!["remote line".to_string()],
+        );
+        let back = OffloadResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(back.remote_sim_us, 12345);
+    }
+
+    #[test]
+    fn error_response() {
+        let resp = OffloadResponse::err("boom".into());
+        let back = OffloadResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(back.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn signing_roundtrip_and_tamper() {
+        let key = crate::migration::security::SigningKey::new(b"k".to_vec());
+        let mut req = OffloadRequest::package(
+            &sample_step(),
+            [("x".to_string(), Value::Num(1.0))].into(),
+            &["y".to_string()],
+        );
+        assert!(!req.verify(&key), "unsigned must not verify");
+        req.sign(&key);
+        let back = OffloadRequest::decode(&req.encode()).unwrap();
+        assert!(back.verify(&key));
+        // Tamper with the task code after signing.
+        let mut tampered = back;
+        tampered.step_xml = tampered.step_xml.replace("at.misfit", "rm.rf");
+        assert!(!tampered.verify(&key));
+    }
+
+    #[test]
+    fn unsigned_decode_compatible() {
+        // Requests without a sig field (older peers) still decode.
+        let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        let decoded = OffloadRequest::decode(&req.encode()).unwrap();
+        assert_eq!(decoded.sig, None);
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        assert!(OffloadResponse::decode(&req.encode()).is_err());
+        assert!(OffloadRequest::decode(b"{}").is_err());
+        assert!(OffloadRequest::decode(&[0xFF, 0xFE]).is_err());
+    }
+}

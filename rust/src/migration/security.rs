@@ -1,0 +1,101 @@
+//! Offload-request authentication — the paper's future-work §6
+//! ("security concerns arise when code is offloaded to servers …
+//! running foreign code on the server").
+//!
+//! Every offload request can carry a keyed SHA-256 tag over the task
+//! code and inputs. The cloud worker verifies the tag before executing
+//! anything: tampered task code (a modified step XML, injected inputs)
+//! is rejected without execution. The key is shared out-of-band when
+//! the worker is deployed (as the Emerald runtime itself is).
+
+use sha2::{Digest, Sha256};
+
+/// A shared signing key. `Debug` never prints key material.
+#[derive(Clone)]
+pub struct SigningKey {
+    key: Vec<u8>,
+}
+
+impl std::fmt::Debug for SigningKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SigningKey(<{} bytes redacted>)", self.key.len())
+    }
+}
+
+impl SigningKey {
+    /// Key from raw bytes.
+    pub fn new(key: impl Into<Vec<u8>>) -> Self {
+        Self { key: key.into() }
+    }
+
+    /// HMAC-style tag: SHA256(key || SHA256(key || message)), hex.
+    /// (Length-extension safe for our fixed-format messages.)
+    pub fn sign(&self, message: &[u8]) -> String {
+        let inner: [u8; 32] = {
+            let mut h = Sha256::new();
+            h.update(&self.key);
+            h.update(message);
+            h.finalize().into()
+        };
+        let outer: [u8; 32] = {
+            let mut h = Sha256::new();
+            h.update(&self.key);
+            h.update(inner);
+            h.finalize().into()
+        };
+        hex(&outer)
+    }
+
+    /// Constant-time-ish verification (length + bytewise OR fold).
+    pub fn verify(&self, message: &[u8], tag: &str) -> bool {
+        let expect = self.sign(message);
+        if expect.len() != tag.len() {
+            return false;
+        }
+        expect
+            .bytes()
+            .zip(tag.bytes())
+            .fold(0u8, |acc, (a, b)| acc | (a ^ b))
+            == 0
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_verify_roundtrip() {
+        let key = SigningKey::new(b"emerald-secret".to_vec());
+        let tag = key.sign(b"task code");
+        assert_eq!(tag.len(), 64);
+        assert!(key.verify(b"task code", &tag));
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let key = SigningKey::new(b"emerald-secret".to_vec());
+        let tag = key.sign(b"task code");
+        assert!(!key.verify(b"task code!", &tag));
+        assert!(!key.verify(b"task code", "deadbeef"));
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let k1 = SigningKey::new(b"alpha".to_vec());
+        let k2 = SigningKey::new(b"beta".to_vec());
+        let tag = k1.sign(b"msg");
+        assert!(!k2.verify(b"msg", &tag));
+    }
+
+    #[test]
+    fn deterministic() {
+        let k = SigningKey::new(b"k".to_vec());
+        assert_eq!(k.sign(b"m"), k.sign(b"m"));
+        assert_ne!(k.sign(b"m"), k.sign(b"n"));
+    }
+}

@@ -1,0 +1,224 @@
+//! The Emerald partitioner (paper §3.1, Figures 5–6).
+//!
+//! Input: an *annotated workflow* (steps marked `Remotable="true"`).
+//! Output: a *modified workflow with migration points* — a temporary
+//! [`StepKind::MigrationPoint`] step inserted immediately **before**
+//! each remotable step. At runtime the temporary step suspends the
+//! workflow, notifies the migration manager to offload the step, and
+//! resumes execution after re-integration (Figure 6).
+//!
+//! Partitioning validates the three legal-partition properties first
+//! ([`crate::workflow::validate`]); any annotated WF workflow that
+//! follows the rules can be partitioned.
+
+use anyhow::Result;
+
+use crate::workflow::{validate, Step, StepKind, Workflow};
+
+/// Partitioning statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionReport {
+    /// Number of migration points inserted.
+    pub migration_points: usize,
+    /// Steps in the workflow before / after.
+    pub steps_before: usize,
+    pub steps_after: usize,
+}
+
+/// Validate and partition a workflow. The input is unchanged; the
+/// returned workflow contains the inserted migration points.
+pub fn partition(wf: &Workflow) -> Result<(Workflow, PartitionReport)> {
+    validate::validate(wf)?;
+    let steps_before = wf.size();
+
+    let mut out = wf.clone();
+    let mut inserted = 0usize;
+    rewrite(&mut out.root, &mut inserted);
+    out.renumber();
+
+    Ok((
+        out.clone(),
+        PartitionReport {
+            migration_points: inserted,
+            steps_before,
+            steps_after: out.size(),
+        },
+    ))
+}
+
+/// Insert migration points in-place.
+///
+/// * Remotable children of a `Sequence` get a `MigrationPoint` sibling
+///   inserted before them.
+/// * Remotable children of other containers (`Parallel` branches, `If`
+///   branches, `While` bodies) are wrapped in a small `Sequence`
+///   [MigrationPoint, step] so the engine's sequence scanner finds
+///   them; each parallel branch therefore offloads independently
+///   (Figure 9b).
+fn rewrite(step: &mut Step, inserted: &mut usize) {
+    match &mut step.kind {
+        StepKind::Sequence(children) => {
+            let mut i = 0;
+            while i < children.len() {
+                if children[i].remotable {
+                    children.insert(i, migration_point());
+                    *inserted += 1;
+                    // Skip the marker and the (not recursed) remotable
+                    // step — P3 guarantees nothing remotable inside it.
+                    i += 2;
+                } else {
+                    rewrite(&mut children[i], inserted);
+                    i += 1;
+                }
+            }
+        }
+        StepKind::Parallel(children) => {
+            for c in children.iter_mut() {
+                if c.remotable {
+                    wrap_in_sequence(c);
+                    *inserted += 1;
+                } else {
+                    rewrite(c, inserted);
+                }
+            }
+        }
+        StepKind::If { then_branch, else_branch, .. } => {
+            for b in [Some(then_branch), else_branch.as_mut()].into_iter().flatten() {
+                if b.remotable {
+                    wrap_in_sequence(b);
+                    *inserted += 1;
+                } else {
+                    rewrite(b, inserted);
+                }
+            }
+        }
+        StepKind::While { body, .. } => {
+            if body.remotable {
+                wrap_in_sequence(body);
+                *inserted += 1;
+            } else {
+                rewrite(body, inserted);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn migration_point() -> Step {
+    Step::new("migration-point", StepKind::MigrationPoint)
+}
+
+fn wrap_in_sequence(step: &mut Step) {
+    let inner = std::mem::replace(step, Step::new("tmp", StepKind::Nop));
+    *step = Step::new(
+        format!("offload({})", inner.display_name),
+        StepKind::Sequence(vec![migration_point(), inner]),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quickprop::{forall, Gen};
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    fn wf(steps: Vec<Step>) -> Workflow {
+        Workflow::new("t", Step::new("main", StepKind::Sequence(steps)))
+            .var("a", Some("1"))
+            .var("b", Some("2"))
+            .var("c", Some("3"))
+    }
+
+    #[test]
+    fn inserts_point_before_remotable() {
+        let w = wf(vec![assign("a", "1"), assign("b", "a + 1").remotable(), assign("c", "b")]);
+        let (out, report) = partition(&w).unwrap();
+        assert_eq!(report.migration_points, 1);
+        assert_eq!(report.steps_after, report.steps_before + 1);
+        let kids = out.root.children();
+        assert_eq!(kids[1].kind_name(), "MigrationPoint");
+        assert_eq!(kids[2].display_name, "b");
+    }
+
+    #[test]
+    fn wraps_parallel_branches() {
+        let w = Workflow::new(
+            "p",
+            Step::new(
+                "main",
+                StepKind::Parallel(vec![
+                    assign("a", "1").remotable(),
+                    assign("b", "2"),
+                ]),
+            ),
+        )
+        .var("a", None)
+        .var("b", None);
+        let (out, report) = partition(&w).unwrap();
+        assert_eq!(report.migration_points, 1);
+        let branch = out.root.children()[0];
+        assert_eq!(branch.kind_name(), "Sequence");
+        assert_eq!(branch.children()[0].kind_name(), "MigrationPoint");
+        // Non-remotable branch untouched.
+        assert_eq!(out.root.children()[1].kind_name(), "Assign");
+    }
+
+    #[test]
+    fn validation_failures_propagate() {
+        let w = wf(vec![assign("a", "1").remotable().local_hardware()]);
+        assert!(partition(&w).is_err());
+    }
+
+    #[test]
+    fn no_remotable_steps_is_identity() {
+        let w = wf(vec![assign("a", "1"), assign("b", "2")]);
+        let (out, report) = partition(&w).unwrap();
+        assert_eq!(report.migration_points, 0);
+        assert_eq!(out, w);
+    }
+
+    #[test]
+    fn idempotent_guard_rejects_repartition() {
+        let w = wf(vec![assign("a", "1").remotable()]);
+        let (out, _) = partition(&w).unwrap();
+        // Partitioning an already-partitioned workflow is an error
+        // (validate rejects existing MigrationPoints).
+        assert!(partition(&out).is_err());
+    }
+
+    #[test]
+    fn property_one_point_per_remotable_step() {
+        // Random workflows: #migration points == #remotable steps, and
+        // the step order is preserved.
+        forall(60, |g: &mut Gen| {
+            let n = g.usize_in(1..=12);
+            let mut steps = Vec::new();
+            let mut expect_remote = 0;
+            for i in 0..n {
+                let mut s = assign(["a", "b", "c"][i % 3], &format!("{i}"));
+                if g.bool() {
+                    s = s.remotable();
+                    expect_remote += 1;
+                }
+                steps.push(s);
+            }
+            let w = wf(steps);
+            let (out, report) = partition(&w).unwrap();
+            assert_eq!(report.migration_points, expect_remote);
+            // Order of Assign display names preserved.
+            let names = |w: &Workflow| {
+                let mut v = Vec::new();
+                w.root.walk(&mut |s| {
+                    if s.kind_name() == "Assign" {
+                        v.push(s.display_name.clone());
+                    }
+                });
+                v
+            };
+            assert_eq!(names(&w), names(&out));
+        });
+    }
+}

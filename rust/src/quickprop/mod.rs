@@ -1,0 +1,180 @@
+//! Tiny property-testing framework (substrate; proptest is not
+//! available offline).
+//!
+//! Deterministic: every run uses a fixed seed sequence, so failures are
+//! reproducible in CI. On failure the framework reports the case index
+//! and the seed that produced it.
+//!
+//! ```
+//! use emerald::quickprop::{forall, Gen};
+//! forall(100, |g| {
+//!     let v: Vec<u8> = g.vec(0..=16, |g| g.u8());
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+/// SplitMix64 PRNG — tiny, fast, good enough for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    /// New generator with an explicit seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform u8.
+    pub fn u8(&mut self) -> u8 {
+        self.u64() as u8
+    }
+
+    /// Uniform bool.
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+
+    /// Uniform usize in an inclusive range.
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        if lo == hi {
+            return lo;
+        }
+        lo + (self.u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform i64 in an inclusive range.
+    pub fn i64_in(&mut self, range: std::ops::RangeInclusive<i64>) -> i64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        if lo == hi {
+            return lo;
+        }
+        lo + (self.u64() % ((hi - lo) as u64 + 1)) as i64
+    }
+
+    /// f32 uniform in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let unit = (self.u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + unit * (hi - lo)
+    }
+
+    /// f64 uniform in [0, 1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Vector with a generated length and element generator.
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick a random element from a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0..=items.len() - 1)]
+    }
+
+    /// ASCII identifier-like string.
+    pub fn ident(&mut self, len: std::ops::RangeInclusive<usize>) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_0123456789";
+        let n = self.usize_in(len).max(1);
+        let mut s = String::new();
+        // first char: letter or underscore
+        s.push(CHARS[self.usize_in(0..=52 - 1)] as char);
+        for _ in 1..n {
+            s.push(*self.choose(CHARS) as char);
+        }
+        s
+    }
+
+    /// Arbitrary (possibly non-ASCII) string.
+    pub fn string(&mut self, len: std::ops::RangeInclusive<usize>) -> String {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| {
+                if self.usize_in(0..=9) == 0 {
+                    *self.choose(&['é', 'λ', '→', '"', '\\', '\n', '<', '&'])
+                } else {
+                    (b' ' + (self.u64() % 94) as u8) as char
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `cases` generated test cases. The closure receives a fresh
+/// seeded [`Gen`] per case; panics propagate with case context.
+pub fn forall(cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0xE5EE_0000u64 ^ (case.wrapping_mul(0x9E37_79B9));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            eprintln!("quickprop: property failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        forall(200, |g| {
+            let n = g.usize_in(3..=9);
+            assert!((3..=9).contains(&n));
+            let x = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let i = g.i64_in(-5..=5);
+            assert!((-5..=5).contains(&i));
+        });
+    }
+
+    #[test]
+    fn ident_is_valid() {
+        forall(100, |g| {
+            let s = g.ident(1..=12);
+            assert!(!s.is_empty());
+            let first = s.chars().next().unwrap();
+            assert!(first.is_ascii_alphabetic() || first == '_');
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        forall(10, |g| {
+            assert!(g.usize_in(0..=4) < 4, "must eventually hit 4");
+        });
+    }
+}

@@ -1,0 +1,252 @@
+//! The artifact manifest: machine-readable index written by
+//! `python/compile/aot.py` describing every AOT artifact (file name +
+//! input/output signatures) and every mesh configuration.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonmini::{self, Value};
+
+/// Signature of one tensor argument/result: shape only (all artifacts
+/// are f32; the dtype field in the manifest is validated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    fn from_json(v: &Value) -> Result<Self> {
+        let pair = v.as_arr()?;
+        if pair.len() != 2 {
+            bail!("signature entry must be [dtype, shape]");
+        }
+        let dtype = pair[0].as_str()?;
+        if dtype != "f32" {
+            bail!("unsupported artifact dtype {dtype}");
+        }
+        let dims = pair[1]
+            .as_arr()?
+            .iter()
+            .map(|d| Ok(d.as_usize()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dims })
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// One AOT artifact (an HLO-text file plus its signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One mesh configuration (an AT workload; paper §4 inputs).
+#[derive(Debug, Clone)]
+pub struct MeshSpec {
+    pub name: String,
+    pub shape: [usize; 3],
+    pub nt: usize,
+    pub chunk: usize,
+    pub dt: f32,
+    pub f0: f32,
+    pub source: [usize; 3],
+    pub receivers: Vec<[usize; 3]>,
+    pub c_ref: f32,
+    pub c_min: f32,
+    pub c_max: f32,
+    pub true_model_file: PathBuf,
+}
+
+impl MeshSpec {
+    /// Number of chunked artifact calls per simulation.
+    pub fn n_chunks(&self) -> usize {
+        self.nt / self.chunk
+    }
+
+    /// Number of receivers.
+    pub fn n_rec(&self) -> usize {
+        self.receivers.len()
+    }
+
+    /// Field element count.
+    pub fn cells(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Field size in bytes (one wavefield / model tensor).
+    pub fn field_bytes(&self) -> usize {
+        self.cells() * 4
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub meshes: BTreeMap<String, MeshSpec>,
+}
+
+fn triple(v: &Value) -> Result<[usize; 3]> {
+    let a = v.as_arr()?;
+    if a.len() != 3 {
+        bail!("expected a 3-element array");
+    }
+    Ok([a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?])
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = jsonmini::parse(text).context("parsing manifest.json")?;
+        let version = root.get("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in root.get("artifacts")?.as_obj()? {
+            let inputs = spec
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    path: dir.join(spec.get("file")?.as_str()?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut meshes = BTreeMap::new();
+        for (name, m) in root.get("meshes")?.as_obj()? {
+            let receivers = m
+                .get("receivers")?
+                .as_arr()?
+                .iter()
+                .map(triple)
+                .collect::<Result<Vec<_>>>()?;
+            meshes.insert(
+                name.clone(),
+                MeshSpec {
+                    name: name.clone(),
+                    shape: triple(m.get("shape")?)?,
+                    nt: m.get("nt")?.as_usize()?,
+                    chunk: m.get("chunk")?.as_usize()?,
+                    dt: m.get("dt")?.as_f64()? as f32,
+                    f0: m.get("f0")?.as_f64()? as f32,
+                    source: triple(m.get("source")?)?,
+                    receivers,
+                    c_ref: m.get("c_ref")?.as_f64()? as f32,
+                    c_min: m.get("c_min")?.as_f64()? as f32,
+                    c_max: m.get("c_max")?.as_f64()? as f32,
+                    true_model_file: dir.join(m.get("true_model_file")?.as_str()?),
+                },
+            );
+        }
+
+        Ok(Self { dir, artifacts, meshes })
+    }
+
+    /// Lookup an artifact spec by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    /// Lookup a mesh spec by name.
+    pub fn mesh(&self, name: &str) -> Result<&MeshSpec> {
+        self.meshes
+            .get(name)
+            .with_context(|| format!("mesh {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": {
+            "vecadd": {"file": "vecadd.hlo.txt",
+                       "inputs": [["f32", [8]], ["f32", [8]]],
+                       "outputs": [["f32", [8]]]}
+        },
+        "meshes": {
+            "demo": {"shape": [24,16,16], "nt": 40, "chunk": 8,
+                     "dt": 0.15, "f0": 0.25, "source": [12,8,8],
+                     "receivers": [[5,8,3],[10,8,3]],
+                     "c_ref": 2.0, "c_min": 1.2, "c_max": 3.5,
+                     "true_model_file": "data/demo_true_c.f32"}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        let a = m.artifact("vecadd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![8]);
+        assert_eq!(a.path, PathBuf::from("/x/vecadd.hlo.txt"));
+        let mesh = m.mesh("demo").unwrap();
+        assert_eq!(mesh.shape, [24, 16, 16]);
+        assert_eq!(mesh.n_chunks(), 5);
+        assert_eq!(mesh.n_rec(), 2);
+        assert_eq!(mesh.field_bytes(), 24 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn unknown_lookups_fail() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.mesh("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
+        assert!(Manifest::parse(&bad, PathBuf::from("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("[\"f32\", [8]], [\"f32\", [8]]", "[\"f64\", [8]], [\"f32\", [8]]");
+        assert!(Manifest::parse(&bad, PathBuf::from("/x")).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches XLA. Pattern (see
+//! /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compiled executables are cached per artifact name; the cache is the
+//! difference between a ~100 ms compile and a ~µs lookup on the hot
+//! path (measured by `benches/runtime_micro.rs`).
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, MeshSpec, TensorSig};
+pub use tensor::HostTensor;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Statistics for one `execute` call.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecStats {
+    /// Wall time of the PJRT execution (compute only, excludes compile).
+    pub compute: Duration,
+    /// True when the executable came from the cache.
+    pub cache_hit: bool,
+}
+
+enum Req {
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        resp: mpsc::Sender<Result<(Vec<HostTensor>, ExecStats)>>,
+    },
+    Warm {
+        name: String,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    Platform {
+        resp: mpsc::Sender<String>,
+    },
+}
+
+/// The PJRT runtime handle.
+///
+/// The `xla` crate's client is not `Send`/`Sync` (it holds `Rc`s), so
+/// all PJRT state — client, compiled-executable cache — lives on one
+/// dedicated executor thread; this handle is a thread-safe facade over
+/// an mpsc channel. On this single-CPU testbed serializing executions
+/// costs nothing; simulated concurrency is modeled by the engine's
+/// virtual-time composition, not by parallel PJRT calls.
+pub struct Runtime {
+    tx: Mutex<mpsc::Sender<Req>>,
+    manifest: Manifest,
+}
+
+struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    fn executable(&mut self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, bool)> {
+        // (entry API would hold a borrow across the compile; keep it simple)
+        let hit = self.cache.contains_key(name);
+        if !hit {
+            let spec = self.manifest.artifact(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .with_context(|| format!("non-utf8 path {:?}", spec.path))?,
+            )
+            .with_context(|| format!("loading HLO text {}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok((self.cache.get(name).unwrap(), hit))
+    }
+
+    fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<(Vec<HostTensor>, ExecStats)> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name} expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, sig)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.dims() != sig.dims.as_slice() {
+                bail!(
+                    "artifact {name} input {i}: expected shape {:?}, got {:?}",
+                    sig.dims,
+                    t.dims()
+                );
+            }
+        }
+
+        let (exe, cache_hit) = self.executable(name)?;
+        let literals = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+
+        let start = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let compute = start.elapsed();
+
+        let elements = tuple.decompose_tuple()?;
+        if elements.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name} returned {} outputs, manifest says {}",
+                elements.len(),
+                spec.outputs.len()
+            );
+        }
+        let outputs = elements
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((outputs, ExecStats { compute, cache_hit }))
+    }
+
+    fn serve(mut self, rx: mpsc::Receiver<Req>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Req::Execute { name, inputs, resp } => {
+                    let _ = resp.send(self.execute(&name, &inputs));
+                }
+                Req::Warm { name, resp } => {
+                    let _ = resp.send(self.executable(&name).map(|_| ()));
+                }
+                Req::Platform { resp } => {
+                    let _ = resp.send(self.client.platform_name());
+                }
+            }
+        }
+    }
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (must contain
+    /// `manifest.json`; run `make artifacts` first). Spawns the
+    /// executor thread.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let (tx, rx) = mpsc::channel();
+        let exec_manifest = manifest.clone();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("emerald-pjrt".into())
+            .spawn(move || {
+                match xla::PjRtClient::cpu().context("creating PJRT CPU client") {
+                    Ok(client) => {
+                        let _ = ready_tx.send(Ok(()));
+                        Executor { client, manifest: exec_manifest, cache: HashMap::new() }
+                            .serve(rx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })
+            .context("spawning PJRT executor thread")?;
+        ready_rx
+            .recv()
+            .context("PJRT executor thread died during startup")??;
+        Ok(Self { tx: Mutex::new(tx), manifest })
+    }
+
+    fn send(&self, req: Req) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .expect("PJRT executor thread is gone");
+    }
+
+    /// The manifest describing available artifacts and meshes.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Platform { resp: tx });
+        rx.recv().expect("PJRT executor thread is gone")
+    }
+
+    /// Pre-compile an artifact (warm the cache off the hot path).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Warm { name: name.to_string(), resp: tx });
+        rx.recv().expect("PJRT executor thread is gone")
+    }
+
+    /// Execute an artifact with host tensors, returning host tensors.
+    ///
+    /// Inputs are validated against the manifest signature. The output
+    /// tuple (artifacts are lowered with `return_tuple=True`) is
+    /// decomposed into one tensor per element.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.execute_with_stats(name, inputs).map(|(out, _)| out)
+    }
+
+    /// `execute` + timing/cache statistics.
+    pub fn execute_with_stats(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<(Vec<HostTensor>, ExecStats)> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Execute {
+            name: name.to_string(),
+            inputs: inputs.to_vec(),
+            resp: tx,
+        });
+        rx.recv().expect("PJRT executor thread is gone")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/
+    // (integration), since unit tests should not depend on `make
+    // artifacts` having run. Here we only check constructor failure.
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let err = match Runtime::new("/nonexistent/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("constructor must fail"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest.json"), "unhelpful error: {msg}");
+    }
+}

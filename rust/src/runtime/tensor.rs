@@ -1,0 +1,278 @@
+//! Host-side tensors: the currency between the coordinator, MDSS and
+//! the PJRT runtime. All Emerald artifacts operate on `f32` (the L2
+//! model is single-precision), so `HostTensor` is an f32 nd-array with
+//! row-major (C) layout.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense, row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Build from explicit dims + data (len must match).
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!(
+                "tensor shape {:?} needs {} elements, got {}",
+                dims,
+                n,
+                data.len()
+            );
+        }
+        Ok(Self { dims, data })
+    }
+
+    /// All-zero tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        Self { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(dims: &[usize], value: f32) -> Self {
+        Self { dims: dims.to_vec(), data: vec![value; dims.iter().product()] }
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar(value: f32) -> Self {
+        Self { dims: vec![], data: vec![value] }
+    }
+
+    /// Shape accessor.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Flat data accessor.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data accessor.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes (the unit MDSS and the network simulator meter).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn to_scalar(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("to_scalar on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// 3-D indexed read (for tests / diagnostics).
+    pub fn at3(&self, x: usize, y: usize, z: usize) -> f32 {
+        let (ny, nz) = (self.dims[1], self.dims[2]);
+        self.data[(x * ny + y) * nz + z]
+    }
+
+    /// Serialize to little-endian bytes (MDSS payload format).
+    ///
+    /// Hot path (§Perf): every tensor that crosses MDSS or the PJRT
+    /// boundary goes through here. On little-endian targets (all our
+    /// platforms) this is a single memcpy of the f32 buffer; the
+    /// per-element encode is kept as the big-endian fallback.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        #[cfg(target_endian = "little")]
+        {
+            let ptr = self.data.as_ptr() as *const u8;
+            // SAFETY: f32 has no padding; len*4 bytes are initialized.
+            let bytes = unsafe { std::slice::from_raw_parts(ptr, self.data.len() * 4) };
+            bytes.to_vec()
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut out = Vec::with_capacity(self.data.len() * 4);
+            for v in &self.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+    }
+
+    /// Deserialize from little-endian bytes with a known shape.
+    pub fn from_le_bytes(dims: &[usize], bytes: &[u8]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("expected {} bytes for shape {:?}, got {}", n * 4, dims, bytes.len());
+        }
+        #[cfg(target_endian = "little")]
+        let data = {
+            let mut data = vec![0f32; n];
+            // SAFETY: destination is n*4 initialized bytes; f32 from
+            // arbitrary bit patterns is defined.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    data.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+            data
+        };
+        #[cfg(not(target_endian = "little"))]
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { dims: dims.to_vec(), data })
+    }
+
+    /// Load a raw little-endian f32 file (e.g. `artifacts/data/*.f32`).
+    pub fn from_raw_file(dims: &[usize], path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading tensor file {}", path.display()))?;
+        Self::from_le_bytes(dims, &bytes)
+    }
+
+    /// For a rank-2 tensor `[rows, cols]`: new tensor with the row order
+    /// reversed (used to time-reverse the adjoint source).
+    pub fn rows_reversed(&self) -> Result<Self> {
+        if self.dims.len() != 2 {
+            bail!("rows_reversed needs rank 2, got {:?}", self.dims);
+        }
+        let (rows, cols) = (self.dims[0], self.dims[1]);
+        let mut data = Vec::with_capacity(self.data.len());
+        for r in (0..rows).rev() {
+            data.extend_from_slice(&self.data[r * cols..(r + 1) * cols]);
+        }
+        Ok(Self { dims: self.dims.clone(), data })
+    }
+
+    /// For a rank-2 tensor: copy rows `[start, start+len)`.
+    pub fn row_chunk(&self, start: usize, len: usize) -> Result<Self> {
+        if self.dims.len() != 2 {
+            bail!("row_chunk needs rank 2, got {:?}", self.dims);
+        }
+        let (rows, cols) = (self.dims[0], self.dims[1]);
+        if start + len > rows {
+            bail!("row_chunk [{start}, {}) out of {rows} rows", start + len);
+        }
+        Ok(Self {
+            dims: vec![len, cols],
+            data: self.data[start * cols..(start + len) * cols].to_vec(),
+        })
+    }
+
+    /// Concatenate rank-2 tensors along rows.
+    pub fn concat_rows(parts: &[HostTensor]) -> Result<Self> {
+        if parts.is_empty() {
+            bail!("concat_rows of nothing");
+        }
+        let cols = parts[0].dims[1];
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.dims.len() != 2 || p.dims[1] != cols {
+                bail!("concat_rows shape mismatch: {:?}", p.dims);
+            }
+            rows += p.dims[0];
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Self { dims: vec![rows, cols], data })
+    }
+
+    /// Max |x| over all elements.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Convert to an XLA literal (copies into PJRT-owned memory).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.dims,
+            &self.to_le_bytes(),
+        )?;
+        Ok(lit)
+    }
+
+    /// Convert from an XLA literal (must be an f32 array).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Self::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_len() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = HostTensor::new(vec![2, 2], vec![1.5, -2.0, 0.0, 3.25]).unwrap();
+        let back = HostTensor::from_le_bytes(&[2, 2], &t.to_le_bytes()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn at3_row_major() {
+        let mut t = HostTensor::zeros(&[2, 3, 4]);
+        t.data_mut()[(1 * 3 + 2) * 4 + 3] = 7.0;
+        assert_eq!(t.at3(1, 2, 3), 7.0);
+    }
+
+    #[test]
+    fn rows_reversed_involution() {
+        let t = HostTensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let r = t.rows_reversed().unwrap();
+        assert_eq!(r.data(), &[5., 6., 3., 4., 1., 2.]);
+        assert_eq!(r.rows_reversed().unwrap(), t);
+    }
+
+    #[test]
+    fn row_chunk_and_concat_invert() {
+        let t = HostTensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let a = t.row_chunk(0, 2).unwrap();
+        let b = t.row_chunk(2, 2).unwrap();
+        assert_eq!(HostTensor::concat_rows(&[a, b]).unwrap(), t);
+    }
+
+    #[test]
+    fn row_chunk_bounds() {
+        let t = HostTensor::zeros(&[4, 2]);
+        assert!(t.row_chunk(3, 2).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = HostTensor::scalar(2.5);
+        assert_eq!(s.dims(), &[] as &[usize]);
+        assert_eq!(s.to_scalar().unwrap(), 2.5);
+        assert!(HostTensor::zeros(&[2]).to_scalar().is_err());
+    }
+
+    #[test]
+    fn abs_max() {
+        let t = HostTensor::new(vec![3], vec![-5.0, 2.0, 4.0]).unwrap();
+        assert_eq!(t.abs_max(), 5.0);
+    }
+}

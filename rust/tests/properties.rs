@@ -1,0 +1,223 @@
+//! Property-based integration tests (quickprop substrate): codec
+//! round-trips and invariants over randomized structures.
+
+use emerald::jsonmini;
+use emerald::quickprop::{forall, Gen};
+use emerald::workflow::{xaml, Step, StepKind, Workflow};
+use emerald::xmlmini;
+
+// ---------------------------------------------------------------------
+// jsonmini: parse(to_string(v)) == v for arbitrary values
+// ---------------------------------------------------------------------
+
+fn gen_json(g: &mut Gen, depth: usize) -> jsonmini::Value {
+    use jsonmini::Value as J;
+    let pick = if depth == 0 { g.usize_in(0..=3) } else { g.usize_in(0..=5) };
+    match pick {
+        0 => J::Null,
+        1 => J::Bool(g.bool()),
+        // Round numbers to what the writer can represent exactly.
+        2 => J::Num((g.i64_in(-1_000_000..=1_000_000) as f64) / 64.0),
+        3 => J::Str(g.string(0..=24)),
+        4 => J::Arr(g.vec(0..=4, |g| gen_json(g, depth - 1))),
+        _ => {
+            let n = g.usize_in(0..=4);
+            let mut map = std::collections::BTreeMap::new();
+            for _ in 0..n {
+                map.insert(g.ident(1..=10), gen_json(g, depth - 1));
+            }
+            J::Obj(map)
+        }
+    }
+}
+
+#[test]
+fn jsonmini_roundtrip_random_values() {
+    forall(300, |g| {
+        let v = gen_json(g, 3);
+        let compact = jsonmini::parse(&jsonmini::to_string(&v)).unwrap();
+        let pretty = jsonmini::parse(&jsonmini::to_string_pretty(&v)).unwrap();
+        assert_eq!(compact, v);
+        assert_eq!(pretty, v);
+    });
+}
+
+// ---------------------------------------------------------------------
+// xmlmini: parse(to_string(el)) == el for arbitrary trees
+// ---------------------------------------------------------------------
+
+fn gen_xml(g: &mut Gen, depth: usize) -> xmlmini::Element {
+    let mut el = xmlmini::Element::new(g.ident(1..=8));
+    for _ in 0..g.usize_in(0..=3) {
+        el = el.attr(g.ident(1..=8), g.string(0..=16));
+    }
+    if depth > 0 && g.bool() {
+        for _ in 0..g.usize_in(0..=3) {
+            el.children.push(gen_xml(g, depth - 1));
+        }
+    }
+    if el.children.is_empty() && g.bool() {
+        // Text that survives trim round-trip.
+        let t = g.string(1..=16);
+        let t = t.trim();
+        if !t.is_empty() {
+            el.text = t.to_string();
+        }
+    }
+    el
+}
+
+#[test]
+fn xmlmini_roundtrip_random_trees() {
+    forall(300, |g| {
+        let el = gen_xml(g, 3);
+        let text = xmlmini::to_string(&el);
+        let back = xmlmini::parse(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert_eq!(back, el, "serialized form:\n{text}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// workflow xaml: random legal workflows round-trip, and partitioning
+// preserves semantics markers
+// ---------------------------------------------------------------------
+
+fn gen_step(g: &mut Gen, depth: usize) -> Step {
+    let choice = if depth == 0 { g.usize_in(0..=2) } else { g.usize_in(0..=4) };
+    let mut s = match choice {
+        0 => Step::new(
+            format!("a{}", g.usize_in(0..=99)),
+            StepKind::Assign {
+                to: ["a", "b", "c"][g.usize_in(0..=2)].into(),
+                value: format!("{} + a", g.usize_in(0..=9)),
+            },
+        ),
+        1 => Step::new(
+            format!("w{}", g.usize_in(0..=99)),
+            StepKind::WriteLine { text: "'x' + str(b)".into() },
+        ),
+        2 => Step::new(
+            format!("i{}", g.usize_in(0..=99)),
+            StepKind::InvokeActivity {
+                activity: format!("act.{}", g.ident(1..=6)),
+                inputs: vec![("p".into(), "a + b".into())],
+                outputs: vec![("r".into(), "c".into())],
+            },
+        ),
+        3 => Step::new(
+            format!("seq{}", g.usize_in(0..=99)),
+            StepKind::Sequence(g.vec(1..=3, |g| gen_step(g, depth - 1))),
+        ),
+        _ => Step::new(
+            format!("par{}", g.usize_in(0..=99)),
+            StepKind::Parallel(g.vec(1..=3, |g| gen_step(g, depth - 1))),
+        ),
+    };
+    // Mark some leaves remotable (never containers, to respect P3
+    // trivially in generated data).
+    if matches!(s.kind, StepKind::Assign { .. } | StepKind::InvokeActivity { .. })
+        && g.usize_in(0..=3) == 0
+    {
+        s = s.remotable();
+    }
+    s
+}
+
+fn gen_workflow(g: &mut Gen) -> Workflow {
+    Workflow::new(
+        "prop",
+        Step::new("main", StepKind::Sequence(g.vec(1..=5, |g| gen_step(g, 2)))),
+    )
+    .var("a", Some("1"))
+    .var("b", Some("2"))
+    .var("c", Some("3"))
+}
+
+#[test]
+fn workflow_xml_roundtrip_random() {
+    forall(200, |g| {
+        let wf = gen_workflow(g);
+        let xml = xaml::to_xml(&wf);
+        let back = xaml::parse(&xml).unwrap_or_else(|e| panic!("{e:#}\n{xml}"));
+        assert_eq!(back, wf, "xml was:\n{xml}");
+    });
+}
+
+#[test]
+fn partitioner_invariants_random() {
+    use emerald::partitioner::partition;
+    use emerald::workflow::validate::count_remotable;
+    forall(150, |g| {
+        let wf = gen_workflow(g);
+        let remotable = count_remotable(&wf.root);
+        let (out, report) = partition(&wf).unwrap();
+        // One migration point per remotable step.
+        assert_eq!(report.migration_points, remotable);
+        // Remotable marks preserved.
+        assert_eq!(count_remotable(&out.root), remotable);
+        // Every MigrationPoint is immediately followed by a step inside
+        // a Sequence.
+        fn check(step: &Step) {
+            if let StepKind::Sequence(children) = &step.kind {
+                for (i, c) in children.iter().enumerate() {
+                    if matches!(c.kind, StepKind::MigrationPoint) {
+                        assert!(i + 1 < children.len(), "dangling migration point");
+                    }
+                }
+            }
+            for c in step.children() {
+                check(c);
+            }
+        }
+        check(&out.root);
+        // The partitioned workflow round-trips through XML too.
+        let back = xaml::parse(&xaml::to_xml(&out)).unwrap();
+        assert_eq!(back, out);
+    });
+}
+
+// ---------------------------------------------------------------------
+// MDSS: random operation sequences converge under synchronization
+// ---------------------------------------------------------------------
+
+#[test]
+fn mdss_sync_converges_random_ops() {
+    use emerald::cloud::{NodeKind, SimNetwork};
+    use emerald::mdss::{Mdss, Uri};
+    use std::time::Duration;
+
+    forall(100, |g| {
+        let net = std::sync::Arc::new(SimNetwork::new(1e9, Duration::ZERO));
+        let mdss = Mdss::new(net);
+        let uris: Vec<Uri> = (0..3)
+            .map(|i| Uri::parse(&format!("mdss://p/u{i}")).unwrap())
+            .collect();
+        for _ in 0..g.usize_in(1..=12) {
+            let uri = &uris[g.usize_in(0..=2)];
+            let side = if g.bool() { NodeKind::Local } else { NodeKind::Cloud };
+            let payload = g.vec(1..=8, |g| g.u8());
+            mdss.put(side, uri, payload);
+            if g.usize_in(0..=3) == 0 {
+                mdss.synchronize(uri).unwrap();
+            }
+        }
+        mdss.synchronize_all().unwrap();
+        // After a full sync both tiers agree everywhere.
+        for uri in &uris {
+            let l = mdss.peek(NodeKind::Local, uri);
+            let c = mdss.peek(NodeKind::Cloud, uri);
+            match (l, c) {
+                (None, None) => {}
+                (Some(li), Some(ci)) => {
+                    assert_eq!(li.version, ci.version);
+                    assert_eq!(li.payload, ci.payload);
+                    assert!(li.verify());
+                }
+                (l, c) => panic!("tiers diverged for {uri}: {l:?} vs {c:?}"),
+            }
+        }
+        // Idempotence: a second sync moves nothing.
+        let s = mdss.synchronize_all().unwrap();
+        assert_eq!(s.uploads + s.downloads, 0);
+    });
+}

@@ -1,0 +1,130 @@
+//! Integration: the PJRT runtime against real AOT artifacts
+//! (`make artifacts` must have run).
+//!
+//! These tests cross-validate Layer 1/2 numerics *through the Rust
+//! loader* — the same physics checks `python/tests/` makes through
+//! JAX, proving the HLO-text interchange preserves semantics.
+
+use emerald::artifact_dir;
+use emerald::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::new(artifact_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn vecadd_numbers() {
+    let rt = runtime();
+    let x = HostTensor::new(vec![8], (0..8).map(|i| i as f32).collect()).unwrap();
+    let y = HostTensor::full(&[8], 10.0);
+    let out = rt.execute("vecadd", &[x, y]).unwrap();
+    assert_eq!(out.len(), 1);
+    let expect: Vec<f32> = (0..8).map(|i| i as f32 + 10.0).collect();
+    assert_eq!(out[0].data(), expect.as_slice());
+}
+
+#[test]
+fn executable_cache_hits_after_first_call() {
+    let rt = runtime();
+    let x = HostTensor::full(&[8], 1.0);
+    let (_, s1) = rt.execute_with_stats("vecadd", &[x.clone(), x.clone()]).unwrap();
+    let (_, s2) = rt.execute_with_stats("vecadd", &[x.clone(), x]).unwrap();
+    assert!(!s1.cache_hit);
+    assert!(s2.cache_hit);
+}
+
+#[test]
+fn input_shape_validation() {
+    let rt = runtime();
+    let bad = HostTensor::full(&[4], 1.0);
+    let good = HostTensor::full(&[8], 1.0);
+    let err = rt.execute("vecadd", &[bad, good.clone()]).unwrap_err();
+    assert!(format!("{err:#}").contains("expected shape"));
+    let err = rt.execute("vecadd", &[good]).unwrap_err();
+    assert!(format!("{err:#}").contains("expects 2 inputs"));
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn forward_zero_velocity_only_source_moves() {
+    // With c = 0 the wave equation degenerates: u_next = 2u - u_prev +
+    // src, so starting from rest only the source cell is nonzero.
+    let rt = runtime();
+    let spec = rt.manifest().mesh("demo").unwrap().clone();
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let z = HostTensor::zeros(&dims);
+    let c = HostTensor::zeros(&dims);
+    let out = rt
+        .execute("forward_demo", &[z.clone(), z, c, HostTensor::scalar(0.0)])
+        .unwrap();
+    let u = &out[0];
+    let mut nonzero = 0;
+    for (i, v) in u.data().iter().enumerate() {
+        if *v != 0.0 {
+            nonzero += 1;
+            let nzyz = spec.shape[1] * spec.shape[2];
+            let (x, rem) = (i / nzyz, i % nzyz);
+            let (y, zc) = (rem / spec.shape[2], rem % spec.shape[2]);
+            assert_eq!([x, y, zc], spec.source, "energy leaked off the source cell");
+        }
+    }
+    assert!(nonzero <= 1);
+}
+
+#[test]
+fn forward_chunk_continuation_matches_python_contract() {
+    // Running chunks via the carry (u, u_prev, k0) must be
+    // deterministic: same chunks -> same traces, bit-exact.
+    let rt = runtime();
+    let spec = rt.manifest().mesh("demo").unwrap().clone();
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let c = HostTensor::from_raw_file(&dims, &spec.true_model_file).unwrap();
+
+    let run = || {
+        let mut u = HostTensor::zeros(&dims);
+        let mut um = HostTensor::zeros(&dims);
+        let mut rows = Vec::new();
+        for ci in 0..spec.n_chunks() {
+            let k0 = HostTensor::scalar((ci * spec.chunk) as f32);
+            let mut out = rt
+                .execute("forward_demo", &[u, um, c.clone(), k0])
+                .unwrap();
+            let seis = out.pop().unwrap();
+            um = out.pop().unwrap();
+            u = out.pop().unwrap();
+            rows.push(seis);
+        }
+        HostTensor::concat_rows(&rows).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "forward simulation must be deterministic");
+    assert!(a.abs_max() > 1e-5, "wave must reach the receivers");
+    assert_eq!(a.dims(), &[spec.nt, spec.n_rec()]);
+}
+
+#[test]
+fn misfit_zero_for_identical_traces() {
+    let rt = runtime();
+    let spec = rt.manifest().mesh("demo").unwrap().clone();
+    let traces = HostTensor::full(&[spec.nt, spec.n_rec()], 0.25);
+    let out = rt.execute("misfit_demo", &[traces.clone(), traces]).unwrap();
+    assert_eq!(out[0].to_scalar().unwrap(), 0.0);
+    assert_eq!(out[1].abs_max(), 0.0);
+}
+
+#[test]
+fn update_respects_velocity_clip() {
+    let rt = runtime();
+    let spec = rt.manifest().mesh("demo").unwrap().clone();
+    let dims: Vec<usize> = spec.shape.to_vec();
+    let c = HostTensor::full(&dims, spec.c_ref);
+    let k = HostTensor::full(&dims, 1.0);
+    let out = rt
+        .execute("update_demo", &[c, k, HostTensor::scalar(100.0)])
+        .unwrap();
+    let c2 = &out[0];
+    for v in c2.data() {
+        assert!(*v >= spec.c_min - 1e-5 && *v <= spec.c_max + 1e-5);
+    }
+}

@@ -1,0 +1,88 @@
+//! Integration: the shipped workflow XML assets
+//! (`examples/workflows/*.xml`) validate, partition and execute —
+//! including remotable steps nested in `If`/`While` control flow.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use emerald::cloud::Platform;
+use emerald::engine::{ActivityRegistry, Engine, Services};
+use emerald::migration::{DataPolicy, MigrationManager};
+use emerald::partitioner;
+use emerald::workflow::{validate, xaml};
+
+fn asset(name: &str) -> String {
+    for base in ["examples/workflows", "../examples/workflows", "../../examples/workflows"] {
+        let p = PathBuf::from(base).join(name);
+        if p.exists() {
+            return std::fs::read_to_string(p).unwrap();
+        }
+    }
+    panic!("asset {name} not found");
+}
+
+fn engine(offload: bool) -> Engine {
+    let reg = Arc::new(ActivityRegistry::new());
+    let services = Services::without_runtime(Platform::paper_testbed());
+    if offload {
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        Engine::new(reg, services).with_offload(mgr)
+    } else {
+        Engine::new(reg, services)
+    }
+}
+
+#[test]
+fn greeting_asset_validates_partitions_and_runs() {
+    let wf = xaml::parse(&asset("greeting.xml")).unwrap();
+    assert_eq!(validate::validate(&wf).unwrap().len(), 1);
+    let (part, rep) = partitioner::partition(&wf).unwrap();
+    assert_eq!(rep.migration_points, 1);
+    let report = engine(true).run(&part).unwrap();
+    assert_eq!(report.lines, vec!["Hello Ada"]);
+    assert_eq!(report.offload_count(), 1);
+}
+
+#[test]
+fn fig7_scopes_asset_reproduces_paper_visibility() {
+    let wf = xaml::parse(&asset("fig7_scopes.xml")).unwrap();
+    let report = engine(false).run(&wf).unwrap();
+    // B = A+1 = 11; C = B*2 = 22; then C = C+A = 32.
+    assert_eq!(report.lines, vec!["C = 32"]);
+}
+
+#[test]
+fn fig7_sibling_cannot_see_nested_variable() {
+    // Mutate step b to read B (invisible per Figure 7): must fail.
+    let bad = asset("fig7_scopes.xml").replace("C + A", "C + B");
+    let wf = xaml::parse(&bad).unwrap();
+    let err = format!("{:#}", engine(false).run(&wf).unwrap_err());
+    assert!(err.contains("'B'"), "{err}");
+}
+
+#[test]
+fn conditional_offload_asset_offloads_in_loops_and_branches() {
+    let wf = xaml::parse(&asset("conditional_offload.xml")).unwrap();
+    let (part, rep) = partitioner::partition(&wf).unwrap();
+    assert_eq!(rep.migration_points, 2); // while-body + if-then
+    for offload in [false, true] {
+        let report = engine(offload).run(&part).unwrap();
+        // acc = 0+1+4+9 = 14 >= 10 -> big.
+        assert_eq!(report.lines, vec!["acc=14 big=true"]);
+        if offload {
+            // 4 loop iterations + 1 if-branch = 5 offloads.
+            assert_eq!(report.offload_count(), 5);
+        } else {
+            assert_eq!(report.offload_count(), 0);
+        }
+    }
+}
+
+#[test]
+fn all_assets_roundtrip_through_the_codec() {
+    for name in ["greeting.xml", "fig7_scopes.xml", "conditional_offload.xml"] {
+        let wf = xaml::parse(&asset(name)).unwrap();
+        let back = xaml::parse(&xaml::to_xml(&wf)).unwrap();
+        assert_eq!(back, wf, "{name} does not round-trip");
+    }
+}
