@@ -13,6 +13,7 @@
 //! cloud_speed = 4.0
 //! wan_mbits = 200.0
 //! wan_latency_ms = 10
+//! schedule = "least-loaded"  # least-loaded | round-robin
 //!
 //! [migration]
 //! policy = "mdss"          # mdss | bundle
@@ -34,6 +35,7 @@ use anyhow::{bail, Context, Result};
 use crate::cloud::PlatformConfig;
 use crate::mdss::Codec;
 use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
+use crate::scheduler::SchedulePolicy;
 
 /// A parsed config file: section -> key -> raw value.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -143,6 +145,13 @@ impl ConfigFile {
     /// (missing keys take paper defaults).
     pub fn platform(&self) -> Result<PlatformConfig> {
         let d = PlatformConfig::default();
+        let schedule = match self.string("platform", "schedule", "least-loaded")?.as_str() {
+            "least-loaded" => SchedulePolicy::LeastLoaded,
+            "round-robin" => SchedulePolicy::RoundRobin,
+            other => {
+                bail!("[platform] schedule must be least-loaded|round-robin, got {other:?}")
+            }
+        };
         Ok(PlatformConfig {
             local_nodes: self.num("platform", "local_nodes", d.local_nodes as f64)? as usize,
             local_speed: self.num("platform", "local_speed", d.local_speed)?,
@@ -155,6 +164,7 @@ impl ConfigFile {
                 self.num("platform", "wan_latency_ms", d.wan_latency.as_secs_f64() * 1e3)?
                     / 1e3,
             ),
+            schedule,
         })
     }
 
@@ -220,6 +230,16 @@ mod tests {
         assert_eq!(p.cloud_speed, 2.5);
         assert_eq!(p.wan_bandwidth, 100.0e6 / 8.0);
         assert_eq!(p.wan_latency, Duration::from_millis(5));
+        assert_eq!(p.schedule, SchedulePolicy::LeastLoaded); // default kept
+    }
+
+    #[test]
+    fn parses_schedule_policy() {
+        let cfg =
+            ConfigFile::parse("[platform]\nschedule = \"round-robin\"").unwrap();
+        assert_eq!(cfg.platform().unwrap().schedule, SchedulePolicy::RoundRobin);
+        let cfg = ConfigFile::parse("[platform]\nschedule = \"fifo\"").unwrap();
+        assert!(cfg.platform().is_err());
     }
 
     #[test]

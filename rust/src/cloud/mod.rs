@@ -12,7 +12,16 @@
 //!   round-trip latency plus bytes/bandwidth, with a byte/transfer
 //!   ledger (this is what MDSS saves — paper Fig 10, bench E4).
 //! * [`Platform`] — local cluster + cloud pool + network, built from a
-//!   [`PlatformConfig`] (defaults calibrated in DESIGN.md §5).
+//!   [`PlatformConfig`] (defaults calibrated in DESIGN.md §5). The
+//!   config is validated at construction, and empty tiers
+//!   (`local_nodes`/`cloud_nodes` = 0) are legal configurations whose
+//!   node accessors return errors instead of panicking — the migration
+//!   manager declines offloads on a zero-cloud platform.
+//! * Offload placement goes through the [`crate::scheduler`]: the
+//!   migration manager takes a [`crate::scheduler::Lease`] on a cloud
+//!   VM per offload via [`Platform::cloud_lease`], so concurrent
+//!   `Parallel` offloads land on the least-loaded VMs and queueing
+//!   delay is modeled when offloads outnumber nodes.
 //!
 //! Simulated durations compose in the engine: sequential steps add,
 //! parallel branches take the max — so offloading parallel steps to
@@ -26,6 +35,11 @@ pub use node::{Node, NodeKind};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::scheduler::{Lease, NodeScheduler, SchedulePolicy};
 
 /// Configuration of the simulated testbed (paper §4 + DESIGN.md §5).
 #[derive(Debug, Clone)]
@@ -34,7 +48,8 @@ pub struct PlatformConfig {
     pub local_nodes: usize,
     /// Local node speed factor (reference = 1.0).
     pub local_speed: f64,
-    /// Cloud VMs (paper: 25 D-series).
+    /// Cloud VMs (paper: 25 D-series). Zero means "no cloud": the
+    /// platform builds fine and offloads are declined.
     pub cloud_nodes: usize,
     /// Cloud VM speed factor relative to a local node (DESIGN.md §5:
     /// 4.0 — the paper's 25×16 cloud cores vs 10×4 cluster cores for
@@ -44,7 +59,10 @@ pub struct PlatformConfig {
     /// WAN bandwidth in bytes/second (default 200 Mbit/s).
     pub wan_bandwidth: f64,
     /// WAN one-way latency (default 10 ms — same-region Azure link).
-    pub wan_latency: std::time::Duration,
+    pub wan_latency: Duration,
+    /// Cloud-VM selection policy for offload leases (default:
+    /// least-loaded; `RoundRobin` reproduces the seed behaviour).
+    pub schedule: SchedulePolicy,
 }
 
 impl Default for PlatformConfig {
@@ -55,8 +73,26 @@ impl Default for PlatformConfig {
             cloud_nodes: 25,
             cloud_speed: 4.0,
             wan_bandwidth: 200.0e6 / 8.0,
-            wan_latency: std::time::Duration::from_millis(10),
+            wan_latency: Duration::from_millis(10),
+            schedule: SchedulePolicy::LeastLoaded,
         }
+    }
+}
+
+impl PlatformConfig {
+    /// Reject configurations that could not be simulated (non-positive
+    /// or non-finite speeds/bandwidth). Zero node counts are legal.
+    pub fn validate(&self) -> Result<()> {
+        for (name, value) in [
+            ("local_speed", self.local_speed),
+            ("cloud_speed", self.cloud_speed),
+            ("wan_bandwidth", self.wan_bandwidth),
+        ] {
+            if !value.is_finite() || value <= 0.0 {
+                bail!("platform config: {name} must be a positive finite number, got {value}");
+            }
+        }
+        Ok(())
     }
 }
 
@@ -68,11 +104,14 @@ pub struct Platform {
     cloud: Vec<Arc<Node>>,
     next_local: AtomicUsize,
     next_cloud: AtomicUsize,
+    cloud_sched: Arc<NodeScheduler>,
 }
 
 impl Platform {
-    /// Build a platform from a config.
-    pub fn new(config: PlatformConfig) -> Arc<Self> {
+    /// Build a platform from a config (validated; see
+    /// [`PlatformConfig::validate`]).
+    pub fn new(config: PlatformConfig) -> Result<Arc<Self>> {
+        config.validate().context("building platform")?;
         let network = Arc::new(SimNetwork::new(config.wan_bandwidth, config.wan_latency));
         let local = (0..config.local_nodes)
             .map(|i| Arc::new(Node::new(NodeKind::Local, i, config.local_speed)))
@@ -80,37 +119,67 @@ impl Platform {
         let cloud = (0..config.cloud_nodes)
             .map(|i| Arc::new(Node::new(NodeKind::Cloud, i, config.cloud_speed)))
             .collect();
-        Arc::new(Self {
+        let cloud_sched = NodeScheduler::new(config.schedule, config.cloud_nodes);
+        Ok(Arc::new(Self {
             config,
             network,
             local,
             cloud,
             next_local: AtomicUsize::new(0),
             next_cloud: AtomicUsize::new(0),
-        })
+            cloud_sched,
+        }))
     }
 
     /// Default paper-calibrated platform.
     pub fn paper_testbed() -> Arc<Self> {
-        Self::new(PlatformConfig::default())
+        Self::new(PlatformConfig::default()).expect("default platform config is valid")
     }
 
-    /// Pick a local node (round-robin).
-    pub fn local_node(&self) -> Arc<Node> {
+    /// Pick a local node for compute (round-robin; local nodes are
+    /// homogeneous). Errors instead of panicking on an empty tier.
+    pub fn local_node(&self) -> Result<Arc<Node>> {
+        if self.local.is_empty() {
+            bail!("no local nodes configured (local_nodes = 0)");
+        }
         let i = self.next_local.fetch_add(1, Ordering::Relaxed) % self.local.len();
-        self.local[i].clone()
+        Ok(self.local[i].clone())
     }
 
-    /// Pick a cloud node (round-robin over the pool, so concurrent
-    /// offloads land on distinct VMs as in paper Fig 9b).
-    pub fn cloud_node(&self) -> Arc<Node> {
+    /// Pick a cloud node for compute (round-robin; cloud VMs are
+    /// homogeneous, so compute scaling is placement-independent —
+    /// offload *placement* and queueing go through [`Self::cloud_lease`]).
+    /// Errors instead of panicking on an empty tier.
+    pub fn cloud_node(&self) -> Result<Arc<Node>> {
+        if self.cloud.is_empty() {
+            bail!("no cloud nodes configured (cloud_nodes = 0); offloads must be declined");
+        }
         let i = self.next_cloud.fetch_add(1, Ordering::Relaxed) % self.cloud.len();
-        self.cloud[i].clone()
+        Ok(self.cloud[i].clone())
+    }
+
+    /// Lease a cloud VM for one offload round trip. `estimate` is the
+    /// expected round-trip duration (cost-model EWMA) and weights the
+    /// least-loaded choice.
+    pub fn cloud_lease(&self, estimate: Option<Duration>) -> Result<Lease> {
+        self.cloud_sched
+            .lease(estimate)
+            .context("scheduling offload on the cloud pool")
+    }
+
+    /// The cloud-pool scheduler (diagnostics and tests).
+    pub fn cloud_scheduler(&self) -> &Arc<NodeScheduler> {
+        &self.cloud_sched
     }
 
     /// Number of cloud nodes.
     pub fn cloud_size(&self) -> usize {
         self.cloud.len()
+    }
+
+    /// Number of local nodes.
+    pub fn local_size(&self) -> usize {
+        self.local.len()
     }
 }
 
@@ -120,11 +189,11 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let p = Platform::new(PlatformConfig { cloud_nodes: 3, ..Default::default() });
-        let a = p.cloud_node().index;
-        let b = p.cloud_node().index;
-        let c = p.cloud_node().index;
-        let a2 = p.cloud_node().index;
+        let p = Platform::new(PlatformConfig { cloud_nodes: 3, ..Default::default() }).unwrap();
+        let a = p.cloud_node().unwrap().index;
+        let b = p.cloud_node().unwrap().index;
+        let c = p.cloud_node().unwrap().index;
+        let a2 = p.cloud_node().unwrap().index;
         assert_eq!(vec![a, b, c], vec![0, 1, 2]);
         assert_eq!(a2, 0);
     }
@@ -135,5 +204,42 @@ mod tests {
         assert_eq!(cfg.local_nodes, 10);
         assert_eq!(cfg.cloud_nodes, 25);
         assert!(cfg.cloud_speed > cfg.local_speed);
+        assert_eq!(cfg.schedule, SchedulePolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn zero_node_tiers_error_instead_of_panicking() {
+        let p = Platform::new(PlatformConfig {
+            local_nodes: 0,
+            cloud_nodes: 0,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(format!("{:#}", p.local_node().unwrap_err()).contains("local_nodes = 0"));
+        assert!(format!("{:#}", p.cloud_node().unwrap_err()).contains("cloud_nodes = 0"));
+        assert!(p.cloud_lease(None).is_err());
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_construction() {
+        for bad in [
+            PlatformConfig { local_speed: 0.0, ..Default::default() },
+            PlatformConfig { cloud_speed: -1.0, ..Default::default() },
+            PlatformConfig { wan_bandwidth: f64::NAN, ..Default::default() },
+        ] {
+            assert!(Platform::new(bad).is_err());
+        }
+    }
+
+    #[test]
+    fn cloud_lease_tracks_occupancy() {
+        let p = Platform::new(PlatformConfig { cloud_nodes: 2, ..Default::default() }).unwrap();
+        let a = p.cloud_lease(None).unwrap();
+        let b = p.cloud_lease(None).unwrap();
+        assert_ne!(a.node, b.node, "concurrent leases spread over idle VMs");
+        let c = p.cloud_lease(None).unwrap();
+        assert_eq!(c.position, 1, "third concurrent offload queues");
+        drop((a, b, c));
+        assert_eq!(p.cloud_scheduler().active(), vec![0, 0]);
     }
 }

@@ -235,8 +235,8 @@ mod tests {
     use crate::cloud::PlatformConfig;
 
     fn ctx() -> ActivityCtx {
-        let platform = Platform::new(PlatformConfig::default());
-        let node = platform.cloud_node();
+        let platform = Platform::new(PlatformConfig::default()).unwrap();
+        let node = platform.cloud_node().unwrap();
         ActivityCtx::new(Services::without_runtime(platform), node)
     }
 

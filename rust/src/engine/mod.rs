@@ -458,7 +458,8 @@ impl Engine {
         let node = match self.tier {
             crate::cloud::NodeKind::Local => self.services.platform.local_node(),
             crate::cloud::NodeKind::Cloud => self.services.platform.cloud_node(),
-        };
+        }
+        .with_context(|| format!("placing step '{}'", step.display_name))?;
         ctx.event(Event::ActivityStarted {
             step: step.display_name.clone(),
             node: node.name(),

@@ -109,19 +109,30 @@ pub enum BinOp {
 }
 
 /// Errors from parsing or evaluating expressions.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EvalError {
-    #[error("expression parse error: {0}")]
     Parse(String),
-    #[error("undefined variable '{0}' (check WF scoping — paper Property 2)")]
     Undefined(String),
-    #[error("type error: {0}")]
     Type(String),
-    #[error("unknown function '{0}'")]
     UnknownFn(String),
-    #[error("division by zero")]
     DivZero,
 }
+
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalError::Parse(msg) => write!(f, "expression parse error: {msg}"),
+            EvalError::Undefined(name) => {
+                write!(f, "undefined variable '{name}' (check WF scoping — paper Property 2)")
+            }
+            EvalError::Type(msg) => write!(f, "type error: {msg}"),
+            EvalError::UnknownFn(name) => write!(f, "unknown function '{name}'"),
+            EvalError::DivZero => write!(f, "division by zero"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 impl Expr {
     /// Evaluate against a variable-lookup function.

@@ -29,15 +29,26 @@ pub enum Value {
 }
 
 /// Errors produced by the parser or by typed accessors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected}, got {got}")]
     Type { expected: &'static str, got: &'static str },
-    #[error("json missing key: {0}")]
     MissingKey(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => write!(f, "json parse error at byte {pos}: {msg}"),
+            JsonError::Type { expected, got } => {
+                write!(f, "json type error: expected {expected}, got {got}")
+            }
+            JsonError::MissingKey(key) => write!(f, "json missing key: {key}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Value {
     fn kind(&self) -> &'static str {

@@ -21,8 +21,15 @@
 //! ## Module map
 //!
 //! Paper contributions: [`workflow`] (§3.1–3.2), [`partitioner`]
-//! (§3.1), [`engine`] (§3.3), [`migration`] (§3.3), [`mdss`] (§3.4),
-//! [`cloud`] (§4 testbed), [`at`] (§4 application).
+//! (§3.1, plus offload batching — runs of consecutive remotable steps
+//! fuse into one migration point), [`engine`] (§3.3), [`migration`]
+//! (§3.3, with an EWMA cost model and multi-step requests), [`mdss`]
+//! (§3.4), [`cloud`] (§4 testbed), [`at`] (§4 application).
+//!
+//! Beyond the paper: [`scheduler`] — load-aware cloud-VM placement
+//! with per-node lease/occupancy tracking and a queueing-delay model,
+//! replacing the seed's blind round-robin (see
+//! `benches/fig13_scheduler.rs` for the A/B comparison).
 //!
 //! Substrates (offline environment, see DESIGN.md §1): [`jsonmini`],
 //! [`xmlmini`], [`expr`], [`cli`], [`quickprop`], [`benchkit`],
@@ -40,6 +47,7 @@ pub mod migration;
 pub mod partitioner;
 pub mod quickprop;
 pub mod runtime;
+pub mod scheduler;
 pub mod workflow;
 pub mod xmlmini;
 

@@ -5,10 +5,12 @@
 //! * `validate <wf.xml>` — check the three legal-partition properties.
 //! * `partition <wf.xml> [--out out.xml]` — emit the modified workflow
 //!   with migration points (paper Fig 5).
-//! * `run <wf.xml> [--offload] [--policy mdss|bundle] [--tcp addr]` —
-//!   execute a workflow on the simulated hybrid platform.
-//! * `at --mesh <m> [--iters N] [--offload]` — run the built-in
-//!   Adjoint Tomography application (paper §4).
+//! * `run <wf.xml> [--offload] [--batch] [--policy mdss|bundle]
+//!   [--tcp addr]` — execute a workflow on the simulated hybrid
+//!   platform (`--batch` fuses runs of consecutive remotable steps
+//!   into single offload round trips).
+//! * `at --mesh <m> [--iters N] [--offload] [--batch]` — run the
+//!   built-in Adjoint Tomography application (paper §4).
 //! * `serve` — start a cloud-side worker on loopback TCP and print its
 //!   address (for `run --tcp`).
 //! * `info` — show artifact manifest + platform configuration.
@@ -23,7 +25,7 @@ use emerald::engine::{ActivityRegistry, Engine, Services};
 use emerald::migration::{
     serve_tcp, CloudWorker, DataPolicy, MigrationManager, TcpTransport,
 };
-use emerald::partitioner;
+use emerald::partitioner::{self, PartitionOptions};
 use emerald::runtime::Runtime;
 use emerald::workflow::{validate, xaml};
 use emerald::{artifact_dir, at};
@@ -33,9 +35,9 @@ emerald — scientific workflows with cloud offloading (Qian 2017 reproduction)
 
 USAGE:
   emerald validate <workflow.xml>
-  emerald partition <workflow.xml> [--out <file>]
-  emerald run <workflow.xml> [--offload] [--policy mdss|bundle] [--tcp <addr>]
-  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--alpha0 X]
+  emerald partition <workflow.xml> [--out <file>] [--batch]
+  emerald run <workflow.xml> [--offload] [--batch] [--policy mdss|bundle] [--tcp <addr>]
+  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--alpha0 X]
   emerald serve
   emerald info
 ";
@@ -75,8 +77,13 @@ fn config_of(args: &Args) -> Result<emerald::cli::ConfigFile> {
 /// Build the platform + services from the config file.
 fn services_of(args: &Args, runtime: Option<Arc<Runtime>>) -> Result<Arc<Services>> {
     let cfg = config_of(args)?;
-    let platform = Platform::new(cfg.platform()?);
+    let platform = Platform::new(cfg.platform()?)?;
     Ok(Services::custom(runtime, platform, cfg.codec()?))
+}
+
+/// Partitioner options from the command line.
+fn partition_opts(args: &Args) -> PartitionOptions {
+    PartitionOptions { batch: args.flag("batch") }
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
@@ -93,7 +100,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
 fn cmd_partition(args: &Args) -> Result<()> {
     let wf = load_workflow(args)?;
-    let (out, report) = partitioner::partition(&wf)?;
+    let (out, report) = partitioner::partition_with(&wf, partition_opts(args))?;
     let xml = xaml::to_xml(&out);
     match args.options.get("out") {
         Some(path) => {
@@ -131,8 +138,11 @@ fn build_engine(args: &Args, services: Arc<Services>, reg: Arc<ActivityRegistry>
 
 fn cmd_run(args: &Args) -> Result<()> {
     let wf = load_workflow(args)?;
-    let (partitioned, prep) = partitioner::partition(&wf)?;
-    println!("partitioned: {} migration point(s)", prep.migration_points);
+    let (partitioned, prep) = partitioner::partition_with(&wf, partition_opts(args))?;
+    println!(
+        "partitioned: {} migration point(s), {} fused batch(es)",
+        prep.migration_points, prep.batches
+    );
 
     let reg = registry_with_at();
     // Runtime is optional: pure-coordination workflows don't need it.
@@ -162,7 +172,7 @@ fn cmd_at(args: &Args) -> Result<()> {
     cfg.iterations = args.opt_parse("iters", 3)?;
     cfg.alpha0 = args.opt_parse("alpha0", 0.3)?;
     let wf = at::inversion_workflow(&cfg)?;
-    let (partitioned, _) = partitioner::partition(&wf)?;
+    let (partitioned, _) = partitioner::partition_with(&wf, partition_opts(args))?;
 
     let runtime = Arc::new(Runtime::new(artifact_dir())?);
     let services = services_of(args, Some(runtime))?;
@@ -228,7 +238,7 @@ fn cmd_info(_args: &Args) -> Result<()> {
 }
 
 fn main() {
-    let args = Args::from_env(&["offload", "verbose"]);
+    let args = Args::from_env(&["offload", "verbose", "batch"]);
     let result = match args.subcommand() {
         Some("validate") => cmd_validate(&args),
         Some("partition") => cmd_partition(&args),

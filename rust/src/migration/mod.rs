@@ -17,6 +17,16 @@
 //! deserializes the step, executes it on a cloud node with a remote
 //! engine (offloading disabled — Property 3 guarantees no nesting),
 //! and returns outputs + the remote simulated time.
+//!
+//! Placement goes through the [`crate::scheduler`]: each offload holds
+//! a cloud-VM lease for its round trip, so concurrent offloads land on
+//! the least-loaded VMs and queueing delay is charged when they
+//! outnumber nodes. The [`Decision::CostBased`] gate keeps EWMA cost
+//! averages per step name (adapting to drift instead of trusting the
+//! first sample), which double as the scheduler's load estimates.
+//! Partitioner-fused batches arrive here as ordinary steps whose
+//! requests carry `batch > 1` — one round trip for a whole run of
+//! remotable steps.
 
 pub mod protocol;
 pub mod security;
@@ -30,7 +40,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cloud::NodeKind;
 use crate::engine::{
@@ -105,18 +115,55 @@ pub struct MigrationStats {
     pub sync_sim: Duration,
     /// Transport attempts that failed (retried or fallen back).
     pub failed_attempts: u64,
-    /// Offloads declined by the cost model or by fallback.
+    /// Offloads declined by the cost model, by fallback, or because no
+    /// cloud nodes are configured.
     pub declined: u64,
+    /// Offloads whose cloud VM already had in-flight work (scheduler
+    /// lease position > 0).
+    pub queued: u64,
+    /// Simulated time spent queueing behind in-flight offloads.
+    pub queue_sim: Duration,
+    /// Extra steps that rode in multi-step (batched) requests — each
+    /// one is a WAN round trip the batching pass amortized away.
+    pub batched_steps: u64,
 }
 
-/// Per-step-name cost history for [`Decision::CostBased`].
+/// Smoothing factor for the cost model's running averages.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Per-step-name cost history for [`Decision::CostBased`]:
+/// exponentially-weighted moving averages over every observed round
+/// trip, so the decision adapts to drifting costs instead of locking
+/// in the first observation (the seed kept a single sample).
 #[derive(Debug, Clone, Copy, Default)]
 struct CostRecord {
-    /// Estimated local execution time (reference compute).
-    local_est: Duration,
-    /// Observed remote round-trip time.
-    remote_obs: Duration,
-    seen: bool,
+    /// EWMA of the estimated local execution time (µs).
+    local_est_us: f64,
+    /// EWMA of the observed remote round-trip time (µs).
+    remote_obs_us: f64,
+    /// Observations folded into the averages.
+    samples: u64,
+}
+
+impl CostRecord {
+    fn observe(&mut self, local_est: Duration, remote_obs: Duration) {
+        let local_us = local_est.as_secs_f64() * 1e6;
+        let remote_us = remote_obs.as_secs_f64() * 1e6;
+        if self.samples == 0 {
+            self.local_est_us = local_us;
+            self.remote_obs_us = remote_us;
+        } else {
+            self.local_est_us = EWMA_ALPHA * local_us + (1.0 - EWMA_ALPHA) * self.local_est_us;
+            self.remote_obs_us =
+                EWMA_ALPHA * remote_us + (1.0 - EWMA_ALPHA) * self.remote_obs_us;
+        }
+        self.samples += 1;
+    }
+
+    /// Expected remote round trip, once observed (scheduler hint).
+    fn remote_estimate(&self) -> Option<Duration> {
+        (self.samples > 0).then(|| Duration::from_secs_f64(self.remote_obs_us / 1e6))
+    }
 }
 
 /// Local-side migration manager.
@@ -244,34 +291,51 @@ impl MigrationManager {
 }
 
 impl MigrationManager {
-    /// Cost-model gate: should this step be offloaded at all?
+    /// Cost-model gate: should this step be offloaded at all? Compares
+    /// the EWMA of observed round trips against the EWMA local
+    /// estimate.
     fn should_offload(&self, step: &Step) -> Option<String> {
         if self.config.decision == Decision::Always {
             return None;
         }
         let history = self.history.lock().unwrap();
         match history.get(&step.display_name) {
-            Some(rec) if rec.seen && rec.remote_obs >= rec.local_est => Some(format!(
-                "cost model: remote {:.0}ms >= local {:.0}ms for '{}'",
-                rec.remote_obs.as_secs_f64() * 1e3,
-                rec.local_est.as_secs_f64() * 1e3,
-                step.display_name
-            )),
+            Some(rec) if rec.samples > 0 && rec.remote_obs_us >= rec.local_est_us => {
+                Some(format!(
+                    "cost model: remote {:.0}ms >= local {:.0}ms for '{}' (ewma over {} run(s))",
+                    rec.remote_obs_us / 1e3,
+                    rec.local_est_us / 1e3,
+                    step.display_name,
+                    rec.samples
+                ))
+            }
             _ => None,
         }
     }
 
-    /// Record observed costs for the cost model. The local estimate is
-    /// recovered from the remote compute time (remote ran at
-    /// `cloud_speed`, so local ≈ remote_compute × cloud_speed).
+    /// Expected remote round trip for a step, from the cost history
+    /// (used as the scheduler's load estimate).
+    fn estimate_remote(&self, step: &Step) -> Option<Duration> {
+        self.history
+            .lock()
+            .unwrap()
+            .get(&step.display_name)
+            .and_then(CostRecord::remote_estimate)
+    }
+
+    /// Fold an observed round trip into the cost model. The local
+    /// estimate is recovered from the remote compute time (remote ran
+    /// at `cloud_speed`, so local ≈ remote_compute × cloud_speed).
     fn record_costs(&self, step: &Step, remote_total: Duration, remote_compute: Duration) {
         let local_est = Duration::from_secs_f64(
             remote_compute.as_secs_f64() * self.services.platform.config.cloud_speed,
         );
-        self.history.lock().unwrap().insert(
-            step.display_name.clone(),
-            CostRecord { local_est, remote_obs: remote_total, seen: true },
-        );
+        self.history
+            .lock()
+            .unwrap()
+            .entry(step.display_name.clone())
+            .or_default()
+            .observe(local_est, remote_total);
     }
 }
 
@@ -282,7 +346,16 @@ impl OffloadHandler for MigrationManager {
         inputs: BTreeMap<String, Value>,
         writes: &[String],
     ) -> Result<OffloadVerdict> {
-        // 0. Cost-model gate (E8; the paper always offloads).
+        // 0a. A zero-cloud platform declines instead of panicking
+        //     (regression: `PlatformConfig { cloud_nodes: 0, .. }`).
+        if self.services.platform.cloud_size() == 0 {
+            self.stats.lock().unwrap().declined += 1;
+            return Ok(OffloadVerdict::Declined {
+                reason: "no cloud nodes configured; executing locally".into(),
+            });
+        }
+
+        // 0b. Cost-model gate (E8; the paper always offloads).
         if let Some(reason) = self.should_offload(step) {
             self.stats.lock().unwrap().declined += 1;
             return Ok(OffloadVerdict::Declined { reason });
@@ -306,8 +379,16 @@ impl OffloadHandler for MigrationManager {
         let req_bytes = req.encode();
         sim += net.transfer(req_bytes.len() as u64);
 
-        // 3. Remote execution with retries; real bytes through the
-        //    transport either way.
+        // 3. Lease a cloud VM (load-aware placement, weighted by the
+        //    cost model's round-trip estimate), then execute remotely
+        //    with retries; real bytes through the transport either way.
+        //    The lease is held across the round trip so concurrent
+        //    offloads observe each other's occupancy.
+        let lease = self
+            .services
+            .platform
+            .cloud_lease(self.estimate_remote(step))
+            .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
         let mut last_err = None;
         let mut resp_bytes = None;
         for attempt in 0..self.config.attempts.max(1) {
@@ -343,6 +424,19 @@ impl OffloadHandler for MigrationManager {
         let remote_sim = Duration::from_micros(resp.remote_sim_us);
         sim += remote_sim;
 
+        // 3b. Queueing delay: a VM runs one offload at a time in
+        //     simulated time, so a lease granted behind `position`
+        //     in-flight offloads waits for comparable work to drain.
+        //     `position` reflects real lease overlap, so this term is
+        //     load-dependent (deliberately: it models contention, which
+        //     only exists when offloads actually overlap); workflows
+        //     without oversubscribed clouds are unaffected. For a
+        //     machine-independent policy comparison use
+        //     `scheduler::simulate_makespan`.
+        let queue_sim = remote_sim * lease.position as u32;
+        sim += queue_sim;
+        drop(lease);
+
         // 4. Downlink + re-integration.
         sim += net.transfer(resp_bytes.len() as u64);
 
@@ -352,10 +446,18 @@ impl OffloadHandler for MigrationManager {
             sim += s.sim_time;
         }
 
-        self.record_costs(step, sim, remote_sim);
+        // The cost model sees the *intrinsic* round trip (sync + wire +
+        // remote compute), not the queueing delay: queueing is a
+        // transient scheduling artifact, and folding it in would let a
+        // momentary pile-up tip the CostBased gate into declining the
+        // step — after which no new samples arrive to ever undo it.
+        self.record_costs(step, sim - queue_sim, remote_sim);
 
         stats_delta.offloads = 1;
         stats_delta.protocol_bytes = (req_bytes.len() + resp_bytes.len()) as u64;
+        stats_delta.queued = u64::from(queue_sim > Duration::ZERO);
+        stats_delta.queue_sim = queue_sim;
+        stats_delta.batched_steps = req.batch.saturating_sub(1);
         {
             let mut st = self.stats.lock().unwrap();
             st.offloads += stats_delta.offloads;
@@ -363,6 +465,9 @@ impl OffloadHandler for MigrationManager {
             st.data_hits += stats_delta.data_hits;
             st.data_syncs += stats_delta.data_syncs;
             st.sync_sim += stats_delta.sync_sim;
+            st.queued += stats_delta.queued;
+            st.queue_sim += stats_delta.queue_sim;
+            st.batched_steps += stats_delta.batched_steps;
         }
 
         Ok(OffloadVerdict::Executed(OffloadOutcome {
@@ -628,6 +733,108 @@ mod tests {
             "parallel offloads must overlap: {:?}",
             report.sim_time
         );
+    }
+
+    #[test]
+    fn cost_record_ewma_adapts_to_drift() {
+        let ms = Duration::from_millis;
+        let mut rec = CostRecord::default();
+        assert!(rec.remote_estimate().is_none());
+        rec.observe(ms(100), ms(200));
+        assert!(rec.remote_obs_us >= rec.local_est_us, "first regime: remote loses");
+        // The regime changes (cloud sped up / data became fresh): the
+        // seed's single-sample record would stay locked on the first
+        // observation; the EWMA converges.
+        for _ in 0..20 {
+            rec.observe(ms(100), ms(10));
+        }
+        assert!(rec.remote_obs_us < rec.local_est_us, "EWMA must adapt: {rec:?}");
+        assert_eq!(rec.samples, 21);
+        let est = rec.remote_estimate().unwrap();
+        assert!(est > ms(5) && est < ms(50), "estimate near new regime: {est:?}");
+    }
+
+    #[test]
+    fn batched_offload_single_round_trip_same_results() {
+        let chain_wf = || {
+            xaml::parse(
+                r#"<Workflow>
+                     <Workflow.Variables>
+                       <Variable Name="a"/><Variable Name="b"/><Variable Name="c"/>
+                     </Workflow.Variables>
+                     <Sequence>
+                       <InvokeActivity DisplayName="s1" Activity="math.square" In.x="2"
+                                       Out.y="a" Remotable="true"/>
+                       <InvokeActivity DisplayName="s2" Activity="math.square" In.x="a"
+                                       Out.y="b" Remotable="true"/>
+                       <InvokeActivity DisplayName="s3" Activity="math.square" In.x="b"
+                                       Out.y="c" Remotable="true"/>
+                       <WriteLine Text="str(c)"/>
+                     </Sequence>
+                   </Workflow>"#,
+            )
+            .unwrap()
+        };
+
+        let (engine, mgr) = setup(DataPolicy::Mdss);
+        let (plain, rep) = partitioner::partition(&chain_wf()).unwrap();
+        assert_eq!(rep.migration_points, 3);
+        let r1 = engine.run(&plain).unwrap();
+        assert_eq!(r1.lines, vec!["256"]);
+        assert_eq!(r1.offload_count(), 3);
+        assert_eq!(mgr.stats().batched_steps, 0);
+
+        let (engine2, mgr2) = setup(DataPolicy::Mdss);
+        let (fused, rep) = partitioner::partition_with(
+            &chain_wf(),
+            partitioner::PartitionOptions { batch: true },
+        )
+        .unwrap();
+        assert_eq!(rep.migration_points, 1);
+        assert_eq!(rep.batched_steps, 3);
+        let r2 = engine2.run(&fused).unwrap();
+        assert_eq!(r2.lines, vec!["256"], "batching must not change results");
+        assert_eq!(r2.offload_count(), 1, "one round trip for the whole run");
+        assert_eq!(mgr2.stats().offloads, 1);
+        assert_eq!(mgr2.stats().batched_steps, 2);
+        assert!(
+            r2.sim_time < r1.sim_time,
+            "amortizing the WAN must win: batched {:?} vs unbatched {:?}",
+            r2.sim_time,
+            r1.sim_time
+        );
+    }
+
+    #[test]
+    fn zero_cloud_platform_declines_instead_of_panicking() {
+        let platform = Platform::new(crate::cloud::PlatformConfig {
+            cloud_nodes: 0,
+            ..Default::default()
+        })
+        .unwrap();
+        let services = Services::without_runtime(platform);
+        let reg = registry();
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let engine = Engine::new(reg, services).with_offload(mgr.clone());
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="math.square" In.x="5" Out.y="y" Remotable="true"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let report = engine.run(&part).unwrap();
+        assert!(report.lines.iter().any(|l| l == "25"), "{:?}", report.lines);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, crate::engine::Event::LocalExecution { .. })));
+        assert_eq!(mgr.stats().declined, 1);
+        assert_eq!(mgr.stats().offloads, 0);
     }
 
     #[test]

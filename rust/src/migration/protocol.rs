@@ -17,9 +17,16 @@ use anyhow::{bail, Context, Result};
 
 use crate::expr::Value;
 use crate::jsonmini::{self, Value as J};
-use crate::workflow::{xaml, Step};
+use crate::workflow::{xaml, Step, StepKind};
 
-/// Request: offload one step.
+/// Request: offload one step — or one *batch* of fused steps.
+///
+/// The partitioner's offload batching fuses a run of consecutive
+/// remotable steps into a single synthetic `Sequence`; that sequence
+/// travels as ordinary task code (`step_xml`), and [`Self::batch`]
+/// records how many developer-visible steps ride in the request, so
+/// both sides can account multi-step round trips. Requests from older
+/// peers without the field decode as `batch = 1`.
 #[derive(Debug, PartialEq)]
 pub struct OffloadRequest {
     /// The step subtree as XAML text (the "task code").
@@ -28,9 +35,25 @@ pub struct OffloadRequest {
     pub inputs: BTreeMap<String, Value>,
     /// Variables the caller expects back (writes of the step).
     pub writes: Vec<String>,
+    /// Number of fused steps carried by this request (>= 1).
+    pub batch: u64,
     /// Optional authentication tag over task code + inputs + writes
     /// (future-work §6; see [`super::security`]).
     pub sig: Option<String>,
+}
+
+/// Number of developer-visible steps a migration target carries: a
+/// partitioner-fused batch is a `Sequence` whose children are all
+/// remotable; anything else is a single step.
+pub fn batch_len(step: &Step) -> u64 {
+    match &step.kind {
+        StepKind::Sequence(children)
+            if children.len() >= 2 && children.iter().all(|c| c.remotable) =>
+        {
+            children.len() as u64
+        }
+        _ => 1,
+    }
 }
 
 /// Response: the re-integration package.
@@ -83,12 +106,13 @@ fn map_from_json(j: &J) -> Result<BTreeMap<String, Value>> {
 }
 
 impl OffloadRequest {
-    /// Package a step for the wire.
+    /// Package a step (or fused batch) for the wire.
     pub fn package(step: &Step, inputs: BTreeMap<String, Value>, writes: &[String]) -> Self {
         Self {
             step_xml: xaml::step_to_xml(step),
             inputs,
             writes: writes.to_vec(),
+            batch: batch_len(step),
             sig: None,
         }
     }
@@ -128,6 +152,7 @@ impl OffloadRequest {
                 "writes",
                 J::Arr(self.writes.iter().map(|w| J::str(w.clone())).collect()),
             ),
+            ("batch", J::num(self.batch as f64)),
             (
                 "sig",
                 match &self.sig {
@@ -155,6 +180,11 @@ impl OffloadRequest {
                 .iter()
                 .map(|w| Ok(w.as_str()?.to_string()))
                 .collect::<Result<_>>()?,
+            // Wire-compatible with pre-batching peers: absent -> 1.
+            batch: match j.get_opt("batch") {
+                None | Some(J::Null) => 1,
+                Some(v) => (v.as_f64()? as u64).max(1),
+            },
             sig: match j.get_opt("sig") {
                 None | Some(J::Null) => None,
                 Some(s) => Some(s.as_str()?.to_string()),
@@ -313,6 +343,39 @@ mod tests {
         let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
         let decoded = OffloadRequest::decode(&req.encode()).unwrap();
         assert_eq!(decoded.sig, None);
+    }
+
+    #[test]
+    fn batch_length_detection_and_roundtrip() {
+        let single = sample_step();
+        assert_eq!(batch_len(&single), 1);
+        let fused = Step::new(
+            "batch(a+b)",
+            StepKind::Sequence(vec![sample_step(), sample_step()]),
+        );
+        assert_eq!(batch_len(&fused), 2);
+        // A sequence with a non-remotable member is not a batch.
+        let mixed = Step::new(
+            "seq",
+            StepKind::Sequence(vec![sample_step(), Step::new("n", StepKind::Nop)]),
+        );
+        assert_eq!(batch_len(&mixed), 1);
+
+        let req = OffloadRequest::package(&fused, BTreeMap::new(), &[]);
+        assert_eq!(req.batch, 2);
+        let back = OffloadRequest::decode(&req.encode()).unwrap();
+        assert_eq!(back.batch, 2);
+    }
+
+    #[test]
+    fn legacy_request_without_batch_field_decodes_as_single() {
+        let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        let legacy = String::from_utf8(req.encode())
+            .unwrap()
+            .replace("\"batch\": 1,", "")
+            .replace("\"batch\":1,", "");
+        let back = OffloadRequest::decode(legacy.as_bytes()).unwrap();
+        assert_eq!(back.batch, 1);
     }
 
     #[test]

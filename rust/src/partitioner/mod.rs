@@ -10,6 +10,27 @@
 //! Partitioning validates the three legal-partition properties first
 //! ([`crate::workflow::validate`]); any annotated WF workflow that
 //! follows the rules can be partitioned.
+//!
+//! ## Offload batching ([`PartitionOptions::batch`])
+//!
+//! A run of **consecutive remotable siblings in a `Sequence`** pays one
+//! synchronous WAN round trip per step under plain partitioning. With
+//! batching enabled, the partitioner fuses each maximal run of ≥ 2
+//! consecutive remotable steps into a single migration point whose
+//! target is a synthetic `Sequence` of the run members, amortizing the
+//! suspend → uplink → execute → downlink cycle across the whole run.
+//! Intermediate values (written by one member, read by the next) stay
+//! on the cloud — the flow-aware [`crate::workflow::analysis`] keeps
+//! them out of the request's input set.
+//!
+//! Fusion is legal under the paper's properties because it only groups
+//! steps that individually passed validation: no member touches local
+//! hardware (P1), every member's I/O variables are declared at the
+//! run's own scope level, which is also the fused step's level (P2),
+//! and no member contains nested remotable steps (P3) — so the fused
+//! sequence offloads exactly once, with one suspend/resume pair.
+//! Fusion never crosses a non-remotable step, a scope boundary, or
+//! `Parallel`/`If`/`While` branch boundaries.
 
 use anyhow::Result;
 
@@ -23,62 +44,97 @@ pub struct PartitionReport {
     /// Steps in the workflow before / after.
     pub steps_before: usize,
     pub steps_after: usize,
+    /// Number of fused multi-step batches (0 without batching).
+    pub batches: usize,
+    /// Total remotable steps carried inside fused batches.
+    pub batched_steps: usize,
 }
 
-/// Validate and partition a workflow. The input is unchanged; the
-/// returned workflow contains the inserted migration points.
+/// Partitioner knobs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PartitionOptions {
+    /// Fuse runs of consecutive remotable sequence siblings into one
+    /// migration point (see module docs). Off by default: one point
+    /// per remotable step, the paper's Figure-5 shape.
+    pub batch: bool,
+}
+
+#[derive(Default)]
+struct RewriteStats {
+    inserted: usize,
+    batches: usize,
+    batched_steps: usize,
+}
+
+/// Validate and partition a workflow with default options. The input
+/// is unchanged; the returned workflow contains the inserted migration
+/// points.
 pub fn partition(wf: &Workflow) -> Result<(Workflow, PartitionReport)> {
+    partition_with(wf, PartitionOptions::default())
+}
+
+/// Validate and partition with explicit options.
+pub fn partition_with(
+    wf: &Workflow,
+    opts: PartitionOptions,
+) -> Result<(Workflow, PartitionReport)> {
     validate::validate(wf)?;
     let steps_before = wf.size();
 
     let mut out = wf.clone();
-    let mut inserted = 0usize;
-    rewrite(&mut out.root, &mut inserted);
+    let mut stats = RewriteStats::default();
+    rewrite(&mut out.root, opts, &mut stats);
     out.renumber();
 
-    Ok((
-        out.clone(),
-        PartitionReport {
-            migration_points: inserted,
-            steps_before,
-            steps_after: out.size(),
-        },
-    ))
+    let report = PartitionReport {
+        migration_points: stats.inserted,
+        steps_before,
+        steps_after: out.size(),
+        batches: stats.batches,
+        batched_steps: stats.batched_steps,
+    };
+    Ok((out, report))
 }
 
 /// Insert migration points in-place.
 ///
 /// * Remotable children of a `Sequence` get a `MigrationPoint` sibling
-///   inserted before them.
+///   inserted before them; with batching, maximal runs of consecutive
+///   remotable children share one point behind a fused `Sequence`.
 /// * Remotable children of other containers (`Parallel` branches, `If`
 ///   branches, `While` bodies) are wrapped in a small `Sequence`
 ///   [MigrationPoint, step] so the engine's sequence scanner finds
 ///   them; each parallel branch therefore offloads independently
 ///   (Figure 9b).
-fn rewrite(step: &mut Step, inserted: &mut usize) {
+fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
     match &mut step.kind {
         StepKind::Sequence(children) => {
-            let mut i = 0;
-            while i < children.len() {
-                if children[i].remotable {
-                    children.insert(i, migration_point());
-                    *inserted += 1;
-                    // Skip the marker and the (not recursed) remotable
-                    // step — P3 guarantees nothing remotable inside it.
-                    i += 2;
+            let old = std::mem::take(children);
+            let mut rebuilt = Vec::with_capacity(old.len() + 2);
+            let mut run: Vec<Step> = Vec::new();
+            for mut c in old {
+                if c.remotable {
+                    // P3 guarantees nothing remotable inside: no recursion.
+                    run.push(c);
+                    if !opts.batch {
+                        flush_run(&mut run, &mut rebuilt, stats);
+                    }
                 } else {
-                    rewrite(&mut children[i], inserted);
-                    i += 1;
+                    flush_run(&mut run, &mut rebuilt, stats);
+                    rewrite(&mut c, opts, stats);
+                    rebuilt.push(c);
                 }
             }
+            flush_run(&mut run, &mut rebuilt, stats);
+            *children = rebuilt;
         }
         StepKind::Parallel(children) => {
             for c in children.iter_mut() {
                 if c.remotable {
                     wrap_in_sequence(c);
-                    *inserted += 1;
+                    stats.inserted += 1;
                 } else {
-                    rewrite(c, inserted);
+                    rewrite(c, opts, stats);
                 }
             }
         }
@@ -86,21 +142,48 @@ fn rewrite(step: &mut Step, inserted: &mut usize) {
             for b in [Some(then_branch), else_branch.as_mut()].into_iter().flatten() {
                 if b.remotable {
                     wrap_in_sequence(b);
-                    *inserted += 1;
+                    stats.inserted += 1;
                 } else {
-                    rewrite(b, inserted);
+                    rewrite(b, opts, stats);
                 }
             }
         }
         StepKind::While { body, .. } => {
             if body.remotable {
                 wrap_in_sequence(body);
-                *inserted += 1;
+                stats.inserted += 1;
             } else {
-                rewrite(body, inserted);
+                rewrite(body, opts, stats);
             }
         }
         _ => {}
+    }
+}
+
+/// Emit the pending run of remotable steps: a single step gets its own
+/// migration point; two or more fuse into one point behind a synthetic
+/// sequence.
+fn flush_run(run: &mut Vec<Step>, out: &mut Vec<Step>, stats: &mut RewriteStats) {
+    match run.len() {
+        0 => {}
+        1 => {
+            out.push(migration_point());
+            out.push(run.pop().expect("length checked"));
+            stats.inserted += 1;
+        }
+        n => {
+            let members = std::mem::take(run);
+            let label = members
+                .iter()
+                .map(|s| s.display_name.as_str())
+                .collect::<Vec<_>>()
+                .join("+");
+            out.push(migration_point());
+            out.push(Step::new(format!("batch({label})"), StepKind::Sequence(members)));
+            stats.inserted += 1;
+            stats.batches += 1;
+            stats.batched_steps += n;
+        }
     }
 }
 
@@ -132,12 +215,17 @@ mod tests {
             .var("c", Some("3"))
     }
 
+    fn batched() -> PartitionOptions {
+        PartitionOptions { batch: true }
+    }
+
     #[test]
     fn inserts_point_before_remotable() {
         let w = wf(vec![assign("a", "1"), assign("b", "a + 1").remotable(), assign("c", "b")]);
         let (out, report) = partition(&w).unwrap();
         assert_eq!(report.migration_points, 1);
         assert_eq!(report.steps_after, report.steps_before + 1);
+        assert_eq!(report.batches, 0);
         let kids = out.root.children();
         assert_eq!(kids[1].kind_name(), "MigrationPoint");
         assert_eq!(kids[2].display_name, "b");
@@ -190,6 +278,51 @@ mod tests {
     }
 
     #[test]
+    fn batching_fuses_consecutive_remotable_runs() {
+        let w = wf(vec![
+            assign("a", "1"),
+            assign("b", "a + 1").remotable(),
+            assign("c", "b + 1").remotable(),
+            assign("a", "c + 1").remotable(),
+        ]);
+        let (out, report) = partition_with(&w, batched()).unwrap();
+        assert_eq!(report.migration_points, 1);
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.batched_steps, 3);
+        let kids = out.root.children();
+        assert_eq!(kids[1].kind_name(), "MigrationPoint");
+        let fused = kids[2];
+        assert_eq!(fused.kind_name(), "Sequence");
+        assert_eq!(fused.children().len(), 3);
+        assert!(fused.display_name.starts_with("batch("));
+    }
+
+    #[test]
+    fn batching_does_not_cross_local_steps() {
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "a"),
+            assign("c", "b").remotable(),
+        ]);
+        let (_, report) = partition_with(&w, batched()).unwrap();
+        assert_eq!(report.migration_points, 2);
+        assert_eq!(report.batches, 0, "runs broken by a local step don't fuse");
+    }
+
+    #[test]
+    fn batching_off_by_default_matches_seed_shape() {
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "a").remotable(),
+        ]);
+        let (_, plain) = partition(&w).unwrap();
+        assert_eq!(plain.migration_points, 2);
+        let (_, fused) = partition_with(&w, batched()).unwrap();
+        assert_eq!(fused.migration_points, 1);
+        assert_eq!(fused.batched_steps, 2);
+    }
+
+    #[test]
     fn property_one_point_per_remotable_step() {
         // Random workflows: #migration points == #remotable steps, and
         // the step order is preserved.
@@ -209,6 +342,43 @@ mod tests {
             let (out, report) = partition(&w).unwrap();
             assert_eq!(report.migration_points, expect_remote);
             // Order of Assign display names preserved.
+            let names = |w: &Workflow| {
+                let mut v = Vec::new();
+                w.root.walk(&mut |s| {
+                    if s.kind_name() == "Assign" {
+                        v.push(s.display_name.clone());
+                    }
+                });
+                v
+            };
+            assert_eq!(names(&w), names(&out));
+        });
+    }
+
+    #[test]
+    fn property_batched_points_match_run_count() {
+        // Batched partitioning: #migration points == #maximal runs of
+        // consecutive remotable steps; assign order is preserved.
+        forall(60, |g: &mut Gen| {
+            let n = g.usize_in(1..=14);
+            let mut steps = Vec::new();
+            let mut runs = 0usize;
+            let mut prev_remote = false;
+            for i in 0..n {
+                let mut s = assign(["a", "b", "c"][i % 3], &format!("{i}"));
+                let remote = g.bool();
+                if remote {
+                    s = s.remotable();
+                    if !prev_remote {
+                        runs += 1;
+                    }
+                }
+                prev_remote = remote;
+                steps.push(s);
+            }
+            let w = wf(steps);
+            let (out, report) = partition_with(&w, batched()).unwrap();
+            assert_eq!(report.migration_points, runs);
             let names = |w: &Workflow| {
                 let mut v = Vec::new();
                 w.root.walk(&mut |s| {

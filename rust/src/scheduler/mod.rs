@@ -1,0 +1,288 @@
+//! Load-aware offload scheduling (replaces the seed's blind
+//! round-robin cloud-VM selection).
+//!
+//! The paper's testbed offloads every remotable step to "the cloud"
+//! without saying which VM; the seed picked VMs round-robin, ignoring
+//! occupancy, so concurrent `Parallel` offloads could pile onto one
+//! node while others idled. This module makes placement a first-class
+//! decision:
+//!
+//! * [`NodeScheduler`] — per-node occupancy ledger. The migration
+//!   manager takes a [`Lease`] on a node for the duration of an
+//!   offload round trip; the scheduler tracks active leases and a
+//!   pending-work estimate per node (fed by the migration manager's
+//!   EWMA cost model).
+//! * [`SchedulePolicy::LeastLoaded`] (the new default) places each
+//!   lease on the node with the least pending estimated work, breaking
+//!   ties by active-lease count and then node index —  so N concurrent
+//!   offloads on a K-node pool never put more than ⌈N/K⌉ on one node.
+//!   [`SchedulePolicy::RoundRobin`] reproduces the seed behaviour for
+//!   A/B comparison (`benches/fig13_scheduler.rs`).
+//! * **Queueing-delay model**: a cloud VM executes one offload at a
+//!   time in simulated time. A lease granted while `k` leases are
+//!   already active on the chosen node records `position = k`; the
+//!   migration manager charges `position × remote_time` of simulated
+//!   queueing delay, modelling the wait behind in-flight work when
+//!   offloads outnumber nodes.
+//! * [`simulate_makespan`] — deterministic discrete-placement model of
+//!   the same policies over a known task list (per-node virtual finish
+//!   clocks). Used by the scheduler bench to compare policies without
+//!   thread-timing noise.
+//!
+//! The cloud pool is homogeneous (one speed factor), so the lease's
+//! node index governs *occupancy accounting* — which VM the remote
+//! engine scales compute on is immaterial to simulated time and stays
+//! on its own round-robin. If heterogeneous VM speeds land (ROADMAP),
+//! the lease index must also pin the executing node.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Node-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Blind cycling over the pool (the seed behaviour).
+    RoundRobin,
+    /// Least pending estimated work, then fewest active leases, then
+    /// lowest index.
+    LeastLoaded,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Slot {
+    /// Leases currently held on this node.
+    active: usize,
+    /// Sum of the estimated durations of active leases (µs).
+    pending_us: f64,
+}
+
+/// Occupancy-tracking scheduler over a homogeneous node pool.
+pub struct NodeScheduler {
+    policy: SchedulePolicy,
+    rr: AtomicUsize,
+    slots: Mutex<Vec<Slot>>,
+}
+
+/// A granted slot on a node; released on drop.
+pub struct Lease {
+    sched: Arc<NodeScheduler>,
+    /// Index of the node the work was placed on.
+    pub node: usize,
+    /// Number of leases already active on that node at grant time
+    /// (0 = the node was idle).
+    pub position: usize,
+    estimate_us: f64,
+}
+
+impl NodeScheduler {
+    /// New scheduler over `nodes` identical nodes.
+    pub fn new(policy: SchedulePolicy, nodes: usize) -> Arc<Self> {
+        Arc::new(Self {
+            policy,
+            rr: AtomicUsize::new(0),
+            slots: Mutex::new(vec![Slot::default(); nodes]),
+        })
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
+    }
+
+    /// Number of nodes in the pool.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when the pool has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Active lease count per node (diagnostics and tests).
+    pub fn active(&self) -> Vec<usize> {
+        self.slots.lock().unwrap().iter().map(|s| s.active).collect()
+    }
+
+    /// Take a lease on a node. `estimate` is the expected duration of
+    /// the work (from the cost model); it weights the least-loaded
+    /// choice and is released with the lease.
+    pub fn lease(self: &Arc<Self>, estimate: Option<Duration>) -> Result<Lease> {
+        let mut slots = self.slots.lock().unwrap();
+        if slots.is_empty() {
+            bail!("no nodes available to schedule on (node count is 0)");
+        }
+        let estimate_us = estimate.map_or(0.0, |d| d.as_secs_f64() * 1e6);
+        let node = match self.policy {
+            SchedulePolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % slots.len()
+            }
+            SchedulePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                for i in 1..slots.len() {
+                    if (slots[i].pending_us, slots[i].active)
+                        < (slots[best].pending_us, slots[best].active)
+                    {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        let position = slots[node].active;
+        slots[node].active += 1;
+        slots[node].pending_us += estimate_us;
+        Ok(Lease { sched: self.clone(), node, position, estimate_us })
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        let mut slots = self.sched.slots.lock().unwrap();
+        let slot = &mut slots[self.node];
+        slot.active = slot.active.saturating_sub(1);
+        slot.pending_us = (slot.pending_us - self.estimate_us).max(0.0);
+    }
+}
+
+/// Deterministic placement model: assign `tasks` (known durations, in
+/// arrival order) to `nodes` per `policy`, each node running one task
+/// at a time, and return the makespan (time the last node finishes).
+///
+/// This is the queueing model of the module doc with perfect duration
+/// knowledge; the bench uses it to compare policies deterministically.
+pub fn simulate_makespan(
+    policy: SchedulePolicy,
+    nodes: usize,
+    tasks: &[Duration],
+) -> Result<Duration> {
+    if tasks.is_empty() {
+        return Ok(Duration::ZERO);
+    }
+    if nodes == 0 {
+        bail!("cannot place {} task(s) on an empty pool", tasks.len());
+    }
+    let mut finish = vec![Duration::ZERO; nodes];
+    for (k, task) in tasks.iter().enumerate() {
+        let node = match policy {
+            SchedulePolicy::RoundRobin => k % nodes,
+            SchedulePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                for i in 1..nodes {
+                    if finish[i] < finish[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        finish[node] += *task;
+    }
+    Ok(finish.into_iter().max().unwrap_or(Duration::ZERO))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quickprop::{forall, Gen};
+
+    #[test]
+    fn least_loaded_spreads_concurrent_leases() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 3);
+        let leases: Vec<_> = (0..7).map(|_| sched.lease(None).unwrap()).collect();
+        let active = sched.active();
+        assert_eq!(active.iter().sum::<usize>(), 7);
+        assert_eq!(*active.iter().max().unwrap(), 3); // ceil(7/3)
+        drop(leases);
+        assert_eq!(sched.active(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn positions_count_colocated_leases() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 2);
+        let a = sched.lease(None).unwrap();
+        let b = sched.lease(None).unwrap();
+        let c = sched.lease(None).unwrap();
+        assert_eq!((a.position, b.position), (0, 0));
+        assert_eq!(c.position, 1, "third lease queues behind one of two nodes");
+        drop((a, b));
+        let d = sched.lease(None).unwrap();
+        assert_eq!(d.position, 0, "released nodes are idle again");
+    }
+
+    #[test]
+    fn estimates_steer_least_loaded_away_from_heavy_nodes() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 2);
+        let heavy = sched.lease(Some(Duration::from_millis(400))).unwrap();
+        assert_eq!(heavy.node, 0);
+        // Two light leases both avoid the heavy node even though it
+        // has the same active count after the first.
+        let l1 = sched.lease(Some(Duration::from_millis(10))).unwrap();
+        let l2 = sched.lease(Some(Duration::from_millis(10))).unwrap();
+        assert_eq!(l1.node, 1);
+        assert_eq!(l2.node, 1, "20ms pending beats 400ms pending");
+    }
+
+    #[test]
+    fn zero_node_pool_errors_instead_of_panicking() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 0);
+        let err = format!("{:#}", sched.lease(None).unwrap_err());
+        assert!(err.contains("no nodes"), "{err}");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let sched = NodeScheduler::new(SchedulePolicy::RoundRobin, 3);
+        let nodes: Vec<usize> = (0..4).map(|_| sched.lease(None).unwrap().node).collect();
+        assert_eq!(nodes, vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn property_concurrent_leases_never_exceed_ceiling() {
+        forall(120, |g: &mut Gen| {
+            let k = g.usize_in(1..=8);
+            let n = g.usize_in(1..=40);
+            let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, k);
+            let leases: Vec<_> = (0..n).map(|_| sched.lease(None).unwrap()).collect();
+            let max = sched.active().into_iter().max().unwrap();
+            assert!(
+                max <= n.div_ceil(k),
+                "{n} leases on {k} nodes put {max} on one node (> ceil = {})",
+                n.div_ceil(k)
+            );
+            drop(leases);
+        });
+    }
+
+    #[test]
+    fn makespan_least_loaded_beats_round_robin_on_skewed_tasks() {
+        let ms = Duration::from_millis;
+        let tasks = [ms(800), ms(100), ms(100), ms(100), ms(100), ms(100), ms(100)];
+        let rr = simulate_makespan(SchedulePolicy::RoundRobin, 2, &tasks).unwrap();
+        let ll = simulate_makespan(SchedulePolicy::LeastLoaded, 2, &tasks).unwrap();
+        // RR alternates blindly: the heavy node also gets half the
+        // light tasks. LL routes all light work to the idle node.
+        assert_eq!(rr, ms(800 + 100 + 100 + 100));
+        assert_eq!(ll, ms(800));
+        assert!(ll < rr);
+    }
+
+    #[test]
+    fn makespan_edges() {
+        assert_eq!(
+            simulate_makespan(SchedulePolicy::LeastLoaded, 0, &[]).unwrap(),
+            Duration::ZERO
+        );
+        assert!(
+            simulate_makespan(SchedulePolicy::RoundRobin, 0, &[Duration::from_secs(1)]).is_err()
+        );
+        let one = [Duration::from_millis(5)];
+        assert_eq!(
+            simulate_makespan(SchedulePolicy::RoundRobin, 4, &one).unwrap(),
+            Duration::from_millis(5)
+        );
+    }
+}

@@ -4,6 +4,18 @@
 //! the [`crate::migration`] packager to decide which variable values to
 //! ship with an offloaded step (its *reads*) and which to re-integrate
 //! after it returns (its *writes*).
+//!
+//! The read set is **flow-aware within a `Sequence`**: a variable
+//! definitely written by an earlier sibling (an unconditional leaf —
+//! `Assign` or `InvokeActivity` — at the same sequence level) is not a
+//! read of the subtree, because the value is produced internally
+//! before any use. This is what lets the partitioner's *offload
+//! batching* fuse a run of consecutive remotable steps into one
+//! migration point: the fused request ships only the batch's external
+//! inputs, and intermediate values (written by one member, read by the
+//! next) never cross the WAN. Writes under `If`/`While` are
+//! conditional, so they never suppress later reads; `Parallel`
+//! branches run concurrently, so siblings never suppress each other.
 
 use std::collections::BTreeSet;
 
@@ -16,7 +28,8 @@ use super::{Step, StepKind};
 /// The externally-visible variable footprint of a step subtree.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StepIo {
-    /// Variables read from enclosing scopes.
+    /// Variables read from enclosing scopes (excluding those definitely
+    /// produced earlier within the subtree itself).
     pub reads: BTreeSet<String>,
     /// Variables written in enclosing scopes.
     pub writes: BTreeSet<String>,
@@ -42,13 +55,31 @@ fn expr_vars(src: &str) -> Result<BTreeSet<String>> {
 /// cross the migration boundary).
 pub fn step_io(step: &Step) -> Result<StepIo> {
     let mut io = StepIo::default();
-    collect(step, &mut BTreeSet::new(), &mut io)?;
+    collect(step, &mut BTreeSet::new(), &mut BTreeSet::new(), &mut io)?;
     Ok(io)
 }
 
+/// Variables a step writes unconditionally when it is an unconditional
+/// leaf at its sequence level; `None` for containers and control flow
+/// (whose writes may not happen).
+fn definite_leaf_writes(step: &Step) -> Option<Vec<&str>> {
+    match &step.kind {
+        StepKind::Assign { to, .. } => Some(vec![to.as_str()]),
+        StepKind::InvokeActivity { outputs, .. } => {
+            Some(outputs.iter().map(|(_, var)| var.as_str()).collect())
+        }
+        _ => None,
+    }
+}
+
+/// `local` holds variables declared inside the analyzed subtree;
+/// `defined` holds variables definitely written by earlier siblings of
+/// the sequence currently being walked. Both suppress reads; only
+/// `local` suppresses writes.
 fn collect(
     step: &Step,
     local: &mut BTreeSet<String>,
+    defined: &mut BTreeSet<String>,
     io: &mut StepIo,
 ) -> Result<()> {
     // Variables declared at this step: init expressions evaluate in the
@@ -56,7 +87,7 @@ fn collect(
     for v in &step.variables {
         if let Some(init) = &v.init {
             for name in expr_vars(init)? {
-                if !local.contains(&name) {
+                if !local.contains(&name) && !defined.contains(&name) {
                     io.reads.insert(name);
                 }
             }
@@ -69,9 +100,13 @@ fn collect(
         .map(|v| v.name.clone())
         .collect();
 
-    let read = |src: &str, local: &BTreeSet<String>, io: &mut StepIo| -> Result<()> {
+    let read = |src: &str,
+                local: &BTreeSet<String>,
+                defined: &BTreeSet<String>,
+                io: &mut StepIo|
+     -> Result<()> {
         for name in expr_vars(src)? {
-            if !local.contains(&name) {
+            if !local.contains(&name) && !defined.contains(&name) {
                 io.reads.insert(name);
             }
         }
@@ -80,15 +115,15 @@ fn collect(
 
     match &step.kind {
         StepKind::Assign { to, value } => {
-            read(value, local, io)?;
+            read(value, local, defined, io)?;
             if !local.contains(to) {
                 io.writes.insert(to.clone());
             }
         }
-        StepKind::WriteLine { text } => read(text, local, io)?,
+        StepKind::WriteLine { text } => read(text, local, defined, io)?,
         StepKind::InvokeActivity { inputs, outputs, .. } => {
             for (_, e) in inputs {
-                read(e, local, io)?;
+                read(e, local, defined, io)?;
             }
             for (_, var) in outputs {
                 if !local.contains(var) {
@@ -97,13 +132,39 @@ fn collect(
             }
         }
         StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
-            read(condition, local, io)?;
+            read(condition, local, defined, io)?;
         }
         _ => {}
     }
 
-    for c in step.children() {
-        collect(c, local, io)?;
+    match &step.kind {
+        StepKind::Sequence(children) => {
+            // Straight-line dataflow: a definite write at this level
+            // suppresses later sibling reads. The kills are scoped to
+            // this sequence (conservative: they don't leak upward).
+            let mut killed_here: Vec<String> = Vec::new();
+            for c in children {
+                collect(c, local, defined, io)?;
+                if let Some(writes) = definite_leaf_writes(c) {
+                    for w in writes {
+                        if !local.contains(w) && defined.insert(w.to_string()) {
+                            killed_here.push(w.to_string());
+                        }
+                    }
+                }
+            }
+            for name in killed_here {
+                defined.remove(&name);
+            }
+        }
+        _ => {
+            // Parallel branches and control-flow bodies see the kills
+            // established by preceding sequence siblings, but never add
+            // to them (their own execution is concurrent/conditional).
+            for c in step.children() {
+                collect(c, local, defined, io)?;
+            }
+        }
     }
 
     for name in added {
@@ -121,11 +182,26 @@ mod tests {
         Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
     }
 
+    fn invoke(name: &str, inputs: &[(&str, &str)], outputs: &[(&str, &str)]) -> Step {
+        Step::new(
+            name,
+            StepKind::InvokeActivity {
+                activity: name.into(),
+                inputs: inputs.iter().map(|(p, e)| (p.to_string(), e.to_string())).collect(),
+                outputs: outputs.iter().map(|(p, v)| (p.to_string(), v.to_string())).collect(),
+            },
+        )
+    }
+
+    fn names(items: &[&str]) -> BTreeSet<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn leaf_assign() {
         let io = step_io(&assign("y", "x * 2 + z")).unwrap();
-        assert_eq!(io.reads, ["x", "z"].iter().map(|s| s.to_string()).collect());
-        assert_eq!(io.writes, ["y"].iter().map(|s| s.to_string()).collect());
+        assert_eq!(io.reads, names(&["x", "z"]));
+        assert_eq!(io.writes, names(&["y"]));
     }
 
     #[test]
@@ -137,8 +213,8 @@ mod tests {
         )
         .var("tmp", None);
         let io = step_io(&step).unwrap();
-        assert_eq!(io.reads, ["a", "b"].iter().map(|s| s.to_string()).collect());
-        assert_eq!(io.writes, ["out"].iter().map(|s| s.to_string()).collect());
+        assert_eq!(io.reads, names(&["a", "b"]));
+        assert_eq!(io.writes, names(&["out"]));
     }
 
     #[test]
@@ -152,17 +228,14 @@ mod tests {
 
     #[test]
     fn invoke_activity_io() {
-        let step = Step::new(
-            "f",
-            StepKind::InvokeActivity {
-                activity: "at.forward".into(),
-                inputs: vec![("model".into(), "c".into()), ("k".into(), "iter + 1".into())],
-                outputs: vec![("seis".into(), "seis_var".into())],
-            },
+        let step = invoke(
+            "at.forward",
+            &[("model", "c"), ("k", "iter + 1")],
+            &[("seis", "seis_var")],
         );
         let io = step_io(&step).unwrap();
-        assert_eq!(io.reads, ["c", "iter"].iter().map(|s| s.to_string()).collect());
-        assert_eq!(io.writes, ["seis_var"].iter().map(|s| s.to_string()).collect());
+        assert_eq!(io.reads, names(&["c", "iter"]));
+        assert_eq!(io.writes, names(&["seis_var"]));
     }
 
     #[test]
@@ -179,6 +252,69 @@ mod tests {
         assert!(io.reads.contains("n"));
         assert!(io.reads.contains("i"));
         assert!(io.writes.contains("i"));
+    }
+
+    #[test]
+    fn definite_writes_suppress_later_sibling_reads() {
+        // The offload-batching shape: misfit writes adj, frechet reads
+        // it. The fused sequence must not require adj as an input.
+        let step = Step::new(
+            "batch",
+            StepKind::Sequence(vec![
+                invoke("at.misfit", &[("syn", "syn")], &[("m", "misfit"), ("adj", "adj")]),
+                invoke("at.frechet", &[("adj", "adj"), ("c", "c")], &[("k", "kern")]),
+            ]),
+        );
+        let io = step_io(&step).unwrap();
+        assert_eq!(io.reads, names(&["syn", "c"]));
+        assert_eq!(io.writes, names(&["misfit", "adj", "kern"]));
+    }
+
+    #[test]
+    fn read_before_write_is_still_a_read() {
+        let step = Step::new(
+            "seq",
+            StepKind::Sequence(vec![assign("x", "x + 1"), assign("y", "x")]),
+        );
+        let io = step_io(&step).unwrap();
+        assert_eq!(io.reads, names(&["x"]));
+    }
+
+    #[test]
+    fn conditional_writes_do_not_suppress_reads() {
+        let cond = Step::new(
+            "maybe",
+            StepKind::If {
+                condition: "flag".into(),
+                then_branch: Box::new(assign("y", "1")),
+                else_branch: None,
+            },
+        );
+        let step = Step::new("seq", StepKind::Sequence(vec![cond, assign("z", "y + 1")]));
+        let io = step_io(&step).unwrap();
+        assert!(io.reads.contains("y"), "write under If is not definite");
+        assert!(io.writes.contains("y"));
+    }
+
+    #[test]
+    fn parallel_siblings_do_not_suppress_each_other() {
+        let step = Step::new(
+            "par",
+            StepKind::Parallel(vec![assign("a", "1"), assign("b", "a + 1")]),
+        );
+        let io = step_io(&step).unwrap();
+        assert!(io.reads.contains("a"), "parallel write is concurrent, not ordered");
+    }
+
+    #[test]
+    fn kills_are_scoped_to_their_sequence() {
+        // The inner sequence definitely writes t, but the outer level
+        // treats the container conservatively: t stays a read of the
+        // later sibling.
+        let inner = Step::new("inner", StepKind::Sequence(vec![assign("t", "1")]));
+        let outer = Step::new("outer", StepKind::Sequence(vec![inner, assign("u", "t")]));
+        let io = step_io(&outer).unwrap();
+        assert!(io.reads.contains("t"));
     }
 
     #[test]

@@ -15,17 +15,32 @@ use anyhow::{bail, Result};
 use super::{analysis, Step, StepKind, Workflow};
 
 /// A validation failure, tagged with the property it violates.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ValidationError {
-    #[error("Property 1 violated at step {step:?}: {msg}")]
     Property1 { step: String, msg: String },
-    #[error("Property 2 violated at step {step:?}: {msg}")]
     Property2 { step: String, msg: String },
-    #[error("Property 3 violated at step {step:?}: {msg}")]
     Property3 { step: String, msg: String },
-    #[error("malformed workflow: {0}")]
     Malformed(String),
 }
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidationError::Property1 { step, msg } => {
+                write!(f, "Property 1 violated at step {step:?}: {msg}")
+            }
+            ValidationError::Property2 { step, msg } => {
+                write!(f, "Property 2 violated at step {step:?}: {msg}")
+            }
+            ValidationError::Property3 { step, msg } => {
+                write!(f, "Property 3 violated at step {step:?}: {msg}")
+            }
+            ValidationError::Malformed(msg) => write!(f, "malformed workflow: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ValidationError {}
 
 /// Validate a workflow for partitioning. Returns the list of remotable
 /// step ids on success.

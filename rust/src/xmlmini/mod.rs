@@ -88,12 +88,19 @@ impl Element {
 }
 
 /// Parse errors with byte positions.
-#[derive(Debug, thiserror::Error)]
-#[error("xml parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct XmlError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for XmlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xml parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for XmlError {}
 
 /// Parse an XML document, returning the root element. Leading XML
 /// declarations (`<?xml ...?>`) and comments are skipped.

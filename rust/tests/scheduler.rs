@@ -1,0 +1,163 @@
+//! Integration: the load-aware offload scheduler — balancing
+//! properties, zero-node regression (no panics), and batched
+//! partitioning equivalence through the full engine + migration stack.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use emerald::cloud::{Platform, PlatformConfig};
+use emerald::engine::activity::need_num;
+use emerald::engine::{ActivityRegistry, Engine, Event, Services};
+use emerald::expr::Value;
+use emerald::migration::{DataPolicy, MigrationManager};
+use emerald::partitioner::{self, PartitionOptions};
+use emerald::quickprop::{forall, Gen};
+use emerald::scheduler::{simulate_makespan, SchedulePolicy};
+use emerald::workflow::xaml;
+
+fn registry() -> Arc<ActivityRegistry> {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("math.square", |_c, inputs| {
+        let x = need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x * x))].into())
+    });
+    Arc::new(reg)
+}
+
+fn platform(cloud_nodes: usize) -> Arc<Platform> {
+    Platform::new(PlatformConfig { cloud_nodes, ..Default::default() }).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Property: N concurrent offload leases on a K-node cloud never put
+// more than ceil(N/K) on one node (issue acceptance criterion).
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_concurrent_offloads_balanced_within_ceiling() {
+    forall(100, |g: &mut Gen| {
+        let k = g.usize_in(1..=6);
+        let n = g.usize_in(1..=30);
+        let p = platform(k);
+        let leases: Vec<_> = (0..n).map(|_| p.cloud_lease(None).unwrap()).collect();
+        let active = p.cloud_scheduler().active();
+        let max = active.iter().copied().max().unwrap();
+        assert!(
+            max <= n.div_ceil(k),
+            "{n} offloads on {k} nodes: {active:?} exceeds ceil(N/K) = {}",
+            n.div_ceil(k)
+        );
+        drop(leases);
+        assert!(p.cloud_scheduler().active().iter().all(|&a| a == 0));
+    });
+}
+
+// ---------------------------------------------------------------------
+// Regression: a zero-cloud-node platform declines offloads instead of
+// panicking (the seed divided by the pool size unconditionally).
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_cloud_nodes_declines_offloads_and_runs_locally() {
+    let services = Services::without_runtime(platform(0));
+    let reg = registry();
+    let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, services).with_offload(mgr.clone());
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables><Variable Name="y"/></Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="sq" Activity="math.square" In.x="5"
+                               Out.y="y" Remotable="true"/>
+               <WriteLine Text="str(y)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let report = engine.run(&part).unwrap();
+    assert!(report.lines.iter().any(|l| l == "25"), "{:?}", report.lines);
+    assert!(report
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::LocalExecution { .. })));
+    assert_eq!(mgr.stats().offloads, 0);
+    assert_eq!(mgr.stats().declined, 1);
+}
+
+#[test]
+fn zero_local_nodes_is_a_clean_error_not_a_panic() {
+    let p = Platform::new(PlatformConfig { local_nodes: 0, ..Default::default() }).unwrap();
+    let engine = Engine::new(registry(), Services::without_runtime(p));
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables><Variable Name="y"/></Workflow.Variables>
+             <Sequence>
+               <InvokeActivity Activity="math.square" In.x="2" Out.y="y"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", engine.run(&wf).unwrap_err());
+    assert!(err.contains("no local nodes"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Batched partitioning through the full stack: same results, fewer
+// round trips, strictly less simulated time.
+// ---------------------------------------------------------------------
+
+const CHAIN_WF: &str = r#"<Workflow>
+  <Workflow.Variables>
+    <Variable Name="a"/><Variable Name="b"/><Variable Name="c"/>
+  </Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="s1" Activity="math.square" In.x="2" Out.y="a" Remotable="true"/>
+    <InvokeActivity DisplayName="s2" Activity="math.square" In.x="a" Out.y="b" Remotable="true"/>
+    <InvokeActivity DisplayName="s3" Activity="math.square" In.x="b" Out.y="c" Remotable="true"/>
+    <WriteLine Text="str(c)"/>
+  </Sequence>
+</Workflow>"#;
+
+fn run_chain(batch: bool) -> (emerald::engine::RunReport, emerald::migration::MigrationStats) {
+    let services = Services::without_runtime(Platform::paper_testbed());
+    let reg = registry();
+    let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, services).with_offload(mgr.clone());
+    let wf = xaml::parse(CHAIN_WF).unwrap();
+    let (part, _) = partitioner::partition_with(&wf, PartitionOptions { batch }).unwrap();
+    let report = engine.run(&part).unwrap();
+    let stats = mgr.stats();
+    (report, stats)
+}
+
+#[test]
+fn batching_preserves_results_and_reduces_sim_time() {
+    let (plain, plain_stats) = run_chain(false);
+    let (fused, fused_stats) = run_chain(true);
+    assert_eq!(plain.lines, vec!["256"]);
+    assert_eq!(fused.lines, vec!["256"]);
+    assert_eq!(plain_stats.offloads, 3);
+    assert_eq!(fused_stats.offloads, 1);
+    assert_eq!(fused_stats.batched_steps, 2);
+    assert!(
+        fused.sim_time < plain.sim_time,
+        "one round trip must beat three: {:?} vs {:?}",
+        fused.sim_time,
+        plain.sim_time
+    );
+}
+
+// ---------------------------------------------------------------------
+// Deterministic queueing model: least-loaded beats round-robin on a
+// skewed task mix when offloads outnumber nodes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn least_loaded_makespan_beats_round_robin() {
+    let ms = Duration::from_millis;
+    let tasks = [ms(900), ms(150), ms(150), ms(150), ms(150), ms(150)];
+    let rr = simulate_makespan(SchedulePolicy::RoundRobin, 3, &tasks).unwrap();
+    let ll = simulate_makespan(SchedulePolicy::LeastLoaded, 3, &tasks).unwrap();
+    assert!(ll < rr, "least-loaded {ll:?} must beat round-robin {rr:?}");
+}

@@ -1,0 +1,298 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset Emerald uses: a context-chaining [`Error`],
+//! the [`Context`] extension trait for `Result` and `Option`, the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and a blanket
+//! `From<E: std::error::Error>` conversion so `?` works on std errors.
+//!
+//! Differences from the real crate: errors are stored as message
+//! chains (no downcasting, no backtraces). `{err}` prints the
+//! outermost message; `{err:#}` prints the whole chain joined with
+//! `": "`, matching anyhow's alternate formatting that the test suite
+//! asserts against.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaultable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error. The head is the most recent context; the
+/// tail is the root cause.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Capture a std error, preserving its `source()` chain.
+    pub fn from_std<E: std::error::Error + ?Sized>(error: &E) -> Self {
+        let mut messages = vec![error.to_string()];
+        let mut cursor = error.source();
+        while let Some(cause) = cursor {
+            messages.push(cause.to_string());
+            cursor = cause.source();
+        }
+        let mut chained: Option<Error> = None;
+        for msg in messages.into_iter().rev() {
+            chained = Some(Error { msg, source: chained.map(Box::new) });
+        }
+        chained.expect("at least one message")
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The root cause's message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(src) = &cur.source {
+            cur = src;
+        }
+        &cur.msg
+    }
+
+    /// Iterate the chain, outermost context first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+}
+
+/// Iterator over an error's context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msg)?;
+            let mut cursor = self.source.as_deref();
+            while let Some(err) = cursor {
+                write!(f, ": {}", err.msg)?;
+                cursor = err.source.as_deref();
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cursor = self.source.as_deref();
+        if cursor.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(err) = cursor {
+            write!(f, "\n    {}", err.msg)?;
+            cursor = err.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::from_std(&error)
+    }
+}
+
+/// Conversion glue shared by the [`Context`] impls: both std errors
+/// and [`Error`] itself can become an [`Error`]. The two impls don't
+/// overlap because [`Error`] deliberately does not implement
+/// `std::error::Error`.
+pub mod ext {
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to fallible values (`Result`, `Option`).
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::IntoError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error when a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn alternate_format_joins_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("loading config").context("starting up");
+        assert_eq!(format!("{e}"), "starting up");
+        assert_eq!(format!("{e:#}"), "starting up: loading config: file missing");
+        assert_eq!(e.root_cause(), "file missing");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: file missing");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+        assert_eq!(Some(3u8).context("nope").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root {}", 7)
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        let e = anyhow!(io_err());
+        assert_eq!(format!("{e}"), "file missing");
+
+        fn guarded(v: u8) -> Result<u8> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert!(guarded(3).is_ok());
+        assert!(guarded(30).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}

@@ -1,0 +1,393 @@
+//! Offline stand-in for the `flate2` crate.
+//!
+//! Exposes the `write::DeflateEncoder` / `read::DeflateDecoder` API
+//! surface Emerald uses, backed by a self-contained LZ codec instead
+//! of zlib (no C code, no network): the encoder tries several
+//! stride-delta + plane-transpose transforms (strides 1/2/4/8 — the
+//! interesting ones for f32/f64 scientific payloads) followed by LZSS
+//! with a 64 KiB window, and keeps whichever candidate is smallest
+//! (including a stored fallback, so output is never much larger than
+//! the input). The wire format is internal to this crate; round-trip
+//! fidelity and meaningful compression of smooth scientific fields are
+//! the contract, not RFC 1951 bit-compatibility.
+
+use std::collections::HashMap;
+use std::io::{self, Cursor, Read, Write};
+
+/// Compression level (accepted for API compatibility; the codec is
+/// single-level).
+#[derive(Debug, Clone, Copy)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    /// Fast compression.
+    pub fn fast() -> Self {
+        Compression(1)
+    }
+
+    /// Best compression.
+    pub fn best() -> Self {
+        Compression(9)
+    }
+
+    /// Explicit level.
+    pub fn new(level: u32) -> Self {
+        Compression(level)
+    }
+}
+
+const MAGIC: [u8; 2] = [0xE5, 0x2F];
+/// Transform tags: 0 = stored, 1 = plain LZSS, otherwise the stride of
+/// the delta + plane-transpose preprocessing.
+const STORED: u8 = 0;
+const PLAIN: u8 = 1;
+const STRIDES: [u8; 3] = [2, 4, 8];
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 259;
+const WINDOW: usize = 65_535;
+
+fn delta_transpose(data: &[u8], stride: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len());
+    for phase in 0..stride {
+        let mut prev = 0u8;
+        let mut i = phase;
+        while i < data.len() {
+            out.push(data[i].wrapping_sub(prev));
+            prev = data[i];
+            i += stride;
+        }
+    }
+    out
+}
+
+fn untranspose_undelta(planes: &[u8], stride: usize, orig_len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; orig_len];
+    let mut pos = 0;
+    for phase in 0..stride {
+        let mut prev = 0u8;
+        let mut i = phase;
+        while i < orig_len {
+            let b = planes[pos].wrapping_add(prev);
+            out[i] = b;
+            prev = b;
+            pos += 1;
+            i += stride;
+        }
+    }
+    out
+}
+
+fn key_at(data: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]])
+}
+
+enum Token {
+    Literal(u8),
+    Match { len: usize, dist: usize },
+}
+
+fn lzss_compress(data: &[u8]) -> Vec<u8> {
+    let mut tokens = Vec::new();
+    let mut last_pos: HashMap<u32, usize> = HashMap::new();
+    let mut i = 0;
+    while i < data.len() {
+        let mut emitted = false;
+        if i + MIN_MATCH <= data.len() {
+            if let Some(&j) = last_pos.get(&key_at(data, i)) {
+                let dist = i - j;
+                if dist >= 1 && dist <= WINDOW {
+                    let mut len = 0;
+                    let max = (data.len() - i).min(MAX_MATCH);
+                    // data[j + len] stays in bounds: j + len < i + len <= data.len()
+                    while len < max && data[j + len] == data[i + len] {
+                        len += 1;
+                    }
+                    if len >= MIN_MATCH {
+                        tokens.push(Token::Match { len, dist });
+                        let end = i + len;
+                        while i < end {
+                            if i + MIN_MATCH <= data.len() {
+                                last_pos.insert(key_at(data, i), i);
+                            }
+                            i += 1;
+                        }
+                        emitted = true;
+                    }
+                }
+            }
+        }
+        if !emitted {
+            tokens.push(Token::Literal(data[i]));
+            if i + MIN_MATCH <= data.len() {
+                last_pos.insert(key_at(data, i), i);
+            }
+            i += 1;
+        }
+    }
+
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    for group in tokens.chunks(8) {
+        let mut control = 0u8;
+        for (bit, t) in group.iter().enumerate() {
+            if matches!(t, Token::Match { .. }) {
+                control |= 1 << bit;
+            }
+        }
+        out.push(control);
+        for t in group {
+            match t {
+                Token::Literal(b) => out.push(*b),
+                Token::Match { len, dist } => {
+                    out.push((len - MIN_MATCH) as u8);
+                    out.extend_from_slice(&(*dist as u16).to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+fn lzss_decompress(mut wire: &[u8], expect_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(expect_len);
+    while out.len() < expect_len {
+        let (&control, rest) = wire
+            .split_first()
+            .ok_or_else(|| "truncated control byte".to_string())?;
+        wire = rest;
+        for bit in 0..8 {
+            if out.len() == expect_len {
+                break;
+            }
+            if control & (1 << bit) == 0 {
+                let (&b, rest) = wire
+                    .split_first()
+                    .ok_or_else(|| "truncated literal".to_string())?;
+                wire = rest;
+                out.push(b);
+            } else {
+                if wire.len() < 3 {
+                    return Err("truncated match token".to_string());
+                }
+                let len = wire[0] as usize + MIN_MATCH;
+                let dist = u16::from_le_bytes([wire[1], wire[2]]) as usize;
+                wire = &wire[3..];
+                if dist == 0 || dist > out.len() {
+                    return Err(format!("match distance {dist} out of range"));
+                }
+                if out.len() + len > expect_len {
+                    return Err("match overruns declared length".to_string());
+                }
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    if !wire.is_empty() {
+        return Err(format!("{} trailing byte(s) after payload", wire.len()));
+    }
+    Ok(out)
+}
+
+/// Compress a whole buffer into the internal wire format.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let header = |tag: u8| -> Vec<u8> {
+        let mut h = MAGIC.to_vec();
+        h.push(tag);
+        h.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        h
+    };
+
+    let mut best = header(STORED);
+    best.extend_from_slice(data);
+
+    let mut consider = |tag: u8, body: Vec<u8>| {
+        if 7 + body.len() < best.len() {
+            let mut cand = header(tag);
+            cand.extend_from_slice(&body);
+            best = cand;
+        }
+    };
+
+    consider(PLAIN, lzss_compress(data));
+    for &s in &STRIDES {
+        if data.len() >= s as usize * 2 {
+            consider(s, lzss_compress(&delta_transpose(data, s as usize)));
+        }
+    }
+    best
+}
+
+/// Decompress the internal wire format.
+pub fn decompress(wire: &[u8]) -> Result<Vec<u8>, String> {
+    if wire.len() < 7 || wire[0..2] != MAGIC {
+        return Err("not a compressed stream (bad magic)".to_string());
+    }
+    let tag = wire[2];
+    let orig_len = u32::from_le_bytes([wire[3], wire[4], wire[5], wire[6]]) as usize;
+    let body = &wire[7..];
+    match tag {
+        STORED => {
+            if body.len() != orig_len {
+                return Err("stored block length mismatch".to_string());
+            }
+            Ok(body.to_vec())
+        }
+        PLAIN => lzss_decompress(body, orig_len),
+        s if STRIDES.contains(&s) => {
+            let planes = lzss_decompress(body, orig_len)?;
+            Ok(untranspose_undelta(&planes, s as usize, orig_len))
+        }
+        other => Err(format!("unknown transform tag {other}")),
+    }
+}
+
+/// Streaming-compression writers.
+pub mod write {
+    use super::*;
+
+    /// Buffers written bytes; compresses on [`DeflateEncoder::finish`].
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        /// New encoder around a sink.
+        pub fn new(inner: W, _level: Compression) -> Self {
+            Self { inner, buf: Vec::new() }
+        }
+
+        /// Compress the buffered bytes into the sink and return it.
+        pub fn finish(mut self) -> io::Result<W> {
+            let out = compress(&self.buf);
+            self.inner.write_all(&out)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+/// Streaming-decompression readers.
+pub mod read {
+    use super::*;
+
+    /// Reads the whole source on first use, then serves decompressed
+    /// bytes.
+    pub struct DeflateDecoder<R: Read> {
+        inner: R,
+        out: Option<Cursor<Vec<u8>>>,
+    }
+
+    impl<R: Read> DeflateDecoder<R> {
+        /// New decoder around a source.
+        pub fn new(inner: R) -> Self {
+            Self { inner, out: None }
+        }
+    }
+
+    impl<R: Read> Read for DeflateDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.out.is_none() {
+                let mut raw = Vec::new();
+                self.inner.read_to_end(&mut raw)?;
+                let data = decompress(&raw)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                self.out = Some(Cursor::new(data));
+            }
+            self.out.as_mut().expect("decoded above").read(buf)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let wire = compress(data);
+        decompress(&wire).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_various() {
+        for data in [
+            Vec::new(),
+            vec![7u8],
+            b"hello hello hello hello".to_vec(),
+            (0..10_000u32).map(|i| (i % 7) as u8).collect::<Vec<_>>(),
+            (0..999u32).map(|i| (i * 2_654_435_761) as u8).collect::<Vec<_>>(),
+        ] {
+            assert_eq!(roundtrip(&data), data);
+        }
+    }
+
+    #[test]
+    fn repetitive_data_shrinks_hard() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 7) as u8).collect();
+        let wire = compress(&data);
+        assert!(wire.len() < data.len() / 4, "{} vs {}", wire.len(), data.len());
+    }
+
+    #[test]
+    fn smooth_f32_fields_shrink() {
+        // Slowly-varying f32 payload: high bytes are near-constant, so
+        // the stride-4 transform exposes long zero runs.
+        let data: Vec<u8> = (0..50_000u32)
+            .flat_map(|i| (2.0f32 + 1e-4 * i as f32).to_le_bytes())
+            .collect();
+        let wire = compress(&data);
+        assert!(
+            wire.len() * 4 < data.len() * 3,
+            "want >=25% saving: {} vs {}",
+            wire.len(),
+            data.len()
+        );
+        assert_eq!(decompress(&wire).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_data_stays_near_original() {
+        let data: Vec<u8> = (0..4_096u32)
+            .map(|i| (i.wrapping_mul(2_654_435_761) >> 13) as u8)
+            .collect();
+        let wire = compress(&data);
+        assert!(wire.len() <= data.len() + 7);
+        assert_eq!(decompress(&wire).unwrap(), data);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decompress(&[0xFF, 0x00, 0xAB]).is_err());
+        assert!(decompress(&[]).is_err());
+        // Valid magic, truncated body.
+        assert!(decompress(&[0xE5, 0x2F, PLAIN, 9, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn encoder_decoder_api_matches_flate2() {
+        let data: Vec<u8> = (0..5_000u32).map(|i| (i % 11) as u8).collect();
+        let mut enc = write::DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&data).unwrap();
+        let wire = enc.finish().unwrap();
+        assert!(wire.len() < data.len());
+        let mut dec = read::DeflateDecoder::new(wire.as_slice());
+        let mut back = Vec::new();
+        dec.read_to_end(&mut back).unwrap();
+        assert_eq!(back, data);
+    }
+}

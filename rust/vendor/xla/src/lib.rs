@@ -1,0 +1,229 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! This container has no XLA/PJRT native libraries, so the real
+//! bindings can't exist here. This stub keeps the exact API surface
+//! `emerald::runtime` compiles against; [`PjRtClient::cpu`] fails with
+//! a clear message, which the runtime surfaces as "PJRT unavailable"
+//! and the integration tests treat as a graceful skip. Swapping this
+//! path dependency for the real `xla` crate re-enables artifact
+//! execution without any emerald source change.
+//!
+//! [`Literal`] is implemented for real (byte store + shape) so
+//! host-side conversions behave; only client/executable construction
+//! is stubbed out.
+
+use std::fmt;
+
+/// Stub error type.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "XLA/PJRT backend unavailable in this offline build (stub `xla` crate); \
+         swap rust/vendor/xla for the real bindings to execute artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element types Emerald uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    fn size(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Conversion from literal bytes to host values.
+pub trait NativeType: Sized {
+    /// Decode a little-endian byte buffer.
+    fn from_le_bytes_vec(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    fn from_le_bytes_vec(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// A host-side tensor literal (functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from a shape and raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let elems: usize = dims.iter().product();
+        if elems * ty.size() != data.len() {
+            return Err(Error(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                elems * ty.size(),
+                data.len()
+            )));
+        }
+        Ok(Self { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// The literal's array shape.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.iter().map(|&d| d as i64).collect() })
+    }
+
+    /// Decode the elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(T::from_le_bytes_vec(&self.data))
+    }
+
+    /// Split a tuple literal into its elements. Stub literals are
+    /// always arrays, and executables (the only producers of tuples)
+    /// cannot exist in the stub.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(Self { _text: text }),
+            Err(e) => Err(Error(format!("reading HLO text {path}: {e}"))),
+        }
+    }
+}
+
+/// A computation built from an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+/// Device buffer returned by an execution (uninhabitable in the stub:
+/// executions cannot happen without a client).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (never constructable in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// CPU client — always fails in the stub.
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &data).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).is_err()
+        );
+    }
+}
