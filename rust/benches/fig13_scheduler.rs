@@ -1,10 +1,12 @@
-//! E7 — Load-aware scheduling + offload batching vs the seed baseline.
+//! E7 — Load- and speed-aware scheduling + offload batching vs the
+//! seed baseline.
 //!
-//! Workload (one workflow, both requirements of the acceptance
-//! criterion): a `Parallel` of **4 remotable steps** (one heavy, three
-//! light — the skew round-robin placement is blind to) followed by a
-//! run of **3 consecutive remotable steps** with producer→consumer
-//! dataflow (the shape batching fuses into one WAN round trip).
+//! Workload (one workflow, both requirements of the original
+//! acceptance criterion): a `Parallel` of **4 remotable steps** (one
+//! heavy, three light — the skew round-robin placement is blind to)
+//! followed by a run of **3 consecutive remotable steps** with
+//! producer→consumer dataflow (the shape batching fuses into one WAN
+//! round trip).
 //!
 //! Baseline = round-robin placement + unbatched partitioning (the
 //! seed). Treatment = least-loaded placement + batched partitioning.
@@ -14,21 +16,28 @@
 //!
 //! The engine comparison runs on a deliberately small 2-VM cloud so
 //! offloads outnumber nodes; a second, fully deterministic section
-//! compares the two policies through the scheduler's discrete
-//! queueing model ([`emerald::scheduler::simulate_makespan`]) on the
-//! same task mix, free of thread-timing noise.
+//! compares the policies through the scheduler's discrete queueing
+//! model ([`emerald::scheduler::simulate_makespan`]) on the same task
+//! mix, free of thread-timing noise.
+//!
+//! A third section exercises the **heterogeneous pool** (2 VMs @ x2.0
+//! + 2 @ x8.0): speed-aware earliest-finish-time placement must
+//! strictly beat the speed-blind least-loaded policy, and — because
+//! the lease pins the executing node — every offload's
+//! `ActivityStarted` trace event must name exactly the VM the
+//! scheduler chose.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use emerald::benchkit::Series;
-use emerald::cloud::{Platform, PlatformConfig};
+use emerald::cloud::{CloudTier, Platform, PlatformConfig};
 use emerald::engine::activity::need_num;
-use emerald::engine::{ActivityRegistry, Engine, Services};
+use emerald::engine::{ActivityRegistry, Engine, Event, Services};
 use emerald::expr::Value;
 use emerald::migration::{DataPolicy, MigrationManager};
 use emerald::partitioner::{self, PartitionOptions};
-use emerald::scheduler::{simulate_makespan, SchedulePolicy};
+use emerald::scheduler::{admission_cap, simulate_makespan, SchedulePolicy};
 use emerald::workflow::xaml;
 
 const WORKFLOW: &str = r#"<Workflow Name="fig13">
@@ -57,6 +66,25 @@ const WORKFLOW: &str = r#"<Workflow Name="fig13">
   </Sequence>
 </Workflow>"#;
 
+/// Sequential-only chain: placement is one offload at a time, so the
+/// heterogeneous A/B is fully deterministic (no thread-timing races).
+const CHAIN_WORKFLOW: &str = r#"<Workflow Name="fig13-tiers">
+  <Workflow.Variables>
+    <Variable Name="s1"/><Variable Name="s2"/><Variable Name="s3"/><Variable Name="s4"/>
+  </Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="t-1" Activity="load.work" In.ms="80" In.x="1"
+                    Out.y="s1" Remotable="true"/>
+    <InvokeActivity DisplayName="t-2" Activity="load.work" In.ms="80" In.x="s1"
+                    Out.y="s2" Remotable="true"/>
+    <InvokeActivity DisplayName="t-3" Activity="load.work" In.ms="80" In.x="s2"
+                    Out.y="s3" Remotable="true"/>
+    <InvokeActivity DisplayName="t-4" Activity="load.work" In.ms="80" In.x="s3"
+                    Out.y="s4" Remotable="true"/>
+    <WriteLine Text="'result=' + str(s4)"/>
+  </Sequence>
+</Workflow>"#;
+
 fn registry() -> Arc<ActivityRegistry> {
     let mut reg = ActivityRegistry::new();
     reg.register_fn("load.work", |ctx, inputs| {
@@ -71,7 +99,7 @@ fn registry() -> Arc<ActivityRegistry> {
 /// One run: returns (simulated time, offload round trips).
 fn run(schedule: SchedulePolicy, batch: bool) -> anyhow::Result<(Duration, usize)> {
     let platform = Platform::new(PlatformConfig {
-        cloud_nodes: 2, // offloads outnumber VMs -> queueing matters
+        tiers: vec![CloudTier::new(2, 4.0)], // offloads outnumber VMs -> queueing matters
         wan_latency: Duration::from_millis(50),
         schedule,
         ..Default::default()
@@ -91,6 +119,45 @@ fn run(schedule: SchedulePolicy, batch: bool) -> anyhow::Result<(Duration, usize
         report.lines
     );
     Ok((report.sim_time, report.offload_count()))
+}
+
+/// One sequential run on the mixed 2-tier pool. Returns the simulated
+/// time and the cloud VM name of every offloaded step's
+/// `ActivityStarted` event (the node the work actually executed on).
+fn run_tiers(schedule: SchedulePolicy) -> anyhow::Result<(Duration, Vec<String>)> {
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::new(2, 2.0), CloudTier::new(2, 8.0)],
+        schedule,
+        ..Default::default()
+    })?;
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, services).with_offload(mgr);
+    let wf = xaml::parse(CHAIN_WORKFLOW)?;
+    let (part, _) = partitioner::partition(&wf)?;
+    let report = engine.run(&part)?;
+    assert!(
+        report.lines.iter().any(|l| l == "result=5"),
+        "placement must not change results: {:?}",
+        report.lines
+    );
+    let cloud_nodes: Vec<String> = report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ActivityStarted { node, .. } if node.starts_with("cloud-") => {
+                Some(node.clone())
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        cloud_nodes.len(),
+        report.offload_count(),
+        "every offload must record its executing cloud VM"
+    );
+    Ok((report.sim_time, cloud_nodes))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -132,8 +199,8 @@ fn main() -> anyhow::Result<()> {
     // -- Deterministic queueing model: policy A/B on the same mix --
     let ms = Duration::from_millis;
     let tasks = [ms(320), ms(80), ms(80), ms(80), ms(80), ms(80), ms(80)];
-    let rr = simulate_makespan(SchedulePolicy::RoundRobin, 2, &tasks)?;
-    let ll = simulate_makespan(SchedulePolicy::LeastLoaded, 2, &tasks)?;
+    let rr = simulate_makespan(SchedulePolicy::RoundRobin, &[1.0, 1.0], &tasks)?;
+    let ll = simulate_makespan(SchedulePolicy::LeastLoaded, &[1.0, 1.0], &tasks)?;
     let mut model = Series::new(
         "Fig 13b: queueing-model makespan, 7 offloads on 2 VMs",
         "seconds (simulated)",
@@ -146,14 +213,72 @@ fn main() -> anyhow::Result<()> {
         "least-loaded must beat round-robin on skewed tasks: {ll:?} vs {rr:?}"
     );
 
+    // -- Heterogeneous tiers: speed-aware EFT vs speed-blind LL --
+    // Mixed pool: 2 VMs @ x2.0 + 2 @ x8.0. The sequential chain makes
+    // placement deterministic: blind least-loaded always lands on the
+    // idle lowest-index (slow) VM, EFT always picks the fastest idle
+    // VM — and the lease pins execution, so the trace proves it.
+    let (blind_time, blind_nodes) = run_tiers(SchedulePolicy::LeastLoadedBlind)?;
+    let (eft_time, eft_nodes) = run_tiers(SchedulePolicy::LeastLoaded)?;
+    let mut tiers = Series::new(
+        "Fig 13c: mixed pool (2 @ x2.0 + 2 @ x8.0), 4-step sequential chain",
+        "seconds (simulated)",
+    );
+    tiers.row(
+        "least-loaded-blind (speed-blind)",
+        vec![("sim".into(), blind_time.as_secs_f64())],
+    );
+    tiers.row(
+        "least-loaded (earliest finish time)",
+        vec![("sim".into(), eft_time.as_secs_f64())],
+    );
+    tiers.print();
+    println!("blind executed on {blind_nodes:?}; EFT executed on {eft_nodes:?}");
+    assert!(
+        eft_time < blind_time,
+        "speed-aware EFT must strictly beat speed-blind least-loaded on a \
+         mixed pool: {eft_time:?} vs {blind_time:?}"
+    );
+    // Placement and execution are no longer divorced: each offload ran
+    // on exactly the VM its policy selects (deterministic here).
+    assert_eq!(blind_nodes, vec!["cloud-0"; 4], "blind LL leases the idle slow VM");
+    assert_eq!(eft_nodes, vec!["cloud-2"; 4], "EFT leases the fastest VM");
+
+    // The same skew through the deterministic model.
+    let speeds = [2.0, 2.0, 8.0, 8.0];
+    let blind_mk = simulate_makespan(SchedulePolicy::LeastLoadedBlind, &speeds, &tasks)?;
+    let eft_mk = simulate_makespan(SchedulePolicy::LeastLoaded, &speeds, &tasks)?;
+    assert!(
+        eft_mk < blind_mk,
+        "EFT model makespan must beat blind on the mixed pool: {eft_mk:?} vs {blind_mk:?}"
+    );
+
+    // Planner-side admission: how many of these tasks the mixed pool
+    // should take before queueing past a 10-node local cluster. With
+    // fast tiers and few tasks the cap admits the whole set; on a
+    // single slow VM it must cut the list short.
+    let cap = admission_cap(&speeds, &[1.0; 10], &tasks);
+    println!("admission plan: offload {cap}/{} task(s) on the mixed pool", tasks.len());
+    assert_eq!(cap, tasks.len(), "a 4-VM mixed pool takes this whole mix");
+    let throttled = admission_cap(&[2.0], &[1.0; 10], &tasks);
+    assert!(
+        throttled < tasks.len(),
+        "one x2 VM must not be allowed to queue the whole mix: {throttled}"
+    );
+
     println!(
         "\nE7 headline: batched + load-aware reduces end-to-end time by {:.1}% \
-         ({:.3}s -> {:.3}s); queueing-model makespan {:.3}s -> {:.3}s",
+         ({:.3}s -> {:.3}s); queueing-model makespan {:.3}s -> {:.3}s; \
+         mixed-pool EFT {:.3}s vs blind {:.3}s (model {:.3}s vs {:.3}s)",
         100.0 * (1.0 - treatment.as_secs_f64() / baseline.as_secs_f64()),
         baseline.as_secs_f64(),
         treatment.as_secs_f64(),
         rr.as_secs_f64(),
         ll.as_secs_f64(),
+        eft_time.as_secs_f64(),
+        blind_time.as_secs_f64(),
+        eft_mk.as_secs_f64(),
+        blind_mk.as_secs_f64(),
     );
     Ok(())
 }

@@ -9,30 +9,35 @@
 //! [platform]
 //! local_nodes = 10
 //! local_speed = 1.0
-//! cloud_nodes = 25
-//! cloud_speed = 4.0
+//! # Heterogeneous cloud pool: one entry per tier.
+//! tiers = [{ nodes = 15, speed = 4.0 }, { nodes = 10, speed = 8.0 }]
+//! # ...or the legacy one-tier shorthand (mutually exclusive):
+//! # cloud_nodes = 25
+//! # cloud_speed = 4.0
 //! wan_mbits = 200.0
 //! wan_latency_ms = 10
-//! schedule = "least-loaded"  # least-loaded | round-robin
+//! schedule = "least-loaded"  # least-loaded | least-loaded-blind | round-robin
 //!
 //! [migration]
 //! policy = "mdss"          # mdss | bundle
 //! decision = "always"      # always | cost
 //! attempts = 1
 //! local_fallback = false
+//! admission = false        # queue-aware admission control
 //! signing_key = ""         # non-empty enables request signing
 //! codec = "raw"            # raw | deflate
 //! ```
 //!
 //! Supported grammar: `[section]` headers, `key = value` with string /
-//! number / boolean values, `#` comments, blank lines.
+//! number / boolean / inline-array / inline-table values, `#`
+//! comments, blank lines.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cloud::PlatformConfig;
+use crate::cloud::{CloudTier, PlatformConfig};
 use crate::mdss::Codec;
 use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
 use crate::scheduler::SchedulePolicy;
@@ -49,6 +54,10 @@ pub enum ConfigValue {
     Str(String),
     Num(f64),
     Bool(bool),
+    /// Inline array, e.g. `[1, 2]` or `[{ nodes = 2, speed = 4.0 }]`.
+    Arr(Vec<ConfigValue>),
+    /// Inline table, e.g. `{ nodes = 2, speed = 4.0 }`.
+    Table(BTreeMap<String, ConfigValue>),
 }
 
 impl ConfigValue {
@@ -57,6 +66,8 @@ impl ConfigValue {
             ConfigValue::Str(_) => "string",
             ConfigValue::Num(_) => "number",
             ConfigValue::Bool(_) => "boolean",
+            ConfigValue::Arr(_) => "array",
+            ConfigValue::Table(_) => "table",
         }
     }
 }
@@ -90,19 +101,95 @@ impl ConfigFile {
         Ok(out)
     }
 
+    /// Nesting ceiling for inline values — far beyond any legitimate
+    /// config, but keeps a pathological input a parse error instead of
+    /// a stack overflow.
+    const MAX_VALUE_DEPTH: usize = 32;
+
     fn parse_value(raw: &str) -> Result<ConfigValue> {
-        if raw == "true" {
-            return Ok(ConfigValue::Bool(true));
+        let (value, rest) = Self::parse_value_inner(raw, 0)?;
+        if !rest.trim().is_empty() {
+            bail!("trailing characters after value: {rest:?}");
         }
-        if raw == "false" {
-            return Ok(ConfigValue::Bool(false));
+        Ok(value)
+    }
+
+    /// Recursive-descent value parser: scalars, `[a, b]` arrays and
+    /// `{ k = v, ... }` inline tables (the TOML subset `tiers` needs).
+    /// Returns the value and the unconsumed remainder of the input.
+    fn parse_value_inner(raw: &str, depth: usize) -> Result<(ConfigValue, &str)> {
+        if depth > Self::MAX_VALUE_DEPTH {
+            bail!("value nested deeper than {} levels", Self::MAX_VALUE_DEPTH);
         }
-        if let Some(s) = raw.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
-            return Ok(ConfigValue::Str(s.to_string()));
+        let s = raw.trim_start();
+        if let Some(mut rest) = s.strip_prefix('[') {
+            let mut items = Vec::new();
+            loop {
+                rest = rest.trim_start();
+                if let Some(r) = rest.strip_prefix(']') {
+                    return Ok((ConfigValue::Arr(items), r));
+                }
+                if !items.is_empty() {
+                    rest = rest
+                        .strip_prefix(',')
+                        .context("expected ',' or ']' in array")?
+                        .trim_start();
+                    // Trailing comma before the closing bracket.
+                    if let Some(r) = rest.strip_prefix(']') {
+                        return Ok((ConfigValue::Arr(items), r));
+                    }
+                }
+                let (item, r) = Self::parse_value_inner(rest, depth + 1)?;
+                items.push(item);
+                rest = r;
+            }
         }
-        raw.parse::<f64>()
-            .map(ConfigValue::Num)
-            .map_err(|_| anyhow::anyhow!("cannot parse value {raw:?}"))
+        if let Some(mut rest) = s.strip_prefix('{') {
+            let mut map = BTreeMap::new();
+            loop {
+                rest = rest.trim_start();
+                if let Some(r) = rest.strip_prefix('}') {
+                    return Ok((ConfigValue::Table(map), r));
+                }
+                if !map.is_empty() {
+                    rest = rest
+                        .strip_prefix(',')
+                        .context("expected ',' or '}' in inline table")?
+                        .trim_start();
+                    if let Some(r) = rest.strip_prefix('}') {
+                        return Ok((ConfigValue::Table(map), r));
+                    }
+                }
+                let eq = rest
+                    .find('=')
+                    .context("expected `key = value` in inline table")?;
+                let key = rest[..eq].trim().to_string();
+                if key.is_empty() || key.contains(|c: char| "{}[],\"".contains(c)) {
+                    bail!("bad inline-table key {key:?}");
+                }
+                let (value, r) = Self::parse_value_inner(&rest[eq + 1..], depth + 1)?;
+                map.insert(key, value);
+                rest = r;
+            }
+        }
+        if let Some(rest) = s.strip_prefix('"') {
+            let end = rest.find('"').context("unterminated string")?;
+            return Ok((ConfigValue::Str(rest[..end].to_string()), &rest[end + 1..]));
+        }
+        // Bare scalar: runs until a structural delimiter or the end.
+        let end = s
+            .find(|c: char| c == ',' || c == ']' || c == '}')
+            .unwrap_or(s.len());
+        let token = s[..end].trim();
+        let value = match token {
+            "true" => ConfigValue::Bool(true),
+            "false" => ConfigValue::Bool(false),
+            _ => token
+                .parse::<f64>()
+                .map(ConfigValue::Num)
+                .map_err(|_| anyhow::anyhow!("cannot parse value {token:?}"))?,
+        };
+        Ok((value, &s[end..]))
     }
 
     /// Load from a file path.
@@ -141,22 +228,87 @@ impl ConfigFile {
         }
     }
 
+    /// Cloud tiers from the `[platform]` section: either an explicit
+    /// `tiers = [{ nodes = N, speed = S }, ...]` array or the legacy
+    /// one-tier `cloud_nodes`/`cloud_speed` shorthand (mutually
+    /// exclusive; legacy configs parse unchanged).
+    fn cloud_tiers(&self, default: &[CloudTier]) -> Result<Vec<CloudTier>> {
+        let legacy = self.get("platform", "cloud_nodes").is_some()
+            || self.get("platform", "cloud_speed").is_some();
+        match self.get("platform", "tiers") {
+            // No cloud keys at all: keep the full default tier list.
+            None if !legacy => Ok(default.to_vec()),
+            None => {
+                let d = default.first().copied().unwrap_or(CloudTier::new(0, 1.0));
+                Ok(vec![CloudTier::new(
+                    self.num("platform", "cloud_nodes", d.nodes as f64)? as usize,
+                    self.num("platform", "cloud_speed", d.speed)?,
+                )])
+            }
+            Some(_) if legacy => {
+                bail!("[platform] tiers cannot be combined with cloud_nodes/cloud_speed")
+            }
+            Some(ConfigValue::Arr(items)) => {
+                let mut tiers = Vec::with_capacity(items.len());
+                for (i, item) in items.iter().enumerate() {
+                    let ConfigValue::Table(t) = item else {
+                        bail!(
+                            "[platform] tiers[{i}] must be an inline table \
+                             {{ nodes = N, speed = S }}, got {}",
+                            item.kind()
+                        );
+                    };
+                    for key in t.keys() {
+                        if key != "nodes" && key != "speed" {
+                            bail!("[platform] tiers[{i}]: unknown key {key:?}");
+                        }
+                    }
+                    let nodes = match t.get("nodes") {
+                        Some(ConfigValue::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => {
+                            *n as usize
+                        }
+                        Some(ConfigValue::Num(n)) => bail!(
+                            "[platform] tiers[{i}].nodes must be a non-negative integer, got {n}"
+                        ),
+                        Some(v) => {
+                            bail!("[platform] tiers[{i}].nodes must be a number, got {}", v.kind())
+                        }
+                        None => bail!("[platform] tiers[{i}] is missing `nodes`"),
+                    };
+                    let speed = match t.get("speed") {
+                        Some(ConfigValue::Num(s)) => *s,
+                        Some(v) => {
+                            bail!("[platform] tiers[{i}].speed must be a number, got {}", v.kind())
+                        }
+                        None => bail!("[platform] tiers[{i}] is missing `speed`"),
+                    };
+                    tiers.push(CloudTier::new(nodes, speed));
+                }
+                Ok(tiers)
+            }
+            Some(v) => bail!("[platform] tiers must be an array of tables, got {}", v.kind()),
+        }
+    }
+
     /// Build a [`PlatformConfig`] from the `[platform]` section
     /// (missing keys take paper defaults).
     pub fn platform(&self) -> Result<PlatformConfig> {
         let d = PlatformConfig::default();
         let schedule = match self.string("platform", "schedule", "least-loaded")?.as_str() {
             "least-loaded" => SchedulePolicy::LeastLoaded,
+            "least-loaded-blind" => SchedulePolicy::LeastLoadedBlind,
             "round-robin" => SchedulePolicy::RoundRobin,
             other => {
-                bail!("[platform] schedule must be least-loaded|round-robin, got {other:?}")
+                bail!(
+                    "[platform] schedule must be least-loaded|least-loaded-blind|round-robin, \
+                     got {other:?}"
+                )
             }
         };
         Ok(PlatformConfig {
             local_nodes: self.num("platform", "local_nodes", d.local_nodes as f64)? as usize,
             local_speed: self.num("platform", "local_speed", d.local_speed)?,
-            cloud_nodes: self.num("platform", "cloud_nodes", d.cloud_nodes as f64)? as usize,
-            cloud_speed: self.num("platform", "cloud_speed", d.cloud_speed)?,
+            tiers: self.cloud_tiers(&d.tiers)?,
             wan_bandwidth: self.num("platform", "wan_mbits", d.wan_bandwidth * 8.0 / 1e6)?
                 * 1e6
                 / 8.0,
@@ -183,6 +335,7 @@ impl ConfigFile {
         };
         cfg.attempts = self.num("migration", "attempts", 1.0)? as usize;
         cfg.local_fallback = self.boolean("migration", "local_fallback", false)?;
+        cfg.admission = self.boolean("migration", "admission", false)?;
         let key = self.string("migration", "signing_key", "")?;
         if !key.is_empty() {
             cfg.signing = Some(SigningKey::new(key.into_bytes()));
@@ -223,14 +376,81 @@ mod tests {
 
     #[test]
     fn parses_platform_with_defaults() {
+        // Legacy one-tier configs parse unchanged into a single tier.
         let cfg = ConfigFile::parse(SAMPLE).unwrap();
         let p = cfg.platform().unwrap();
         assert_eq!(p.local_nodes, 4);
-        assert_eq!(p.cloud_nodes, 25); // default kept
-        assert_eq!(p.cloud_speed, 2.5);
+        assert_eq!(p.cloud_nodes(), 25); // default node count kept
+        assert_eq!(p.tiers, vec![crate::cloud::CloudTier::new(25, 2.5)]);
         assert_eq!(p.wan_bandwidth, 100.0e6 / 8.0);
         assert_eq!(p.wan_latency, Duration::from_millis(5));
         assert_eq!(p.schedule, SchedulePolicy::LeastLoaded); // default kept
+    }
+
+    #[test]
+    fn parses_heterogeneous_tiers() {
+        let cfg = ConfigFile::parse(
+            "[platform]\ntiers = [{ nodes = 15, speed = 4.0 }, { nodes = 10, speed = 8.0 }]",
+        )
+        .unwrap();
+        let p = cfg.platform().unwrap();
+        assert_eq!(
+            p.tiers,
+            vec![
+                crate::cloud::CloudTier::new(15, 4.0),
+                crate::cloud::CloudTier::new(10, 8.0)
+            ]
+        );
+        assert_eq!(p.cloud_nodes(), 25);
+        // Zero-cloud via an empty array.
+        let cfg = ConfigFile::parse("[platform]\ntiers = []").unwrap();
+        assert_eq!(cfg.platform().unwrap().cloud_nodes(), 0);
+    }
+
+    #[test]
+    fn tiers_reject_conflicts_and_malformed_entries() {
+        for bad in [
+            // tiers and the legacy shorthand are mutually exclusive
+            "[platform]\ncloud_nodes = 2\ntiers = [{ nodes = 1, speed = 2.0 }]",
+            "[platform]\ntiers = [{ nodes = 1 }]",            // missing speed
+            "[platform]\ntiers = [{ speed = 2.0 }]",          // missing nodes
+            "[platform]\ntiers = [{ nodes = -5, speed = 4.0 }]", // negative count
+            "[platform]\ntiers = [{ nodes = 2.7, speed = 4.0 }]", // fractional count
+            "[platform]\ntiers = [{ nodes = 1, speed = 2.0, vram = 80 }]", // unknown key
+            "[platform]\ntiers = [4.0]",                      // not a table
+            "[platform]\ntiers = { nodes = 1, speed = 2.0 }", // not an array
+            "[platform]\ntiers = [{ nodes = 1, speed = \"fast\" }]", // wrong type
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(cfg.platform().is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn inline_value_grammar() {
+        // Nested arrays/tables round-trip through the value parser.
+        let cfg = ConfigFile::parse("[x]\na = [1, 2, 3]\nb = [{ k = \"v\" }, true,]").unwrap();
+        assert_eq!(
+            cfg.get("x", "a"),
+            Some(&ConfigValue::Arr(vec![
+                ConfigValue::Num(1.0),
+                ConfigValue::Num(2.0),
+                ConfigValue::Num(3.0)
+            ]))
+        );
+        let Some(ConfigValue::Arr(items)) = cfg.get("x", "b") else {
+            panic!("expected array");
+        };
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1], ConfigValue::Bool(true));
+        // Malformed nestings are rejected.
+        for bad in ["[x]\na = [1", "[x]\na = { k }", "[x]\na = [1] trailing", "[x]\na = { = 1 }"]
+        {
+            assert!(ConfigFile::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // Pathological nesting is a parse error, not a stack overflow.
+        let deep = format!("[x]\na = {}1{}", "[".repeat(100_000), "]".repeat(100_000));
+        assert!(ConfigFile::parse(&deep).is_err());
     }
 
     #[test]
@@ -238,6 +458,9 @@ mod tests {
         let cfg =
             ConfigFile::parse("[platform]\nschedule = \"round-robin\"").unwrap();
         assert_eq!(cfg.platform().unwrap().schedule, SchedulePolicy::RoundRobin);
+        let cfg =
+            ConfigFile::parse("[platform]\nschedule = \"least-loaded-blind\"").unwrap();
+        assert_eq!(cfg.platform().unwrap().schedule, SchedulePolicy::LeastLoadedBlind);
         let cfg = ConfigFile::parse("[platform]\nschedule = \"fifo\"").unwrap();
         assert!(cfg.platform().is_err());
     }
@@ -250,8 +473,11 @@ mod tests {
         assert_eq!(m.decision, Decision::CostBased);
         assert_eq!(m.attempts, 3);
         assert!(m.local_fallback);
+        assert!(!m.admission, "admission control defaults off");
         assert!(m.signing.is_some());
         assert_eq!(cfg.codec().unwrap(), Codec::Deflate);
+        let cfg = ConfigFile::parse("[migration]\nadmission = true").unwrap();
+        assert!(cfg.migration().unwrap().admission);
     }
 
     #[test]

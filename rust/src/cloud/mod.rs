@@ -13,15 +13,23 @@
 //!   ledger (this is what MDSS saves — paper Fig 10, bench E4).
 //! * [`Platform`] — local cluster + cloud pool + network, built from a
 //!   [`PlatformConfig`] (defaults calibrated in DESIGN.md §5). The
-//!   config is validated at construction, and empty tiers
-//!   (`local_nodes`/`cloud_nodes` = 0) are legal configurations whose
-//!   node accessors return errors instead of panicking — the migration
-//!   manager declines offloads on a zero-cloud platform.
+//!   **cloud pool is heterogeneous**: [`PlatformConfig::tiers`] lists
+//!   [`CloudTier`] specs (node count + speed factor each), modelling
+//!   mixed fleets where instance choice dominates cost/performance
+//!   (Juve et al.). The legacy single-tier `cloud_nodes`/`cloud_speed`
+//!   config keys remain a one-tier shorthand (`cli::ConfigFile`). The
+//!   config is validated at construction, and empty tiers are legal
+//!   configurations whose node accessors return errors instead of
+//!   panicking — the migration manager declines offloads on a
+//!   zero-cloud platform.
 //! * Offload placement goes through the [`crate::scheduler`]: the
-//!   migration manager takes a [`crate::scheduler::Lease`] on a cloud
-//!   VM per offload via [`Platform::cloud_lease`], so concurrent
-//!   `Parallel` offloads land on the least-loaded VMs and queueing
-//!   delay is modeled when offloads outnumber nodes.
+//!   migration manager takes a speed-carrying
+//!   [`crate::scheduler::Lease`] on a cloud VM per offload via
+//!   [`Platform::cloud_lease`], and the leased node
+//!   ([`Platform::cloud_node_at`]) **pins remote execution** — the
+//!   engine scales compute on exactly the VM the scheduler chose, so
+//!   earliest-finish-time placement over mixed tiers translates into
+//!   simulated time.
 //!
 //! Simulated durations compose in the engine: sequential steps add,
 //! parallel branches take the max — so offloading parallel steps to
@@ -41,6 +49,23 @@ use anyhow::{bail, Context, Result};
 
 use crate::scheduler::{Lease, NodeScheduler, SchedulePolicy};
 
+/// One homogeneous slice of the cloud pool: `nodes` VMs at `speed`
+/// (relative to a speed-1.0 local reference node).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CloudTier {
+    /// VMs in this tier. Zero is legal (the tier contributes nothing).
+    pub nodes: usize,
+    /// Speed factor of every VM in this tier.
+    pub speed: f64,
+}
+
+impl CloudTier {
+    /// New tier spec.
+    pub fn new(nodes: usize, speed: f64) -> Self {
+        Self { nodes, speed }
+    }
+}
+
 /// Configuration of the simulated testbed (paper §4 + DESIGN.md §5).
 #[derive(Debug, Clone)]
 pub struct PlatformConfig {
@@ -48,20 +73,21 @@ pub struct PlatformConfig {
     pub local_nodes: usize,
     /// Local node speed factor (reference = 1.0).
     pub local_speed: f64,
-    /// Cloud VMs (paper: 25 D-series). Zero means "no cloud": the
-    /// platform builds fine and offloads are declined.
-    pub cloud_nodes: usize,
-    /// Cloud VM speed factor relative to a local node (DESIGN.md §5:
-    /// 4.0 — the paper's 25×16 cloud cores vs 10×4 cluster cores for
-    /// the offloaded steps; calibrated to land in the paper's ≤55%
-    /// reduction band).
-    pub cloud_speed: f64,
+    /// Cloud pool as a list of tiers (mixed fleet). The default is the
+    /// paper's single homogeneous tier: 25 D-series VMs at speed 4.0
+    /// (DESIGN.md §5 — the paper's 25×16 cloud cores vs 10×4 cluster
+    /// cores for the offloaded steps; calibrated to land in the
+    /// paper's ≤55% reduction band). An empty list means "no cloud":
+    /// the platform builds fine and offloads are declined.
+    pub tiers: Vec<CloudTier>,
     /// WAN bandwidth in bytes/second (default 200 Mbit/s).
     pub wan_bandwidth: f64,
     /// WAN one-way latency (default 10 ms — same-region Azure link).
     pub wan_latency: Duration,
     /// Cloud-VM selection policy for offload leases (default:
-    /// least-loaded; `RoundRobin` reproduces the seed behaviour).
+    /// least-loaded = earliest estimated finish time; `RoundRobin`
+    /// reproduces the seed, `LeastLoadedBlind` the speed-blind PR-1
+    /// policy).
     pub schedule: SchedulePolicy,
 }
 
@@ -70,8 +96,7 @@ impl Default for PlatformConfig {
         Self {
             local_nodes: 10,
             local_speed: 1.0,
-            cloud_nodes: 25,
-            cloud_speed: 4.0,
+            tiers: vec![CloudTier::new(25, 4.0)],
             wan_bandwidth: 200.0e6 / 8.0,
             wan_latency: Duration::from_millis(10),
             schedule: SchedulePolicy::LeastLoaded,
@@ -80,16 +105,44 @@ impl Default for PlatformConfig {
 }
 
 impl PlatformConfig {
+    /// One-tier shorthand: the default platform with the cloud pool
+    /// replaced by `nodes` VMs at `speed` (the old
+    /// `cloud_nodes`/`cloud_speed` pair).
+    pub fn with_cloud(nodes: usize, speed: f64) -> Self {
+        Self { tiers: vec![CloudTier::new(nodes, speed)], ..Default::default() }
+    }
+
+    /// Total cloud VMs across all tiers.
+    pub fn cloud_nodes(&self) -> usize {
+        self.tiers.iter().map(|t| t.nodes).sum()
+    }
+
+    /// Per-VM speed factors in node-index order (tier order, then
+    /// position within the tier).
+    pub fn cloud_speeds(&self) -> Vec<f64> {
+        self.tiers
+            .iter()
+            .flat_map(|t| std::iter::repeat(t.speed).take(t.nodes))
+            .collect()
+    }
+
     /// Reject configurations that could not be simulated (non-positive
     /// or non-finite speeds/bandwidth). Zero node counts are legal.
     pub fn validate(&self) -> Result<()> {
         for (name, value) in [
             ("local_speed", self.local_speed),
-            ("cloud_speed", self.cloud_speed),
             ("wan_bandwidth", self.wan_bandwidth),
         ] {
             if !value.is_finite() || value <= 0.0 {
                 bail!("platform config: {name} must be a positive finite number, got {value}");
+            }
+        }
+        for (i, tier) in self.tiers.iter().enumerate() {
+            if !tier.speed.is_finite() || tier.speed <= 0.0 {
+                bail!(
+                    "platform config: tiers[{i}].speed must be a positive finite number, got {}",
+                    tier.speed
+                );
             }
         }
         Ok(())
@@ -116,10 +169,16 @@ impl Platform {
         let local = (0..config.local_nodes)
             .map(|i| Arc::new(Node::new(NodeKind::Local, i, config.local_speed)))
             .collect();
-        let cloud = (0..config.cloud_nodes)
-            .map(|i| Arc::new(Node::new(NodeKind::Cloud, i, config.cloud_speed)))
+        // cloud_speeds() flattens the tiers in declaration order; node
+        // index i always matches scheduler slot i.
+        let cloud: Vec<Arc<Node>> = config
+            .cloud_speeds()
+            .into_iter()
+            .enumerate()
+            .map(|(index, speed)| Arc::new(Node::new(NodeKind::Cloud, index, speed)))
             .collect();
-        let cloud_sched = NodeScheduler::new(config.schedule, config.cloud_nodes);
+        let cloud_sched =
+            NodeScheduler::heterogeneous(config.schedule, config.cloud_speeds());
         Ok(Arc::new(Self {
             config,
             network,
@@ -146,10 +205,10 @@ impl Platform {
         Ok(self.local[i].clone())
     }
 
-    /// Pick a cloud node for compute (round-robin; cloud VMs are
-    /// homogeneous, so compute scaling is placement-independent —
-    /// offload *placement* and queueing go through [`Self::cloud_lease`]).
-    /// Errors instead of panicking on an empty tier.
+    /// Fallback cloud-node pick (round-robin). Offloads pin the leased
+    /// node via [`Self::cloud_node_at`]; this remains only for callers
+    /// without a lease (e.g. requests from legacy peers that carry no
+    /// placement pin). Errors instead of panicking on an empty pool.
     pub fn cloud_node(&self) -> Result<Arc<Node>> {
         if self.cloud.is_empty() {
             bail!("no cloud nodes configured (cloud_nodes = 0); offloads must be declined");
@@ -158,21 +217,33 @@ impl Platform {
         Ok(self.cloud[i].clone())
     }
 
+    /// The cloud node at a leased index (see
+    /// [`crate::scheduler::Lease::node`]) — the VM remote execution is
+    /// pinned to.
+    pub fn cloud_node_at(&self, index: usize) -> Result<Arc<Node>> {
+        self.cloud.get(index).cloned().with_context(|| {
+            format!(
+                "cloud node index {index} out of range ({} configured)",
+                self.cloud.len()
+            )
+        })
+    }
+
     /// Lease a cloud VM for one offload round trip. `estimate` is the
-    /// expected round-trip duration (cost-model EWMA) and weights the
-    /// least-loaded choice.
+    /// expected reference compute work (cost-model EWMA) and weights
+    /// the earliest-finish-time choice.
     pub fn cloud_lease(&self, estimate: Option<Duration>) -> Result<Lease> {
         self.cloud_sched
             .lease(estimate)
             .context("scheduling offload on the cloud pool")
     }
 
-    /// The cloud-pool scheduler (diagnostics and tests).
+    /// The cloud-pool scheduler (admission preview, diagnostics, tests).
     pub fn cloud_scheduler(&self) -> &Arc<NodeScheduler> {
         &self.cloud_sched
     }
 
-    /// Number of cloud nodes.
+    /// Number of cloud nodes (all tiers).
     pub fn cloud_size(&self) -> usize {
         self.cloud.len()
     }
@@ -189,7 +260,7 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let p = Platform::new(PlatformConfig { cloud_nodes: 3, ..Default::default() }).unwrap();
+        let p = Platform::new(PlatformConfig::with_cloud(3, 4.0)).unwrap();
         let a = p.cloud_node().unwrap().index;
         let b = p.cloud_node().unwrap().index;
         let c = p.cloud_node().unwrap().index;
@@ -202,30 +273,52 @@ mod tests {
     fn default_matches_paper() {
         let cfg = PlatformConfig::default();
         assert_eq!(cfg.local_nodes, 10);
-        assert_eq!(cfg.cloud_nodes, 25);
-        assert!(cfg.cloud_speed > cfg.local_speed);
+        assert_eq!(cfg.cloud_nodes(), 25);
+        assert_eq!(cfg.tiers.len(), 1);
+        assert!(cfg.tiers[0].speed > cfg.local_speed);
         assert_eq!(cfg.schedule, SchedulePolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn tiers_build_nodes_in_declaration_order() {
+        let p = Platform::new(PlatformConfig {
+            tiers: vec![CloudTier::new(2, 2.0), CloudTier::new(2, 8.0)],
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(p.cloud_size(), 4);
+        let speeds: Vec<f64> =
+            (0..4).map(|i| p.cloud_node_at(i).unwrap().speed).collect();
+        assert_eq!(speeds, vec![2.0, 2.0, 8.0, 8.0]);
+        assert_eq!(p.cloud_node_at(2).unwrap().name(), "cloud-2");
+        assert_eq!(p.cloud_scheduler().speeds(), vec![2.0, 2.0, 8.0, 8.0]);
+        assert!(p.cloud_node_at(4).is_err(), "out-of-range index is an error");
     }
 
     #[test]
     fn zero_node_tiers_error_instead_of_panicking() {
         let p = Platform::new(PlatformConfig {
             local_nodes: 0,
-            cloud_nodes: 0,
+            tiers: vec![],
             ..Default::default()
         })
         .unwrap();
         assert!(format!("{:#}", p.local_node().unwrap_err()).contains("local_nodes = 0"));
         assert!(format!("{:#}", p.cloud_node().unwrap_err()).contains("cloud_nodes = 0"));
         assert!(p.cloud_lease(None).is_err());
+        assert!(p.cloud_node_at(0).is_err());
     }
 
     #[test]
     fn invalid_config_rejected_at_construction() {
         for bad in [
             PlatformConfig { local_speed: 0.0, ..Default::default() },
-            PlatformConfig { cloud_speed: -1.0, ..Default::default() },
+            PlatformConfig::with_cloud(1, -1.0),
             PlatformConfig { wan_bandwidth: f64::NAN, ..Default::default() },
+            PlatformConfig {
+                tiers: vec![CloudTier::new(1, 4.0), CloudTier::new(1, f64::INFINITY)],
+                ..Default::default()
+            },
         ] {
             assert!(Platform::new(bad).is_err());
         }
@@ -233,10 +326,11 @@ mod tests {
 
     #[test]
     fn cloud_lease_tracks_occupancy() {
-        let p = Platform::new(PlatformConfig { cloud_nodes: 2, ..Default::default() }).unwrap();
+        let p = Platform::new(PlatformConfig::with_cloud(2, 4.0)).unwrap();
         let a = p.cloud_lease(None).unwrap();
         let b = p.cloud_lease(None).unwrap();
         assert_ne!(a.node, b.node, "concurrent leases spread over idle VMs");
+        assert_eq!(a.speed, 4.0, "the lease carries the node's speed");
         let c = p.cloud_lease(None).unwrap();
         assert_eq!(c.position, 1, "third concurrent offload queues");
         drop((a, b, c));

@@ -21,7 +21,10 @@ impl std::fmt::Display for NodeKind {
 }
 
 /// One compute node with a speed factor relative to the reference
-/// (a local cluster node = 1.0).
+/// (a local cluster node = 1.0). Cloud nodes take their speed from
+/// their [`crate::cloud::CloudTier`], so a mixed fleet holds nodes of
+/// several speeds; `index` is global across tiers and is what an
+/// offload lease pins.
 #[derive(Debug)]
 pub struct Node {
     pub kind: NodeKind,

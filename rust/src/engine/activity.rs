@@ -71,7 +71,10 @@ impl Services {
 pub struct ActivityCtx {
     pub services: Arc<Services>,
     /// The node this activity runs on (its tier decides which MDSS
-    /// store is "ours"; its speed scales compute time).
+    /// store is "ours"; its speed scales compute time). For offloaded
+    /// work this is the scheduler-leased VM threaded through the
+    /// offload request — on heterogeneous pools, which VM this is
+    /// changes the simulated time.
     pub node: Arc<Node>,
     /// Accumulated raw compute wall time (scaled by node speed at
     /// settlement) and already-simulated extra time (transfers).

@@ -14,7 +14,11 @@
 //! * **simulated-time accounting**: every step returns its simulated
 //!   duration; sequences add, parallels take the max. Compute cost is
 //!   real (measured PJRT wall time) scaled by node speed; transfer cost
-//!   comes from the metered [`crate::cloud::SimNetwork`].
+//!   comes from the metered [`crate::cloud::SimNetwork`];
+//! * **lease-pinned remote execution**: the cloud-side engine runs each
+//!   offloaded subtree via [`Engine::exec_subtree_on`], pinned to the
+//!   VM the scheduler leased — on heterogeneous pools the simulated
+//!   compute time reflects the node placement actually chose.
 
 pub mod activity;
 pub mod state;
@@ -28,13 +32,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cloud::Node;
 use crate::expr::{self, Value};
 use crate::workflow::{analysis, Step, StepKind, Workflow};
 
 /// Execution trace events (tests and diagnostics).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    /// An activity began on a node.
+    /// An activity began on a node. For an offloaded step this is the
+    /// cloud VM the scheduler leased and the worker executed on (one
+    /// event per offload round trip), so the trace records where every
+    /// piece of work actually ran.
     ActivityStarted { step: String, node: String },
     /// An activity finished; simulated duration in microseconds.
     ActivityFinished { step: String, sim_us: u64 },
@@ -86,6 +94,9 @@ pub struct OffloadOutcome {
     pub sim: Duration,
     /// WriteLine output produced on the cloud.
     pub remote_lines: Vec<String>,
+    /// Name of the cloud VM the step executed on (the scheduler's
+    /// leased node); surfaced as an [`Event::ActivityStarted`].
+    pub node: Option<String>,
 }
 
 /// What the migration manager decided to do with a remotable step.
@@ -129,11 +140,20 @@ struct Ctx<'e> {
     frame: FrameId,
     lines: &'e Mutex<Vec<String>>,
     events: &'e Mutex<Vec<Event>>,
+    /// Node every activity in this context executes on (the offload
+    /// lease's VM on the cloud side); None = tier round-robin.
+    pin: Option<&'e Arc<Node>>,
 }
 
 impl<'e> Ctx<'e> {
     fn at(&self, frame: FrameId) -> Ctx<'e> {
-        Ctx { store: self.store, frame, lines: self.lines, events: self.events }
+        Ctx {
+            store: self.store,
+            frame,
+            lines: self.lines,
+            events: self.events,
+            pin: self.pin,
+        }
     }
 
     fn event(&self, e: Event) {
@@ -195,7 +215,13 @@ impl Engine {
         let store = Mutex::new(VarStore::new());
         let lines = Mutex::new(Vec::new());
         let events = Mutex::new(Vec::new());
-        let ctx = Ctx { store: &store, frame: VarStore::ROOT, lines: &lines, events: &events };
+        let ctx = Ctx {
+            store: &store,
+            frame: VarStore::ROOT,
+            lines: &lines,
+            events: &events,
+            pin: None,
+        };
 
         // Workflow-level variables.
         for v in &wf.variables {
@@ -227,26 +253,44 @@ impl Engine {
         step: &Step,
         seed: BTreeMap<String, Value>,
     ) -> Result<(BTreeMap<String, Value>, Duration, Vec<String>)> {
+        self.exec_subtree_on(step, seed, None)
+    }
+
+    /// As [`Self::exec_subtree`], but pinning every activity in the
+    /// subtree to `node`: the cloud worker passes the offload lease's
+    /// VM here so simulated compute is scaled by the node the
+    /// scheduler actually chose (heterogeneous tiers).
+    pub fn exec_subtree_on(
+        &self,
+        step: &Step,
+        seed: BTreeMap<String, Value>,
+        node: Option<Arc<Node>>,
+    ) -> Result<(BTreeMap<String, Value>, Duration, Vec<String>)> {
         let store = Mutex::new(VarStore::new());
         let lines = Mutex::new(Vec::new());
         let events = Mutex::new(Vec::new());
+        let io = analysis::step_io(step)?;
         {
             let mut s = store.lock().unwrap();
             for (name, value) in &seed {
                 s.declare(VarStore::ROOT, name, Some(value.clone()))?;
             }
             // Declare write targets that aren't also reads.
-            let io = analysis::step_io(step)?;
             for w in &io.writes {
                 if !seed.contains_key(w) {
                     s.declare(VarStore::ROOT, w, None)?;
                 }
             }
         }
-        let ctx = Ctx { store: &store, frame: VarStore::ROOT, lines: &lines, events: &events };
+        let ctx = Ctx {
+            store: &store,
+            frame: VarStore::ROOT,
+            lines: &lines,
+            events: &events,
+            pin: node.as_ref(),
+        };
         let sim = self.exec(step, &ctx)?;
 
-        let io = analysis::step_io(step)?;
         let s = store.lock().unwrap();
         let mut outputs = BTreeMap::new();
         for w in &io.writes {
@@ -411,12 +455,17 @@ impl Engine {
             OffloadVerdict::Executed(outcome) => outcome,
             OffloadVerdict::Declined { reason } => {
                 // The step falls back to local execution (the workflow
-                // still observes a suspend/resume pair, Fig 6).
+                // still observes a suspend/resume pair, Fig 6). The
+                // notice is emitted as an Event::Line like WriteLine
+                // output, so event-trace consumers see the same lines
+                // as `RunReport.lines`.
                 ctx.event(Event::LocalExecution { step: target.display_name.clone() });
-                ctx.lines
-                    .lock()
-                    .unwrap()
-                    .push(format!("[emerald] offload declined: {reason}"));
+                let line = format!("[emerald] offload declined: {reason}");
+                if self.verbose {
+                    println!("{line}");
+                }
+                ctx.event(Event::Line { text: line.clone() });
+                ctx.lines.lock().unwrap().push(line);
                 let sim = self.exec(target, ctx)?;
                 ctx.event(Event::Resumed { step: target.display_name.clone() });
                 return Ok(sim);
@@ -431,11 +480,20 @@ impl Engine {
                 })?;
             }
         }
+        // Record where the work actually ran: the worker reports the
+        // pinned VM, which by construction is the scheduler's lease.
+        if let Some(node) = &outcome.node {
+            ctx.event(Event::ActivityStarted {
+                step: target.display_name.clone(),
+                node: node.clone(),
+            });
+        }
         for l in outcome.remote_lines {
             let line = format!("[cloud] {l}");
             if self.verbose {
                 println!("{line}");
             }
+            ctx.event(Event::Line { text: line.clone() });
             ctx.lines.lock().unwrap().push(line);
         }
         ctx.event(Event::OffloadFinished {
@@ -455,11 +513,16 @@ impl Engine {
         for (param, src) in inputs {
             in_vals.insert(param.clone(), ctx.eval(src)?);
         }
-        let node = match self.tier {
-            crate::cloud::NodeKind::Local => self.services.platform.local_node(),
-            crate::cloud::NodeKind::Cloud => self.services.platform.cloud_node(),
-        }
-        .with_context(|| format!("placing step '{}'", step.display_name))?;
+        // A pinned context (offload lease) overrides tier round-robin:
+        // the activity runs on exactly the VM the scheduler chose.
+        let node = match ctx.pin {
+            Some(n) => Arc::clone(n),
+            None => match self.tier {
+                crate::cloud::NodeKind::Local => self.services.platform.local_node(),
+                crate::cloud::NodeKind::Cloud => self.services.platform.cloud_node(),
+            }
+            .with_context(|| format!("placing step '{}'", step.display_name))?,
+        };
         ctx.event(Event::ActivityStarted {
             step: step.display_name.clone(),
             node: node.name(),

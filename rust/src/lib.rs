@@ -22,14 +22,18 @@
 //!
 //! Paper contributions: [`workflow`] (§3.1–3.2), [`partitioner`]
 //! (§3.1, plus offload batching — runs of consecutive remotable steps
-//! fuse into one migration point), [`engine`] (§3.3), [`migration`]
-//! (§3.3, with an EWMA cost model and multi-step requests), [`mdss`]
-//! (§3.4), [`cloud`] (§4 testbed), [`at`] (§4 application).
+//! fuse into one migration point), [`engine`] (§3.3, with offloaded
+//! subtrees pinned to the scheduler-leased VM), [`migration`] (§3.3,
+//! with an EWMA cost model, multi-step requests and queue-aware
+//! admission control), [`mdss`] (§3.4), [`cloud`] (§4 testbed,
+//! generalized to heterogeneous cloud tiers), [`at`] (§4 application).
 //!
-//! Beyond the paper: [`scheduler`] — load-aware cloud-VM placement
-//! with per-node lease/occupancy tracking and a queueing-delay model,
-//! replacing the seed's blind round-robin (see
-//! `benches/fig13_scheduler.rs` for the A/B comparison).
+//! Beyond the paper: [`scheduler`] — load- and speed-aware cloud-VM
+//! placement (earliest estimated finish time over mixed tiers) with
+//! per-node lease/occupancy tracking, a queueing-delay model, a
+//! deterministic makespan planner and an admission-cap rule, replacing
+//! the seed's blind round-robin (see `benches/fig13_scheduler.rs` for
+//! the A/B comparisons).
 //!
 //! Substrates (offline environment, see DESIGN.md §1): [`jsonmini`],
 //! [`xmlmini`], [`expr`], [`cli`], [`quickprop`], [`benchkit`],

@@ -225,12 +225,17 @@ fn cmd_info(_args: &Args) -> Result<()> {
         Err(e) => println!("runtime unavailable: {e:#}\n(run `make artifacts`)"),
     }
     let cfg = emerald::cloud::PlatformConfig::default();
+    let tiers: Vec<String> = cfg
+        .tiers
+        .iter()
+        .map(|t| format!("{}@x{}", t.nodes, t.speed))
+        .collect();
     println!(
-        "\nplatform: {} local node(s) @x{}, {} cloud VM(s) @x{}, WAN {} Mbit/s, {}ms latency",
+        "\nplatform: {} local node(s) @x{}, {} cloud VM(s) [{}], WAN {} Mbit/s, {}ms latency",
         cfg.local_nodes,
         cfg.local_speed,
-        cfg.cloud_nodes,
-        cfg.cloud_speed,
+        cfg.cloud_nodes(),
+        tiers.join(", "),
         (cfg.wan_bandwidth * 8.0 / 1e6) as u64,
         cfg.wan_latency.as_millis()
     );

@@ -129,6 +129,7 @@ impl<'a> RunMetrics<'a> {
                     ("sync_sim_s", Value::num(m.sync_sim.as_secs_f64())),
                     ("failed_attempts", Value::num(m.failed_attempts as f64)),
                     ("declined", Value::num(m.declined as f64)),
+                    ("admission_declined", Value::num(m.admission_declined as f64)),
                     ("queued", Value::num(m.queued as f64)),
                     ("queue_sim_s", Value::num(m.queue_sim.as_secs_f64())),
                     ("batched_steps", Value::num(m.batched_steps as f64)),

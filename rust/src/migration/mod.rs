@@ -18,21 +18,32 @@
 //! engine (offloading disabled — Property 3 guarantees no nesting),
 //! and returns outputs + the remote simulated time.
 //!
-//! Placement goes through the [`crate::scheduler`]: each offload holds
-//! a cloud-VM lease for its round trip, so concurrent offloads land on
-//! the least-loaded VMs and queueing delay is charged when they
-//! outnumber nodes. The [`Decision::CostBased`] gate keeps EWMA cost
-//! averages per step name (adapting to drift instead of trusting the
-//! first sample), which double as the scheduler's load estimates.
-//! Partitioner-fused batches arrive here as ordinary steps whose
-//! requests carry `batch > 1` — one round trip for a whole run of
-//! remotable steps.
+//! Placement goes through the [`crate::scheduler`]: each offload takes
+//! a cloud-VM lease *before* packaging, pins the leased node into the
+//! request ([`protocol::PinnedNode`]), and holds the lease for the
+//! round trip — so concurrent offloads land by earliest estimated
+//! finish time across heterogeneous tiers, queueing delay is charged
+//! when they outnumber nodes, and the worker executes on exactly the
+//! VM the scheduler chose. The [`Decision::CostBased`] gate keeps EWMA
+//! cost averages per step name (adapting to drift instead of trusting
+//! the first sample); its local estimate divides the observed
+//! reference work by the configured `local_speed`, and its
+//! reference-work average doubles as the scheduler's placement
+//! weight. With [`ManagerConfig::admission`] the manager also applies
+//! admission control: when the scheduler's queue-wait preview plus the
+//! WAN-inclusive remote estimate pushes projected completion past the
+//! local estimate, the step runs locally instead.
+//! [`crate::scheduler::admission_cap`] is the offline planner variant
+//! of the same principle (pure compute makespans over a known task
+//! list, no WAN term). Partitioner-fused batches
+//! arrive here as ordinary steps whose requests carry `batch > 1` —
+//! one round trip for a whole run of remotable steps.
 
 pub mod protocol;
 pub mod security;
 pub mod transport;
 
-pub use protocol::{OffloadRequest, OffloadResponse};
+pub use protocol::{OffloadRequest, OffloadResponse, PinnedNode};
 pub use security::SigningKey;
 pub use transport::{serve_tcp, InProcTransport, TcpTransport, Transport};
 
@@ -42,7 +53,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cloud::NodeKind;
+use crate::cloud::{Node, NodeKind};
 use crate::engine::{
     ActivityRegistry, Engine, OffloadHandler, OffloadOutcome, OffloadVerdict, Services,
 };
@@ -85,11 +96,17 @@ pub struct ManagerConfig {
     pub local_fallback: bool,
     /// Sign requests with this key (worker must hold the same key).
     pub signing: Option<SigningKey>,
+    /// Admission control (planner-driven): decline an offload when the
+    /// scheduler's queue-wait preview plus the expected round trip
+    /// would exceed the local estimate — queueing on a busy (slow)
+    /// tier must not make offloading a loss. Needs cost history for
+    /// the step; first sightings are always admitted.
+    pub admission: bool,
 }
 
 impl ManagerConfig {
     /// Paper defaults: MDSS placement, always offload, one attempt,
-    /// no fallback, no signing.
+    /// no fallback, no signing, no admission control.
     pub fn new(policy: DataPolicy) -> Self {
         Self {
             policy,
@@ -97,6 +114,7 @@ impl ManagerConfig {
             attempts: 1,
             local_fallback: false,
             signing: None,
+            admission: false,
         }
     }
 }
@@ -115,9 +133,12 @@ pub struct MigrationStats {
     pub sync_sim: Duration,
     /// Transport attempts that failed (retried or fallen back).
     pub failed_attempts: u64,
-    /// Offloads declined by the cost model, by fallback, or because no
-    /// cloud nodes are configured.
+    /// Offloads declined by the cost model, by admission control, by
+    /// fallback, or because no cloud nodes are configured.
     pub declined: u64,
+    /// The subset of `declined` due to admission control (projected
+    /// queueing past the local estimate).
+    pub admission_declined: u64,
     /// Offloads whose cloud VM already had in-flight work (scheduler
     /// lease position > 0).
     pub queued: u64,
@@ -126,6 +147,26 @@ pub struct MigrationStats {
     /// Extra steps that rode in multi-step (batched) requests — each
     /// one is a WAN round trip the batching pass amortized away.
     pub batched_steps: u64,
+}
+
+impl MigrationStats {
+    /// Fold a per-offload delta into the cumulative totals. Every
+    /// offload commits exactly once through this single point — on
+    /// success, decline *and* error paths — so a mid-offload failure
+    /// can never leave half-applied statistics.
+    fn absorb(&mut self, d: &MigrationStats) {
+        self.offloads += d.offloads;
+        self.protocol_bytes += d.protocol_bytes;
+        self.data_hits += d.data_hits;
+        self.data_syncs += d.data_syncs;
+        self.sync_sim += d.sync_sim;
+        self.failed_attempts += d.failed_attempts;
+        self.declined += d.declined;
+        self.admission_declined += d.admission_declined;
+        self.queued += d.queued;
+        self.queue_sim += d.queue_sim;
+        self.batched_steps += d.batched_steps;
+    }
 }
 
 /// Smoothing factor for the cost model's running averages.
@@ -141,28 +182,40 @@ struct CostRecord {
     local_est_us: f64,
     /// EWMA of the observed remote round-trip time (µs).
     remote_obs_us: f64,
+    /// EWMA of the reference compute work (remote compute × node
+    /// speed, µs on a speed-1.0 node) — the scheduler's placement
+    /// weight, meaningful across tiers of different speeds.
+    work_us: f64,
     /// Observations folded into the averages.
     samples: u64,
 }
 
 impl CostRecord {
-    fn observe(&mut self, local_est: Duration, remote_obs: Duration) {
+    fn observe(&mut self, local_est: Duration, remote_obs: Duration, work: Duration) {
         let local_us = local_est.as_secs_f64() * 1e6;
         let remote_us = remote_obs.as_secs_f64() * 1e6;
+        let work_us = work.as_secs_f64() * 1e6;
         if self.samples == 0 {
             self.local_est_us = local_us;
             self.remote_obs_us = remote_us;
+            self.work_us = work_us;
         } else {
             self.local_est_us = EWMA_ALPHA * local_us + (1.0 - EWMA_ALPHA) * self.local_est_us;
             self.remote_obs_us =
                 EWMA_ALPHA * remote_us + (1.0 - EWMA_ALPHA) * self.remote_obs_us;
+            self.work_us = EWMA_ALPHA * work_us + (1.0 - EWMA_ALPHA) * self.work_us;
         }
         self.samples += 1;
     }
 
-    /// Expected remote round trip, once observed (scheduler hint).
+    /// Expected remote round trip, once observed.
     fn remote_estimate(&self) -> Option<Duration> {
         (self.samples > 0).then(|| Duration::from_secs_f64(self.remote_obs_us / 1e6))
+    }
+
+    /// Expected reference compute work, once observed (scheduler hint).
+    fn work_estimate(&self) -> Option<Duration> {
+        (self.samples > 0).then(|| Duration::from_secs_f64(self.work_us / 1e6))
     }
 }
 
@@ -313,29 +366,48 @@ impl MigrationManager {
         }
     }
 
-    /// Expected remote round trip for a step, from the cost history
-    /// (used as the scheduler's load estimate).
-    fn estimate_remote(&self, step: &Step) -> Option<Duration> {
-        self.history
-            .lock()
-            .unwrap()
-            .get(&step.display_name)
-            .and_then(CostRecord::remote_estimate)
+    /// One locked history lookup serving the whole offload path:
+    /// the reference-work estimate (the scheduler's
+    /// earliest-finish-time placement weight) and the
+    /// `(local estimate, expected remote round trip)` pair the
+    /// admission gate compares. `(None, None)` before any observation.
+    fn estimates(&self, step: &Step) -> (Option<Duration>, Option<(Duration, Duration)>) {
+        let history = self.history.lock().unwrap();
+        match history.get(&step.display_name) {
+            Some(rec) => (
+                rec.work_estimate(),
+                rec.remote_estimate().map(|remote| {
+                    (Duration::from_secs_f64(rec.local_est_us / 1e6), remote)
+                }),
+            ),
+            None => (None, None),
+        }
     }
 
-    /// Fold an observed round trip into the cost model. The local
-    /// estimate is recovered from the remote compute time (remote ran
-    /// at `cloud_speed`, so local ≈ remote_compute × cloud_speed).
-    fn record_costs(&self, step: &Step, remote_total: Duration, remote_compute: Duration) {
+    /// Fold an observed round trip into the cost model.
+    /// `remote_compute` is simulated time on the leased node (speed
+    /// `node_speed`), so the reference work is `remote_compute ×
+    /// node_speed` and the local estimate divides that by the local
+    /// tier's speed — the `CostBased` gate stays unbiased when
+    /// `local_speed != 1.0` (the old formula silently assumed a
+    /// speed-1.0 local cluster).
+    fn record_costs(
+        &self,
+        step: &Step,
+        remote_total: Duration,
+        remote_compute: Duration,
+        node_speed: f64,
+    ) {
+        let work = Duration::from_secs_f64(remote_compute.as_secs_f64() * node_speed);
         let local_est = Duration::from_secs_f64(
-            remote_compute.as_secs_f64() * self.services.platform.config.cloud_speed,
+            work.as_secs_f64() / self.services.platform.config.local_speed,
         );
         self.history
             .lock()
             .unwrap()
             .entry(step.display_name.clone())
             .or_default()
-            .observe(local_est, remote_total);
+            .observe(local_est, remote_total, work);
     }
 }
 
@@ -346,10 +418,28 @@ impl OffloadHandler for MigrationManager {
         inputs: BTreeMap<String, Value>,
         writes: &[String],
     ) -> Result<OffloadVerdict> {
+        // Every counter for this offload accumulates in a local delta
+        // and commits exactly once — success, decline or error — so a
+        // mid-offload failure can't leave half-applied stats.
+        let mut delta = MigrationStats::default();
+        let result = self.offload_inner(step, inputs, writes, &mut delta);
+        self.stats.lock().unwrap().absorb(&delta);
+        result
+    }
+}
+
+impl MigrationManager {
+    fn offload_inner(
+        &self,
+        step: &Step,
+        inputs: BTreeMap<String, Value>,
+        writes: &[String],
+        delta: &mut MigrationStats,
+    ) -> Result<OffloadVerdict> {
         // 0a. A zero-cloud platform declines instead of panicking
-        //     (regression: `PlatformConfig { cloud_nodes: 0, .. }`).
+        //     (regression: `PlatformConfig { tiers: vec![], .. }`).
         if self.services.platform.cloud_size() == 0 {
-            self.stats.lock().unwrap().declined += 1;
+            delta.declined += 1;
             return Ok(OffloadVerdict::Declined {
                 reason: "no cloud nodes configured; executing locally".into(),
             });
@@ -357,38 +447,89 @@ impl OffloadHandler for MigrationManager {
 
         // 0b. Cost-model gate (E8; the paper always offloads).
         if let Some(reason) = self.should_offload(step) {
-            self.stats.lock().unwrap().declined += 1;
+            delta.declined += 1;
             return Ok(OffloadVerdict::Declined { reason });
         }
 
+        // 0c. Admission control: preview the lease the scheduler
+        //     would grant; if the projected queueing behind in-flight
+        //     work plus the expected round trip exceeds the local
+        //     estimate, running locally is faster right now.
+        //     Deliberately only triggers under contention (active
+        //     leases or pending work on the previewed node) — the
+        //     intrinsic remote-vs-local tradeoff is the CostBased
+        //     gate's job.
+        let (work_est, cost_est) = self.estimates(step);
+        if self.config.admission {
+            if let Some((local_est, remote_est)) = cost_est {
+                if let Some(p) = self.services.platform.cloud_scheduler().preview(work_est) {
+                    // Projected queueing on the previewed node: the
+                    // larger of its pending-work drain time and the
+                    // position-based projection the engine actually
+                    // charges (position × node-scaled compute, no WAN
+                    // term) — so in-flight leases without a work
+                    // estimate still count, without over-declining
+                    // WAN-dominated steps.
+                    let scaled_work = work_est.map_or(Duration::ZERO, |w| {
+                        Duration::from_secs_f64(w.as_secs_f64() / p.speed)
+                    });
+                    let queue = p.wait.max(scaled_work.saturating_mul(p.active as u32));
+                    let contended = p.active > 0 || p.wait > Duration::ZERO;
+                    if contended && queue + remote_est >= local_est {
+                        delta.declined += 1;
+                        delta.admission_declined += 1;
+                        return Ok(OffloadVerdict::Declined {
+                            reason: format!(
+                                "admission control: ~{}ms queued on cloud-{} pushes \
+                                 completion past the ~{}ms local estimate for '{}'",
+                                queue.as_millis(),
+                                p.node,
+                                local_est.as_millis(),
+                                step.display_name
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
         let net = &self.services.platform.network;
-        let mut stats_delta = MigrationStats::default();
         let mut sim = Duration::ZERO;
 
         // 1. Data placement (MDSS freshness / bundling).
         let uris = Self::data_uris(&inputs)?;
-        let sync_sim = self.place_data(&uris, &mut stats_delta)?;
-        stats_delta.sync_sim = sync_sim;
+        let sync_sim = self.place_data(&uris, delta)?;
+        delta.sync_sim += sync_sim;
         sim += sync_sim;
 
-        // 2. Package (+ sign) + uplink.
+        // 2. Lease a cloud VM (earliest-finish-time placement across
+        //    tiers, weighted by the cost model's reference-work
+        //    estimate) *before* packaging, so the leased node rides in
+        //    the signed request and pins remote execution. The lease
+        //    is held across the round trip so concurrent offloads
+        //    observe each other's occupancy.
+        let lease = self
+            .services
+            .platform
+            .cloud_lease(work_est)
+            .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
+        let node = self
+            .services
+            .platform
+            .cloud_node_at(lease.node)
+            .with_context(|| format!("resolving the leased VM for '{}'", step.display_name))?;
+
+        // 3. Package (+ pin + sign) + uplink.
         let mut req = OffloadRequest::package(step, inputs, writes);
+        req.node = Some(PinnedNode { index: node.index, speed: node.speed });
         if let Some(key) = &self.config.signing {
             req.sign(key);
         }
         let req_bytes = req.encode();
         sim += net.transfer(req_bytes.len() as u64);
 
-        // 3. Lease a cloud VM (load-aware placement, weighted by the
-        //    cost model's round-trip estimate), then execute remotely
-        //    with retries; real bytes through the transport either way.
-        //    The lease is held across the round trip so concurrent
-        //    offloads observe each other's occupancy.
-        let lease = self
-            .services
-            .platform
-            .cloud_lease(self.estimate_remote(step))
-            .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
+        // 4. Execute remotely with retries; real bytes through the
+        //    transport either way.
         let mut last_err = None;
         let mut resp_bytes = None;
         for attempt in 0..self.config.attempts.max(1) {
@@ -398,7 +539,7 @@ impl OffloadHandler for MigrationManager {
                     break;
                 }
                 Err(e) => {
-                    self.stats.lock().unwrap().failed_attempts += 1;
+                    delta.failed_attempts += 1;
                     last_err = Some(e);
                     if attempt + 1 < self.config.attempts {
                         continue;
@@ -409,7 +550,7 @@ impl OffloadHandler for MigrationManager {
         let Some(resp_bytes) = resp_bytes else {
             let err = last_err.unwrap();
             if self.config.local_fallback {
-                self.stats.lock().unwrap().declined += 1;
+                delta.declined += 1;
                 return Ok(OffloadVerdict::Declined {
                     reason: format!("cloud unreachable after {} attempt(s): {err:#}",
                         self.config.attempts),
@@ -424,7 +565,7 @@ impl OffloadHandler for MigrationManager {
         let remote_sim = Duration::from_micros(resp.remote_sim_us);
         sim += remote_sim;
 
-        // 3b. Queueing delay: a VM runs one offload at a time in
+        // 4b. Queueing delay: a VM runs one offload at a time in
         //     simulated time, so a lease granted behind `position`
         //     in-flight offloads waits for comparable work to drain.
         //     `position` reflects real lease overlap, so this term is
@@ -433,14 +574,15 @@ impl OffloadHandler for MigrationManager {
         //     without oversubscribed clouds are unaffected. For a
         //     machine-independent policy comparison use
         //     `scheduler::simulate_makespan`.
-        let queue_sim = remote_sim * lease.position as u32;
+        let position = lease.position;
+        let queue_sim = remote_sim * position as u32;
         sim += queue_sim;
         drop(lease);
 
-        // 4. Downlink + re-integration.
+        // 5. Downlink + re-integration.
         sim += net.transfer(resp_bytes.len() as u64);
 
-        // 5. BundleAlways baseline also ships result data back eagerly.
+        // 6. BundleAlways baseline also ships result data back eagerly.
         if self.config.policy == DataPolicy::BundleAlways {
             let s = self.services.mdss.synchronize_all()?;
             sim += s.sim_time;
@@ -451,29 +593,23 @@ impl OffloadHandler for MigrationManager {
         // transient scheduling artifact, and folding it in would let a
         // momentary pile-up tip the CostBased gate into declining the
         // step — after which no new samples arrive to ever undo it.
-        self.record_costs(step, sim - queue_sim, remote_sim);
+        self.record_costs(step, sim - queue_sim, remote_sim, node.speed);
 
-        stats_delta.offloads = 1;
-        stats_delta.protocol_bytes = (req_bytes.len() + resp_bytes.len()) as u64;
-        stats_delta.queued = u64::from(queue_sim > Duration::ZERO);
-        stats_delta.queue_sim = queue_sim;
-        stats_delta.batched_steps = req.batch.saturating_sub(1);
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.offloads += stats_delta.offloads;
-            st.protocol_bytes += stats_delta.protocol_bytes;
-            st.data_hits += stats_delta.data_hits;
-            st.data_syncs += stats_delta.data_syncs;
-            st.sync_sim += stats_delta.sync_sim;
-            st.queued += stats_delta.queued;
-            st.queue_sim += stats_delta.queue_sim;
-            st.batched_steps += stats_delta.batched_steps;
-        }
+        delta.offloads = 1;
+        delta.protocol_bytes = (req_bytes.len() + resp_bytes.len()) as u64;
+        delta.queued = u64::from(position > 0);
+        delta.queue_sim = queue_sim;
+        delta.batched_steps = req.batch.saturating_sub(1);
 
+        // Report only what the worker says it executed on — a legacy
+        // worker that ignored the pin placed the work itself, and
+        // fabricating the leased name here would put a VM the work
+        // never ran on into the trace.
         Ok(OffloadVerdict::Executed(OffloadOutcome {
             outputs: resp.outputs,
             sim,
             remote_lines: resp.lines,
+            node: resp.node,
         }))
     }
 }
@@ -514,11 +650,23 @@ impl CloudWorker {
             Ok(s) => s,
             Err(e) => return OffloadResponse::err(format!("{e:#}")),
         };
-        match self.engine.exec_subtree(&step, req.inputs.clone()) {
+        // Reconstruct the leased VM from the placement pin so compute
+        // scales on exactly the node the scheduler chose (works even
+        // over TCP where the worker's own platform config may differ).
+        // Requests without a pin (legacy peers) or with an unusable
+        // speed fall back to the remote engine's round-robin pick.
+        let pin = req.node.and_then(|p| {
+            (p.speed.is_finite() && p.speed > 0.0)
+                .then(|| Arc::new(Node::new(NodeKind::Cloud, p.index, p.speed)))
+        });
+        let executed_on = pin.as_ref().map(|n| n.name());
+        match self.engine.exec_subtree_on(&step, req.inputs.clone(), pin) {
             Ok((mut outputs, sim, lines)) => {
                 // Only the declared writes travel back.
                 outputs.retain(|k, _| req.writes.contains(k));
-                OffloadResponse::ok(outputs, sim, lines)
+                let mut resp = OffloadResponse::ok(outputs, sim, lines);
+                resp.node = executed_on;
+                resp
             }
             Err(e) => OffloadResponse::err(format!("{e:#}")),
         }
@@ -740,18 +888,21 @@ mod tests {
         let ms = Duration::from_millis;
         let mut rec = CostRecord::default();
         assert!(rec.remote_estimate().is_none());
-        rec.observe(ms(100), ms(200));
+        assert!(rec.work_estimate().is_none());
+        rec.observe(ms(100), ms(200), ms(100));
         assert!(rec.remote_obs_us >= rec.local_est_us, "first regime: remote loses");
         // The regime changes (cloud sped up / data became fresh): the
         // seed's single-sample record would stay locked on the first
         // observation; the EWMA converges.
         for _ in 0..20 {
-            rec.observe(ms(100), ms(10));
+            rec.observe(ms(100), ms(10), ms(40));
         }
         assert!(rec.remote_obs_us < rec.local_est_us, "EWMA must adapt: {rec:?}");
         assert_eq!(rec.samples, 21);
         let est = rec.remote_estimate().unwrap();
         assert!(est > ms(5) && est < ms(50), "estimate near new regime: {est:?}");
+        let work = rec.work_estimate().unwrap();
+        assert!(work > ms(35) && work < ms(100), "work EWMA converges: {work:?}");
     }
 
     #[test]
@@ -808,7 +959,7 @@ mod tests {
     #[test]
     fn zero_cloud_platform_declines_instead_of_panicking() {
         let platform = Platform::new(crate::cloud::PlatformConfig {
-            cloud_nodes: 0,
+            tiers: vec![],
             ..Default::default()
         })
         .unwrap();

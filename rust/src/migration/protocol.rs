@@ -19,6 +19,20 @@ use crate::expr::Value;
 use crate::jsonmini::{self, Value as J};
 use crate::workflow::{xaml, Step, StepKind};
 
+/// Placement pin: the cloud VM the scheduler leased for this offload.
+/// Both the index and the speed travel so the worker executes on
+/// exactly the node the scheduler chose even when its own platform
+/// config differs — this is what keeps placement and execution from
+/// diverging on heterogeneous pools.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PinnedNode {
+    /// Global cloud-node index (tier order; see
+    /// [`crate::cloud::Platform::cloud_node_at`]).
+    pub index: usize,
+    /// Speed factor of the leased VM.
+    pub speed: f64,
+}
+
 /// Request: offload one step — or one *batch* of fused steps.
 ///
 /// The partitioner's offload batching fuses a run of consecutive
@@ -26,7 +40,9 @@ use crate::workflow::{xaml, Step, StepKind};
 /// travels as ordinary task code (`step_xml`), and [`Self::batch`]
 /// records how many developer-visible steps ride in the request, so
 /// both sides can account multi-step round trips. Requests from older
-/// peers without the field decode as `batch = 1`.
+/// peers without the `batch`/`node` fields decode as `batch = 1` with
+/// no placement pin (the worker falls back to its local round-robin
+/// pick).
 #[derive(Debug, PartialEq)]
 pub struct OffloadRequest {
     /// The step subtree as XAML text (the "task code").
@@ -37,8 +53,12 @@ pub struct OffloadRequest {
     pub writes: Vec<String>,
     /// Number of fused steps carried by this request (>= 1).
     pub batch: u64,
+    /// The leased cloud VM every activity in the request executes on
+    /// (set by the migration manager after taking its scheduler lease).
+    pub node: Option<PinnedNode>,
     /// Optional authentication tag over task code + inputs + writes
-    /// (future-work §6; see [`super::security`]).
+    /// (+ the placement pin when present; future-work §6, see
+    /// [`super::security`]).
     pub sig: Option<String>,
 }
 
@@ -66,6 +86,10 @@ pub struct OffloadResponse {
     pub remote_sim_us: u64,
     /// Cloud-side WriteLine output.
     pub lines: Vec<String>,
+    /// Name of the VM the request executed on (e.g. `cloud-3`), when
+    /// the request carried a placement pin. Lets the local engine's
+    /// trace record the node that actually ran the work.
+    pub node: Option<String>,
     /// Error message when remote execution failed.
     pub error: Option<String>,
 }
@@ -106,25 +130,35 @@ fn map_from_json(j: &J) -> Result<BTreeMap<String, Value>> {
 }
 
 impl OffloadRequest {
-    /// Package a step (or fused batch) for the wire.
+    /// Package a step (or fused batch) for the wire. The placement pin
+    /// ([`Self::node`]) is attached afterwards by the migration
+    /// manager, once it holds a scheduler lease.
     pub fn package(step: &Step, inputs: BTreeMap<String, Value>, writes: &[String]) -> Self {
         Self {
             step_xml: xaml::step_to_xml(step),
             inputs,
             writes: writes.to_vec(),
             batch: batch_len(step),
+            node: None,
             sig: None,
         }
     }
 
     /// The canonical byte string authentication covers (everything the
-    /// cloud will act on).
+    /// cloud will act on). The placement pin is folded in only when
+    /// present, so signatures over pin-less requests stay
+    /// byte-compatible with older peers.
     pub fn signable(&self) -> Vec<u8> {
         let mut msg = self.step_xml.clone().into_bytes();
         msg.extend_from_slice(jsonmini::to_string(&map_to_json(&self.inputs)).as_bytes());
         for w in &self.writes {
             msg.extend_from_slice(w.as_bytes());
             msg.push(0);
+        }
+        if let Some(n) = &self.node {
+            msg.extend_from_slice(b"node");
+            msg.extend_from_slice(&(n.index as u64).to_le_bytes());
+            msg.extend_from_slice(&n.speed.to_bits().to_le_bytes());
         }
         msg
     }
@@ -153,6 +187,16 @@ impl OffloadRequest {
                 J::Arr(self.writes.iter().map(|w| J::str(w.clone())).collect()),
             ),
             ("batch", J::num(self.batch as f64)),
+            (
+                "node",
+                match &self.node {
+                    Some(n) => J::obj([
+                        ("index", J::num(n.index as f64)),
+                        ("speed", J::num(n.speed)),
+                    ]),
+                    None => J::Null,
+                },
+            ),
             (
                 "sig",
                 match &self.sig {
@@ -185,6 +229,14 @@ impl OffloadRequest {
                 None | Some(J::Null) => 1,
                 Some(v) => (v.as_f64()? as u64).max(1),
             },
+            // Wire-compatible with pre-tier peers: absent -> no pin.
+            node: match j.get_opt("node") {
+                None | Some(J::Null) => None,
+                Some(v) => Some(PinnedNode {
+                    index: v.get("index")?.as_usize()?,
+                    speed: v.get("speed")?.as_f64()?,
+                }),
+            },
             sig: match j.get_opt("sig") {
                 None | Some(J::Null) => None,
                 Some(s) => Some(s.as_str()?.to_string()),
@@ -211,13 +263,20 @@ impl OffloadResponse {
             outputs,
             remote_sim_us: remote_sim.as_micros() as u64,
             lines,
+            node: None,
             error: None,
         }
     }
 
     /// Failure response.
     pub fn err(msg: String) -> Self {
-        Self { outputs: BTreeMap::new(), remote_sim_us: 0, lines: Vec::new(), error: Some(msg) }
+        Self {
+            outputs: BTreeMap::new(),
+            remote_sim_us: 0,
+            lines: Vec::new(),
+            node: None,
+            error: Some(msg),
+        }
     }
 
     /// Serialize.
@@ -229,6 +288,13 @@ impl OffloadResponse {
             (
                 "lines",
                 J::Arr(self.lines.iter().map(|l| J::str(l.clone())).collect()),
+            ),
+            (
+                "node",
+                match &self.node {
+                    Some(n) => J::str(n.clone()),
+                    None => J::Null,
+                },
             ),
             (
                 "error",
@@ -257,6 +323,10 @@ impl OffloadResponse {
                 .iter()
                 .map(|l| Ok(l.as_str()?.to_string()))
                 .collect::<Result<_>>()?,
+            node: match j.get_opt("node") {
+                None | Some(J::Null) => None,
+                Some(n) => Some(n.as_str()?.to_string()),
+            },
             error: match j.get("error")? {
                 J::Null => None,
                 e => Some(e.as_str()?.to_string()),
@@ -288,9 +358,11 @@ mod tests {
         inputs.insert("syn".to_string(), Value::Uri("mdss://at/syn".into()));
         inputs.insert("k".to_string(), Value::Num(3.5));
         inputs.insert("quote".to_string(), Value::Str("a\"b\nc".into()));
-        let req = OffloadRequest::package(&sample_step(), inputs, &["misfit".to_string()]);
+        let mut req = OffloadRequest::package(&sample_step(), inputs, &["misfit".to_string()]);
+        req.node = Some(PinnedNode { index: 7, speed: 8.0 });
         let back = OffloadRequest::decode(&req.encode()).unwrap();
         assert_eq!(back, req);
+        assert_eq!(back.node, Some(PinnedNode { index: 7, speed: 8.0 }));
         // Task code round-trips to the same step tree.
         let step = back.step().unwrap();
         assert_eq!(step.display_name, "misfit");
@@ -298,18 +370,44 @@ mod tests {
     }
 
     #[test]
+    fn legacy_request_without_node_field_decodes_unpinned() {
+        let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        assert_eq!(req.node, None);
+        let legacy = String::from_utf8(req.encode())
+            .unwrap()
+            .replace("\"node\": null,", "")
+            .replace("\"node\":null,", "");
+        let back = OffloadRequest::decode(legacy.as_bytes()).unwrap();
+        assert_eq!(back.node, None);
+    }
+
+    #[test]
+    fn tampered_placement_pin_breaks_the_signature() {
+        let key = crate::migration::security::SigningKey::new(b"k".to_vec());
+        let mut req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        req.node = Some(PinnedNode { index: 1, speed: 4.0 });
+        req.sign(&key);
+        let mut back = OffloadRequest::decode(&req.encode()).unwrap();
+        assert!(back.verify(&key));
+        back.node = Some(PinnedNode { index: 0, speed: 0.5 });
+        assert!(!back.verify(&key), "redirecting the pin must invalidate the tag");
+    }
+
+    #[test]
     fn response_roundtrip() {
         let mut outputs = BTreeMap::new();
         outputs.insert("misfit".to_string(), Value::Num(0.25));
         outputs.insert("done".to_string(), Value::Bool(true));
-        let resp = OffloadResponse::ok(
+        let mut resp = OffloadResponse::ok(
             outputs,
             std::time::Duration::from_micros(12345),
             vec!["remote line".to_string()],
         );
+        resp.node = Some("cloud-3".to_string());
         let back = OffloadResponse::decode(&resp.encode()).unwrap();
         assert_eq!(back, resp);
         assert_eq!(back.remote_sim_us, 12345);
+        assert_eq!(back.node.as_deref(), Some("cloud-3"));
     }
 
     #[test]

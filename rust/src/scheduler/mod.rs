@@ -1,39 +1,50 @@
-//! Load-aware offload scheduling (replaces the seed's blind
+//! Load- and speed-aware offload scheduling (replaces the seed's blind
 //! round-robin cloud-VM selection).
 //!
 //! The paper's testbed offloads every remotable step to "the cloud"
 //! without saying which VM; the seed picked VMs round-robin, ignoring
-//! occupancy, so concurrent `Parallel` offloads could pile onto one
-//! node while others idled. This module makes placement a first-class
-//! decision:
+//! occupancy, and PR 1's least-loaded policy ignored node speeds. Real
+//! offloading targets are mixed fleets (Juve et al.'s EC2 studies show
+//! instance choice dominates cost/performance), so this module makes
+//! placement a first-class, heterogeneity-aware decision:
 //!
-//! * [`NodeScheduler`] — per-node occupancy ledger. The migration
-//!   manager takes a [`Lease`] on a node for the duration of an
-//!   offload round trip; the scheduler tracks active leases and a
-//!   pending-work estimate per node (fed by the migration manager's
-//!   EWMA cost model).
-//! * [`SchedulePolicy::LeastLoaded`] (the new default) places each
-//!   lease on the node with the least pending estimated work, breaking
-//!   ties by active-lease count and then node index —  so N concurrent
-//!   offloads on a K-node pool never put more than ⌈N/K⌉ on one node.
-//!   [`SchedulePolicy::RoundRobin`] reproduces the seed behaviour for
-//!   A/B comparison (`benches/fig13_scheduler.rs`).
+//! * [`NodeScheduler`] — per-node occupancy ledger over a pool whose
+//!   nodes each have a *speed factor*. The migration manager takes a
+//!   [`Lease`] on a node for the duration of an offload round trip;
+//!   the scheduler tracks active leases and a pending-work estimate
+//!   per node. Estimates are in **reference-work units** (compute wall
+//!   time on a speed-1.0 node, fed by the migration manager's EWMA
+//!   cost model), so a fast node drains the same queue sooner.
+//! * [`SchedulePolicy::LeastLoaded`] (the default) is
+//!   **earliest-estimated-finish-time**: each lease goes to the node
+//!   minimizing `(pending work + this estimate) / speed`, breaking
+//!   ties by active-lease count, then by preferring the faster node,
+//!   then by index. On a homogeneous pool this reduces exactly to
+//!   classic least-loaded. [`SchedulePolicy::LeastLoadedBlind`] keeps
+//!   the speed-blind least-pending-work policy (PR 1) and
+//!   [`SchedulePolicy::RoundRobin`] the seed behaviour, both for A/B
+//!   comparison (`benches/fig13_scheduler.rs`).
 //! * **Queueing-delay model**: a cloud VM executes one offload at a
 //!   time in simulated time. A lease granted while `k` leases are
 //!   already active on the chosen node records `position = k`; the
 //!   migration manager charges `position × remote_time` of simulated
 //!   queueing delay, modelling the wait behind in-flight work when
 //!   offloads outnumber nodes.
+//! * **The lease pins the executing node.** [`Lease::node`] and
+//!   [`Lease::speed`] travel with the offload request, and the remote
+//!   engine scales compute on exactly that VM — placement and
+//!   execution can no longer diverge, which matters as soon as speeds
+//!   differ (the old round-robin executor could charge a slow node's
+//!   time for work the scheduler placed on a fast one).
 //! * [`simulate_makespan`] — deterministic discrete-placement model of
-//!   the same policies over a known task list (per-node virtual finish
-//!   clocks). Used by the scheduler bench to compare policies without
-//!   thread-timing noise.
-//!
-//! The cloud pool is homogeneous (one speed factor), so the lease's
-//! node index governs *occupancy accounting* — which VM the remote
-//! engine scales compute on is immaterial to simulated time and stays
-//! on its own round-robin. If heterogeneous VM speeds land (ROADMAP),
-//! the lease index must also pin the executing node.
+//!   the same policies over a known task list and per-node speeds
+//!   (virtual finish clocks). [`admission_cap`] builds on it: the
+//!   planner's rule for how many offloads to admit before queueing on
+//!   the slow tier would exceed the local estimate (pure compute
+//!   makespans). The migration manager applies the same queueing
+//!   *principle* at lease time via [`NodeScheduler::preview`] with
+//!   WAN-inclusive cost-model estimates (`ManagerConfig::admission`),
+//!   so the two can differ when WAN latency dominates a round trip.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -46,24 +57,48 @@ use anyhow::{bail, Result};
 pub enum SchedulePolicy {
     /// Blind cycling over the pool (the seed behaviour).
     RoundRobin,
-    /// Least pending estimated work, then fewest active leases, then
-    /// lowest index.
+    /// Earliest estimated finish time: least `(pending + estimate) /
+    /// speed`, then fewest active leases, then the faster node, then
+    /// the lowest index. Reduces to classic least-loaded on a
+    /// homogeneous pool.
     LeastLoaded,
+    /// Speed-blind least pending reference work (the PR-1 policy,
+    /// kept as the A/B baseline for heterogeneous pools).
+    LeastLoadedBlind,
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Clone, Copy)]
 struct Slot {
     /// Leases currently held on this node.
     active: usize,
-    /// Sum of the estimated durations of active leases (µs).
+    /// Sum of the estimated reference work of active leases (µs on a
+    /// speed-1.0 node).
     pending_us: f64,
+    /// Speed factor of this node (reference = 1.0).
+    speed: f64,
 }
 
-/// Occupancy-tracking scheduler over a homogeneous node pool.
+/// Occupancy-tracking scheduler over a (possibly heterogeneous) pool.
 pub struct NodeScheduler {
     policy: SchedulePolicy,
     rr: AtomicUsize,
     slots: Mutex<Vec<Slot>>,
+}
+
+/// Dry-run result of [`NodeScheduler::preview`].
+#[derive(Debug, Clone, Copy)]
+pub struct LeasePreview {
+    /// Node the policy would choose for the next lease.
+    pub node: usize,
+    /// Speed factor of that node.
+    pub speed: f64,
+    /// Simulated time until that node's pending estimated work drains
+    /// (`pending / speed`).
+    pub wait: Duration,
+    /// Leases currently active on that node. Estimate-less leases
+    /// contribute no pending work but still occupy the VM, so callers
+    /// projecting queueing delay must consider both fields.
+    pub active: usize,
 }
 
 /// A granted slot on a node; released on drop.
@@ -74,16 +109,38 @@ pub struct Lease {
     /// Number of leases already active on that node at grant time
     /// (0 = the node was idle).
     pub position: usize,
+    /// Speed factor of the leased node — pins remote execution to the
+    /// VM the scheduler chose.
+    pub speed: f64,
     estimate_us: f64,
 }
 
 impl NodeScheduler {
-    /// New scheduler over `nodes` identical nodes.
+    /// New scheduler over `nodes` identical speed-1.0 nodes.
     pub fn new(policy: SchedulePolicy, nodes: usize) -> Arc<Self> {
+        Self::heterogeneous(policy, vec![1.0; nodes])
+    }
+
+    /// New scheduler over a pool with one speed factor per node.
+    /// Panics on non-positive or non-finite speeds (like
+    /// [`crate::cloud::Node::new`]) — failing at construction beats a
+    /// NaN surfacing in a later placement computation.
+    pub fn heterogeneous(policy: SchedulePolicy, speeds: Vec<f64>) -> Arc<Self> {
         Arc::new(Self {
             policy,
             rr: AtomicUsize::new(0),
-            slots: Mutex::new(vec![Slot::default(); nodes]),
+            slots: Mutex::new(
+                speeds
+                    .into_iter()
+                    .map(|speed| {
+                        assert!(
+                            speed.is_finite() && speed > 0.0,
+                            "node speed must be a positive finite number, got {speed}"
+                        );
+                        Slot { active: 0, pending_us: 0.0, speed }
+                    })
+                    .collect(),
+            ),
         })
     }
 
@@ -107,20 +164,23 @@ impl NodeScheduler {
         self.slots.lock().unwrap().iter().map(|s| s.active).collect()
     }
 
-    /// Take a lease on a node. `estimate` is the expected duration of
-    /// the work (from the cost model); it weights the least-loaded
-    /// choice and is released with the lease.
-    pub fn lease(self: &Arc<Self>, estimate: Option<Duration>) -> Result<Lease> {
-        let mut slots = self.slots.lock().unwrap();
-        if slots.is_empty() {
-            bail!("no nodes available to schedule on (node count is 0)");
-        }
-        let estimate_us = estimate.map_or(0.0, |d| d.as_secs_f64() * 1e6);
-        let node = match self.policy {
-            SchedulePolicy::RoundRobin => {
-                self.rr.fetch_add(1, Ordering::Relaxed) % slots.len()
-            }
-            SchedulePolicy::LeastLoaded => {
+    /// Speed factor per node (diagnostics and tests).
+    pub fn speeds(&self) -> Vec<f64> {
+        self.slots.lock().unwrap().iter().map(|s| s.speed).collect()
+    }
+
+    /// Estimated finish time of `estimate_us` more work on a slot.
+    fn eft(slot: &Slot, estimate_us: f64) -> f64 {
+        (slot.pending_us + estimate_us) / slot.speed
+    }
+
+    /// The node the policy selects under the given occupancy. `rr` is
+    /// the round-robin cursor value to use (callers decide whether the
+    /// cursor advances).
+    fn choose(policy: SchedulePolicy, slots: &[Slot], estimate_us: f64, rr: usize) -> usize {
+        match policy {
+            SchedulePolicy::RoundRobin => rr % slots.len(),
+            SchedulePolicy::LeastLoadedBlind => {
                 let mut best = 0usize;
                 for i in 1..slots.len() {
                     if (slots[i].pending_us, slots[i].active)
@@ -131,11 +191,65 @@ impl NodeScheduler {
                 }
                 best
             }
+            SchedulePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                for i in 1..slots.len() {
+                    let cand = (Self::eft(&slots[i], estimate_us), slots[i].active);
+                    let incumbent = (Self::eft(&slots[best], estimate_us), slots[best].active);
+                    if cand < incumbent
+                        || (cand == incumbent && slots[i].speed > slots[best].speed)
+                    {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Take a lease on a node. `estimate` is the expected reference
+    /// work of the offload (from the cost model); it weights the
+    /// placement choice and is released with the lease.
+    pub fn lease(self: &Arc<Self>, estimate: Option<Duration>) -> Result<Lease> {
+        let mut slots = self.slots.lock().unwrap();
+        if slots.is_empty() {
+            bail!("no nodes available to schedule on (node count is 0)");
+        }
+        let estimate_us = estimate.map_or(0.0, |d| d.as_secs_f64() * 1e6);
+        let rr = match self.policy {
+            SchedulePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed),
+            _ => 0,
         };
+        let node = Self::choose(self.policy, &slots, estimate_us, rr);
         let position = slots[node].active;
+        let speed = slots[node].speed;
         slots[node].active += 1;
         slots[node].pending_us += estimate_us;
-        Ok(Lease { sched: self.clone(), node, position, estimate_us })
+        Ok(Lease { sched: self.clone(), node, position, speed, estimate_us })
+    }
+
+    /// Deterministic dry run of the next lease: which node the policy
+    /// would choose under the current occupancy, how long that node's
+    /// pending work would delay the start, and how many leases it
+    /// already holds. Round-robin previews the node the cursor points
+    /// at without advancing it. `None` on an empty pool. This is the
+    /// migration manager's admission-control probe; the probe and the
+    /// eventual lease are separate lock acquisitions, so under
+    /// concurrency the prediction is best-effort, not a reservation.
+    pub fn preview(&self, estimate: Option<Duration>) -> Option<LeasePreview> {
+        let slots = self.slots.lock().unwrap();
+        if slots.is_empty() {
+            return None;
+        }
+        let estimate_us = estimate.map_or(0.0, |d| d.as_secs_f64() * 1e6);
+        let node = Self::choose(self.policy, &slots, estimate_us, self.rr.load(Ordering::Relaxed));
+        let wait = Duration::from_secs_f64(slots[node].pending_us / slots[node].speed / 1e6);
+        Some(LeasePreview {
+            node,
+            speed: slots[node].speed,
+            wait,
+            active: slots[node].active,
+        })
     }
 }
 
@@ -148,40 +262,114 @@ impl Drop for Lease {
     }
 }
 
-/// Deterministic placement model: assign `tasks` (known durations, in
-/// arrival order) to `nodes` per `policy`, each node running one task
-/// at a time, and return the makespan (time the last node finishes).
+/// Reference work scaled onto a node: `task / speed`. Exact for the
+/// speed-1.0 reference so homogeneous makespans stay in whole
+/// durations.
+fn scale(task: Duration, speed: f64) -> Duration {
+    if speed == 1.0 {
+        task
+    } else {
+        Duration::from_secs_f64(task.as_secs_f64() / speed)
+    }
+}
+
+/// Deterministic placement model: assign `tasks` (known reference-work
+/// durations, in arrival order) to a pool with the given per-node
+/// `speeds`, each node running one task at a time at its own speed,
+/// and return the makespan (time the last node finishes).
 ///
 /// This is the queueing model of the module doc with perfect duration
-/// knowledge; the bench uses it to compare policies deterministically.
+/// knowledge; the scheduler bench uses it to compare policies
+/// deterministically, and [`admission_cap`] uses it to plan admission.
+///
+/// The placement rules are intentionally restated here rather than
+/// shared with [`NodeScheduler`]'s live selector: the model works in
+/// exact `Duration` arithmetic over per-task durations (so tests can
+/// assert makespans exactly), while the live ledger tracks one f64
+/// µs estimate per node. Keep the two in sync when changing a policy.
 pub fn simulate_makespan(
     policy: SchedulePolicy,
-    nodes: usize,
+    speeds: &[f64],
     tasks: &[Duration],
 ) -> Result<Duration> {
     if tasks.is_empty() {
         return Ok(Duration::ZERO);
     }
-    if nodes == 0 {
+    if speeds.is_empty() {
         bail!("cannot place {} task(s) on an empty pool", tasks.len());
     }
-    let mut finish = vec![Duration::ZERO; nodes];
+    for (i, s) in speeds.iter().enumerate() {
+        if !s.is_finite() || *s <= 0.0 {
+            bail!("node {i} speed must be a positive finite number, got {s}");
+        }
+    }
+    let n = speeds.len();
+    let mut finish = vec![Duration::ZERO; n];
+    // Reference-work ledger for the speed-blind policy.
+    let mut load = vec![Duration::ZERO; n];
     for (k, task) in tasks.iter().enumerate() {
         let node = match policy {
-            SchedulePolicy::RoundRobin => k % nodes,
+            SchedulePolicy::RoundRobin => k % n,
+            SchedulePolicy::LeastLoadedBlind => {
+                let mut best = 0usize;
+                for i in 1..n {
+                    if load[i] < load[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
             SchedulePolicy::LeastLoaded => {
                 let mut best = 0usize;
-                for i in 1..nodes {
-                    if finish[i] < finish[best] {
+                for i in 1..n {
+                    let cand = finish[i] + scale(*task, speeds[i]);
+                    let incumbent = finish[best] + scale(*task, speeds[best]);
+                    if cand < incumbent || (cand == incumbent && speeds[i] > speeds[best]) {
                         best = i;
                     }
                 }
                 best
             }
         };
-        finish[node] += *task;
+        finish[node] += scale(*task, speeds[node]);
+        load[node] += *task;
     }
     Ok(finish.into_iter().max().unwrap_or(Duration::ZERO))
+}
+
+/// Admission planner over a known remotable set: the number of tasks
+/// (longest prefix, arrival order) worth offloading — the largest `k`
+/// such that the cloud makespan of `tasks[..k]` under
+/// earliest-finish-time placement on `cloud_speeds` does not exceed
+/// the local makespan of the same prefix on `local_speeds`. Task
+/// `k + 1` would queue on the (slow) cloud tier past the local
+/// estimate and should run locally instead. An empty local pool
+/// admits everything; an empty cloud pool admits nothing.
+pub fn admission_cap(
+    cloud_speeds: &[f64],
+    local_speeds: &[f64],
+    tasks: &[Duration],
+) -> usize {
+    if cloud_speeds.is_empty() {
+        return 0;
+    }
+    let mut admitted = 0usize;
+    for k in 1..=tasks.len() {
+        let Ok(cloud) = simulate_makespan(SchedulePolicy::LeastLoaded, cloud_speeds, &tasks[..k])
+        else {
+            return admitted;
+        };
+        let local = if local_speeds.is_empty() {
+            None
+        } else {
+            simulate_makespan(SchedulePolicy::LeastLoaded, local_speeds, &tasks[..k]).ok()
+        };
+        match local {
+            Some(l) if cloud > l => break,
+            _ => admitted = k,
+        }
+    }
+    admitted
 }
 
 #[cfg(test)]
@@ -227,10 +415,64 @@ mod tests {
     }
 
     #[test]
+    fn eft_prefers_faster_nodes_and_drains_queues_by_speed() {
+        // idle 2-tier pool: ties on estimated finish go to the fast VM.
+        let sched =
+            NodeScheduler::heterogeneous(SchedulePolicy::LeastLoaded, vec![2.0, 2.0, 8.0]);
+        let a = sched.lease(None).unwrap();
+        assert_eq!((a.node, a.speed), (2, 8.0), "idle pool: fastest node wins ties");
+        drop(a);
+        // 800µs of work pending on the fast node still finishes sooner
+        // than 400µs on a slow node: 800/8 = 100 < 400/2 = 200.
+        let fast = sched.lease(Some(Duration::from_micros(800))).unwrap();
+        let slow = sched.lease(Some(Duration::from_micros(400))).unwrap();
+        assert_eq!(fast.node, 2);
+        assert_eq!(slow.node, 2, "queueing on the fast VM beats an idle slow one");
+        drop((fast, slow));
+    }
+
+    #[test]
+    fn blind_policy_ignores_speeds() {
+        let sched = NodeScheduler::heterogeneous(
+            SchedulePolicy::LeastLoadedBlind,
+            vec![2.0, 8.0],
+        );
+        let a = sched.lease(Some(Duration::from_millis(5))).unwrap();
+        assert_eq!(a.node, 0, "blind placement falls back to the lowest index");
+    }
+
+    #[test]
+    fn preview_matches_next_lease_without_mutating() {
+        let sched =
+            NodeScheduler::heterogeneous(SchedulePolicy::LeastLoaded, vec![2.0, 8.0]);
+        let est = Some(Duration::from_millis(10));
+        let held = sched.lease(Some(Duration::from_millis(40))).unwrap();
+        assert_eq!(held.node, 1);
+        // 10ms on the idle slow node (eft 5ms) beats queueing behind
+        // 40ms on the fast one (eft 6.25ms).
+        let p = sched.preview(est).unwrap();
+        assert_eq!(sched.active(), vec![0, 1], "preview must not take a slot");
+        assert_eq!((p.node, p.wait, p.active), (0, Duration::ZERO, 0));
+        let lease = sched.lease(est).unwrap();
+        assert_eq!(lease.node, p.node, "preview predicts the actual placement");
+        // Now the slow node carries 10ms; the fast node's 40ms backlog
+        // drains at x8 -> 5ms wait behind one active lease.
+        let p2 = sched.preview(est).unwrap();
+        assert_eq!((p2.node, p2.wait, p2.active), (1, Duration::from_millis(5), 1));
+    }
+
+    #[test]
     fn zero_node_pool_errors_instead_of_panicking() {
         let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 0);
         let err = format!("{:#}", sched.lease(None).unwrap_err());
         assert!(err.contains("no nodes"), "{err}");
+        assert!(sched.preview(None).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_positive_speed_rejected_at_construction() {
+        NodeScheduler::heterogeneous(SchedulePolicy::LeastLoaded, vec![4.0, 0.0]);
     }
 
     #[test]
@@ -261,8 +503,8 @@ mod tests {
     fn makespan_least_loaded_beats_round_robin_on_skewed_tasks() {
         let ms = Duration::from_millis;
         let tasks = [ms(800), ms(100), ms(100), ms(100), ms(100), ms(100), ms(100)];
-        let rr = simulate_makespan(SchedulePolicy::RoundRobin, 2, &tasks).unwrap();
-        let ll = simulate_makespan(SchedulePolicy::LeastLoaded, 2, &tasks).unwrap();
+        let rr = simulate_makespan(SchedulePolicy::RoundRobin, &[1.0, 1.0], &tasks).unwrap();
+        let ll = simulate_makespan(SchedulePolicy::LeastLoaded, &[1.0, 1.0], &tasks).unwrap();
         // RR alternates blindly: the heavy node also gets half the
         // light tasks. LL routes all light work to the idle node.
         assert_eq!(rr, ms(800 + 100 + 100 + 100));
@@ -271,18 +513,56 @@ mod tests {
     }
 
     #[test]
+    fn makespan_eft_beats_blind_on_a_mixed_pool() {
+        // 2 slow (x2) + 2 fast (x8) VMs, the fig13 skewed mix. Blind
+        // placement puts the heavy task and half the light ones on the
+        // slow tier (makespan 160 ms); EFT keeps every finish clock at
+        // 40 ms.
+        let ms = Duration::from_millis;
+        let speeds = [2.0, 2.0, 8.0, 8.0];
+        let tasks = [ms(320), ms(80), ms(80), ms(80), ms(80), ms(80), ms(80)];
+        let blind =
+            simulate_makespan(SchedulePolicy::LeastLoadedBlind, &speeds, &tasks).unwrap();
+        let eft = simulate_makespan(SchedulePolicy::LeastLoaded, &speeds, &tasks).unwrap();
+        assert_eq!(blind, ms(160));
+        assert_eq!(eft, ms(40));
+    }
+
+    #[test]
     fn makespan_edges() {
         assert_eq!(
-            simulate_makespan(SchedulePolicy::LeastLoaded, 0, &[]).unwrap(),
+            simulate_makespan(SchedulePolicy::LeastLoaded, &[], &[]).unwrap(),
             Duration::ZERO
         );
-        assert!(
-            simulate_makespan(SchedulePolicy::RoundRobin, 0, &[Duration::from_secs(1)]).is_err()
-        );
+        assert!(simulate_makespan(
+            SchedulePolicy::RoundRobin,
+            &[],
+            &[Duration::from_secs(1)]
+        )
+        .is_err());
+        assert!(simulate_makespan(
+            SchedulePolicy::LeastLoaded,
+            &[0.0],
+            &[Duration::from_secs(1)]
+        )
+        .is_err());
         let one = [Duration::from_millis(5)];
         assert_eq!(
-            simulate_makespan(SchedulePolicy::RoundRobin, 4, &one).unwrap(),
+            simulate_makespan(SchedulePolicy::RoundRobin, &[1.0; 4], &one).unwrap(),
             Duration::from_millis(5)
         );
+    }
+
+    #[test]
+    fn admission_cap_stops_where_queueing_beats_local() {
+        let ms = Duration::from_millis;
+        // 1 cloud VM at x2 vs 4 local nodes at x1, five 400 ms tasks:
+        // k=1: 200 <= 400; k=2: 400 <= 400; k=3: 600 > 400 -> cap 2.
+        let tasks = [ms(400); 5];
+        assert_eq!(admission_cap(&[2.0], &[1.0; 4], &tasks), 2);
+        // No cloud -> nothing admitted; no local pool -> everything.
+        assert_eq!(admission_cap(&[], &[1.0; 4], &tasks), 0);
+        assert_eq!(admission_cap(&[2.0], &[], &tasks), 5);
+        assert_eq!(admission_cap(&[2.0], &[1.0], &[]), 0);
     }
 }

@@ -1,0 +1,246 @@
+//! Integration: heterogeneous cloud tiers — speed-aware,
+//! lease-pinned placement end to end, the `local_speed`-corrected
+//! `CostBased` gate, and queue-aware admission control.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use emerald::cli::ConfigFile;
+use emerald::cloud::{CloudTier, Platform, PlatformConfig};
+use emerald::engine::activity::need_num;
+use emerald::engine::{ActivityRegistry, Engine, Event, Services};
+use emerald::expr::Value;
+use emerald::migration::{DataPolicy, Decision, ManagerConfig, MigrationManager};
+use emerald::partitioner;
+use emerald::workflow::xaml;
+
+fn registry() -> Arc<ActivityRegistry> {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("heavy.op", |c, inputs| {
+        let ms = need_num(inputs, "ms")?;
+        let x = need_num(inputs, "x")?;
+        c.charge_compute(Duration::from_millis(ms as u64));
+        Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+    });
+    Arc::new(reg)
+}
+
+fn cloud_started_nodes(report: &emerald::engine::RunReport) -> Vec<String> {
+    report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ActivityStarted { node, .. } if node.starts_with("cloud-") => {
+                Some(node.clone())
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Tentpole: the lease pins the executing node. On a mixed pool the
+// earliest-finish-time scheduler deterministically leases the fastest
+// idle VM, the worker executes on exactly that VM, and the simulated
+// time is scaled by *its* speed — not whatever a divorced round-robin
+// would have picked.
+// ---------------------------------------------------------------------
+
+#[test]
+fn offloads_execute_on_the_leased_fast_tier_vm() {
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::new(1, 2.0), CloudTier::new(1, 8.0)],
+        ..Default::default()
+    })
+    .unwrap();
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, services).with_offload(mgr.clone());
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables><Variable Name="a"/><Variable Name="b"/></Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="h1" Activity="heavy.op" In.ms="400" In.x="1"
+                               Out.y="a" Remotable="true"/>
+               <InvokeActivity DisplayName="h2" Activity="heavy.op" In.ms="400" In.x="a"
+                               Out.y="b" Remotable="true"/>
+               <WriteLine Text="str(b)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let report = engine.run(&part).unwrap();
+    assert!(report.lines.iter().any(|l| l == "3"), "{:?}", report.lines);
+    assert_eq!(report.offload_count(), 2);
+    // Both sequential offloads hit the idle pool; EFT leases the x8 VM
+    // (cloud-1) and the trace proves execution happened there.
+    assert_eq!(
+        cloud_started_nodes(&report),
+        vec!["cloud-1".to_string(), "cloud-1".to_string()],
+        "ActivityStarted must name the scheduler's leased node"
+    );
+    // 2 x (400/8 = 50 ms compute + ~20 ms WAN). Had execution stayed on
+    // the old divorced round-robin, the first step would have run on
+    // the x2 VM (200 ms compute) and the total would exceed 240 ms.
+    assert!(
+        report.sim_time < Duration::from_millis(200),
+        "simulated time must reflect the fast VM: {:?}",
+        report.sim_time
+    );
+    assert!(report.sim_time >= Duration::from_millis(100));
+    assert_eq!(mgr.stats().offloads, 2);
+}
+
+// ---------------------------------------------------------------------
+// Satellite regression: the CostBased gate with local_speed != 1.0.
+// The old `record_costs` recovered the local estimate as
+// remote_compute x cloud_speed, silently assuming a speed-1.0 local
+// cluster — on a x2.0 local cluster it overestimated local time 2x
+// and kept offloading steps that were cheaper at home.
+// ---------------------------------------------------------------------
+
+fn cost_gate_run(wan_latency: Duration) -> (Arc<MigrationManager>, Engine) {
+    let platform = Platform::new(PlatformConfig {
+        local_speed: 2.0,
+        tiers: vec![CloudTier::new(4, 4.0)],
+        wan_latency,
+        ..Default::default()
+    })
+    .unwrap();
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.decision = Decision::CostBased;
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services).with_offload(mgr.clone());
+    (mgr, engine)
+}
+
+const COST_WF: &str = r#"<Workflow>
+  <Workflow.Variables><Variable Name="y"/></Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="heavy" Activity="heavy.op" In.ms="300" In.x="1"
+                    Out.y="y" Remotable="true"/>
+  </Sequence>
+</Workflow>"#;
+
+#[test]
+fn cost_gate_declines_when_fast_local_cluster_wins() {
+    // Local: 300 / 2.0 = 150 ms. Remote: 300 / 4.0 = 75 ms compute +
+    // ~100 ms WAN = ~175 ms. Offloading is a loss; after the first
+    // observation the gate must decline. (The pre-fix formula compared
+    // against 75 x 4 = 300 ms "local" and kept offloading.)
+    let (mgr, engine) = cost_gate_run(Duration::from_millis(50));
+    let (part, _) = partitioner::partition(&xaml::parse(COST_WF).unwrap()).unwrap();
+    let r1 = engine.run(&part).unwrap();
+    assert_eq!(r1.offload_count(), 1, "first sighting always offloads");
+    let r2 = engine.run(&part).unwrap();
+    assert!(
+        r2.events.iter().any(|e| matches!(e, Event::LocalExecution { .. })),
+        "{:?}",
+        r2.events
+    );
+    assert_eq!(mgr.stats().declined, 1, "cost gate must decline the repeat");
+    assert_eq!(
+        r2.sim_time,
+        Duration::from_millis(150),
+        "local execution runs at local_speed 2.0"
+    );
+}
+
+#[test]
+fn cost_gate_accepts_when_offloading_still_wins() {
+    // Same platform, cheap WAN: remote ~75 + ~10 ms < 150 ms local.
+    // The corrected estimate must keep offloading.
+    let (mgr, engine) = cost_gate_run(Duration::from_millis(5));
+    let (part, _) = partitioner::partition(&xaml::parse(COST_WF).unwrap()).unwrap();
+    engine.run(&part).unwrap();
+    engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().offloads, 2, "profitable steps keep offloading");
+    assert_eq!(mgr.stats().declined, 0);
+}
+
+// ---------------------------------------------------------------------
+// Tentpole: admission control. With cost history, an offload whose
+// queue wait pushes projected completion past the local estimate is
+// declined (and the decline notice flows through Event::Line).
+// ---------------------------------------------------------------------
+
+#[test]
+fn admission_control_declines_offloads_behind_a_deep_queue() {
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::new(1, 4.0)],
+        ..Default::default()
+    })
+    .unwrap();
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.admission = true;
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services.clone()).with_offload(mgr.clone());
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables><Variable Name="y"/></Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="heavy" Activity="heavy.op" In.ms="400" In.x="1"
+                               Out.y="y" Remotable="true"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+
+    // Warm the cost history: idle pool, always admitted.
+    // local est = 400 ms, remote round trip ~120 ms.
+    engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().offloads, 1);
+    assert_eq!(mgr.stats().admission_declined, 0);
+
+    // Pile 2 s of reference work onto the only VM: the preview's queue
+    // wait (2 s / 4 = 500 ms) plus the ~120 ms round trip exceeds the
+    // 400 ms local estimate -> admission control sends the step home.
+    let backlog = services.platform.cloud_lease(Some(Duration::from_secs(2))).unwrap();
+    let r2 = engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().admission_declined, 1, "queued offload must be declined");
+    assert!(
+        r2.events.iter().any(|e| matches!(
+            e,
+            Event::Line { text } if text.contains("admission control")
+        )),
+        "decline reason must surface as an Event::Line: {:?}",
+        r2.events
+    );
+    assert!(r2.events.iter().any(|e| matches!(e, Event::LocalExecution { .. })));
+
+    // Queue drains -> offloads resume.
+    drop(backlog);
+    engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().offloads, 2);
+    assert_eq!(mgr.stats().admission_declined, 1);
+}
+
+// ---------------------------------------------------------------------
+// Config plumbing: `tiers = [...]` builds a mixed platform; legacy
+// one-tier configs keep parsing into the same shape as before.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tier_config_builds_a_mixed_platform() {
+    let cfg = ConfigFile::parse(
+        "[platform]\n\
+         local_nodes = 4\n\
+         tiers = [{ nodes = 2, speed = 2.0 }, { nodes = 2, speed = 8.0 }]\n",
+    )
+    .unwrap();
+    let platform = Platform::new(cfg.platform().unwrap()).unwrap();
+    assert_eq!(platform.cloud_size(), 4);
+    assert_eq!(platform.cloud_scheduler().speeds(), vec![2.0, 2.0, 8.0, 8.0]);
+
+    let legacy = ConfigFile::parse("[platform]\ncloud_nodes = 3\ncloud_speed = 2.5\n").unwrap();
+    let platform = Platform::new(legacy.platform().unwrap()).unwrap();
+    assert_eq!(platform.cloud_size(), 3);
+    assert_eq!(platform.cloud_scheduler().speeds(), vec![2.5, 2.5, 2.5]);
+}

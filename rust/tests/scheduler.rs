@@ -25,7 +25,7 @@ fn registry() -> Arc<ActivityRegistry> {
 }
 
 fn platform(cloud_nodes: usize) -> Arc<Platform> {
-    Platform::new(PlatformConfig { cloud_nodes, ..Default::default() }).unwrap()
+    Platform::new(PlatformConfig::with_cloud(cloud_nodes, 4.0)).unwrap()
 }
 
 // ---------------------------------------------------------------------
@@ -83,6 +83,26 @@ fn zero_cloud_nodes_declines_offloads_and_runs_locally() {
         .any(|e| matches!(e, Event::LocalExecution { .. })));
     assert_eq!(mgr.stats().offloads, 0);
     assert_eq!(mgr.stats().declined, 1);
+    // Regression: the decline notice must appear in the event trace as
+    // an Event::Line, and the trace lines must match RunReport.lines
+    // exactly (consumers of either see the same output).
+    let event_lines: Vec<&String> = report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Line { text } => Some(text),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        event_lines.iter().any(|l| l.contains("offload declined")),
+        "decline notice missing from the event trace: {event_lines:?}"
+    );
+    assert_eq!(
+        event_lines,
+        report.lines.iter().collect::<Vec<_>>(),
+        "event trace and RunReport.lines must agree"
+    );
 }
 
 #[test]
@@ -157,7 +177,73 @@ fn batching_preserves_results_and_reduces_sim_time() {
 fn least_loaded_makespan_beats_round_robin() {
     let ms = Duration::from_millis;
     let tasks = [ms(900), ms(150), ms(150), ms(150), ms(150), ms(150)];
-    let rr = simulate_makespan(SchedulePolicy::RoundRobin, 3, &tasks).unwrap();
-    let ll = simulate_makespan(SchedulePolicy::LeastLoaded, 3, &tasks).unwrap();
+    let rr = simulate_makespan(SchedulePolicy::RoundRobin, &[1.0; 3], &tasks).unwrap();
+    let ll = simulate_makespan(SchedulePolicy::LeastLoaded, &[1.0; 3], &tasks).unwrap();
     assert!(ll < rr, "least-loaded {ll:?} must beat round-robin {rr:?}");
+}
+
+// ---------------------------------------------------------------------
+// Heterogeneous-pool properties: earliest-finish-time placement vs the
+// speed-blind least-loaded baseline in the deterministic model.
+// ---------------------------------------------------------------------
+
+/// On a homogeneous pool the EFT policy must degenerate to exactly the
+/// speed-blind least-loaded placement (same choices, same makespan).
+#[test]
+fn property_eft_equals_blind_on_homogeneous_pools() {
+    forall(150, |g: &mut Gen| {
+        let n = g.usize_in(1..=6);
+        let speed = *g.choose(&[1.0, 2.0, 4.0, 8.0]);
+        let speeds = vec![speed; n];
+        let tasks: Vec<Duration> = g.vec(0..=20, |g| {
+            Duration::from_millis(g.usize_in(1..=500) as u64)
+        });
+        let eft = simulate_makespan(SchedulePolicy::LeastLoaded, &speeds, &tasks).unwrap();
+        let blind =
+            simulate_makespan(SchedulePolicy::LeastLoadedBlind, &speeds, &tasks).unwrap();
+        assert_eq!(eft, blind, "EFT must reduce to least-loaded at speed {speed}");
+    });
+}
+
+/// On a two-tier pool with uniform task durations, EFT placement never
+/// yields a worse makespan than speed-blind least-loaded (greedy EFT
+/// is optimal for identical jobs on uniform machines; blind placement
+/// is just one feasible assignment).
+#[test]
+fn property_eft_never_worse_than_blind_on_two_tier_pools() {
+    forall(150, |g: &mut Gen| {
+        let slow = g.usize_in(1..=4);
+        let fast = g.usize_in(1..=4);
+        let slow_speed = *g.choose(&[1.0, 2.0]);
+        let fast_speed = *g.choose(&[4.0, 8.0]);
+        let speeds: Vec<f64> = std::iter::repeat(slow_speed)
+            .take(slow)
+            .chain(std::iter::repeat(fast_speed).take(fast))
+            .collect();
+        let d = Duration::from_millis(g.usize_in(1..=400) as u64);
+        let tasks = vec![d; g.usize_in(0..=24)];
+        let eft = simulate_makespan(SchedulePolicy::LeastLoaded, &speeds, &tasks).unwrap();
+        let blind =
+            simulate_makespan(SchedulePolicy::LeastLoadedBlind, &speeds, &tasks).unwrap();
+        assert!(
+            eft <= blind + Duration::from_micros(1),
+            "EFT {eft:?} worse than blind {blind:?} on {slow}x{slow_speed} + \
+             {fast}x{fast_speed}, {} tasks of {d:?}",
+            tasks.len()
+        );
+    });
+}
+
+/// Deterministic regression for the skewed mix: EFT strictly beats the
+/// speed-blind policy on a 2-tier pool.
+#[test]
+fn eft_strictly_beats_blind_on_skewed_mixed_pool() {
+    let ms = Duration::from_millis;
+    let speeds = [2.0, 2.0, 8.0, 8.0];
+    let tasks = [ms(320), ms(80), ms(80), ms(80), ms(80), ms(80), ms(80)];
+    let eft = simulate_makespan(SchedulePolicy::LeastLoaded, &speeds, &tasks).unwrap();
+    let blind = simulate_makespan(SchedulePolicy::LeastLoadedBlind, &speeds, &tasks).unwrap();
+    assert!(eft < blind, "{eft:?} vs {blind:?}");
+    assert_eq!(eft, ms(40));
+    assert_eq!(blind, ms(160));
 }
