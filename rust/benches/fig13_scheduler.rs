@@ -26,6 +26,15 @@
 //! the lease pins the executing node — every offload's
 //! `ActivityStarted` trace event must name exactly the VM the
 //! scheduler chose.
+//!
+//! A fourth section prices the pool (cheap-slow tier vs expensive-fast
+//! tier) and A/Bs the placement **objective**: `cost` must spend
+//! strictly less money while `time` must finish strictly sooner — in
+//! the live engine and in the deterministic model. A fifth section
+//! demonstrates **work stealing**: with a backlog pinning the cheap
+//! VM, a cost-placed lease re-pins to the idle fast VM (the trace
+//! names the VM it actually executed on), and a tight budget first
+//! vetoes the steal, then shuts offloading off entirely.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -35,9 +44,11 @@ use emerald::cloud::{CloudTier, Platform, PlatformConfig};
 use emerald::engine::activity::need_num;
 use emerald::engine::{ActivityRegistry, Engine, Event, Services};
 use emerald::expr::Value;
-use emerald::migration::{DataPolicy, MigrationManager};
+use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
 use emerald::partitioner::{self, PartitionOptions};
-use emerald::scheduler::{admission_cap, simulate_makespan, SchedulePolicy};
+use emerald::scheduler::{
+    admission_cap, simulate_makespan, simulate_plan, NodeSpec, Objective, SchedulePolicy,
+};
 use emerald::workflow::xaml;
 
 const WORKFLOW: &str = r#"<Workflow Name="fig13">
@@ -160,6 +171,47 @@ fn run_tiers(schedule: SchedulePolicy) -> anyhow::Result<(Duration, Vec<String>)
     Ok((report.sim_time, cloud_nodes))
 }
 
+/// One sequential chain run on a priced pool under an explicit
+/// time-vs-money configuration. Returns the run report's simulated
+/// time, its spend, the executed cloud VM per offload, and the
+/// manager's stats.
+fn run_priced(
+    tiers: Vec<CloudTier>,
+    cfg: ManagerConfig,
+    backlog_work: Option<Duration>,
+) -> anyhow::Result<(Duration, f64, Vec<String>, emerald::migration::MigrationStats)> {
+    let platform = Platform::new(PlatformConfig { tiers, ..Default::default() })?;
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let objective = cfg.objective;
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services.clone()).with_offload(mgr.clone());
+    let wf = xaml::parse(CHAIN_WORKFLOW)?;
+    let (part, _) = partitioner::partition(&wf)?;
+    // Warm the cost model so placement, stealing and the budget gate
+    // all see work estimates (the warm run also consumes budget — the
+    // scenarios below account for it), then optionally pin a backlog
+    // lease for the steal scenarios.
+    let warm = engine.run(&part)?;
+    assert!(warm.lines.iter().any(|l| l == "result=5"), "{:?}", warm.lines);
+    let _backlog = backlog_work
+        .map(|w| services.platform.cloud_lease_with(Some(w), objective))
+        .transpose()?;
+    let report = engine.run(&part)?;
+    assert!(report.lines.iter().any(|l| l == "result=5"), "{:?}", report.lines);
+    let executed: Vec<String> = report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ActivityStarted { node, .. } if node.starts_with("cloud-") => {
+                Some(node.clone())
+            }
+            _ => None,
+        })
+        .collect();
+    Ok((report.sim_time, report.spend, executed, mgr.stats()))
+}
+
 fn main() -> anyhow::Result<()> {
     println!("== Fig 13: load-aware scheduling + batched offload round trips ==");
 
@@ -264,6 +316,111 @@ fn main() -> anyhow::Result<()> {
     assert!(
         throttled < tasks.len(),
         "one x2 VM must not be allowed to queue the whole mix: {throttled}"
+    );
+
+    // -- Fig 13d: price-aware objectives on a cheap-slow vs
+    //    expensive-fast pool. `cost` must spend strictly less money;
+    //    `time` must finish strictly sooner. --
+    let priced_pool =
+        || vec![CloudTier::priced(2, 2.0, 1.0), CloudTier::priced(2, 8.0, 10.0)];
+    let mut time_cfg = ManagerConfig::new(DataPolicy::Mdss);
+    time_cfg.objective = Objective::Time;
+    let (time_sim, time_spend, time_nodes, _) = run_priced(priced_pool(), time_cfg, None)?;
+    let mut cost_cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cost_cfg.objective = Objective::Cost;
+    let (cost_sim, cost_spend, cost_nodes, _) = run_priced(priced_pool(), cost_cfg, None)?;
+
+    let mut priced = Series::new(
+        "Fig 13d: objective A/B on 2 @ x2.0 ($1/ref-s) + 2 @ x8.0 ($10/ref-s)",
+        "seconds (simulated) / currency",
+    );
+    priced.row(
+        "objective = time",
+        vec![("sim".into(), time_sim.as_secs_f64()), ("spend".into(), time_spend)],
+    );
+    priced.row(
+        "objective = cost",
+        vec![("sim".into(), cost_sim.as_secs_f64()), ("spend".into(), cost_spend)],
+    );
+    priced.print();
+    println!("time executed on {time_nodes:?}; cost executed on {cost_nodes:?}");
+    assert!(
+        cost_spend < time_spend,
+        "cost objective must spend strictly less: {cost_spend} vs {time_spend}"
+    );
+    assert!(
+        time_sim < cost_sim,
+        "time objective must finish strictly sooner: {time_sim:?} vs {cost_sim:?}"
+    );
+    assert_eq!(time_nodes, vec!["cloud-2"; 4], "time leases the fast expensive tier");
+    assert_eq!(cost_nodes, vec!["cloud-0"; 4], "cost leases the cheap slow tier");
+
+    // The same A/B through the deterministic planner.
+    let specs = [
+        NodeSpec::new(2.0, 1.0),
+        NodeSpec::new(2.0, 1.0),
+        NodeSpec::new(8.0, 10.0),
+        NodeSpec::new(8.0, 10.0),
+    ];
+    let time_plan = simulate_plan(SchedulePolicy::LeastLoaded, Objective::Time, &specs, &tasks)?;
+    let cost_plan = simulate_plan(SchedulePolicy::LeastLoaded, Objective::Cost, &specs, &tasks)?;
+    assert!(
+        cost_plan.spend < time_plan.spend,
+        "model: cost must spend strictly less: {} vs {}",
+        cost_plan.spend,
+        time_plan.spend
+    );
+    assert!(
+        time_plan.makespan < cost_plan.makespan,
+        "model: time must finish strictly sooner: {:?} vs {:?}",
+        time_plan.makespan,
+        cost_plan.makespan
+    );
+
+    // -- Fig 13e: work stealing. A backlog pins the cheap VM; every
+    //    cost-placed offload queues behind it and the steal pass
+    //    re-pins it to the idle fast VM — the trace must name the VM
+    //    each re-pinned offload actually executed on. A tight budget
+    //    vetoes the upgrade and keeps the work pinned (and queued). --
+    let steal_pool = || vec![CloudTier::priced(1, 2.0, 1.0), CloudTier::priced(1, 8.0, 10.0)];
+    let mut steal_cfg = ManagerConfig::new(DataPolicy::Mdss);
+    steal_cfg.objective = Objective::Cost;
+    steal_cfg.steal = true;
+    let backlog = Some(Duration::from_secs(2));
+    let (stolen_sim, stolen_spend, stolen_nodes, stolen_stats) =
+        run_priced(steal_pool(), steal_cfg, backlog)?;
+    assert_eq!(stolen_stats.stolen, 4, "all four queued offloads must be stolen");
+    assert_eq!(
+        stolen_nodes,
+        vec!["cloud-1"; 4],
+        "every re-pinned offload's trace must record the VM it executed on"
+    );
+    assert!(stolen_spend > 3.0, "stolen work is billed at the fast tier: {stolen_spend}");
+
+    let mut capped_cfg = ManagerConfig::new(DataPolicy::Mdss);
+    capped_cfg.objective = Objective::Cost;
+    capped_cfg.steal = true;
+    capped_cfg.budget = Some(1.0); // warm run spends ~0.32; 0.68 left < 0.8 upgrade
+    let (capped_sim, capped_spend, capped_nodes, capped_stats) =
+        run_priced(steal_pool(), capped_cfg, backlog)?;
+    assert_eq!(capped_stats.stolen, 0, "the budget must veto every steal");
+    assert_eq!(
+        capped_nodes,
+        vec!["cloud-0"; 4],
+        "budget-pinned offloads stay on the cheap VM"
+    );
+    assert!(capped_spend < 1.0, "capped run stays within budget: {capped_spend}");
+    assert!(
+        stolen_sim < capped_sim,
+        "stealing must beat queueing behind the backlog: {stolen_sim:?} vs {capped_sim:?}"
+    );
+    println!(
+        "Fig 13e: steal re-pinned 4/4 offloads to cloud-1 ({:.3}s, spend {:.2}); \
+         budget 1.0 pinned 4/4 to cloud-0 ({:.3}s, spend {:.2})",
+        stolen_sim.as_secs_f64(),
+        stolen_spend,
+        capped_sim.as_secs_f64(),
+        capped_spend
     );
 
     println!(

@@ -14,11 +14,17 @@ use crate::jsonmini::Value;
 /// One measured statistic set.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Measured iterations.
     pub iters: usize,
+    /// Arithmetic mean.
     pub mean: Duration,
+    /// Median.
     pub p50: Duration,
+    /// 95th percentile.
     pub p95: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// Slowest sample.
     pub max: Duration,
 }
 

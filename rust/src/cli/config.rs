@@ -9,11 +9,13 @@
 //! [platform]
 //! local_nodes = 10
 //! local_speed = 1.0
-//! # Heterogeneous cloud pool: one entry per tier.
-//! tiers = [{ nodes = 15, speed = 4.0 }, { nodes = 10, speed = 8.0 }]
+//! # Heterogeneous cloud pool: one entry per tier (price optional,
+//! # cost per reference-second of work, default 0.0 = free).
+//! tiers = [{ nodes = 15, speed = 4.0, price = 0.1 }, { nodes = 10, speed = 8.0 }]
 //! # ...or the legacy one-tier shorthand (mutually exclusive):
 //! # cloud_nodes = 25
 //! # cloud_speed = 4.0
+//! # cloud_price = 0.0
 //! wan_mbits = 200.0
 //! wan_latency_ms = 10
 //! schedule = "least-loaded"  # least-loaded | least-loaded-blind | round-robin
@@ -24,6 +26,12 @@
 //! attempts = 1
 //! local_fallback = false
 //! admission = false        # queue-aware admission control
+//! objective = "time"       # time | cost | weighted (placement objective)
+//! # weight = 1.0           # seconds per currency unit; only legal
+//! #                        # (and only meaningful) with "weighted"
+//! # budget = 2.5           # spend cap per manager (= per run in the
+//! #                        # CLI; absent = unlimited)
+//! steal = false            # idle-VM work stealing
 //! signing_key = ""         # non-empty enables request signing
 //! codec = "raw"            # raw | deflate
 //! ```
@@ -40,7 +48,7 @@ use anyhow::{bail, Context, Result};
 use crate::cloud::{CloudTier, PlatformConfig};
 use crate::mdss::Codec;
 use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
-use crate::scheduler::SchedulePolicy;
+use crate::scheduler::{Objective, SchedulePolicy};
 
 /// A parsed config file: section -> key -> raw value.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -51,8 +59,11 @@ pub struct ConfigFile {
 /// A config value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ConfigValue {
+    /// Quoted string, e.g. `"mdss"`.
     Str(String),
+    /// Number (all numbers parse as `f64`), e.g. `4.0`.
     Num(f64),
+    /// Boolean, `true` or `false`.
     Bool(bool),
     /// Inline array, e.g. `[1, 2]` or `[{ nodes = 2, speed = 4.0 }]`.
     Arr(Vec<ConfigValue>),
@@ -74,6 +85,26 @@ impl ConfigValue {
 
 impl ConfigFile {
     /// Parse config text.
+    ///
+    /// ```
+    /// use emerald::cli::ConfigFile;
+    /// use emerald::scheduler::Objective;
+    ///
+    /// let cfg = ConfigFile::parse(
+    ///     r#"
+    ///     [platform]
+    ///     tiers = [{ nodes = 2, speed = 2.0, price = 0.5 }]
+    ///     [migration]
+    ///     objective = "cost"
+    ///     budget = 1.5
+    ///     "#,
+    /// )?;
+    /// assert_eq!(cfg.platform()?.tiers[0].price, 0.5);
+    /// let migration = cfg.migration()?;
+    /// assert_eq!(migration.objective, Objective::Cost);
+    /// assert_eq!(migration.budget, Some(1.5));
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn parse(text: &str) -> Result<Self> {
         let mut out = Self::default();
         let mut section = String::new();
@@ -229,24 +260,30 @@ impl ConfigFile {
     }
 
     /// Cloud tiers from the `[platform]` section: either an explicit
-    /// `tiers = [{ nodes = N, speed = S }, ...]` array or the legacy
-    /// one-tier `cloud_nodes`/`cloud_speed` shorthand (mutually
+    /// `tiers = [{ nodes = N, speed = S, price = P }, ...]` array
+    /// (`price` optional, default 0.0 = free) or the legacy one-tier
+    /// `cloud_nodes`/`cloud_speed`/`cloud_price` shorthand (mutually
     /// exclusive; legacy configs parse unchanged).
     fn cloud_tiers(&self, default: &[CloudTier]) -> Result<Vec<CloudTier>> {
         let legacy = self.get("platform", "cloud_nodes").is_some()
-            || self.get("platform", "cloud_speed").is_some();
+            || self.get("platform", "cloud_speed").is_some()
+            || self.get("platform", "cloud_price").is_some();
         match self.get("platform", "tiers") {
             // No cloud keys at all: keep the full default tier list.
             None if !legacy => Ok(default.to_vec()),
             None => {
                 let d = default.first().copied().unwrap_or(CloudTier::new(0, 1.0));
-                Ok(vec![CloudTier::new(
+                Ok(vec![CloudTier::priced(
                     self.num("platform", "cloud_nodes", d.nodes as f64)? as usize,
                     self.num("platform", "cloud_speed", d.speed)?,
+                    self.num("platform", "cloud_price", d.price)?,
                 )])
             }
             Some(_) if legacy => {
-                bail!("[platform] tiers cannot be combined with cloud_nodes/cloud_speed")
+                bail!(
+                    "[platform] tiers cannot be combined with \
+                     cloud_nodes/cloud_speed/cloud_price"
+                )
             }
             Some(ConfigValue::Arr(items)) => {
                 let mut tiers = Vec::with_capacity(items.len());
@@ -254,12 +291,12 @@ impl ConfigFile {
                     let ConfigValue::Table(t) = item else {
                         bail!(
                             "[platform] tiers[{i}] must be an inline table \
-                             {{ nodes = N, speed = S }}, got {}",
+                             {{ nodes = N, speed = S, price = P }}, got {}",
                             item.kind()
                         );
                     };
                     for key in t.keys() {
-                        if key != "nodes" && key != "speed" {
+                        if key != "nodes" && key != "speed" && key != "price" {
                             bail!("[platform] tiers[{i}]: unknown key {key:?}");
                         }
                     }
@@ -282,7 +319,14 @@ impl ConfigFile {
                         }
                         None => bail!("[platform] tiers[{i}] is missing `speed`"),
                     };
-                    tiers.push(CloudTier::new(nodes, speed));
+                    let price = match t.get("price") {
+                        Some(ConfigValue::Num(p)) => *p,
+                        Some(v) => {
+                            bail!("[platform] tiers[{i}].price must be a number, got {}", v.kind())
+                        }
+                        None => 0.0,
+                    };
+                    tiers.push(CloudTier::priced(nodes, speed, price));
                 }
                 Ok(tiers)
             }
@@ -336,6 +380,34 @@ impl ConfigFile {
         cfg.attempts = self.num("migration", "attempts", 1.0)? as usize;
         cfg.local_fallback = self.boolean("migration", "local_fallback", false)?;
         cfg.admission = self.boolean("migration", "admission", false)?;
+        cfg.steal = self.boolean("migration", "steal", false)?;
+        let objective = self.string("migration", "objective", "time")?;
+        let weight_present = self.get("migration", "weight").is_some();
+        cfg.objective = match objective.as_str() {
+            "time" => Objective::Time,
+            "cost" => Objective::Cost,
+            "weighted" => {
+                let w = self.num("migration", "weight", 1.0)?;
+                if !w.is_finite() || w < 0.0 {
+                    bail!(
+                        "[migration] weight must be a non-negative finite number, got {w}"
+                    );
+                }
+                Objective::Weighted(w)
+            }
+            other => bail!("[migration] objective must be time|cost|weighted, got {other:?}"),
+        };
+        if weight_present && !matches!(cfg.objective, Objective::Weighted(_)) {
+            bail!("[migration] weight is only meaningful with objective = \"weighted\"");
+        }
+        cfg.budget = match self.get("migration", "budget") {
+            None => None,
+            Some(ConfigValue::Num(b)) if b.is_finite() && *b >= 0.0 => Some(*b),
+            Some(ConfigValue::Num(b)) => {
+                bail!("[migration] budget must be a non-negative finite number, got {b}")
+            }
+            Some(v) => bail!("[migration] budget must be a number, got {}", v.kind()),
+        };
         let key = self.string("migration", "signing_key", "")?;
         if !key.is_empty() {
             cfg.signing = Some(SigningKey::new(key.into_bytes()));
@@ -412,6 +484,7 @@ mod tests {
         for bad in [
             // tiers and the legacy shorthand are mutually exclusive
             "[platform]\ncloud_nodes = 2\ntiers = [{ nodes = 1, speed = 2.0 }]",
+            "[platform]\ncloud_price = 0.5\ntiers = [{ nodes = 1, speed = 2.0 }]",
             "[platform]\ntiers = [{ nodes = 1 }]",            // missing speed
             "[platform]\ntiers = [{ speed = 2.0 }]",          // missing nodes
             "[platform]\ntiers = [{ nodes = -5, speed = 4.0 }]", // negative count
@@ -420,9 +493,66 @@ mod tests {
             "[platform]\ntiers = [4.0]",                      // not a table
             "[platform]\ntiers = { nodes = 1, speed = 2.0 }", // not an array
             "[platform]\ntiers = [{ nodes = 1, speed = \"fast\" }]", // wrong type
+            "[platform]\ntiers = [{ nodes = 1, speed = 2.0, price = \"cheap\" }]",
         ] {
             let cfg = ConfigFile::parse(bad).unwrap();
             assert!(cfg.platform().is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parses_tier_prices() {
+        let cfg = ConfigFile::parse(
+            "[platform]\ntiers = [{ nodes = 2, speed = 2.0, price = 0.5 }, \
+             { nodes = 1, speed = 8.0 }]",
+        )
+        .unwrap();
+        let p = cfg.platform().unwrap();
+        assert_eq!(
+            p.tiers,
+            vec![
+                crate::cloud::CloudTier::priced(2, 2.0, 0.5),
+                crate::cloud::CloudTier::new(1, 8.0), // price defaults to free
+            ]
+        );
+        // Legacy shorthand with a price.
+        let cfg =
+            ConfigFile::parse("[platform]\ncloud_nodes = 3\ncloud_price = 0.25").unwrap();
+        let p = cfg.platform().unwrap();
+        assert_eq!(p.tiers, vec![crate::cloud::CloudTier::priced(3, 4.0, 0.25)]);
+    }
+
+    #[test]
+    fn parses_objective_budget_and_steal() {
+        let cfg = ConfigFile::parse(
+            "[migration]\nobjective = \"cost\"\nbudget = 2.5\nsteal = true",
+        )
+        .unwrap();
+        let m = cfg.migration().unwrap();
+        assert_eq!(m.objective, Objective::Cost);
+        assert_eq!(m.budget, Some(2.5));
+        assert!(m.steal);
+        let cfg =
+            ConfigFile::parse("[migration]\nobjective = \"weighted\"\nweight = 0.5").unwrap();
+        assert_eq!(cfg.migration().unwrap().objective, Objective::Weighted(0.5));
+        // Defaults: time objective, weight 1.0 when weighted, no
+        // budget, no stealing.
+        let cfg = ConfigFile::parse("[migration]\nobjective = \"weighted\"").unwrap();
+        assert_eq!(cfg.migration().unwrap().objective, Objective::Weighted(1.0));
+        let m = ConfigFile::parse("").unwrap().migration().unwrap();
+        assert_eq!(m.objective, Objective::Time);
+        assert_eq!(m.budget, None);
+        assert!(!m.steal);
+        // Rejections.
+        for bad in [
+            "[migration]\nobjective = \"money\"",
+            "[migration]\nbudget = -1.0",
+            "[migration]\nbudget = \"lots\"",
+            "[migration]\nweight = 0.5", // weight without weighted
+            "[migration]\nobjective = \"weighted\"\nweight = -2.0",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(cfg.migration().is_err(), "should reject {bad:?}");
         }
     }
 

@@ -14,10 +14,14 @@
 //! * [`Platform`] — local cluster + cloud pool + network, built from a
 //!   [`PlatformConfig`] (defaults calibrated in DESIGN.md §5). The
 //!   **cloud pool is heterogeneous**: [`PlatformConfig::tiers`] lists
-//!   [`CloudTier`] specs (node count + speed factor each), modelling
-//!   mixed fleets where instance choice dominates cost/performance
-//!   (Juve et al.). The legacy single-tier `cloud_nodes`/`cloud_speed`
-//!   config keys remain a one-tier shorthand (`cli::ConfigFile`). The
+//!   [`CloudTier`] specs (node count + speed factor + price each),
+//!   modelling mixed fleets where instance choice dominates
+//!   cost/performance (Juve et al.). Prices make money a scheduling
+//!   dimension: the migration manager can place for time, for cost, or
+//!   for a weighted blend, and cap a run's total spend
+//!   (`[migration] budget`). The legacy single-tier
+//!   `cloud_nodes`/`cloud_speed`/`cloud_price` config keys remain a
+//!   one-tier shorthand (`cli::ConfigFile`). The
 //!   config is validated at construction, and empty tiers are legal
 //!   configurations whose node accessors return errors instead of
 //!   panicking — the migration manager declines offloads on a
@@ -47,22 +51,34 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::scheduler::{Lease, NodeScheduler, SchedulePolicy};
+use crate::scheduler::{Lease, NodeScheduler, NodeSpec, Objective, SchedulePolicy};
 
 /// One homogeneous slice of the cloud pool: `nodes` VMs at `speed`
-/// (relative to a speed-1.0 local reference node).
+/// (relative to a speed-1.0 local reference node), each charging
+/// `price` per reference-second of work executed on it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CloudTier {
     /// VMs in this tier. Zero is legal (the tier contributes nothing).
     pub nodes: usize,
     /// Speed factor of every VM in this tier.
     pub speed: f64,
+    /// Cost per reference-second of work on every VM in this tier
+    /// (0.0 = free, the paper's model). An offload's spend is
+    /// `price × reference work`, independent of the VM's speed — a
+    /// fast expensive VM costs the same as a slow expensive VM for the
+    /// same task, it just finishes sooner.
+    pub price: f64,
 }
 
 impl CloudTier {
-    /// New tier spec.
+    /// New free tier spec (price 0.0 — the paper's cost model).
     pub fn new(nodes: usize, speed: f64) -> Self {
-        Self { nodes, speed }
+        Self { nodes, speed, price: 0.0 }
+    }
+
+    /// New priced tier spec.
+    pub fn priced(nodes: usize, speed: f64, price: f64) -> Self {
+        Self { nodes, speed, price }
     }
 }
 
@@ -126,8 +142,18 @@ impl PlatformConfig {
             .collect()
     }
 
+    /// Per-VM speed + price specs in node-index order (the scheduler's
+    /// view of the pool; same order as [`Self::cloud_speeds`]).
+    pub fn cloud_specs(&self) -> Vec<NodeSpec> {
+        self.tiers
+            .iter()
+            .flat_map(|t| std::iter::repeat(NodeSpec::new(t.speed, t.price)).take(t.nodes))
+            .collect()
+    }
+
     /// Reject configurations that could not be simulated (non-positive
-    /// or non-finite speeds/bandwidth). Zero node counts are legal.
+    /// or non-finite speeds/bandwidth, negative or non-finite prices).
+    /// Zero node counts are legal.
     pub fn validate(&self) -> Result<()> {
         for (name, value) in [
             ("local_speed", self.local_speed),
@@ -144,6 +170,13 @@ impl PlatformConfig {
                     tier.speed
                 );
             }
+            if !tier.price.is_finite() || tier.price < 0.0 {
+                bail!(
+                    "platform config: tiers[{i}].price must be a non-negative finite \
+                     number, got {}",
+                    tier.price
+                );
+            }
         }
         Ok(())
     }
@@ -151,7 +184,9 @@ impl PlatformConfig {
 
 /// The simulated hybrid platform.
 pub struct Platform {
+    /// The configuration the platform was built from.
     pub config: PlatformConfig,
+    /// The simulated WAN between cluster and cloud.
     pub network: Arc<SimNetwork>,
     local: Vec<Arc<Node>>,
     cloud: Vec<Arc<Node>>,
@@ -177,8 +212,7 @@ impl Platform {
             .enumerate()
             .map(|(index, speed)| Arc::new(Node::new(NodeKind::Cloud, index, speed)))
             .collect();
-        let cloud_sched =
-            NodeScheduler::heterogeneous(config.schedule, config.cloud_speeds());
+        let cloud_sched = NodeScheduler::priced(config.schedule, config.cloud_specs());
         Ok(Arc::new(Self {
             config,
             network,
@@ -229,12 +263,24 @@ impl Platform {
         })
     }
 
-    /// Lease a cloud VM for one offload round trip. `estimate` is the
-    /// expected reference compute work (cost-model EWMA) and weights
-    /// the earliest-finish-time choice.
+    /// Lease a cloud VM for one offload round trip under the default
+    /// time objective. `estimate` is the expected reference compute
+    /// work (cost-model EWMA) and weights the earliest-finish-time
+    /// choice.
     pub fn cloud_lease(&self, estimate: Option<Duration>) -> Result<Lease> {
+        self.cloud_lease_with(estimate, Objective::Time)
+    }
+
+    /// As [`Self::cloud_lease`], but placing under an explicit
+    /// time-vs-money [`Objective`] (the migration manager's configured
+    /// `[migration] objective`).
+    pub fn cloud_lease_with(
+        &self,
+        estimate: Option<Duration>,
+        objective: Objective,
+    ) -> Result<Lease> {
         self.cloud_sched
-            .lease(estimate)
+            .lease_with(estimate, objective)
             .context("scheduling offload on the cloud pool")
     }
 
@@ -319,9 +365,34 @@ mod tests {
                 tiers: vec![CloudTier::new(1, 4.0), CloudTier::new(1, f64::INFINITY)],
                 ..Default::default()
             },
+            PlatformConfig {
+                tiers: vec![CloudTier::priced(1, 4.0, -0.25)],
+                ..Default::default()
+            },
+            PlatformConfig {
+                tiers: vec![CloudTier::priced(1, 4.0, f64::NAN)],
+                ..Default::default()
+            },
         ] {
             assert!(Platform::new(bad).is_err());
         }
+    }
+
+    #[test]
+    fn priced_tiers_flow_into_the_scheduler() {
+        let p = Platform::new(PlatformConfig {
+            tiers: vec![CloudTier::priced(2, 2.0, 1.0), CloudTier::priced(1, 8.0, 10.0)],
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(p.cloud_scheduler().prices(), vec![1.0, 1.0, 10.0]);
+        assert_eq!(p.config.cloud_specs().len(), 3);
+        // Default tiers stay free: the paper's cost model is unchanged.
+        assert_eq!(PlatformConfig::default().tiers[0].price, 0.0);
+        let lease = p
+            .cloud_lease_with(None, crate::scheduler::Objective::Cost)
+            .unwrap();
+        assert_eq!((lease.node, lease.price), (0, 1.0), "cost lease picks the cheap tier");
     }
 
     #[test]

@@ -27,8 +27,14 @@ impl std::fmt::Display for NodeKind {
 /// offload lease pins.
 #[derive(Debug)]
 pub struct Node {
+    /// Whether this is a local-cluster node or a cloud VM (decides
+    /// which MDSS store is "ours" during execution).
     pub kind: NodeKind,
+    /// Position within its kind's pool. For cloud VMs the index is
+    /// global across the flattened tier list — it is what a placement
+    /// pin ([`crate::migration::PinnedNode`]) carries.
     pub index: usize,
+    /// Speed factor relative to the reference node.
     pub speed: f64,
 }
 

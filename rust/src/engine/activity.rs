@@ -69,6 +69,7 @@ impl Services {
 
 /// Execution context handed to an activity.
 pub struct ActivityCtx {
+    /// Shared services (runtime, MDSS, platform).
     pub services: Arc<Services>,
     /// The node this activity runs on (its tier decides which MDSS
     /// store is "ours"; its speed scales compute time). For offloaded

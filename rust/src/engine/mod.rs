@@ -38,11 +38,13 @@ use crate::workflow::{analysis, Step, StepKind, Workflow};
 
 /// Execution trace events (tests and diagnostics).
 #[derive(Debug, Clone, PartialEq)]
+#[allow(missing_docs)] // field meanings are given on each variant
 pub enum Event {
     /// An activity began on a node. For an offloaded step this is the
     /// cloud VM the scheduler leased and the worker executed on (one
     /// event per offload round trip), so the trace records where every
-    /// piece of work actually ran.
+    /// piece of work actually ran — including work a steal pass
+    /// re-pinned.
     ActivityStarted { step: String, node: String },
     /// An activity finished; simulated duration in microseconds.
     ActivityFinished { step: String, sim_us: u64 },
@@ -57,6 +59,14 @@ pub enum Event {
     Resumed { step: String },
     /// Remotable step executed locally (offloading disabled).
     LocalExecution { step: String },
+    /// Money charged for an offload round trip: `spend` is the leased
+    /// node's price × the observed reference work, `node` the leased
+    /// VM the charge was billed against (equal to the executing VM
+    /// with the in-tree worker, which always honors the placement
+    /// pin). Emitted only when the spend is non-zero (free pools keep
+    /// their traces unchanged), so the trace records both where priced
+    /// work ran and what it cost.
+    OffloadCharged { step: String, node: String, spend: f64 },
     /// A WriteLine emitted a line.
     Line { text: String },
 }
@@ -68,6 +78,9 @@ pub struct RunReport {
     pub sim_time: Duration,
     /// Real wall time of this run (diagnostics; not the paper metric).
     pub wall_time: Duration,
+    /// Total money spent on offloads during the run (the sum of the
+    /// [`Event::OffloadCharged`] trace events; 0.0 on free pools).
+    pub spend: f64,
     /// Lines produced by WriteLine steps (cloud lines prefixed).
     pub lines: Vec<String>,
     /// Trace events.
@@ -97,6 +110,14 @@ pub struct OffloadOutcome {
     /// Name of the cloud VM the step executed on (the scheduler's
     /// leased node); surfaced as an [`Event::ActivityStarted`].
     pub node: Option<String>,
+    /// Name of the leased VM the spend was billed against. Equal to
+    /// `node` with the in-tree worker (the pin is always honored);
+    /// still set when a legacy worker omits its placement report.
+    pub billed_node: String,
+    /// Money charged for the round trip (leased node's price ×
+    /// observed reference work); surfaced as an
+    /// [`Event::OffloadCharged`] when non-zero.
+    pub spend: f64,
 }
 
 /// What the migration manager decided to do with a remotable step.
@@ -104,10 +125,14 @@ pub struct OffloadOutcome {
 pub enum OffloadVerdict {
     /// The step ran remotely; re-integrate these results.
     Executed(OffloadOutcome),
-    /// The manager declined (cost model says local is cheaper, or the
-    /// cloud is unreachable and fallback is enabled): the engine runs
-    /// the step locally.
-    Declined { reason: String },
+    /// The manager declined (cost model says local is cheaper, budget
+    /// or admission control gated it, or the cloud is unreachable and
+    /// fallback is enabled): the engine runs the step locally.
+    Declined {
+        /// Human-readable decline reason (surfaced as an
+        /// [`Event::Line`]).
+        reason: String,
+    },
 }
 
 /// The engine's hook into the migration manager (paper §3.3).
@@ -237,11 +262,20 @@ impl Engine {
             .exec(&wf.root, &ctx)
             .with_context(|| format!("running workflow '{}'", wf.name))?;
 
+        let events = events.into_inner().unwrap();
+        let spend = events
+            .iter()
+            .map(|e| match e {
+                Event::OffloadCharged { spend, .. } => *spend,
+                _ => 0.0,
+            })
+            .sum();
         Ok(RunReport {
             sim_time,
             wall_time: started.elapsed(),
+            spend,
             lines: lines.into_inner().unwrap(),
-            events: events.into_inner().unwrap(),
+            events,
         })
     }
 
@@ -481,11 +515,19 @@ impl Engine {
             }
         }
         // Record where the work actually ran: the worker reports the
-        // pinned VM, which by construction is the scheduler's lease.
+        // pinned VM, which by construction is the scheduler's lease —
+        // including a lease the steal pass re-pinned.
         if let Some(node) = &outcome.node {
             ctx.event(Event::ActivityStarted {
                 step: target.display_name.clone(),
                 node: node.clone(),
+            });
+        }
+        if outcome.spend > 0.0 {
+            ctx.event(Event::OffloadCharged {
+                step: target.display_name.clone(),
+                node: outcome.billed_node.clone(),
+                spend: outcome.spend,
             });
         }
         for l in outcome.remote_lines {

@@ -21,8 +21,11 @@ use std::fmt;
 /// Runtime value of the workflow variable system.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Number (all numerics are `f64`).
     Num(f64),
+    /// String.
     Str(String),
+    /// Boolean.
     Bool(bool),
     /// Opaque reference to a data item (MDSS URI) or tensor handle.
     /// Expressions can pass it around and compare it but not operate
@@ -76,22 +79,30 @@ impl fmt::Display for Value {
 /// Parsed expression AST.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Expr {
+    /// Literal value.
     Lit(Value),
+    /// Variable reference.
     Var(String),
+    /// Unary operation.
     Unary(UnOp, Box<Expr>),
+    /// Binary operation.
     Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Builtin function call.
     Call(String, Vec<Expr>),
 }
 
 /// Unary operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum UnOp {
+    /// Numeric negation (`-`).
     Neg,
+    /// Logical not (`!`).
     Not,
 }
 
 /// Binary operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)] // operator names are self-describing
 pub enum BinOp {
     Add,
     Sub,
@@ -111,10 +122,15 @@ pub enum BinOp {
 /// Errors from parsing or evaluating expressions.
 #[derive(Debug)]
 pub enum EvalError {
+    /// The source text is not a valid expression.
     Parse(String),
+    /// A referenced variable is not in scope (paper Property 2).
     Undefined(String),
+    /// Operand or argument of the wrong type.
     Type(String),
+    /// Call to a function that is not a builtin.
     UnknownFn(String),
+    /// Division or modulo by zero.
     DivZero,
 }
 
@@ -306,6 +322,13 @@ fn eval_call(name: &str, args: Vec<Value>) -> Result<Value, EvalError> {
 }
 
 /// Convenience: parse + eval in one call.
+///
+/// ```
+/// use emerald::expr::{eval_str, Value};
+/// let v = eval_str("1 + 2 * 3", &|_| None)?;
+/// assert_eq!(v, Value::Num(7.0));
+/// # Ok::<(), emerald::expr::EvalError>(())
+/// ```
 pub fn eval_str(
     src: &str,
     lookup: &dyn Fn(&str) -> Option<Value>,

@@ -20,19 +20,38 @@ use std::fmt;
 /// deterministic (stable hashing for MDSS versions).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always `f64`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (sorted keys, deterministic serialization).
     Obj(BTreeMap<String, Value>),
 }
 
 /// Errors produced by the parser or by typed accessors.
 #[derive(Debug)]
 pub enum JsonError {
-    Parse { pos: usize, msg: String },
-    Type { expected: &'static str, got: &'static str },
+    /// Malformed input at a byte position.
+    Parse {
+        /// Byte offset of the error in the input.
+        pos: usize,
+        /// What went wrong.
+        msg: String,
+    },
+    /// A typed accessor found a different kind of value.
+    Type {
+        /// The kind the accessor wanted.
+        expected: &'static str,
+        /// The kind actually present.
+        got: &'static str,
+    },
+    /// [`Value::get`] on an object without the key.
     MissingKey(String),
 }
 

@@ -28,16 +28,47 @@
 //! admission control), [`mdss`] (§3.4), [`cloud`] (§4 testbed,
 //! generalized to heterogeneous cloud tiers), [`at`] (§4 application).
 //!
-//! Beyond the paper: [`scheduler`] — load- and speed-aware cloud-VM
-//! placement (earliest estimated finish time over mixed tiers) with
-//! per-node lease/occupancy tracking, a queueing-delay model, a
-//! deterministic makespan planner and an admission-cap rule, replacing
-//! the seed's blind round-robin (see `benches/fig13_scheduler.rs` for
-//! the A/B comparisons).
+//! Beyond the paper: [`scheduler`] — load-, speed- and **price**-aware
+//! cloud-VM placement (earliest estimated finish time over mixed
+//! tiers, under a configurable time-vs-money objective) with per-node
+//! lease/occupancy tracking, a queueing-delay model, idle-VM work
+//! stealing, a deterministic makespan/spend planner and
+//! budget-capped admission rules, replacing the seed's blind
+//! round-robin (see `benches/fig13_scheduler.rs` for the A/B
+//! comparisons).
 //!
 //! Substrates (offline environment, see DESIGN.md §1): [`jsonmini`],
 //! [`xmlmini`], [`expr`], [`cli`], [`quickprop`], [`benchkit`],
 //! [`metrics`], [`runtime`].
+//!
+//! User-facing documentation lives in the repository: `README.md`
+//! (quickstart), `docs/ARCHITECTURE.md` (module map + the life of an
+//! offload) and `docs/CONFIG.md` (the complete TOML reference).
+//!
+//! ## Example: partition and run a workflow
+//!
+//! ```
+//! use emerald::cloud::Platform;
+//! use emerald::engine::{ActivityRegistry, Engine, Services};
+//! use emerald::{partitioner, workflow::xaml};
+//!
+//! let wf = xaml::parse(
+//!     r#"<Workflow>
+//!          <Variables><Variable Name="msg" Init="'hi'"/></Variables>
+//!          <Sequence><WriteLine Text="msg"/></Sequence>
+//!        </Workflow>"#,
+//! )?;
+//! let (partitioned, report) = partitioner::partition(&wf)?;
+//! assert_eq!(report.migration_points, 0);
+//!
+//! let services = Services::without_runtime(Platform::paper_testbed());
+//! let engine = Engine::new(std::sync::Arc::new(ActivityRegistry::new()), services);
+//! let run = engine.run(&partitioned)?;
+//! assert_eq!(run.lines, vec!["hi"]);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cli;

@@ -151,10 +151,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine = build_engine(args, services.clone(), reg)?.verbose();
     let report = engine.run(&partitioned)?;
     println!(
-        "done: sim_time={:.3}s wall={:.3}s offloads={}",
+        "done: sim_time={:.3}s wall={:.3}s offloads={} spend={:.3}",
         report.sim_time.as_secs_f64(),
         report.wall_time.as_secs_f64(),
-        report.offload_count()
+        report.offload_count(),
+        report.spend
     );
     if let Some(path) = args.options.get("metrics") {
         let metrics = emerald::metrics::RunMetrics::new(&report)
@@ -179,9 +180,10 @@ fn cmd_at(args: &Args) -> Result<()> {
     let engine = build_engine(args, services.clone(), registry_with_at())?.verbose();
     let report = engine.run(&partitioned)?;
     println!(
-        "done: sim_time={:.3}s offloads={}",
+        "done: sim_time={:.3}s offloads={} spend={:.3}",
         report.sim_time.as_secs_f64(),
-        report.offload_count()
+        report.offload_count(),
+        report.spend
     );
     if let Some(path) = args.options.get("metrics") {
         let metrics = emerald::metrics::RunMetrics::new(&report)
@@ -228,7 +230,13 @@ fn cmd_info(_args: &Args) -> Result<()> {
     let tiers: Vec<String> = cfg
         .tiers
         .iter()
-        .map(|t| format!("{}@x{}", t.nodes, t.speed))
+        .map(|t| {
+            if t.price > 0.0 {
+                format!("{}@x{}(${}/ref-s)", t.nodes, t.speed, t.price)
+            } else {
+                format!("{}@x{}", t.nodes, t.speed)
+            }
+        })
         .collect();
     println!(
         "\nplatform: {} local node(s) @x{}, {} cloud VM(s) [{}], WAN {} Mbit/s, {}ms latency",

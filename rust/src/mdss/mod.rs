@@ -48,10 +48,15 @@ pub enum CloudState {
 /// Synchronization statistics (per call and cumulative).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SyncStats {
+    /// Items pushed local → cloud.
     pub uploads: u64,
+    /// Items pulled cloud → local.
     pub downloads: u64,
+    /// Payload bytes pushed local → cloud.
     pub bytes_up: u64,
+    /// Payload bytes pulled cloud → local.
     pub bytes_down: u64,
+    /// Simulated time spent on the wire.
     pub sim_time: Duration,
 }
 

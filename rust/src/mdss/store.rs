@@ -14,10 +14,13 @@ pub struct Version(pub u64);
 /// A stored data item.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataItem {
+    /// The item's address.
     pub uri: Uri,
+    /// Logical version (last-writer-wins).
     pub version: Version,
     /// SHA-256 of the payload (integrity + cheap equality).
     pub hash: [u8; 32],
+    /// The item's bytes.
     pub payload: Vec<u8>,
 }
 

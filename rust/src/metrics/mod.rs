@@ -34,8 +34,11 @@ impl Stopwatch {
 /// Per-step aggregates extracted from the event trace.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StepAgg {
+    /// Times the step ran (locally or offloaded).
     pub invocations: u64,
+    /// Total simulated time across invocations.
     pub sim: Duration,
+    /// How many of the invocations were offload round trips.
     pub offloaded: u64,
 }
 
@@ -63,9 +66,13 @@ pub fn aggregate_steps(report: &RunReport) -> BTreeMap<String, StepAgg> {
 
 /// The full machine-readable record of one run.
 pub struct RunMetrics<'a> {
+    /// The engine's run report (events, lines, sim time, spend).
     pub report: &'a RunReport,
+    /// Migration-manager statistics, when attached.
     pub migration: Option<MigrationStats>,
+    /// MDSS synchronization statistics, when attached.
     pub sync: Option<SyncStats>,
+    /// WAN transfer ledger, when attached.
     pub network: Option<NetworkLedger>,
 }
 
@@ -115,6 +122,7 @@ impl<'a> RunMetrics<'a> {
             ("sim_time_s", Value::num(self.report.sim_time.as_secs_f64())),
             ("wall_time_s", Value::num(self.report.wall_time.as_secs_f64())),
             ("offloads", Value::num(self.report.offload_count() as f64)),
+            ("spend", Value::num(self.report.spend)),
             ("lines", Value::Arr(self.report.lines.iter().map(Value::str).collect())),
             ("steps", steps_json),
         ];
@@ -133,6 +141,9 @@ impl<'a> RunMetrics<'a> {
                     ("queued", Value::num(m.queued as f64)),
                     ("queue_sim_s", Value::num(m.queue_sim.as_secs_f64())),
                     ("batched_steps", Value::num(m.batched_steps as f64)),
+                    ("spend", Value::num(m.spend)),
+                    ("budget_declined", Value::num(m.budget_declined as f64)),
+                    ("stolen", Value::num(m.stolen as f64)),
                 ]),
             ));
         }
@@ -183,6 +194,7 @@ mod tests {
         RunReport {
             sim_time: Duration::from_millis(1500),
             wall_time: Duration::from_millis(800),
+            spend: 0.25,
             lines: vec!["iter=0 misfit=1".into()],
             events: vec![
                 Event::ActivityFinished { step: "forward".into(), sim_us: 1000 },
@@ -211,7 +223,10 @@ mod tests {
         let text = m.to_json_string();
         let v = crate::jsonmini::parse(&text).unwrap();
         assert_eq!(v.get("sim_time_s").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(v.get("spend").unwrap().as_f64().unwrap(), 0.25);
         assert!(v.get("migration").is_ok());
+        assert!(v.get("migration").unwrap().get("spend").is_ok());
+        assert!(v.get("migration").unwrap().get("stolen").is_ok());
         assert!(v.get("network").is_ok());
         assert!(v.get("mdss").is_err()); // not attached
         assert_eq!(

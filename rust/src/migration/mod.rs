@@ -38,6 +38,25 @@
 //! list, no WAN term). Partitioner-fused batches
 //! arrive here as ordinary steps whose requests carry `batch > 1` —
 //! one round trip for a whole run of remotable steps.
+//!
+//! **Money** (this PR's EC2-cost follow-up): cloud tiers may carry a
+//! price per reference-second of work. The manager places leases under
+//! a configurable time-vs-money [`Objective`]
+//! ([`ManagerConfig::objective`]), keeps a cumulative spend ledger
+//! ([`MigrationStats::spend`]), and — when [`ManagerConfig::budget`]
+//! is set — declines any offload whose projected spend would push the
+//! run past its budget (`budget = 0` disables offloading entirely; a
+//! projected spend that lands exactly on the budget is still
+//! admitted). Estimate-less first sightings project zero spend, so one
+//! offload may overshoot a partially-consumed budget by one
+//! observation; from then on the ledger gates exactly. A **steal
+//! pass** ([`ManagerConfig::steal`], [`crate::scheduler::Lease::try_steal`])
+//! runs between leasing and packaging: a lease queued behind in-flight
+//! work re-pins to an idle VM that would finish strictly sooner,
+//! bounded by the remaining budget — so a fast VM never idles while a
+//! slow queue is deep unless money forbids the move. The re-pinned
+//! node travels in the signed [`PinnedNode`] like any other placement,
+//! and the trace records the VM the work actually executed on.
 
 pub mod protocol;
 pub mod security;
@@ -59,6 +78,7 @@ use crate::engine::{
 };
 use crate::expr::Value;
 use crate::mdss::{CloudState, Uri};
+use crate::scheduler::Objective;
 use crate::workflow::Step;
 
 /// Data-placement policy (E4 ablation).
@@ -84,10 +104,12 @@ pub enum Decision {
     CostBased,
 }
 
-/// Fault-handling configuration for the offload path.
+/// Fault-handling and placement configuration for the offload path.
 #[derive(Debug, Clone)]
 pub struct ManagerConfig {
+    /// Data-placement policy (MDSS freshness vs bundle-always).
     pub policy: DataPolicy,
+    /// Offload-decision policy (always vs EWMA cost model).
     pub decision: Decision,
     /// Transport attempts per offload (>= 1).
     pub attempts: usize,
@@ -102,11 +124,36 @@ pub struct ManagerConfig {
     /// tier must not make offloading a loss. Needs cost history for
     /// the step; first sightings are always admitted.
     pub admission: bool,
+    /// Time-vs-money objective for lease placement (`[migration]
+    /// objective`). Only meaningful when tiers carry prices; on a free
+    /// pool every objective behaves like [`Objective::Time`].
+    pub objective: Objective,
+    /// Spend budget (`[migration] budget`). `None` = unlimited (the
+    /// paper's free cloud). With a budget, an offload is declined
+    /// when the ledger has already reached the budget or when the
+    /// projected spend (`previewed price × estimated reference work`)
+    /// would push it past; a projection landing exactly on the budget
+    /// is still admitted. `Some(0.0)` declines every offload.
+    ///
+    /// The ledger ([`MigrationStats::spend`]) is cumulative over the
+    /// *manager's* lifetime. The CLI builds one manager per
+    /// invocation, so there the budget is per-run; an embedded
+    /// manager reused across several [`crate::engine::Engine::run`]
+    /// calls enforces one budget across all of them — build a fresh
+    /// manager per run for per-run budgets.
+    pub budget: Option<f64>,
+    /// Enable the work-stealing pass (`[migration] steal`): a lease
+    /// queued behind in-flight work re-pins to an idle VM that would
+    /// finish strictly sooner, within the remaining budget. Off by
+    /// default (placement then exactly matches the lease the policy
+    /// granted).
+    pub steal: bool,
 }
 
 impl ManagerConfig {
     /// Paper defaults: MDSS placement, always offload, one attempt,
-    /// no fallback, no signing, no admission control.
+    /// no fallback, no signing, no admission control, time objective,
+    /// no budget, no stealing.
     pub fn new(policy: DataPolicy) -> Self {
         Self {
             policy,
@@ -115,6 +162,9 @@ impl ManagerConfig {
             local_fallback: false,
             signing: None,
             admission: false,
+            objective: Objective::Time,
+            budget: None,
+            steal: false,
         }
     }
 }
@@ -122,6 +172,7 @@ impl ManagerConfig {
 /// Cumulative migration statistics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MigrationStats {
+    /// Completed offload round trips.
     pub offloads: u64,
     /// Protocol bytes (task code + values), excluding MDSS data.
     pub protocol_bytes: u64,
@@ -147,6 +198,17 @@ pub struct MigrationStats {
     /// Extra steps that rode in multi-step (batched) requests — each
     /// one is a WAN round trip the batching pass amortized away.
     pub batched_steps: u64,
+    /// Cumulative money spent on completed offloads (`Σ leased price ×
+    /// observed reference work`). This is the ledger the budget gate
+    /// reads; in-flight offloads have not committed their spend yet,
+    /// so under heavy concurrency the gate is best-effort.
+    pub spend: f64,
+    /// The subset of `declined` due to the budget gate (projected
+    /// spend past [`ManagerConfig::budget`]).
+    pub budget_declined: u64,
+    /// Offloads whose lease was re-pinned by the work-stealing pass
+    /// before packaging.
+    pub stolen: u64,
 }
 
 impl MigrationStats {
@@ -166,6 +228,9 @@ impl MigrationStats {
         self.queued += d.queued;
         self.queue_sim += d.queue_sim;
         self.batched_steps += d.batched_steps;
+        self.spend += d.spend;
+        self.budget_declined += d.budget_declined;
+        self.stolen += d.stolen;
     }
 }
 
@@ -451,7 +516,50 @@ impl MigrationManager {
             return Ok(OffloadVerdict::Declined { reason });
         }
 
-        // 0c. Admission control: preview the lease the scheduler
+        // 0c. Budget gate: a run that has already spent its budget
+        //     offloads nothing more, and a projected spend (previewed
+        //     node's price × estimated reference work) that would push
+        //     the ledger past the budget sends the step home. Exactly
+        //     reaching the budget is allowed; estimate-less first
+        //     sightings project zero and may overshoot once (the
+        //     module doc spells this out).
+        let (work_est, cost_est) = self.estimates(step);
+        let spent = match self.config.budget {
+            Some(_) => self.stats.lock().unwrap().spend,
+            None => 0.0,
+        };
+        // One preview serves both gates below, so the budget and
+        // admission decisions reason about the same projected
+        // placement (and the slots lock is taken once, not twice).
+        // Skipped entirely when neither gate is on: the probe costs a
+        // slots lock plus an O(pool) policy scan per offload.
+        let preview = if self.config.budget.is_some() || self.config.admission {
+            self.services
+                .platform
+                .cloud_scheduler()
+                .preview_with(work_est, self.config.objective)
+        } else {
+            None
+        };
+        if let Some(budget) = self.config.budget {
+            let projected = match (work_est, preview) {
+                (Some(work), Some(p)) => p.price * work.as_secs_f64(),
+                _ => 0.0,
+            };
+            if spent >= budget || spent + projected > budget {
+                delta.declined += 1;
+                delta.budget_declined += 1;
+                return Ok(OffloadVerdict::Declined {
+                    reason: format!(
+                        "budget: spent {spent:.3} of {budget:.3}, projected +{projected:.3} \
+                         for '{}' — executing locally",
+                        step.display_name
+                    ),
+                });
+            }
+        }
+
+        // 0d. Admission control: preview the lease the scheduler
         //     would grant; if the projected queueing behind in-flight
         //     work plus the expected round trip exceeds the local
         //     estimate, running locally is faster right now.
@@ -459,10 +567,9 @@ impl MigrationManager {
         //     leases or pending work on the previewed node) — the
         //     intrinsic remote-vs-local tradeoff is the CostBased
         //     gate's job.
-        let (work_est, cost_est) = self.estimates(step);
         if self.config.admission {
             if let Some((local_est, remote_est)) = cost_est {
-                if let Some(p) = self.services.platform.cloud_scheduler().preview(work_est) {
+                if let Some(p) = preview {
                     // Projected queueing on the previewed node: the
                     // larger of its pending-work drain time and the
                     // position-based projection the engine actually
@@ -502,17 +609,30 @@ impl MigrationManager {
         delta.sync_sim += sync_sim;
         sim += sync_sim;
 
-        // 2. Lease a cloud VM (earliest-finish-time placement across
+        // 2. Lease a cloud VM (objective-weighted placement across
         //    tiers, weighted by the cost model's reference-work
         //    estimate) *before* packaging, so the leased node rides in
         //    the signed request and pins remote execution. The lease
         //    is held across the round trip so concurrent offloads
         //    observe each other's occupancy.
-        let lease = self
+        let mut lease = self
             .services
             .platform
-            .cloud_lease(work_est)
+            .cloud_lease_with(work_est, self.config.objective)
             .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
+
+        // 2b. Steal pass: if this lease queued behind in-flight work
+        //     while another VM idles and would finish strictly sooner,
+        //     re-pin it there — bounded by the remaining budget, so a
+        //     cost-placed lease only upgrades to an expensive fast VM
+        //     when the run can afford it. The re-pinned node is what
+        //     gets packaged, signed and executed below.
+        if self.config.steal {
+            let cap = self.config.budget.map(|b| (b - spent).max(0.0));
+            if lease.try_steal(cap).is_some() {
+                delta.stolen += 1;
+            }
+        }
         let node = self
             .services
             .platform
@@ -571,12 +691,24 @@ impl MigrationManager {
         //     `position` reflects real lease overlap, so this term is
         //     load-dependent (deliberately: it models contention, which
         //     only exists when offloads actually overlap); workflows
-        //     without oversubscribed clouds are unaffected. For a
-        //     machine-independent policy comparison use
+        //     without oversubscribed clouds are unaffected. Positions
+        //     are grant-time snapshots: if a lease ahead of this one
+        //     was stolen away, the charge conservatively still counts
+        //     it. For a machine-independent policy comparison use
         //     `scheduler::simulate_makespan`.
         let position = lease.position;
         let queue_sim = remote_sim * position as u32;
         sim += queue_sim;
+        // Money: the leased (post-steal) node's price × the observed
+        // reference work. Charged from the lease because prices are
+        // local platform knowledge — the wire protocol stays
+        // price-free and wire-compatible. Billing names the *leased*
+        // VM (the reservation is what costs money); with the in-tree
+        // worker the pin is always honored, so leased == executed, and
+        // a legacy self-placing worker is still charged for the
+        // reservation it was handed.
+        let spend = lease.price * remote_sim.as_secs_f64() * node.speed;
+        let billed_node = node.name();
         drop(lease);
 
         // 5. Downlink + re-integration.
@@ -600,6 +732,7 @@ impl MigrationManager {
         delta.queued = u64::from(position > 0);
         delta.queue_sim = queue_sim;
         delta.batched_steps = req.batch.saturating_sub(1);
+        delta.spend = spend;
 
         // Report only what the worker says it executed on — a legacy
         // worker that ignored the pin placed the work itself, and
@@ -610,6 +743,8 @@ impl MigrationManager {
             sim,
             remote_lines: resp.lines,
             node: resp.node,
+            billed_node,
+            spend,
         }))
     }
 }

@@ -24,6 +24,13 @@ use crate::workflow::{xaml, Step, StepKind};
 /// exactly the node the scheduler chose even when its own platform
 /// config differs — this is what keeps placement and execution from
 /// diverging on heterogeneous pools.
+///
+/// A lease the work-stealing pass re-pinned
+/// ([`crate::scheduler::Lease::try_steal`]) travels through this same
+/// field: the manager steals *before* packaging, so the pin always
+/// names the VM that will actually execute, signatures cover the final
+/// placement, and the wire format is unchanged (peers without the
+/// field still decode, prices never cross the wire).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PinnedNode {
     /// Global cloud-node index (tier order; see

@@ -74,6 +74,7 @@ fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
 /// TCP client transport (one persistent connection, serialized use).
 pub struct TcpTransport {
     stream: Mutex<TcpStream>,
+    /// Address of the connected worker.
     pub addr: SocketAddr,
 }
 

@@ -41,8 +41,9 @@ use crate::workflow::{validate, Step, StepKind, Workflow};
 pub struct PartitionReport {
     /// Number of migration points inserted.
     pub migration_points: usize,
-    /// Steps in the workflow before / after.
+    /// Steps in the workflow before partitioning.
     pub steps_before: usize,
+    /// Steps in the workflow after partitioning (points included).
     pub steps_after: usize,
     /// Number of fused multi-step batches (0 without batching).
     pub batches: usize,

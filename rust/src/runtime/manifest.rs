@@ -13,6 +13,7 @@ use crate::jsonmini::{self, Value};
 /// are f32; the dtype field in the manifest is validated).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSig {
+    /// Tensor shape (row-major dimensions).
     pub dims: Vec<usize>,
 }
 
@@ -48,26 +49,42 @@ impl TensorSig {
 /// One AOT artifact (an HLO-text file plus its signature).
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// HLO-text file path, relative to the manifest directory.
     pub path: PathBuf,
+    /// Input tensor signatures, in call order.
     pub inputs: Vec<TensorSig>,
+    /// Output tensor signatures, in result order.
     pub outputs: Vec<TensorSig>,
 }
 
 /// One mesh configuration (an AT workload; paper §4 inputs).
 #[derive(Debug, Clone)]
 pub struct MeshSpec {
+    /// Mesh name (manifest key).
     pub name: String,
+    /// Grid dimensions (nx, ny, nz).
     pub shape: [usize; 3],
+    /// Total time steps per simulation.
     pub nt: usize,
+    /// Time steps per chunked artifact call.
     pub chunk: usize,
+    /// Time-step size in seconds.
     pub dt: f32,
+    /// Source wavelet peak frequency (Hz).
     pub f0: f32,
+    /// Source grid position.
     pub source: [usize; 3],
+    /// Receiver grid positions.
     pub receivers: Vec<[usize; 3]>,
+    /// Reference wave speed (initial model value).
     pub c_ref: f32,
+    /// Lower clamp on inverted wave speeds.
     pub c_min: f32,
+    /// Upper clamp on inverted wave speeds.
     pub c_max: f32,
+    /// File holding the ground-truth model (relative to the manifest).
     pub true_model_file: PathBuf,
 }
 
@@ -96,8 +113,11 @@ impl MeshSpec {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from (resolves artifact paths).
     pub dir: PathBuf,
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Meshes by name.
     pub meshes: BTreeMap<String, MeshSpec>,
 }
 

@@ -36,15 +36,32 @@
 //!   execution can no longer diverge, which matters as soon as speeds
 //!   differ (the old round-robin executor could charge a slow node's
 //!   time for work the scheduler placed on a fast one).
-//! * [`simulate_makespan`] — deterministic discrete-placement model of
-//!   the same policies over a known task list and per-node speeds
-//!   (virtual finish clocks). [`admission_cap`] builds on it: the
-//!   planner's rule for how many offloads to admit before queueing on
-//!   the slow tier would exceed the local estimate (pure compute
-//!   makespans). The migration manager applies the same queueing
-//!   *principle* at lease time via [`NodeScheduler::preview`] with
-//!   WAN-inclusive cost-model estimates (`ManagerConfig::admission`),
-//!   so the two can differ when WAN latency dominates a round trip.
+//! * **Money is a scheduling dimension.** Every node carries a *price*
+//!   (cost per reference-second of work, [`NodeSpec::price`]), and the
+//!   EFT policy takes an [`Objective`]: `Time` (classic earliest
+//!   finish), `Cost` (cheapest node first), or `Weighted` (a
+//!   seconds-per-currency-unit exchange rate folds spend into the
+//!   finish-time score). Prices default to zero, which reproduces the
+//!   paper's free-cloud behaviour exactly.
+//! * **Work stealing** ([`Lease::try_steal`]): when a lease sits
+//!   queued behind in-flight work while another VM idles and would
+//!   finish the work strictly sooner, the lease re-pins to the idle
+//!   node — closing the "fast VM idles while a slow queue is deep"
+//!   gap. The migration manager runs this pass just before packaging,
+//!   bounded by the remaining per-run budget, and the re-pinned node
+//!   travels in the request's signed placement pin exactly like any
+//!   other.
+//! * [`simulate_makespan`] / [`simulate_plan`] — deterministic
+//!   discrete-placement models of the same policies over a known task
+//!   list (virtual finish clocks, plus a spend ledger when nodes are
+//!   priced). [`admission_cap`] / [`admission_cap_with_budget`] build
+//!   on them: the planner's rule for how many offloads to admit before
+//!   queueing on the slow tier would exceed the local estimate or the
+//!   cumulative spend would bust the budget (pure compute makespans).
+//!   The migration manager applies the same queueing *principle* at
+//!   lease time via [`NodeScheduler::preview`] with WAN-inclusive
+//!   cost-model estimates (`ManagerConfig::admission`), so the two can
+//!   differ when WAN latency dominates a round trip.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -60,11 +77,62 @@ pub enum SchedulePolicy {
     /// Earliest estimated finish time: least `(pending + estimate) /
     /// speed`, then fewest active leases, then the faster node, then
     /// the lowest index. Reduces to classic least-loaded on a
-    /// homogeneous pool.
+    /// homogeneous pool. The only policy that honours an
+    /// [`Objective`] other than time.
     LeastLoaded,
     /// Speed-blind least pending reference work (the PR-1 policy,
     /// kept as the A/B baseline for heterogeneous pools).
     LeastLoadedBlind,
+}
+
+/// What the [`SchedulePolicy::LeastLoaded`] policy optimizes when
+/// placing a lease (`[migration] objective` in the config file).
+///
+/// Prices are in cost units per *reference-second* of work (one second
+/// of compute on a speed-1.0 node), so an offload's spend is
+/// `price × reference work` — independent of how fast the chosen node
+/// runs it. `Cost` therefore reduces to "cheapest node first".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimize estimated finish time (the default; ignores prices).
+    Time,
+    /// Minimize spend: cheapest node first, earliest finish among
+    /// equally-priced nodes. On an unpriced (all-zero) pool this is
+    /// identical to [`Objective::Time`].
+    Cost,
+    /// Blend the two: minimize `finish_seconds + weight × spend`,
+    /// where `weight` is the exchange rate in seconds per currency
+    /// unit (`[migration] weight`). `Weighted(0.0)` equals `Time`; a
+    /// large weight approaches `Cost`. An estimate-less placement
+    /// projects no spend on any node, so the weighted score reduces
+    /// to finish time with price as the tie-break — the first
+    /// sighting of a step on an *idle* pool still lands on the
+    /// cheapest node, but unknown work on a loaded pool places by
+    /// finish time alone (use [`Objective::Cost`] when money must
+    /// dominate even without cost history).
+    Weighted(f64),
+}
+
+/// One node of a scheduling pool: a speed factor (reference = 1.0)
+/// plus a price per reference-second of work (0.0 = free).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    /// Speed factor of the node (reference = 1.0).
+    pub speed: f64,
+    /// Cost per reference-second of work executed on the node.
+    pub price: f64,
+}
+
+impl NodeSpec {
+    /// New node spec.
+    pub fn new(speed: f64, price: f64) -> Self {
+        Self { speed, price }
+    }
+
+    /// A free node (price 0.0) — the paper's cost model.
+    pub fn free(speed: f64) -> Self {
+        Self { speed, price: 0.0 }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -76,6 +144,8 @@ struct Slot {
     pending_us: f64,
     /// Speed factor of this node (reference = 1.0).
     speed: f64,
+    /// Price per reference-second of work on this node.
+    price: f64,
 }
 
 /// Occupancy-tracking scheduler over a (possibly heterogeneous) pool.
@@ -92,6 +162,8 @@ pub struct LeasePreview {
     pub node: usize,
     /// Speed factor of that node.
     pub speed: f64,
+    /// Price per reference-second of work on that node.
+    pub price: f64,
     /// Simulated time until that node's pending estimated work drains
     /// (`pending / speed`).
     pub wait: Duration,
@@ -112,32 +184,53 @@ pub struct Lease {
     /// Speed factor of the leased node — pins remote execution to the
     /// VM the scheduler chose.
     pub speed: f64,
+    /// Price per reference-second of work on the leased node (what the
+    /// migration manager charges the run's budget).
+    pub price: f64,
     estimate_us: f64,
 }
 
 impl NodeScheduler {
-    /// New scheduler over `nodes` identical speed-1.0 nodes.
+    /// New scheduler over `nodes` identical free speed-1.0 nodes.
     pub fn new(policy: SchedulePolicy, nodes: usize) -> Arc<Self> {
         Self::heterogeneous(policy, vec![1.0; nodes])
     }
 
-    /// New scheduler over a pool with one speed factor per node.
-    /// Panics on non-positive or non-finite speeds (like
-    /// [`crate::cloud::Node::new`]) — failing at construction beats a
-    /// NaN surfacing in a later placement computation.
+    /// New scheduler over a pool with one speed factor per node (all
+    /// nodes free). See [`Self::priced`] for pools with prices.
     pub fn heterogeneous(policy: SchedulePolicy, speeds: Vec<f64>) -> Arc<Self> {
+        Self::priced(policy, speeds.into_iter().map(NodeSpec::free).collect())
+    }
+
+    /// New scheduler over a pool with one [`NodeSpec`] (speed + price)
+    /// per node. Panics on non-positive or non-finite speeds and on
+    /// negative or non-finite prices (like [`crate::cloud::Node::new`])
+    /// — failing at construction beats a NaN surfacing in a later
+    /// placement computation.
+    pub fn priced(policy: SchedulePolicy, specs: Vec<NodeSpec>) -> Arc<Self> {
         Arc::new(Self {
             policy,
             rr: AtomicUsize::new(0),
             slots: Mutex::new(
-                speeds
+                specs
                     .into_iter()
-                    .map(|speed| {
+                    .map(|spec| {
                         assert!(
-                            speed.is_finite() && speed > 0.0,
-                            "node speed must be a positive finite number, got {speed}"
+                            spec.speed.is_finite() && spec.speed > 0.0,
+                            "node speed must be a positive finite number, got {}",
+                            spec.speed
                         );
-                        Slot { active: 0, pending_us: 0.0, speed }
+                        assert!(
+                            spec.price.is_finite() && spec.price >= 0.0,
+                            "node price must be a non-negative finite number, got {}",
+                            spec.price
+                        );
+                        Slot {
+                            active: 0,
+                            pending_us: 0.0,
+                            speed: spec.speed,
+                            price: spec.price,
+                        }
                     })
                     .collect(),
             ),
@@ -169,6 +262,11 @@ impl NodeScheduler {
         self.slots.lock().unwrap().iter().map(|s| s.speed).collect()
     }
 
+    /// Price per node (diagnostics and tests).
+    pub fn prices(&self) -> Vec<f64> {
+        self.slots.lock().unwrap().iter().map(|s| s.price).collect()
+    }
+
     /// Estimated finish time of `estimate_us` more work on a slot.
     fn eft(slot: &Slot, estimate_us: f64) -> f64 {
         (slot.pending_us + estimate_us) / slot.speed
@@ -176,8 +274,15 @@ impl NodeScheduler {
 
     /// The node the policy selects under the given occupancy. `rr` is
     /// the round-robin cursor value to use (callers decide whether the
-    /// cursor advances).
-    fn choose(policy: SchedulePolicy, slots: &[Slot], estimate_us: f64, rr: usize) -> usize {
+    /// cursor advances). Only [`SchedulePolicy::LeastLoaded`] honours
+    /// a non-time `objective`.
+    fn choose(
+        policy: SchedulePolicy,
+        objective: Objective,
+        slots: &[Slot],
+        estimate_us: f64,
+        rr: usize,
+    ) -> usize {
         match policy {
             SchedulePolicy::RoundRobin => rr % slots.len(),
             SchedulePolicy::LeastLoadedBlind => {
@@ -192,10 +297,33 @@ impl NodeScheduler {
                 best
             }
             SchedulePolicy::LeastLoaded => {
+                // Primary score per node under the objective; lower
+                // wins, ties go to fewer active leases, then to the
+                // faster node, then to the lower index.
+                let score = |s: &Slot| -> (f64, f64) {
+                    match objective {
+                        Objective::Time => (Self::eft(s, estimate_us), 0.0),
+                        // Spend = price × reference work, which is the
+                        // same on every node of equal price — so the
+                        // primary key is the price itself, with finish
+                        // time deciding among equally-priced nodes.
+                        Objective::Cost => (s.price, Self::eft(s, estimate_us)),
+                        // Price breaks weighted-score ties, so an
+                        // estimate-less lease (whose spend term is
+                        // zero on every node) still prefers the
+                        // cheapest of equally-finishing nodes instead
+                        // of silently degenerating to pure Time.
+                        Objective::Weighted(w) => (
+                            Self::eft(s, estimate_us) / 1e6
+                                + w * s.price * estimate_us / 1e6,
+                            s.price,
+                        ),
+                    }
+                };
                 let mut best = 0usize;
                 for i in 1..slots.len() {
-                    let cand = (Self::eft(&slots[i], estimate_us), slots[i].active);
-                    let incumbent = (Self::eft(&slots[best], estimate_us), slots[best].active);
+                    let cand = (score(&slots[i]), slots[i].active);
+                    let incumbent = (score(&slots[best]), slots[best].active);
                     if cand < incumbent
                         || (cand == incumbent && slots[i].speed > slots[best].speed)
                     {
@@ -207,10 +335,22 @@ impl NodeScheduler {
         }
     }
 
-    /// Take a lease on a node. `estimate` is the expected reference
-    /// work of the offload (from the cost model); it weights the
-    /// placement choice and is released with the lease.
+    /// Take a lease on a node under the default time objective.
+    /// `estimate` is the expected reference work of the offload (from
+    /// the cost model); it weights the placement choice and is
+    /// released with the lease.
     pub fn lease(self: &Arc<Self>, estimate: Option<Duration>) -> Result<Lease> {
+        self.lease_with(estimate, Objective::Time)
+    }
+
+    /// As [`Self::lease`], but placing under an explicit
+    /// [`Objective`] (the migration manager passes its configured
+    /// time-vs-money objective here).
+    pub fn lease_with(
+        self: &Arc<Self>,
+        estimate: Option<Duration>,
+        objective: Objective,
+    ) -> Result<Lease> {
         let mut slots = self.slots.lock().unwrap();
         if slots.is_empty() {
             bail!("no nodes available to schedule on (node count is 0)");
@@ -220,36 +360,137 @@ impl NodeScheduler {
             SchedulePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed),
             _ => 0,
         };
-        let node = Self::choose(self.policy, &slots, estimate_us, rr);
+        let node = Self::choose(self.policy, objective, &slots, estimate_us, rr);
         let position = slots[node].active;
         let speed = slots[node].speed;
+        let price = slots[node].price;
         slots[node].active += 1;
         slots[node].pending_us += estimate_us;
-        Ok(Lease { sched: self.clone(), node, position, speed, estimate_us })
+        Ok(Lease { sched: self.clone(), node, position, speed, price, estimate_us })
     }
 
-    /// Deterministic dry run of the next lease: which node the policy
-    /// would choose under the current occupancy, how long that node's
-    /// pending work would delay the start, and how many leases it
-    /// already holds. Round-robin previews the node the cursor points
-    /// at without advancing it. `None` on an empty pool. This is the
-    /// migration manager's admission-control probe; the probe and the
-    /// eventual lease are separate lock acquisitions, so under
-    /// concurrency the prediction is best-effort, not a reservation.
+    /// Deterministic dry run of the next lease under the default time
+    /// objective: which node the policy would choose under the current
+    /// occupancy, how long that node's pending work would delay the
+    /// start, and how many leases it already holds. Round-robin
+    /// previews the node the cursor points at without advancing it.
+    /// `None` on an empty pool. This is the migration manager's
+    /// admission-control probe; the probe and the eventual lease are
+    /// separate lock acquisitions, so under concurrency the prediction
+    /// is best-effort, not a reservation.
     pub fn preview(&self, estimate: Option<Duration>) -> Option<LeasePreview> {
+        self.preview_with(estimate, Objective::Time)
+    }
+
+    /// As [`Self::preview`], but under an explicit [`Objective`].
+    pub fn preview_with(
+        &self,
+        estimate: Option<Duration>,
+        objective: Objective,
+    ) -> Option<LeasePreview> {
         let slots = self.slots.lock().unwrap();
         if slots.is_empty() {
             return None;
         }
         let estimate_us = estimate.map_or(0.0, |d| d.as_secs_f64() * 1e6);
-        let node = Self::choose(self.policy, &slots, estimate_us, self.rr.load(Ordering::Relaxed));
+        let node = Self::choose(
+            self.policy,
+            objective,
+            &slots,
+            estimate_us,
+            self.rr.load(Ordering::Relaxed),
+        );
         let wait = Duration::from_secs_f64(slots[node].pending_us / slots[node].speed / 1e6);
         Some(LeasePreview {
             node,
             speed: slots[node].speed,
+            price: slots[node].price,
             wait,
             active: slots[node].active,
         })
+    }
+}
+
+impl Lease {
+    /// Work-stealing pass: if this lease is queued behind other
+    /// in-flight work on its node while a different node sits *idle*
+    /// and would finish the work strictly sooner, re-pin the lease to
+    /// the idle node. Returns the index of the node the lease was
+    /// stolen *from* when a re-pin happened, `None` otherwise.
+    ///
+    /// `spend_cap` bounds what executing on the new node may cost
+    /// (`price × estimated reference work`): candidates whose
+    /// projected spend exceeds the cap are skipped, so a tight budget
+    /// keeps the work pinned to the cheap node even when a fast
+    /// expensive VM idles. An estimate-less lease projects no spend,
+    /// so under a cap it may only move to *free* nodes (an unknown
+    /// charge could bust the budget unboundedly); without a cap it
+    /// still only moves when its node has *estimated* work queued
+    /// ahead (the finish-time comparison degenerates otherwise).
+    ///
+    /// The migration manager calls this between taking the lease and
+    /// packaging the request, so the stolen placement travels in the
+    /// signed [`crate::migration::PinnedNode`] like any other and the
+    /// remote side executes on exactly the re-pinned VM.
+    ///
+    /// Positions are grant-time snapshots: a concurrent lease that
+    /// was queued *behind* this one on the vacated node keeps the
+    /// position it was granted, so its simulated queueing charge
+    /// still counts the departed lease — a conservative (over-)
+    /// estimate, consistent with the queueing model's general
+    /// best-effort stance under concurrency.
+    pub fn try_steal(&mut self, spend_cap: Option<f64>) -> Option<usize> {
+        let mut slots = self.sched.slots.lock().unwrap();
+        let cur = self.node;
+        // Queued behind someone? Our own lease contributes one active
+        // slot and `estimate_us` pending work; anything beyond that is
+        // in front of us.
+        if slots[cur].active <= 1 {
+            return None;
+        }
+        let est_us = self.estimate_us;
+        let est_secs = est_us / 1e6;
+        let ahead_us = (slots[cur].pending_us - est_us).max(0.0);
+        let finish_cur = (ahead_us + est_us) / slots[cur].speed;
+        let mut best: Option<usize> = None;
+        for (i, slot) in slots.iter().enumerate() {
+            if i == cur || slot.active > 0 {
+                continue;
+            }
+            if let Some(cap) = spend_cap {
+                // Unknown work projects unknown spend: with a cap in
+                // force, only free nodes are safe targets for an
+                // estimate-less lease — otherwise the projected 0.0
+                // would let the move bust the budget unboundedly.
+                if slot.price * est_secs > cap || (est_us == 0.0 && slot.price > 0.0) {
+                    continue;
+                }
+            }
+            let finish = (slot.pending_us + est_us) / slot.speed;
+            if finish >= finish_cur {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bf = (slots[b].pending_us + est_us) / slots[b].speed;
+                    finish < bf || (finish == bf && slot.speed > slots[b].speed)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let target = best?;
+        slots[cur].active -= 1;
+        slots[cur].pending_us = (slots[cur].pending_us - est_us).max(0.0);
+        slots[target].active += 1;
+        slots[target].pending_us += est_us;
+        self.node = target;
+        self.speed = slots[target].speed;
+        self.price = slots[target].price;
+        self.position = 0;
+        Some(cur)
     }
 }
 
@@ -273,40 +514,74 @@ fn scale(task: Duration, speed: f64) -> Duration {
     }
 }
 
+/// Result of a [`simulate_plan`] run: the makespan, the total spend
+/// (`Σ price × reference work` over the placements) and the node each
+/// task was assigned to, in task order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Time the last node finishes.
+    pub makespan: Duration,
+    /// Total money spent across all placements.
+    pub spend: f64,
+    /// Chosen node index per task (same order as the input tasks).
+    pub placements: Vec<usize>,
+}
+
 /// Deterministic placement model: assign `tasks` (known reference-work
-/// durations, in arrival order) to a pool with the given per-node
-/// `speeds`, each node running one task at a time at its own speed,
-/// and return the makespan (time the last node finishes).
+/// durations, in arrival order) to a pool of [`NodeSpec`]s, each node
+/// running one task at a time at its own speed, and return the
+/// makespan, the total spend and the per-task placements.
 ///
 /// This is the queueing model of the module doc with perfect duration
-/// knowledge; the scheduler bench uses it to compare policies
-/// deterministically, and [`admission_cap`] uses it to plan admission.
+/// knowledge; the scheduler bench uses it to compare policies and
+/// objectives deterministically, and the admission planners use it to
+/// plan admission.
 ///
 /// The placement rules are intentionally restated here rather than
 /// shared with [`NodeScheduler`]'s live selector: the model works in
 /// exact `Duration` arithmetic over per-task durations (so tests can
 /// assert makespans exactly), while the live ledger tracks one f64
 /// µs estimate per node. Keep the two in sync when changing a policy.
-pub fn simulate_makespan(
+///
+/// ```
+/// use std::time::Duration;
+/// use emerald::scheduler::{simulate_plan, NodeSpec, Objective, SchedulePolicy};
+///
+/// // A cheap-slow tier next to an expensive-fast tier.
+/// let pool = [NodeSpec::new(2.0, 1.0), NodeSpec::new(8.0, 10.0)];
+/// let tasks = [Duration::from_millis(80); 4];
+/// let time = simulate_plan(SchedulePolicy::LeastLoaded, Objective::Time, &pool, &tasks)?;
+/// let cost = simulate_plan(SchedulePolicy::LeastLoaded, Objective::Cost, &pool, &tasks)?;
+/// assert!(time.makespan < cost.makespan); // time finishes sooner…
+/// assert!(cost.spend < time.spend);       // …cost spends less
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub fn simulate_plan(
     policy: SchedulePolicy,
-    speeds: &[f64],
+    objective: Objective,
+    specs: &[NodeSpec],
     tasks: &[Duration],
-) -> Result<Duration> {
+) -> Result<Plan> {
     if tasks.is_empty() {
-        return Ok(Duration::ZERO);
+        return Ok(Plan { makespan: Duration::ZERO, spend: 0.0, placements: Vec::new() });
     }
-    if speeds.is_empty() {
+    if specs.is_empty() {
         bail!("cannot place {} task(s) on an empty pool", tasks.len());
     }
-    for (i, s) in speeds.iter().enumerate() {
-        if !s.is_finite() || *s <= 0.0 {
-            bail!("node {i} speed must be a positive finite number, got {s}");
+    for (i, s) in specs.iter().enumerate() {
+        if !s.speed.is_finite() || s.speed <= 0.0 {
+            bail!("node {i} speed must be a positive finite number, got {}", s.speed);
+        }
+        if !s.price.is_finite() || s.price < 0.0 {
+            bail!("node {i} price must be a non-negative finite number, got {}", s.price);
         }
     }
-    let n = speeds.len();
+    let n = specs.len();
     let mut finish = vec![Duration::ZERO; n];
     // Reference-work ledger for the speed-blind policy.
     let mut load = vec![Duration::ZERO; n];
+    let mut spend = 0.0;
+    let mut placements = Vec::with_capacity(tasks.len());
     for (k, task) in tasks.iter().enumerate() {
         let node = match policy {
             SchedulePolicy::RoundRobin => k % n,
@@ -320,21 +595,66 @@ pub fn simulate_makespan(
                 best
             }
             SchedulePolicy::LeastLoaded => {
+                // Mirror of NodeScheduler::choose: time scores stay in
+                // exact Duration arithmetic; cost compares prices
+                // first; weighted folds spend into a seconds score.
+                let better = |i: usize, best: usize| -> bool {
+                    let fi = finish[i] + scale(*task, specs[i].speed);
+                    let fb = finish[best] + scale(*task, specs[best].speed);
+                    match objective {
+                        Objective::Time => {
+                            fi < fb || (fi == fb && specs[i].speed > specs[best].speed)
+                        }
+                        Objective::Cost => {
+                            let ci = (specs[i].price, fi);
+                            let cb = (specs[best].price, fb);
+                            ci < cb
+                                || (ci == cb && specs[i].speed > specs[best].speed)
+                        }
+                        Objective::Weighted(w) => {
+                            let task_secs = task.as_secs_f64();
+                            // Mirror of the live selector: price
+                            // breaks weighted-score ties.
+                            let si =
+                                (fi.as_secs_f64() + w * specs[i].price * task_secs, specs[i].price);
+                            let sb = (
+                                fb.as_secs_f64() + w * specs[best].price * task_secs,
+                                specs[best].price,
+                            );
+                            si < sb || (si == sb && specs[i].speed > specs[best].speed)
+                        }
+                    }
+                };
                 let mut best = 0usize;
                 for i in 1..n {
-                    let cand = finish[i] + scale(*task, speeds[i]);
-                    let incumbent = finish[best] + scale(*task, speeds[best]);
-                    if cand < incumbent || (cand == incumbent && speeds[i] > speeds[best]) {
+                    if better(i, best) {
                         best = i;
                     }
                 }
                 best
             }
         };
-        finish[node] += scale(*task, speeds[node]);
+        finish[node] += scale(*task, specs[node].speed);
         load[node] += *task;
+        spend += specs[node].price * task.as_secs_f64();
+        placements.push(node);
     }
-    Ok(finish.into_iter().max().unwrap_or(Duration::ZERO))
+    Ok(Plan {
+        makespan: finish.into_iter().max().unwrap_or(Duration::ZERO),
+        spend,
+        placements,
+    })
+}
+
+/// Time-only convenience wrapper around [`simulate_plan`]: free nodes,
+/// [`Objective::Time`], makespan only (the PR-2 interface).
+pub fn simulate_makespan(
+    policy: SchedulePolicy,
+    speeds: &[f64],
+    tasks: &[Duration],
+) -> Result<Duration> {
+    let specs: Vec<NodeSpec> = speeds.iter().map(|s| NodeSpec::free(*s)).collect();
+    Ok(simulate_plan(policy, Objective::Time, &specs, tasks)?.makespan)
 }
 
 /// Admission planner over a known remotable set: the number of tasks
@@ -350,22 +670,55 @@ pub fn admission_cap(
     local_speeds: &[f64],
     tasks: &[Duration],
 ) -> usize {
-    if cloud_speeds.is_empty() {
+    let cloud: Vec<NodeSpec> = cloud_speeds.iter().map(|s| NodeSpec::free(*s)).collect();
+    admission_cap_with_budget(&cloud, local_speeds, tasks, None, Objective::Time)
+}
+
+/// Budget-aware admission planner: as [`admission_cap`], but over a
+/// priced cloud pool and with two stop conditions — the prefix's cloud
+/// makespan exceeding its local makespan (queueing makes offloading a
+/// loss) *or* the prefix's cumulative spend exceeding `budget`
+/// (offloading would bust the per-run budget). A prefix whose spend
+/// lands exactly on the budget is still admitted; `budget = Some(0.0)`
+/// admits nothing unless the pool is free. Placement follows
+/// `objective` (what the live scheduler would do with the same
+/// configuration).
+///
+/// Zero-budget caveat: the *live* budget gate
+/// (`ManagerConfig::budget` in [`crate::migration`]) treats
+/// `budget = 0` as an offload kill-switch — it declines everything,
+/// even on a free pool, because its spend ledger starts *at* the
+/// budget. The planner models only the money the placements would
+/// spend, so at zero budget on a free pool it admits what the live
+/// gate would not. Plan with a zero budget only for priced pools.
+pub fn admission_cap_with_budget(
+    cloud: &[NodeSpec],
+    local_speeds: &[f64],
+    tasks: &[Duration],
+    budget: Option<f64>,
+    objective: Objective,
+) -> usize {
+    if cloud.is_empty() {
         return 0;
     }
     let mut admitted = 0usize;
     for k in 1..=tasks.len() {
-        let Ok(cloud) = simulate_makespan(SchedulePolicy::LeastLoaded, cloud_speeds, &tasks[..k])
+        let Ok(plan) = simulate_plan(SchedulePolicy::LeastLoaded, objective, cloud, &tasks[..k])
         else {
             return admitted;
         };
+        if let Some(b) = budget {
+            if plan.spend > b {
+                break;
+            }
+        }
         let local = if local_speeds.is_empty() {
             None
         } else {
             simulate_makespan(SchedulePolicy::LeastLoaded, local_speeds, &tasks[..k]).ok()
         };
         match local {
-            Some(l) if cloud > l => break,
+            Some(l) if plan.makespan > l => break,
             _ => admitted = k,
         }
     }
@@ -550,6 +903,202 @@ mod tests {
         assert_eq!(
             simulate_makespan(SchedulePolicy::RoundRobin, &[1.0; 4], &one).unwrap(),
             Duration::from_millis(5)
+        );
+    }
+
+    #[test]
+    fn cost_objective_prefers_cheap_nodes() {
+        // 1 cheap slow + 1 expensive fast VM. Time places on the fast
+        // node; cost places on the cheap one.
+        let specs = vec![NodeSpec::new(2.0, 1.0), NodeSpec::new(8.0, 10.0)];
+        let sched = NodeScheduler::priced(SchedulePolicy::LeastLoaded, specs.clone());
+        let est = Some(Duration::from_millis(80));
+        let t = sched.lease_with(est, Objective::Time).unwrap();
+        assert_eq!((t.node, t.price), (1, 10.0));
+        drop(t);
+        let c = sched.lease_with(est, Objective::Cost).unwrap();
+        assert_eq!((c.node, c.price), (0, 1.0));
+        drop(c);
+        // On a free pool, cost degenerates to time (price ties).
+        let free = NodeScheduler::heterogeneous(SchedulePolicy::LeastLoaded, vec![2.0, 8.0]);
+        assert_eq!(free.lease_with(est, Objective::Cost).unwrap().node, 1);
+        // Weighted: weight 0 is pure time; a huge weight is pure cost.
+        let s2 = NodeScheduler::priced(SchedulePolicy::LeastLoaded, specs);
+        assert_eq!(s2.lease_with(est, Objective::Weighted(0.0)).unwrap().node, 1);
+        assert_eq!(s2.lease_with(est, Objective::Weighted(1e6)).unwrap().node, 0);
+    }
+
+    #[test]
+    fn preview_reports_price_and_matches_objective() {
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::new(2.0, 1.0), NodeSpec::new(8.0, 10.0)],
+        );
+        let est = Some(Duration::from_millis(10));
+        let p = sched.preview_with(est, Objective::Cost).unwrap();
+        assert_eq!((p.node, p.price), (0, 1.0));
+        let lease = sched.lease_with(est, Objective::Cost).unwrap();
+        assert_eq!(lease.node, p.node, "preview predicts the cost placement");
+    }
+
+    #[test]
+    fn steal_repins_queued_lease_to_idle_faster_node() {
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::new(2.0, 1.0), NodeSpec::new(8.0, 10.0)],
+        );
+        let est = Some(Duration::from_millis(80));
+        // A backlog holds the cheap node; a cost-placed lease queues
+        // behind it anyway (price beats finish time under Cost).
+        let backlog = sched.lease_with(Some(Duration::from_secs(2)), Objective::Cost).unwrap();
+        assert_eq!(backlog.node, 0);
+        let mut lease = sched.lease_with(est, Objective::Cost).unwrap();
+        assert_eq!((lease.node, lease.position), (0, 1));
+        // The fast node idles and finishes far sooner: steal.
+        assert_eq!(lease.try_steal(None), Some(0));
+        assert_eq!((lease.node, lease.speed, lease.price), (1, 8.0, 10.0));
+        assert_eq!(lease.position, 0, "re-pinned lease starts immediately");
+        assert_eq!(sched.active(), vec![1, 1], "occupancy moved with the lease");
+        // A second steal is a no-op: nothing is queued ahead any more.
+        assert_eq!(lease.try_steal(None), None);
+        drop((backlog, lease));
+        assert_eq!(sched.active(), vec![0, 0]);
+    }
+
+    #[test]
+    fn steal_respects_the_spend_cap() {
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::new(2.0, 1.0), NodeSpec::new(8.0, 10.0)],
+        );
+        let backlog = sched.lease_with(Some(Duration::from_secs(2)), Objective::Cost).unwrap();
+        let mut lease =
+            sched.lease_with(Some(Duration::from_millis(80)), Objective::Cost).unwrap();
+        assert_eq!(lease.position, 1);
+        // Executing 80 ms of reference work on the ×10 node costs 0.8;
+        // a 0.5 cap forbids the move, a 0.8 cap allows it exactly.
+        assert_eq!(lease.try_steal(Some(0.5)), None, "cap must veto the steal");
+        assert_eq!(lease.node, 0);
+        assert_eq!(lease.try_steal(Some(0.8)), Some(0));
+        assert_eq!(lease.node, 1);
+        drop((backlog, lease));
+    }
+
+    #[test]
+    fn estimate_less_steal_under_a_cap_only_targets_free_nodes() {
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::free(2.0), NodeSpec::new(8.0, 10.0)],
+        );
+        let backlog =
+            sched.lease_with(Some(Duration::from_secs(2)), Objective::Cost).unwrap();
+        assert_eq!(backlog.node, 0);
+        let mut lease = sched.lease_with(None, Objective::Cost).unwrap();
+        assert_eq!((lease.node, lease.position), (0, 1));
+        // Unknown work projects unknown spend: under a cap, a priced
+        // node is never a legal target for an estimate-less lease (the
+        // projected 0.0 would let the move bust the budget).
+        assert_eq!(lease.try_steal(Some(100.0)), None, "cap must veto the unknown spend");
+        assert_eq!(lease.node, 0);
+        // Without a cap the idle faster node may take it.
+        assert_eq!(lease.try_steal(None), Some(0));
+        assert_eq!(lease.node, 1);
+        drop((backlog, lease));
+    }
+
+    #[test]
+    fn steal_needs_a_queue_and_a_strictly_better_idle_node() {
+        // Unqueued lease: no steal even though a faster node idles.
+        let sched =
+            NodeScheduler::heterogeneous(SchedulePolicy::LeastLoaded, vec![2.0, 8.0]);
+        let mut alone = sched
+            .lease_with(Some(Duration::from_millis(10)), Objective::Cost)
+            .unwrap();
+        assert_eq!(alone.try_steal(None), None);
+        drop(alone);
+        // Queued lease but the only other node is busy: no steal.
+        let a = sched.lease(Some(Duration::from_millis(400))).unwrap();
+        let b = sched.lease(Some(Duration::from_millis(400))).unwrap();
+        let mut c = sched.lease(Some(Duration::from_millis(400))).unwrap();
+        assert!(c.position > 0);
+        assert_eq!(c.try_steal(None), None, "no idle node to steal to");
+        drop((a, b, c));
+    }
+
+    #[test]
+    fn plan_tracks_spend_and_placements() {
+        let ms = Duration::from_millis;
+        let specs = [NodeSpec::new(2.0, 1.0), NodeSpec::new(8.0, 10.0)];
+        let tasks = [ms(80), ms(80), ms(80), ms(80)];
+        let time =
+            simulate_plan(SchedulePolicy::LeastLoaded, Objective::Time, &specs, &tasks)
+                .unwrap();
+        let cost =
+            simulate_plan(SchedulePolicy::LeastLoaded, Objective::Cost, &specs, &tasks)
+                .unwrap();
+        // Cost pins everything to the cheap node: 4 × 0.080 × 1.0.
+        assert_eq!(cost.placements, vec![0, 0, 0, 0]);
+        assert!((cost.spend - 0.32).abs() < 1e-9, "{}", cost.spend);
+        assert!(cost.spend < time.spend, "cost must spend strictly less");
+        assert!(time.makespan < cost.makespan, "time must finish strictly sooner");
+        // A free pool spends nothing and matches the old makespan API.
+        let free = [NodeSpec::free(2.0), NodeSpec::free(8.0)];
+        let plan =
+            simulate_plan(SchedulePolicy::LeastLoaded, Objective::Time, &free, &tasks).unwrap();
+        assert_eq!(plan.spend, 0.0);
+        assert_eq!(
+            plan.makespan,
+            simulate_makespan(SchedulePolicy::LeastLoaded, &[2.0, 8.0], &tasks).unwrap()
+        );
+        // Invalid prices are rejected like invalid speeds.
+        assert!(simulate_plan(
+            SchedulePolicy::LeastLoaded,
+            Objective::Time,
+            &[NodeSpec::new(1.0, -1.0)],
+            &tasks
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn budget_caps_the_admission_prefix() {
+        let ms = Duration::from_millis;
+        // Fast cloud, each 500 ms task costs exactly 0.5 on the priced
+        // node (0.5 is exactly representable, so the boundary is
+        // float-safe).
+        let cloud = [NodeSpec::new(4.0, 1.0)];
+        let tasks = [ms(500); 5];
+        // No local pool: only the budget limits the prefix. 1.5 pays
+        // for exactly three tasks (boundary inclusive).
+        assert_eq!(admission_cap_with_budget(&cloud, &[], &tasks, Some(1.5), Objective::Time), 3);
+        // Zero budget on a priced pool admits nothing; on a free pool
+        // it admits everything.
+        assert_eq!(admission_cap_with_budget(&cloud, &[], &tasks, Some(0.0), Objective::Time), 0);
+        let free = [NodeSpec::free(4.0)];
+        assert_eq!(
+            admission_cap_with_budget(&free, &[], &tasks, Some(0.0), Objective::Time),
+            5
+        );
+        // The queueing stop condition still applies alongside budget:
+        // one ×2 VM vs 4 local nodes caps at 2 regardless of money.
+        assert_eq!(
+            admission_cap_with_budget(
+                &[NodeSpec::new(2.0, 0.1)],
+                &[1.0; 4],
+                &tasks,
+                Some(100.0),
+                Objective::Time
+            ),
+            2
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_price_rejected_at_construction() {
+        NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::new(1.0, -0.5)],
         );
     }
 

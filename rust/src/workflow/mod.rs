@@ -25,6 +25,7 @@ pub type StepId = u32;
 /// that step and its nested workflow).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VarDecl {
+    /// Variable name.
     pub name: String,
     /// Optional init expression (evaluated in the *enclosing* scope).
     pub init: Option<String>,
@@ -33,6 +34,7 @@ pub struct VarDecl {
 /// One computation step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Step {
+    /// Preorder index within the workflow (see [`Workflow::renumber`]).
     pub id: StepId,
     /// Human-readable name (XAML `DisplayName`).
     pub display_name: String,
@@ -44,6 +46,7 @@ pub struct Step {
     pub requires_local_hardware: bool,
     /// Variables declared at this step's scope level.
     pub variables: Vec<VarDecl>,
+    /// The step's behaviour.
     pub kind: StepKind,
 }
 
@@ -56,27 +59,44 @@ pub enum StepKind {
     /// completes when all branches complete.
     Parallel(Vec<Step>),
     /// Evaluate `value` and store into variable `to`.
-    Assign { to: String, value: String },
+    Assign {
+        /// Target variable name.
+        to: String,
+        /// Source expression.
+        value: String,
+    },
     /// Evaluate `text` and emit it to the run output.
-    WriteLine { text: String },
+    WriteLine {
+        /// Expression producing the line.
+        text: String,
+    },
     /// Invoke a registered activity. `inputs` are (param, expression)
     /// pairs evaluated before the call; `outputs` are (result, variable)
     /// pairs stored after the call.
     InvokeActivity {
+        /// Registered activity name.
         activity: String,
+        /// (parameter, expression) input bindings.
         inputs: Vec<(String, String)>,
+        /// (result, variable) output bindings.
         outputs: Vec<(String, String)>,
     },
     /// Conditional.
     If {
+        /// Branch condition (must evaluate to a boolean).
         condition: String,
+        /// Step executed when the condition holds.
         then_branch: Box<Step>,
+        /// Optional step executed otherwise.
         else_branch: Option<Box<Step>>,
     },
     /// Pre-test loop. `max_iters` guards against runaway workflows.
     While {
+        /// Loop condition (must evaluate to a boolean).
         condition: String,
+        /// Loop body.
         body: Box<Step>,
+        /// Iteration ceiling; exceeding it fails the run.
         max_iters: usize,
     },
     /// The *temporary step* the partitioner inserts before a remotable
@@ -91,8 +111,11 @@ pub enum StepKind {
 /// A whole workflow: root-level variables + the root step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workflow {
+    /// Workflow name (XAML `Name` attribute).
     pub name: String,
+    /// Workflow-level variable declarations.
     pub variables: Vec<VarDecl>,
+    /// The root step.
     pub root: Step,
 }
 

@@ -17,9 +17,29 @@ use super::{analysis, Step, StepKind, Workflow};
 /// A validation failure, tagged with the property it violates.
 #[derive(Debug)]
 pub enum ValidationError {
-    Property1 { step: String, msg: String },
-    Property2 { step: String, msg: String },
-    Property3 { step: String, msg: String },
+    /// A remotable step touches local-only hardware.
+    Property1 {
+        /// Offending step's display name.
+        step: String,
+        /// What went wrong.
+        msg: String,
+    },
+    /// A remotable step's I/O is not declared at its own scope level.
+    Property2 {
+        /// Offending step's display name.
+        step: String,
+        /// What went wrong.
+        msg: String,
+    },
+    /// A remotable step nests inside another remotable step.
+    Property3 {
+        /// Offending step's display name.
+        step: String,
+        /// What went wrong.
+        msg: String,
+    },
+    /// General well-formedness failure (duplicate variables, expression
+    /// parse errors, pre-existing migration points).
     Malformed(String),
 }
 

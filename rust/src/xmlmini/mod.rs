@@ -90,7 +90,9 @@ impl Element {
 /// Parse errors with byte positions.
 #[derive(Debug)]
 pub struct XmlError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -1,0 +1,229 @@
+//! Integration: price-aware offloading — the budget-capped admission
+//! gate's edge cases (zero budget, exact-boundary budgets) and the
+//! steal-vs-pin interaction (a stolen lease executes on exactly the
+//! node the trace records; a tight budget vetoes the steal).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use emerald::cloud::{CloudTier, Platform, PlatformConfig};
+use emerald::engine::activity::need_num;
+use emerald::engine::{ActivityRegistry, Engine, Event, Services};
+use emerald::expr::Value;
+use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
+use emerald::partitioner;
+use emerald::scheduler::Objective;
+use emerald::workflow::xaml;
+
+/// One 500 ms reference-work step: the numbers divide exactly through
+/// every tier speed used here, so spends are float-exact (0.5 on a
+/// price-1.0 node, 5.0 on a price-10.0 node) and budget boundaries can
+/// be asserted with `==` semantics.
+const WF: &str = r#"<Workflow>
+  <Workflow.Variables><Variable Name="y"/></Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="heavy" Activity="heavy.op" In.ms="500" In.x="1"
+                    Out.y="y" Remotable="true"/>
+    <WriteLine Text="str(y)"/>
+  </Sequence>
+</Workflow>"#;
+
+fn registry() -> Arc<ActivityRegistry> {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("heavy.op", |c, inputs| {
+        let ms = need_num(inputs, "ms")?;
+        let x = need_num(inputs, "x")?;
+        c.charge_compute(Duration::from_millis(ms as u64));
+        Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+    });
+    Arc::new(reg)
+}
+
+fn setup(
+    tiers: Vec<CloudTier>,
+    cfg: ManagerConfig,
+) -> (Engine, Arc<MigrationManager>, Arc<Services>) {
+    let platform = Platform::new(PlatformConfig { tiers, ..Default::default() }).unwrap();
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services.clone()).with_offload(mgr.clone());
+    (engine, mgr, services)
+}
+
+fn cloud_started_nodes(report: &emerald::engine::RunReport) -> Vec<String> {
+    report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ActivityStarted { node, .. } if node.starts_with("cloud-") => {
+                Some(node.clone())
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Edge case: zero budget. Nothing may offload — not even the very
+// first, estimate-less sighting — and the decline reason surfaces in
+// the trace.
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_budget_runs_everything_locally() {
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.budget = Some(0.0);
+    let (engine, mgr, _) = setup(vec![CloudTier::priced(4, 4.0, 1.0)], cfg);
+    let (part, _) = partitioner::partition(&xaml::parse(WF).unwrap()).unwrap();
+    let report = engine.run(&part).unwrap();
+    assert!(report.lines.iter().any(|l| l == "2"), "{:?}", report.lines);
+    assert!(report
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::LocalExecution { .. })));
+    assert!(
+        report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::Line { text } if text.contains("budget"))),
+        "the budget decline must surface in the trace: {:?}",
+        report.events
+    );
+    assert_eq!(mgr.stats().offloads, 0);
+    assert_eq!(mgr.stats().budget_declined, 1);
+    assert_eq!(report.spend, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Edge case: budget exactly equal to one offload's cost. The first
+// offload (spend 0.5 on the price-1.0 tier) is admitted and consumes
+// the whole budget; the second is declined because the ledger has
+// reached it.
+// ---------------------------------------------------------------------
+
+#[test]
+fn budget_exactly_one_offload_admits_it_and_stops() {
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.budget = Some(0.5);
+    let (engine, mgr, _) = setup(vec![CloudTier::priced(1, 4.0, 1.0)], cfg);
+    let (part, _) = partitioner::partition(&xaml::parse(WF).unwrap()).unwrap();
+
+    let r1 = engine.run(&part).unwrap();
+    assert_eq!(r1.offload_count(), 1, "the budget covers exactly this offload");
+    assert_eq!(r1.spend, 0.5, "500 ms of reference work at price 1.0");
+    assert_eq!(mgr.stats().spend, 0.5);
+
+    let r2 = engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().offloads, 1, "a spent budget admits nothing more");
+    assert_eq!(mgr.stats().budget_declined, 1);
+    assert_eq!(r2.spend, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Edge case: projected spend landing exactly on the budget is still
+// admitted (<= semantics, not <). With history, the second offload
+// projects 0.5 against a 1.0 budget holding 0.5 — boundary equality —
+// and must go through; the third finds the ledger full.
+// ---------------------------------------------------------------------
+
+#[test]
+fn projection_landing_exactly_on_the_budget_is_admitted() {
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.budget = Some(1.0);
+    let (engine, mgr, _) = setup(vec![CloudTier::priced(1, 4.0, 1.0)], cfg);
+    let (part, _) = partitioner::partition(&xaml::parse(WF).unwrap()).unwrap();
+
+    engine.run(&part).unwrap();
+    let r2 = engine.run(&part).unwrap();
+    assert_eq!(r2.offload_count(), 1, "0.5 spent + 0.5 projected == 1.0 budget: admitted");
+    assert_eq!(mgr.stats().offloads, 2);
+    assert_eq!(mgr.stats().spend, 1.0);
+
+    engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().offloads, 2, "the full ledger admits nothing more");
+    assert_eq!(mgr.stats().budget_declined, 1);
+}
+
+// ---------------------------------------------------------------------
+// Steal-vs-pin: with the cheap VM pinned by a backlog, a cost-placed
+// offload is stolen by the idle fast VM — and the trace must record
+// the node the work *actually* executed on (the re-pinned one), with
+// the spend billed at that node's price. A budget too tight for the
+// upgrade vetoes the steal and the work stays pinned (and queued) on
+// the cheap VM.
+// ---------------------------------------------------------------------
+
+fn steal_tiers() -> Vec<CloudTier> {
+    vec![CloudTier::priced(1, 2.0, 1.0), CloudTier::priced(1, 8.0, 10.0)]
+}
+
+#[test]
+fn stolen_lease_executes_on_the_node_recorded_in_the_trace() {
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.objective = Objective::Cost;
+    cfg.steal = true;
+    let (engine, mgr, services) = setup(steal_tiers(), cfg);
+    let (part, _) = partitioner::partition(&xaml::parse(WF).unwrap()).unwrap();
+
+    // Warm: idle pool, cost objective -> the cheap VM, no steal.
+    let warm = engine.run(&part).unwrap();
+    assert_eq!(cloud_started_nodes(&warm), vec!["cloud-0".to_string()]);
+    assert_eq!(mgr.stats().stolen, 0);
+
+    // Pin the cheap VM with a backlog: the next cost-placed lease
+    // queues behind it and the steal pass re-pins it to the idle fast
+    // VM before packaging.
+    let backlog = services
+        .platform
+        .cloud_lease_with(Some(Duration::from_secs(2)), Objective::Cost)
+        .unwrap();
+    assert_eq!(backlog.node, 0);
+    let report = engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().stolen, 1, "the queued offload must be stolen");
+    assert_eq!(
+        cloud_started_nodes(&report),
+        vec!["cloud-1".to_string()],
+        "the trace must record the re-pinned VM, not the original lease"
+    );
+    assert!(
+        report.events.iter().any(|e| matches!(
+            e,
+            Event::OffloadCharged { node, spend, .. }
+                if node == "cloud-1" && *spend == 5.0
+        )),
+        "the spend event must bill the executing (stolen-to) node: {:?}",
+        report.events
+    );
+    assert_eq!(report.spend, 5.0, "500 ms of reference work at price 10.0");
+    drop(backlog);
+}
+
+#[test]
+fn tight_budget_vetoes_the_steal_and_keeps_the_pin() {
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.objective = Objective::Cost;
+    cfg.steal = true;
+    // Warm run spends 0.5; 1.0 remains afterwards — enough for another
+    // cheap offload (0.5) but not for the 5.0 fast-VM upgrade.
+    cfg.budget = Some(1.5);
+    let (engine, mgr, services) = setup(steal_tiers(), cfg);
+    let (part, _) = partitioner::partition(&xaml::parse(WF).unwrap()).unwrap();
+
+    engine.run(&part).unwrap();
+    let backlog = services
+        .platform
+        .cloud_lease_with(Some(Duration::from_secs(2)), Objective::Cost)
+        .unwrap();
+    let report = engine.run(&part).unwrap();
+    assert_eq!(mgr.stats().stolen, 0, "the budget must veto the upgrade");
+    assert_eq!(
+        cloud_started_nodes(&report),
+        vec!["cloud-0".to_string()],
+        "the vetoed lease stays pinned to the cheap VM"
+    );
+    assert_eq!(report.spend, 0.5, "billed at the cheap VM's price");
+    assert_eq!(mgr.stats().queued, 1, "staying pinned means queueing behind the backlog");
+    assert_eq!(mgr.stats().budget_declined, 0);
+    drop(backlog);
+}
