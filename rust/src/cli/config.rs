@@ -20,6 +20,9 @@
 //! wan_latency_ms = 10
 //! schedule = "least-loaded"  # least-loaded | least-loaded-blind | round-robin
 //!
+//! [engine]
+//! dataflow = false         # dependence-DAG wavefront scheduling
+//!
 //! [migration]
 //! policy = "mdss"          # mdss | bundle
 //! decision = "always"      # always | cost
@@ -31,6 +34,8 @@
 //! #                        # (and only meaningful) with "weighted"
 //! # budget = 2.5           # spend cap per manager (= per run in the
 //! #                        # CLI; absent = unlimited)
+//! # decay_after = 20       # cost-model staleness decay, in offload
+//! #                        # attempts (absent = records live forever)
 //! steal = false            # idle-VM work stealing
 //! signing_key = ""         # non-empty enables request signing
 //! codec = "raw"            # raw | deflate
@@ -54,6 +59,17 @@ use crate::scheduler::{Objective, SchedulePolicy};
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct ConfigFile {
     sections: BTreeMap<String, BTreeMap<String, ConfigValue>>,
+}
+
+/// Engine execution options from the `[engine]` section.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// `[engine] dataflow`: execute `Sequence` children as a
+    /// dependence-DAG wavefront schedule
+    /// ([`crate::engine::Engine::with_dataflow`]) instead of the
+    /// sequential tree-walk. Default `false` (the paper's execution
+    /// model, kept as the A/B baseline).
+    pub dataflow: bool,
 }
 
 /// A config value.
@@ -364,6 +380,12 @@ impl ConfigFile {
         })
     }
 
+    /// Build an [`EngineConfig`] from the `[engine]` section (missing
+    /// keys take the sequential-engine defaults).
+    pub fn engine(&self) -> Result<EngineConfig> {
+        Ok(EngineConfig { dataflow: self.boolean("engine", "dataflow", false)? })
+    }
+
     /// Build a [`ManagerConfig`] from the `[migration]` section.
     pub fn migration(&self) -> Result<ManagerConfig> {
         let policy = match self.string("migration", "policy", "mdss")?.as_str() {
@@ -407,6 +429,14 @@ impl ConfigFile {
                 bail!("[migration] budget must be a non-negative finite number, got {b}")
             }
             Some(v) => bail!("[migration] budget must be a number, got {}", v.kind()),
+        };
+        cfg.decay_after = match self.get("migration", "decay_after") {
+            None => None,
+            Some(ConfigValue::Num(n)) if *n >= 1.0 && n.fract() == 0.0 => Some(*n as u64),
+            Some(ConfigValue::Num(n)) => {
+                bail!("[migration] decay_after must be a positive integer, got {n}")
+            }
+            Some(v) => bail!("[migration] decay_after must be a number, got {}", v.kind()),
         };
         let key = self.string("migration", "signing_key", "")?;
         if !key.is_empty() {
@@ -550,6 +580,30 @@ mod tests {
             "[migration]\nbudget = \"lots\"",
             "[migration]\nweight = 0.5", // weight without weighted
             "[migration]\nobjective = \"weighted\"\nweight = -2.0",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(cfg.migration().is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parses_engine_section_and_decay() {
+        // Defaults: sequential engine, no decay.
+        let cfg = ConfigFile::parse("").unwrap();
+        assert!(!cfg.engine().unwrap().dataflow);
+        assert_eq!(cfg.migration().unwrap().decay_after, None);
+        let cfg = ConfigFile::parse("[engine]\ndataflow = true").unwrap();
+        assert!(cfg.engine().unwrap().dataflow);
+        let cfg = ConfigFile::parse("[migration]\ndecay_after = 20").unwrap();
+        assert_eq!(cfg.migration().unwrap().decay_after, Some(20));
+        // Rejections.
+        let cfg = ConfigFile::parse("[engine]\ndataflow = 1").unwrap();
+        assert!(cfg.engine().is_err());
+        for bad in [
+            "[migration]\ndecay_after = 0",
+            "[migration]\ndecay_after = 2.5",
+            "[migration]\ndecay_after = -3",
+            "[migration]\ndecay_after = \"often\"",
         ] {
             let cfg = ConfigFile::parse(bad).unwrap();
             assert!(cfg.migration().is_err(), "should reject {bad:?}");

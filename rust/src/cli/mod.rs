@@ -7,7 +7,7 @@
 
 pub mod config;
 
-pub use config::ConfigFile;
+pub use config::{ConfigFile, EngineConfig};
 
 use std::collections::BTreeMap;
 

@@ -284,6 +284,23 @@ impl Platform {
             .context("scheduling offload on the cloud pool")
     }
 
+    /// As [`Self::cloud_lease_with`], but also returning the chosen
+    /// VM's pre-grant [`crate::scheduler::LeasePreview`] from the same
+    /// critical section. The migration manager's budget and admission
+    /// gates read the preview and drop the lease when they decline —
+    /// previewing and claiming atomically, so concurrent offloads
+    /// from sibling steps can never both judge (and then both take)
+    /// the same idle VM.
+    pub fn cloud_lease_preview_with(
+        &self,
+        estimate: Option<Duration>,
+        objective: Objective,
+    ) -> Result<(crate::scheduler::LeasePreview, Lease)> {
+        self.cloud_sched
+            .lease_with_preview(estimate, objective)
+            .context("scheduling offload on the cloud pool")
+    }
+
     /// The cloud-pool scheduler (admission preview, diagnostics, tests).
     pub fn cloud_scheduler(&self) -> &Arc<NodeScheduler> {
         &self.cloud_sched

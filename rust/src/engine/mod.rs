@@ -11,6 +11,18 @@
 //! * concurrent `Parallel` branches on real threads — parallel
 //!   remotable steps offload concurrently to distinct cloud nodes
 //!   (Figure 9b);
+//! * an opt-in **dataflow mode** ([`Engine::with_dataflow`], `[engine]
+//!   dataflow` in the config file): `Sequence` children execute as a
+//!   dependence-DAG wavefront schedule ([`crate::workflow::dag`])
+//!   instead of strictly in order, so independent siblings — proved
+//!   independent by read/write-set analysis — run concurrently and
+//!   independent offloads take their cloud leases at the same time.
+//!   Simulated time becomes the DAG's critical path; lines and the
+//!   event trace are still reported in deterministic program order
+//!   (each unit records into private buffers spliced back in child
+//!   order), and every event carries a monotonic emission sequence
+//!   number ([`RunReport::seqs`]) so the real interleaving stays
+//!   observable;
 //! * **simulated-time accounting**: every step returns its simulated
 //!   duration; sequences add, parallels take the max. Compute cost is
 //!   real (measured PJRT wall time) scaled by node speed; transfer cost
@@ -27,6 +39,7 @@ pub use activity::{Activity, ActivityCtx, ActivityRegistry, Services};
 pub use state::{FrameId, VarStore};
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -34,7 +47,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cloud::Node;
 use crate::expr::{self, Value};
-use crate::workflow::{analysis, Step, StepKind, Workflow};
+use crate::workflow::{analysis, dag, Step, StepKind, Workflow};
 
 /// Execution trace events (tests and diagnostics).
 #[derive(Debug, Clone, PartialEq)]
@@ -83,8 +96,19 @@ pub struct RunReport {
     pub spend: f64,
     /// Lines produced by WriteLine steps (cloud lines prefixed).
     pub lines: Vec<String>,
-    /// Trace events.
+    /// Trace events. Sequential execution and dataflow mode report
+    /// them in deterministic program order (dataflow splices per-unit
+    /// buffers back in child order); legacy `Parallel` branches
+    /// interleave into the trace in completion order, as they always
+    /// have.
     pub events: Vec<Event>,
+    /// Monotonic emission sequence number per event (parallel to
+    /// [`RunReport::events`]): a run-global counter stamps every event
+    /// as it is recorded, so concurrently-produced traces keep a
+    /// record of the real interleaving even where `events` itself is
+    /// reported in program order. Purely sequential execution yields
+    /// `0..n` in order.
+    pub seqs: Vec<u64>,
 }
 
 impl RunReport {
@@ -94,6 +118,55 @@ impl RunReport {
             .iter()
             .filter(|e| matches!(e, Event::OffloadRequested { .. }))
             .count()
+    }
+
+    /// Maximum number of offload round trips in flight at the same
+    /// time, reconstructed from the emission sequence numbers of the
+    /// `OffloadRequested`/`OffloadFinished` pairs. Sequential
+    /// execution never exceeds 1; in dataflow mode a value ≥ 2 proves
+    /// sibling steps offloaded concurrently. Requests without a finish
+    /// (declined or failed offloads) are ignored. Pairing matches each
+    /// request with the next same-step finish in trace order, which is
+    /// exact for program-ordered traces (sequential and dataflow
+    /// modes) and for distinctly-named steps; same-named steps
+    /// offloaded from legacy `Parallel` branches may pair across
+    /// branches, which leaves the peak count unchanged for
+    /// non-nested overlap but is best-effort in general.
+    pub fn max_inflight_offloads(&self) -> usize {
+        let mut open: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+        let mut marks: Vec<(u64, i64)> = Vec::new();
+        for (e, s) in self.events.iter().zip(&self.seqs) {
+            match e {
+                Event::OffloadRequested { step } => {
+                    open.entry(step.as_str()).or_default().push(*s);
+                }
+                Event::OffloadFinished { step, .. } => {
+                    if let Some(starts) = open.get_mut(step.as_str()) {
+                        if !starts.is_empty() {
+                            marks.push((starts.remove(0), 1));
+                            marks.push((*s, -1));
+                        }
+                    }
+                }
+                Event::LocalExecution { step } => {
+                    // A declined offload runs locally and its request
+                    // never finishes: discard it so a later same-name
+                    // offload cannot mispair with it.
+                    if let Some(starts) = open.get_mut(step.as_str()) {
+                        starts.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+        marks.sort_unstable();
+        let mut inflight = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in marks {
+            inflight += d;
+            peak = peak.max(inflight);
+        }
+        peak as usize
     }
 }
 
@@ -157,14 +230,31 @@ pub struct Engine {
     /// cluster for the main engine, the cloud for the migration
     /// manager's remote engine.
     tier: crate::cloud::NodeKind,
+    /// Dataflow mode: schedule `Sequence` children by dependence DAG
+    /// instead of strictly in order (see [`Self::with_dataflow`]).
+    dataflow: bool,
     verbose: bool,
 }
+
+/// Per-run memo of dependence-DAG builds, keyed by the address of the
+/// sibling slice (stable for the lifetime of the borrowed workflow
+/// tree): a `While` body re-executing a `Sequence` thousands of times
+/// pays the analysis once, not per iteration. `None` records a failed
+/// build, so unanalyzable sequences take the sequential fallback in
+/// O(1) instead of re-parsing (and re-failing) every iteration.
+type DagCache = Mutex<BTreeMap<usize, Option<Arc<dag::Dag>>>>;
 
 struct Ctx<'e> {
     store: &'e Mutex<VarStore>,
     frame: FrameId,
     lines: &'e Mutex<Vec<String>>,
-    events: &'e Mutex<Vec<Event>>,
+    /// Events stamped with their emission sequence number (from `seq`).
+    events: &'e Mutex<Vec<(u64, Event)>>,
+    /// Run-global emission counter shared by every context of one run,
+    /// including the private per-unit contexts of dataflow mode.
+    seq: &'e AtomicU64,
+    /// Run-global dependence-DAG memo (dataflow mode only).
+    dags: &'e DagCache,
     /// Node every activity in this context executes on (the offload
     /// lease's VM on the cloud side); None = tier round-robin.
     pin: Option<&'e Arc<Node>>,
@@ -177,12 +267,15 @@ impl<'e> Ctx<'e> {
             frame,
             lines: self.lines,
             events: self.events,
+            seq: self.seq,
+            dags: self.dags,
             pin: self.pin,
         }
     }
 
     fn event(&self, e: Event) {
-        self.events.lock().unwrap().push(e);
+        let stamp = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.events.lock().unwrap().push((stamp, e));
     }
 
     fn eval(&self, src: &str) -> Result<Value> {
@@ -201,6 +294,7 @@ impl Engine {
             services,
             offload: None,
             tier: crate::cloud::NodeKind::Local,
+            dataflow: false,
             verbose: false,
         }
     }
@@ -208,6 +302,29 @@ impl Engine {
     /// Attach a migration manager.
     pub fn with_offload(mut self, handler: Arc<dyn OffloadHandler>) -> Self {
         self.offload = Some(handler);
+        self
+    }
+
+    /// Dataflow mode (`[engine] dataflow` / `--dataflow`): execute
+    /// `Sequence` children as a dependence-DAG wavefront schedule
+    /// ([`crate::workflow::dag`]) instead of strictly in order.
+    /// Independent siblings run concurrently on scoped worker threads
+    /// (independent offload units lease distinct cloud VMs at the same
+    /// time), `If`/`While` children stay opaque barriers, and
+    /// simulated time is the DAG's critical path instead of the
+    /// sequential sum. Lines and the event trace remain in
+    /// deterministic program order regardless of interleaving. The
+    /// critical path is computed deterministically from the per-unit
+    /// durations; an *offload* unit's duration carries the same
+    /// load-dependent queueing charge as every other execution mode,
+    /// so on an oversubscribed cloud the observed makespan can vary
+    /// with real lease overlap (the queueing model's documented
+    /// best-effort stance — use [`crate::workflow::dag::Dag::critical_path`]
+    /// with known durations for a machine-independent comparison).
+    /// Off by default — the sequential tree-walk is the A/B baseline
+    /// and the fallback for subtrees the flow analysis cannot model.
+    pub fn with_dataflow(mut self, on: bool) -> Self {
+        self.dataflow = on;
         self
     }
 
@@ -240,11 +357,15 @@ impl Engine {
         let store = Mutex::new(VarStore::new());
         let lines = Mutex::new(Vec::new());
         let events = Mutex::new(Vec::new());
+        let seq = AtomicU64::new(0);
+        let dags = DagCache::default();
         let ctx = Ctx {
             store: &store,
             frame: VarStore::ROOT,
             lines: &lines,
             events: &events,
+            seq: &seq,
+            dags: &dags,
             pin: None,
         };
 
@@ -262,7 +383,13 @@ impl Engine {
             .exec(&wf.root, &ctx)
             .with_context(|| format!("running workflow '{}'", wf.name))?;
 
-        let events = events.into_inner().unwrap();
+        let stamped = events.into_inner().unwrap();
+        let mut events = Vec::with_capacity(stamped.len());
+        let mut seqs = Vec::with_capacity(stamped.len());
+        for (s, e) in stamped {
+            seqs.push(s);
+            events.push(e);
+        }
         let spend = events
             .iter()
             .map(|e| match e {
@@ -276,6 +403,7 @@ impl Engine {
             spend,
             lines: lines.into_inner().unwrap(),
             events,
+            seqs,
         })
     }
 
@@ -303,6 +431,8 @@ impl Engine {
         let store = Mutex::new(VarStore::new());
         let lines = Mutex::new(Vec::new());
         let events = Mutex::new(Vec::new());
+        let seq = AtomicU64::new(0);
+        let dags = DagCache::default();
         let io = analysis::step_io(step)?;
         {
             let mut s = store.lock().unwrap();
@@ -321,6 +451,8 @@ impl Engine {
             frame: VarStore::ROOT,
             lines: &lines,
             events: &events,
+            seq: &seq,
+            dags: &dags,
             pin: node.as_ref(),
         };
         let sim = self.exec(step, &ctx)?;
@@ -405,52 +537,240 @@ impl Engine {
                 Ok(sim)
             }
             StepKind::Sequence(children) => {
-                let mut sim = Duration::ZERO;
-                let mut i = 0;
-                while i < children.len() {
-                    let child = &children[i];
-                    if matches!(child.kind, StepKind::MigrationPoint) {
-                        let Some(target) = children.get(i + 1) else {
-                            bail!(
-                                "MigrationPoint at end of sequence '{}' has no target",
-                                step.display_name
-                            );
-                        };
-                        sim += self.migrate_or_local(target, &ctx)?;
-                        i += 2;
-                    } else {
-                        sim += self.exec(child, &ctx)?;
-                        i += 1;
-                    }
+                if self.dataflow {
+                    self.exec_dataflow(children, &ctx, &step.display_name, false)
+                } else {
+                    self.exec_sequence(children, &ctx, &step.display_name)
                 }
-                Ok(sim)
             }
             StepKind::Parallel(children) => {
-                // Real threads; shared store; sim time = max of branches
-                // (paper Fig 9b: parallel steps don't affect each other).
-                let results: Vec<Result<Duration>> = std::thread::scope(|scope| {
-                    let handles: Vec<_> = children
-                        .iter()
-                        .map(|c| {
-                            let branch_ctx = ctx.at(frame);
-                            scope.spawn(move || self.exec(c, &branch_ctx))
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| match h.join() {
-                            Ok(r) => r,
-                            Err(p) => std::panic::resume_unwind(p),
-                        })
-                        .collect()
-                });
-                let mut max = Duration::ZERO;
-                for r in results {
-                    max = max.max(r?);
+                if self.dataflow {
+                    // Parallel is the fully-independent degenerate DAG:
+                    // same worker pool, no edges, critical path = max.
+                    self.exec_dataflow(children, &ctx, &step.display_name, true)
+                } else {
+                    self.exec_parallel(children, &ctx)
                 }
-                Ok(max)
             }
         }
+    }
+
+    /// Sequential `Sequence` execution (the tree-walk baseline): one
+    /// child at a time, migration points paired with the next sibling,
+    /// simulated times summed.
+    fn exec_sequence(&self, children: &[Step], ctx: &Ctx, name: &str) -> Result<Duration> {
+        let mut sim = Duration::ZERO;
+        let mut i = 0;
+        while i < children.len() {
+            let child = &children[i];
+            if matches!(child.kind, StepKind::MigrationPoint) {
+                let Some(target) = children.get(i + 1) else {
+                    bail!("MigrationPoint at end of sequence '{name}' has no target");
+                };
+                sim += self.migrate_or_local(target, ctx)?;
+                i += 2;
+            } else {
+                sim += self.exec(child, ctx)?;
+                i += 1;
+            }
+        }
+        Ok(sim)
+    }
+
+    /// `Parallel` execution: real threads, shared store, sim time =
+    /// max of branches (paper Fig 9b: parallel steps don't affect each
+    /// other).
+    fn exec_parallel(&self, children: &[Step], ctx: &Ctx) -> Result<Duration> {
+        let results: Vec<Result<Duration>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = children
+                .iter()
+                .map(|c| {
+                    let branch_ctx = ctx.at(ctx.frame);
+                    scope.spawn(move || self.exec(c, &branch_ctx))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(p) => std::panic::resume_unwind(p),
+                })
+                .collect()
+        });
+        let mut max = Duration::ZERO;
+        for r in results {
+            max = max.max(r?);
+        }
+        Ok(max)
+    }
+
+    /// Dataflow execution of one sibling list: build the dependence
+    /// DAG ([`dag::Dag::build`]), dispatch ready wavefronts onto
+    /// scoped worker threads, and charge the DAG's critical path as
+    /// simulated time. Every unit records lines and events into
+    /// private buffers that are spliced back in program order, so
+    /// lines and the event *order* are byte-stable no matter how the
+    /// wavefronts interleave. (One payload caveat: the round-robin
+    /// node picked for a concurrently-executed local activity — the
+    /// `ActivityStarted` node name — depends on arrival order at the
+    /// shared cursor; local nodes are homogeneous, so simulated time
+    /// is unaffected.) Dispatch is wavefront-synchronized: a unit
+    /// whose dependencies completed mid-wave starts with the next
+    /// wave. That affects only real wall-clock overlap — simulated
+    /// time is always the charged critical path, where a unit starts
+    /// the instant its last dependency finishes. When the DAG cannot
+    /// be built (an expression the analysis cannot parse, a dangling
+    /// migration point), execution falls back to the sequential path
+    /// so errors — and partial successes — surface exactly as they
+    /// would without dataflow mode.
+    fn exec_dataflow(
+        &self,
+        children: &[Step],
+        ctx: &Ctx,
+        name: &str,
+        independent: bool,
+    ) -> Result<Duration> {
+        // The DAG of an immutable sibling list never changes within a
+        // run: memoize it (keyed by the slice address, stable while
+        // the workflow tree is borrowed) so a While body pays the
+        // analysis once, not per iteration.
+        let key = children.as_ptr() as usize;
+        let cached = ctx.dags.lock().unwrap().get(&key).cloned();
+        let graph = match cached {
+            Some(hit) => hit,
+            None => match dag::Dag::build(children, independent) {
+                Ok(g) => {
+                    let g = Arc::new(g);
+                    ctx.dags.lock().unwrap().insert(key, Some(Arc::clone(&g)));
+                    Some(g)
+                }
+                Err(_) => {
+                    ctx.dags.lock().unwrap().insert(key, None);
+                    None
+                }
+            },
+        };
+        let Some(graph) = graph else {
+            return if independent {
+                self.exec_parallel(children, ctx)
+            } else {
+                self.exec_sequence(children, ctx, name)
+            };
+        };
+        let n = graph.units.len();
+        // A fully serialized schedule — every unit depends on its
+        // predecessor, including the degenerate empty/one-unit cases —
+        // has nothing to overlap: the plain sequential walk is the
+        // identical schedule (same pairing, same event order, sim sum
+        // == critical path) without the wavefront machinery. This is
+        // the common shape of accumulator-style While bodies, which
+        // would otherwise pay per-iteration thread and buffer overhead
+        // for zero parallelism. (An `independent` DAG has no edges, so
+        // it only takes this path with ≤ 1 child, where the walk is
+        // equally identical.)
+        if (1..n).all(|j| graph.deps[j].contains(&(j - 1))) {
+            return self.exec_sequence(children, ctx, name);
+        }
+        // Private per-unit output buffers, spliced back in program
+        // order below.
+        let unit_lines: Vec<Mutex<Vec<String>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let unit_events: Vec<Mutex<Vec<(u64, Event)>>> =
+            (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let mut durs = vec![Duration::ZERO; n];
+        let mut done = vec![false; n];
+        let mut remaining = n;
+        let mut failure: Option<(usize, anyhow::Error)> = None;
+        // One unit's execution, recording into its private buffers.
+        // Captures only shared references, so the closure is Copy and
+        // can be called from worker threads or inline.
+        let run_unit = |j: usize| -> Result<Duration> {
+            let unit = &graph.units[j];
+            let target = &children[unit.step];
+            let uctx = Ctx {
+                store: ctx.store,
+                frame: ctx.frame,
+                lines: &unit_lines[j],
+                events: &unit_events[j],
+                seq: ctx.seq,
+                dags: ctx.dags,
+                pin: ctx.pin,
+            };
+            if unit.offload {
+                self.migrate_or_local(target, &uctx)
+            } else {
+                self.exec(target, &uctx)
+            }
+        };
+        while remaining > 0 && failure.is_none() {
+            let ready: Vec<usize> = (0..n)
+                .filter(|&j| !done[j] && graph.deps[j].iter().all(|&i| done[i]))
+                .collect();
+            // Dependencies always point backwards, so the smallest
+            // unfinished unit is always ready: progress is guaranteed.
+            // Guarded anyway — a scheduler bug must be an error, not a
+            // silent infinite loop.
+            if ready.is_empty() {
+                bail!("dataflow scheduler stalled in '{name}' (internal invariant violated)");
+            }
+            // A single-unit wave (fully dependent chains, one-child
+            // sequences) runs inline: no thread spawn for a schedule
+            // with nothing to overlap.
+            let results: Vec<(usize, Result<Duration>)> = if ready.len() == 1 {
+                vec![(ready[0], run_unit(ready[0]))]
+            } else {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = ready
+                        .iter()
+                        .map(|&j| scope.spawn(move || run_unit(j)))
+                        .collect();
+                    ready
+                        .iter()
+                        .copied()
+                        .zip(handles.into_iter().map(|h| match h.join() {
+                            Ok(r) => r,
+                            Err(p) => std::panic::resume_unwind(p),
+                        }))
+                        .collect()
+                })
+            };
+            for (j, r) in results {
+                done[j] = true;
+                remaining -= 1;
+                match r {
+                    Ok(d) => durs[j] = d,
+                    Err(e) => {
+                        // Keep the lowest-index failure: the reported
+                        // error is deterministic under concurrency.
+                        let replace = match &failure {
+                            None => true,
+                            Some((fj, _)) => j < *fj,
+                        };
+                        if replace {
+                            failure = Some((j, e));
+                        }
+                    }
+                }
+            }
+        }
+        // Splice the per-unit output back in program order: lines and
+        // the event trace are identical to what sequential execution
+        // of the same schedule would report.
+        {
+            let mut out = ctx.lines.lock().unwrap();
+            for l in &unit_lines {
+                out.append(&mut l.lock().unwrap());
+            }
+        }
+        {
+            let mut out = ctx.events.lock().unwrap();
+            for e in &unit_events {
+                out.append(&mut e.lock().unwrap());
+            }
+        }
+        if let Some((_, e)) = failure {
+            return Err(e).with_context(|| format!("in dataflow schedule of '{name}'"));
+        }
+        Ok(graph.critical_path(&durs))
     }
 
     /// Execute a remotable step at a migration point: offload when a
@@ -755,6 +1075,175 @@ mod tests {
         )
         .unwrap();
         assert!(engine().run(&wf).is_err());
+    }
+
+    const INDEPENDENT_SLOW: &str = r#"<Workflow>
+         <Variables><Variable Name="a"/><Variable Name="b"/><Variable Name="c"/></Variables>
+         <Sequence>
+           <InvokeActivity DisplayName="s1" Activity="slow.op" Out.done="a"/>
+           <InvokeActivity DisplayName="s2" Activity="slow.op" Out.done="b"/>
+           <InvokeActivity DisplayName="s3" Activity="slow.op" Out.done="c"/>
+         </Sequence>
+       </Workflow>"#;
+
+    #[test]
+    fn dataflow_overlaps_independent_sequence_steps() {
+        // Three 100 ms steps with disjoint writes: the sequential walk
+        // sums to 300 ms, the dataflow DAG runs them as one wavefront
+        // and charges the 100 ms critical path.
+        let wf = xaml::parse(INDEPENDENT_SLOW).unwrap();
+        let seq = engine().run(&wf).unwrap();
+        let df = engine().with_dataflow(true).run(&wf).unwrap();
+        assert_eq!(seq.sim_time, Duration::from_millis(300));
+        assert_eq!(df.sim_time, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn dataflow_keeps_dependent_chains_sequential() {
+        // All three steps write the same variable (write->write
+        // hazards): the DAG degenerates to the sequential chain.
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="d"/></Variables>
+                 <Sequence>
+                   <InvokeActivity Activity="slow.op" Out.done="d"/>
+                   <InvokeActivity Activity="slow.op" Out.done="d"/>
+                   <InvokeActivity Activity="slow.op" Out.done="d"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let df = engine().with_dataflow(true).run(&wf).unwrap();
+        assert_eq!(df.sim_time, Duration::from_millis(300));
+    }
+
+    #[test]
+    fn dataflow_preserves_lines_and_events_in_program_order() {
+        // Control flow (barriers), scoped variables and WriteLines:
+        // dataflow output must be byte-identical to sequential output.
+        let xml = r#"<Workflow>
+             <Variables><Variable Name="i" Init="0"/><Variable Name="evens" Init="0"/>
+               <Variable Name="x" Init="2"/><Variable Name="y"/></Variables>
+             <Sequence>
+               <WriteLine Text="'start'"/>
+               <InvokeActivity Activity="math.square" In.x="x" Out.y="y"/>
+               <While Condition="i &lt; 6" MaxIters="10">
+                 <Sequence>
+                   <If Condition="i % 2 == 0">
+                     <If.Then><Assign To="evens" Value="evens + 1"/></If.Then>
+                   </If>
+                   <Assign To="i" Value="i + 1"/>
+                 </Sequence>
+               </While>
+               <WriteLine Text="'evens=' + str(evens)"/>
+               <WriteLine Text="'y=' + str(y)"/>
+             </Sequence>
+           </Workflow>"#;
+        let seq = run(xml);
+        let df = engine()
+            .with_dataflow(true)
+            .run(&xaml::parse(xml).unwrap())
+            .unwrap();
+        assert_eq!(df.lines, seq.lines);
+        assert_eq!(df.events, seq.events, "program-order trace must match");
+        assert_eq!(df.lines, vec!["start", "evens=3", "y=4"]);
+    }
+
+    #[test]
+    fn dataflow_seqs_record_emission_order() {
+        let wf = xaml::parse(INDEPENDENT_SLOW).unwrap();
+        let df = engine().with_dataflow(true).run(&wf).unwrap();
+        assert_eq!(df.seqs.len(), df.events.len());
+        let mut sorted = df.seqs.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), df.seqs.len(), "stamps are unique");
+        // Sequential runs emit in program order: seqs are 0..n.
+        let seq = engine().run(&wf).unwrap();
+        assert_eq!(seq.seqs, (0..seq.events.len() as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dataflow_migration_point_without_handler_runs_locally() {
+        let report = engine()
+            .with_dataflow(true)
+            .run(
+                &xaml::parse(
+                    r#"<Workflow>
+                         <Variables><Variable Name="y"/></Variables>
+                         <Sequence>
+                           <MigrationPoint/>
+                           <InvokeActivity Activity="math.square" In.x="3" Out.y="y" Remotable="true"/>
+                           <WriteLine Text="str(y)"/>
+                         </Sequence>
+                       </Workflow>"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(report.lines, vec!["9"]);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::LocalExecution { .. })));
+    }
+
+    #[test]
+    fn dataflow_falls_back_on_unanalyzable_sequences() {
+        // The If guards the bad expression: sequentially this workflow
+        // succeeds, so dataflow mode must too (DAG build fails on the
+        // unparsable expression and execution falls back).
+        let xml = r#"<Workflow>
+             <Variables><Variable Name="x" Init="1"/></Variables>
+             <Sequence>
+               <If Condition="x &gt; 0">
+                 <If.Then><Assign To="x" Value="2"/></If.Then>
+                 <If.Else><Assign To="x" Value="1 +"/></If.Else>
+               </If>
+               <WriteLine Text="str(x)"/>
+             </Sequence>
+           </Workflow>"#;
+        let seq = run(xml);
+        let df = engine()
+            .with_dataflow(true)
+            .run(&xaml::parse(xml).unwrap())
+            .unwrap();
+        assert_eq!(seq.lines, vec!["2"]);
+        assert_eq!(df.lines, seq.lines);
+    }
+
+    #[test]
+    fn dataflow_parallel_is_the_degenerate_case() {
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="a"/><Variable Name="b"/><Variable Name="c"/></Variables>
+                 <Parallel>
+                   <InvokeActivity Activity="slow.op" Out.done="a"/>
+                   <InvokeActivity Activity="slow.op" Out.done="b"/>
+                   <InvokeActivity Activity="slow.op" Out.done="c"/>
+                 </Parallel>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let df = engine().with_dataflow(true).run(&wf).unwrap();
+        assert_eq!(df.sim_time, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn dataflow_errors_are_deterministic() {
+        // Two failing independent steps: the lowest-index failure wins.
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="a"/><Variable Name="b"/></Variables>
+                 <Sequence>
+                   <Assign To="ghost1" Value="1"/>
+                   <Assign To="ghost2" Value="2"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", engine().with_dataflow(true).run(&wf).unwrap_err());
+        assert!(err.contains("ghost1"), "{err}");
     }
 
     #[test]

@@ -20,13 +20,17 @@
 //!
 //! ## Module map
 //!
-//! Paper contributions: [`workflow`] (§3.1–3.2), [`partitioner`]
-//! (§3.1, plus offload batching — runs of consecutive remotable steps
-//! fuse into one migration point), [`engine`] (§3.3, with offloaded
-//! subtrees pinned to the scheduler-leased VM), [`migration`] (§3.3,
-//! with an EWMA cost model, multi-step requests and queue-aware
-//! admission control), [`mdss`] (§3.4), [`cloud`] (§4 testbed,
-//! generalized to heterogeneous cloud tiers), [`at`] (§4 application).
+//! Paper contributions: [`workflow`] (§3.1–3.2, plus the dependence
+//! DAG in `workflow::dag`), [`partitioner`] (§3.1, plus offload
+//! batching — runs of consecutive remotable steps fuse into one
+//! migration point), [`engine`] (§3.3, with offloaded subtrees pinned
+//! to the scheduler-leased VM and an opt-in dataflow mode that
+//! schedules sequence siblings as DAG wavefronts with concurrent
+//! offloads), [`migration`] (§3.3, with an EWMA cost model that
+//! decays on staleness, multi-step requests, queue-aware admission
+//! control and concurrency-safe budget reservations), [`mdss`]
+//! (§3.4), [`cloud`] (§4 testbed, generalized to heterogeneous cloud
+//! tiers), [`at`] (§4 application).
 //!
 //! Beyond the paper: [`scheduler`] — load-, speed- and **price**-aware
 //! cloud-VM placement (earliest estimated finish time over mixed
@@ -43,7 +47,9 @@
 //!
 //! User-facing documentation lives in the repository: `README.md`
 //! (quickstart), `docs/ARCHITECTURE.md` (module map + the life of an
-//! offload) and `docs/CONFIG.md` (the complete TOML reference).
+//! offload, sequential and dataflow), `docs/CONFIG.md` (the complete
+//! TOML reference) and `docs/BENCHES.md` (which fig bench reproduces
+//! which paper figure).
 //!
 //! ## Example: partition and run a workflow
 //!

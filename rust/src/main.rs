@@ -36,8 +36,8 @@ emerald — scientific workflows with cloud offloading (Qian 2017 reproduction)
 USAGE:
   emerald validate <workflow.xml>
   emerald partition <workflow.xml> [--out <file>] [--batch]
-  emerald run <workflow.xml> [--offload] [--batch] [--policy mdss|bundle] [--tcp <addr>]
-  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--alpha0 X]
+  emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--policy mdss|bundle] [--tcp <addr>]
+  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--alpha0 X]
   emerald serve
   emerald info
 ";
@@ -116,11 +116,16 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 fn build_engine(args: &Args, services: Arc<Services>, reg: Arc<ActivityRegistry>) -> Result<Engine> {
-    let engine = Engine::new(reg.clone(), services.clone());
+    let cfg = config_of(args)?;
+    // `--dataflow` or `[engine] dataflow = true` turns on the
+    // dependence-DAG wavefront scheduler; default is the sequential
+    // tree-walk (the A/B baseline).
+    let engine = Engine::new(reg.clone(), services.clone())
+        .with_dataflow(cfg.engine()?.dataflow || args.flag("dataflow"));
     if !args.flag("offload") {
         return Ok(engine);
     }
-    let mut mgr_cfg = config_of(args)?.migration()?;
+    let mut mgr_cfg = cfg.migration()?;
     // --policy overrides the config file.
     if args.options.contains_key("policy") {
         mgr_cfg.policy = policy_of(args)?;
@@ -251,7 +256,7 @@ fn cmd_info(_args: &Args) -> Result<()> {
 }
 
 fn main() {
-    let args = Args::from_env(&["offload", "verbose", "batch"]);
+    let args = Args::from_env(&["offload", "verbose", "batch", "dataflow"]);
     let result = match args.subcommand() {
         Some("validate") => cmd_validate(&args),
         Some("partition") => cmd_partition(&args),

@@ -122,6 +122,10 @@ impl<'a> RunMetrics<'a> {
             ("sim_time_s", Value::num(self.report.sim_time.as_secs_f64())),
             ("wall_time_s", Value::num(self.report.wall_time.as_secs_f64())),
             ("offloads", Value::num(self.report.offload_count() as f64)),
+            (
+                "max_inflight_offloads",
+                Value::num(self.report.max_inflight_offloads() as f64),
+            ),
             ("spend", Value::num(self.report.spend)),
             ("lines", Value::Arr(self.report.lines.iter().map(Value::str).collect())),
             ("steps", steps_json),
@@ -201,6 +205,7 @@ mod tests {
                 Event::ActivityFinished { step: "forward".into(), sim_us: 2000 },
                 Event::OffloadFinished { step: "misfit".into(), sim_us: 500 },
             ],
+            seqs: vec![0, 1, 2],
         }
     }
 
@@ -224,6 +229,8 @@ mod tests {
         let v = crate::jsonmini::parse(&text).unwrap();
         assert_eq!(v.get("sim_time_s").unwrap().as_f64().unwrap(), 1.5);
         assert_eq!(v.get("spend").unwrap().as_f64().unwrap(), 0.25);
+        // Finish without a request (declined pairings) never counts.
+        assert_eq!(v.get("max_inflight_offloads").unwrap().as_f64().unwrap(), 0.0);
         assert!(v.get("migration").is_ok());
         assert!(v.get("migration").unwrap().get("spend").is_ok());
         assert!(v.get("migration").unwrap().get("stolen").is_ok());

@@ -57,6 +57,33 @@
 //! slow queue is deep unless money forbids the move. The re-pinned
 //! node travels in the signed [`PinnedNode`] like any other placement,
 //! and the trace records the VM the work actually executed on.
+//!
+//! **Concurrent offloads** (the engine's dataflow mode and `Parallel`
+//! branches drive several offloads through one manager at once) are
+//! first-class: when the budget or admission gate is on, the manager
+//! previews *and takes* the cloud lease in one scheduler critical
+//! section ([`crate::cloud::Platform::cloud_lease_preview_with`]), so
+//! two concurrent placements can never both claim the same idle VM;
+//! and the budget gate reserves each admitted offload's projected
+//! spend in a shared ledger until the offload commits or fails, so
+//! concurrent siblings with known estimates cannot collectively
+//! overshoot the budget. Estimate-less first sightings still project
+//! zero, so a *burst* of K never-before-seen steps admitted
+//! concurrently may overshoot by up to K offloads — one unknown
+//! charge per step name, after which the ledger gates exactly. All
+//! statistics continue to commit through the single
+//! `MigrationStats::absorb` point.
+//!
+//! **Staleness decay** ([`ManagerConfig::decay_after`]): a cost record
+//! that has gone `n` offload attempts without a fresh observation —
+//! which is exactly what happens once the gate starts declining a
+//! step — decays to uninformed: the gates stop trusting it and the
+//! next attempt re-observes from scratch, so a stale estimate cannot
+//! gate admission forever. Uninformed means uninformed everywhere: a
+//! decayed step's next offload projects zero spend again, re-opening
+//! the one-shot estimate-less budget window for that step name (by
+//! design — a decayed estimate is no more trustworthy for money than
+//! for time).
 
 pub mod protocol;
 pub mod security;
@@ -148,12 +175,23 @@ pub struct ManagerConfig {
     /// default (placement then exactly matches the lease the policy
     /// granted).
     pub steal: bool,
+    /// Cost-model staleness decay (`[migration] decay_after`): a cost
+    /// record that has gone this many offload *attempts* (counting
+    /// attempts for any step) without observing a round trip is
+    /// treated as uninformed — the `cost` gate stops declining on it,
+    /// the admission and budget gates stop trusting its estimates,
+    /// and the next observation re-seeds the averages like a first
+    /// sighting. A decayed step's next offload therefore projects
+    /// zero spend and re-opens the estimate-less budget-overshoot
+    /// window for that step name. `None` (the default) keeps records
+    /// live forever.
+    pub decay_after: Option<u64>,
 }
 
 impl ManagerConfig {
     /// Paper defaults: MDSS placement, always offload, one attempt,
     /// no fallback, no signing, no admission control, time objective,
-    /// no budget, no stealing.
+    /// no budget, no stealing, no cost-record decay.
     pub fn new(policy: DataPolicy) -> Self {
         Self {
             policy,
@@ -165,6 +203,7 @@ impl ManagerConfig {
             objective: Objective::Time,
             budget: None,
             steal: false,
+            decay_after: None,
         }
     }
 }
@@ -199,9 +238,13 @@ pub struct MigrationStats {
     /// one is a WAN round trip the batching pass amortized away.
     pub batched_steps: u64,
     /// Cumulative money spent on completed offloads (`Σ leased price ×
-    /// observed reference work`). This is the ledger the budget gate
-    /// reads; in-flight offloads have not committed their spend yet,
-    /// so under heavy concurrency the gate is best-effort.
+    /// observed reference work`). The budget gate reads a shadow of
+    /// this ledger that additionally reserves the projected spend of
+    /// in-flight admitted offloads, so concurrent offloads with known
+    /// estimates cannot collectively overshoot the budget.
+    /// Estimate-less first sightings project zero, so concurrent
+    /// never-before-seen steps may each overshoot once (once per step
+    /// name; exact from then on).
     pub spend: f64,
     /// The subset of `declined` due to the budget gate (projected
     /// spend past [`ManagerConfig::budget`]).
@@ -253,6 +296,9 @@ struct CostRecord {
     work_us: f64,
     /// Observations folded into the averages.
     samples: u64,
+    /// Staleness-clock value at the last observation (see
+    /// [`CostHistory::clock`] and [`ManagerConfig::decay_after`]).
+    last_tick: u64,
 }
 
 impl CostRecord {
@@ -284,13 +330,89 @@ impl CostRecord {
     }
 }
 
+/// The cost model's shared state: per-step records plus the staleness
+/// clock — `clock` advances once per offload attempt (any step), and
+/// with [`ManagerConfig::decay_after`] = `n` a record that has not
+/// observed a round trip for `n` ticks is treated as uninformed.
+#[derive(Debug, Default)]
+struct CostHistory {
+    clock: u64,
+    records: BTreeMap<String, CostRecord>,
+}
+
+/// The budget gate's ledger: money already charged plus the projected
+/// spend of offloads currently in flight past the gate. Reservations
+/// make the gate exact under concurrency — siblings admitted at the
+/// same time each hold their projection until they commit, decline or
+/// fail.
+#[derive(Debug, Default)]
+struct SpendLedger {
+    /// Spend of completed offloads (mirrors [`MigrationStats::spend`]).
+    committed: f64,
+    /// Projected spend of in-flight admitted offloads.
+    reserved: f64,
+}
+
+/// RAII hold on a [`SpendLedger`] reservation: released on drop, on
+/// every path out of the offload — success (after the actual spend has
+/// been committed), decline and error alike.
+struct SpendReservation<'a> {
+    ledger: Option<&'a Mutex<SpendLedger>>,
+    amount: f64,
+}
+
+impl<'a> SpendReservation<'a> {
+    fn none() -> Self {
+        Self { ledger: None, amount: 0.0 }
+    }
+
+    fn held(ledger: &'a Mutex<SpendLedger>, amount: f64) -> Self {
+        Self { ledger: Some(ledger), amount }
+    }
+
+    /// Re-project the reservation under an already-held ledger lock
+    /// (the steal pass reads its budget cap, steals, and re-projects
+    /// in one critical section so concurrent admissions cannot
+    /// interleave).
+    fn adjust_locked(&mut self, led: &mut SpendLedger, amount: f64) {
+        if self.ledger.is_some() {
+            led.reserved = (led.reserved - self.amount + amount).max(0.0);
+        }
+        self.amount = amount;
+    }
+
+    /// Commit the actual spend and release the projection in one
+    /// ledger update (concurrent gates never see the charge and the
+    /// reservation double-counted). Works for budget-less offloads
+    /// too, whose reservation was never held.
+    fn settle(&mut self, ledger: &Mutex<SpendLedger>, actual: f64) {
+        let mut led = ledger.lock().unwrap();
+        led.committed += actual;
+        if self.ledger.is_some() {
+            led.reserved = (led.reserved - self.amount).max(0.0);
+        }
+        self.ledger = None;
+        self.amount = 0.0;
+    }
+}
+
+impl Drop for SpendReservation<'_> {
+    fn drop(&mut self) {
+        if let Some(ledger) = self.ledger {
+            let mut led = ledger.lock().unwrap();
+            led.reserved = (led.reserved - self.amount).max(0.0);
+        }
+    }
+}
+
 /// Local-side migration manager.
 pub struct MigrationManager {
     services: Arc<Services>,
     transport: Box<dyn Transport>,
     config: ManagerConfig,
     stats: Mutex<MigrationStats>,
-    history: Mutex<BTreeMap<String, CostRecord>>,
+    history: Mutex<CostHistory>,
+    ledger: Mutex<SpendLedger>,
 }
 
 impl MigrationManager {
@@ -314,7 +436,8 @@ impl MigrationManager {
             transport,
             config,
             stats: Mutex::new(Default::default()),
-            history: Mutex::new(BTreeMap::new()),
+            history: Mutex::new(Default::default()),
+            ledger: Mutex::new(Default::default()),
         })
     }
 
@@ -409,6 +532,26 @@ impl MigrationManager {
 }
 
 impl MigrationManager {
+    /// The step's cost record, unless staleness decay has expired it:
+    /// with [`ManagerConfig::decay_after`] = `n`, a record that has
+    /// not observed a round trip for `n` offload attempts is treated
+    /// exactly like an absent one — the gates fall back to
+    /// first-sighting behaviour and the next observation re-seeds it.
+    fn live<'h>(&self, history: &'h CostHistory, step: &Step) -> Option<&'h CostRecord> {
+        let rec = history.records.get(&step.display_name)?;
+        if let Some(n) = self.config.decay_after {
+            // The clock already counts the *current* attempt, so the
+            // number of intervening attempts without an observation is
+            // staleness - 1: expire strictly past `n`, or
+            // `decay_after = 1` would expire every record on the very
+            // next attempt and silently disable the gates.
+            if history.clock.saturating_sub(rec.last_tick) > n {
+                return None;
+            }
+        }
+        Some(rec)
+    }
+
     /// Cost-model gate: should this step be offloaded at all? Compares
     /// the EWMA of observed round trips against the EWMA local
     /// estimate.
@@ -417,7 +560,7 @@ impl MigrationManager {
             return None;
         }
         let history = self.history.lock().unwrap();
-        match history.get(&step.display_name) {
+        match self.live(&history, step) {
             Some(rec) if rec.samples > 0 && rec.remote_obs_us >= rec.local_est_us => {
                 Some(format!(
                     "cost model: remote {:.0}ms >= local {:.0}ms for '{}' (ewma over {} run(s))",
@@ -435,10 +578,11 @@ impl MigrationManager {
     /// the reference-work estimate (the scheduler's
     /// earliest-finish-time placement weight) and the
     /// `(local estimate, expected remote round trip)` pair the
-    /// admission gate compares. `(None, None)` before any observation.
+    /// admission gate compares. `(None, None)` before any observation
+    /// — or after the record decayed to uninformed.
     fn estimates(&self, step: &Step) -> (Option<Duration>, Option<(Duration, Duration)>) {
         let history = self.history.lock().unwrap();
-        match history.get(&step.display_name) {
+        match self.live(&history, step) {
             Some(rec) => (
                 rec.work_estimate(),
                 rec.remote_estimate().map(|remote| {
@@ -455,7 +599,8 @@ impl MigrationManager {
     /// node_speed` and the local estimate divides that by the local
     /// tier's speed — the `CostBased` gate stays unbiased when
     /// `local_speed != 1.0` (the old formula silently assumed a
-    /// speed-1.0 local cluster).
+    /// speed-1.0 local cluster). A record that decayed to uninformed
+    /// is re-seeded instead of blended with its ancient history.
     fn record_costs(
         &self,
         step: &Step,
@@ -467,12 +612,16 @@ impl MigrationManager {
         let local_est = Duration::from_secs_f64(
             work.as_secs_f64() / self.services.platform.config.local_speed,
         );
-        self.history
-            .lock()
-            .unwrap()
-            .entry(step.display_name.clone())
-            .or_default()
-            .observe(local_est, remote_total, work);
+        let mut history = self.history.lock().unwrap();
+        let clock = history.clock;
+        let stale = self.live(&history, step).is_none()
+            && history.records.contains_key(&step.display_name);
+        let rec = history.records.entry(step.display_name.clone()).or_default();
+        if stale {
+            *rec = CostRecord::default();
+        }
+        rec.observe(local_est, remote_total, work);
+        rec.last_tick = clock;
     }
 }
 
@@ -501,6 +650,14 @@ impl MigrationManager {
         writes: &[String],
         delta: &mut MigrationStats,
     ) -> Result<OffloadVerdict> {
+        // Staleness clock: one tick per offload attempt, so cost
+        // records that stop being refreshed age out under
+        // `decay_after` even when every attempt is declined.
+        {
+            let mut history = self.history.lock().unwrap();
+            history.clock = history.clock.saturating_add(1);
+        }
+
         // 0a. A zero-cloud platform declines instead of panicking
         //     (regression: `PlatformConfig { tiers: vec![], .. }`).
         if self.services.platform.cloud_size() == 0 {
@@ -516,60 +673,79 @@ impl MigrationManager {
             return Ok(OffloadVerdict::Declined { reason });
         }
 
-        // 0c. Budget gate: a run that has already spent its budget
-        //     offloads nothing more, and a projected spend (previewed
-        //     node's price × estimated reference work) that would push
-        //     the ledger past the budget sends the step home. Exactly
-        //     reaching the budget is allowed; estimate-less first
-        //     sightings project zero and may overshoot once (the
-        //     module doc spells this out).
+        // 0c/0d. Budget and admission gates share ONE scheduler
+        //     critical section: when either gate is on, the manager
+        //     previews *and takes* the lease atomically
+        //     (`cloud_lease_preview_with`), so concurrent offloads
+        //     from sibling steps can never both reason about — and
+        //     then both claim — the same idle VM. A gate that declines
+        //     simply drops the lease, releasing the slot. Skipped
+        //     entirely when neither gate is on: the probe costs a
+        //     slots lock plus an O(pool) policy scan per offload.
         let (work_est, cost_est) = self.estimates(step);
-        let spent = match self.config.budget {
-            Some(_) => self.stats.lock().unwrap().spend,
-            None => 0.0,
-        };
-        // One preview serves both gates below, so the budget and
-        // admission decisions reason about the same projected
-        // placement (and the slots lock is taken once, not twice).
-        // Skipped entirely when neither gate is on: the probe costs a
-        // slots lock plus an O(pool) policy scan per offload.
-        let preview = if self.config.budget.is_some() || self.config.admission {
-            self.services
+        let mut reservation = SpendReservation::none();
+        let early_lease = if self.config.budget.is_some() || self.config.admission {
+            let (preview, lease) = self
+                .services
                 .platform
-                .cloud_scheduler()
-                .preview_with(work_est, self.config.objective)
-        } else {
-            None
-        };
-        if let Some(budget) = self.config.budget {
-            let projected = match (work_est, preview) {
-                (Some(work), Some(p)) => p.price * work.as_secs_f64(),
-                _ => 0.0,
-            };
-            if spent >= budget || spent + projected > budget {
-                delta.declined += 1;
-                delta.budget_declined += 1;
-                return Ok(OffloadVerdict::Declined {
-                    reason: format!(
-                        "budget: spent {spent:.3} of {budget:.3}, projected +{projected:.3} \
-                         for '{}' — executing locally",
-                        step.display_name
-                    ),
-                });
-            }
-        }
+                .cloud_lease_preview_with(work_est, self.config.objective)
+                .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
 
-        // 0d. Admission control: preview the lease the scheduler
-        //     would grant; if the projected queueing behind in-flight
-        //     work plus the expected round trip exceeds the local
-        //     estimate, running locally is faster right now.
-        //     Deliberately only triggers under contention (active
-        //     leases or pending work on the previewed node) — the
-        //     intrinsic remote-vs-local tradeoff is the CostBased
-        //     gate's job.
-        if self.config.admission {
-            if let Some((local_est, remote_est)) = cost_est {
-                if let Some(p) = preview {
+            // 0c. Budget gate: a run that has already spent its budget
+            //     offloads nothing more, and a projected spend
+            //     (previewed node's price × estimated reference work)
+            //     that would push the ledger past the budget sends the
+            //     step home. The ledger counts committed spend plus
+            //     the reservations of in-flight admitted offloads, so
+            //     concurrent siblings cannot collectively overshoot;
+            //     this offload's own reservation is released when it
+            //     commits, declines or fails. Exactly reaching the
+            //     budget is allowed; estimate-less first sightings
+            //     project zero and may overshoot once per step name
+            //     (the module doc spells this out).
+            if let Some(budget) = self.config.budget {
+                let projected = work_est.map_or(0.0, |w| preview.price * w.as_secs_f64());
+                let mut ledger = self.ledger.lock().unwrap();
+                let (committed, reserved) = (ledger.committed, ledger.reserved);
+                if committed >= budget || committed + reserved + projected > budget {
+                    drop(ledger);
+                    // Release the probe lease as a dry run: the
+                    // round-robin cursor (when that policy is active)
+                    // must not record a placement that never happened.
+                    lease.cancel();
+                    delta.declined += 1;
+                    delta.budget_declined += 1;
+                    // Separate actual spend from in-flight projections
+                    // in the notice; without concurrency the in-flight
+                    // part is absent and the line matches the PR-3
+                    // format byte for byte.
+                    let inflight = if reserved > 0.0 {
+                        format!(" (+{reserved:.3} in flight)")
+                    } else {
+                        String::new()
+                    };
+                    return Ok(OffloadVerdict::Declined {
+                        reason: format!(
+                            "budget: spent {committed:.3}{inflight} of {budget:.3}, \
+                             projected +{projected:.3} for '{}' — executing locally",
+                            step.display_name
+                        ),
+                    });
+                }
+                ledger.reserved += projected;
+                drop(ledger);
+                reservation = SpendReservation::held(&self.ledger, projected);
+            }
+
+            // 0d. Admission control: if the projected queueing behind
+            //     in-flight work plus the expected round trip exceeds
+            //     the local estimate, running locally is faster right
+            //     now. Deliberately only triggers under contention
+            //     (active leases or pending work on the previewed
+            //     node) — the intrinsic remote-vs-local tradeoff is
+            //     the CostBased gate's job.
+            if self.config.admission {
+                if let Some((local_est, remote_est)) = cost_est {
                     // Projected queueing on the previewed node: the
                     // larger of its pending-work drain time and the
                     // position-based projection the engine actually
@@ -577,12 +753,14 @@ impl MigrationManager {
                     // term) — so in-flight leases without a work
                     // estimate still count, without over-declining
                     // WAN-dominated steps.
+                    let p = preview;
                     let scaled_work = work_est.map_or(Duration::ZERO, |w| {
                         Duration::from_secs_f64(w.as_secs_f64() / p.speed)
                     });
                     let queue = p.wait.max(scaled_work.saturating_mul(p.active as u32));
                     let contended = p.active > 0 || p.wait > Duration::ZERO;
                     if contended && queue + remote_est >= local_est {
+                        lease.cancel();
                         delta.declined += 1;
                         delta.admission_declined += 1;
                         return Ok(OffloadVerdict::Declined {
@@ -598,7 +776,10 @@ impl MigrationManager {
                     }
                 }
             }
-        }
+            Some(lease)
+        } else {
+            None
+        };
 
         let net = &self.services.platform.network;
         let mut sim = Duration::ZERO;
@@ -614,12 +795,17 @@ impl MigrationManager {
         //    estimate) *before* packaging, so the leased node rides in
         //    the signed request and pins remote execution. The lease
         //    is held across the round trip so concurrent offloads
-        //    observe each other's occupancy.
-        let mut lease = self
-            .services
-            .platform
-            .cloud_lease_with(work_est, self.config.objective)
-            .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
+        //    observe each other's occupancy. When a gate already took
+        //    the lease in its critical section above, that lease is
+        //    simply reused.
+        let mut lease = match early_lease {
+            Some(lease) => lease,
+            None => self
+                .services
+                .platform
+                .cloud_lease_with(work_est, self.config.objective)
+                .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?,
+        };
 
         // 2b. Steal pass: if this lease queued behind in-flight work
         //     while another VM idles and would finish strictly sooner,
@@ -628,9 +814,37 @@ impl MigrationManager {
         //     when the run can afford it. The re-pinned node is what
         //     gets packaged, signed and executed below.
         if self.config.steal {
-            let cap = self.config.budget.map(|b| (b - spent).max(0.0));
-            if lease.try_steal(cap).is_some() {
-                delta.stolen += 1;
+            match self.config.budget {
+                Some(b) => {
+                    // ONE ledger critical section covers the cap read,
+                    // the steal and the re-projection — a concurrent
+                    // sibling's admission or steal cannot interleave
+                    // between them, so the collective reservation can
+                    // never exceed the budget. (Lock order is always
+                    // ledger → slots, never the reverse; `try_steal`
+                    // touches only the scheduler's slots lock.)
+                    let mut ledger = self.ledger.lock().unwrap();
+                    // Remaining budget net of committed spend and the
+                    // *other* in-flight reservations (the steal
+                    // replaces this offload's own projection, so it
+                    // doesn't count against itself).
+                    let cap = (b - ledger.committed - (ledger.reserved - reservation.amount))
+                        .max(0.0);
+                    if lease.try_steal(Some(cap)).is_some() {
+                        delta.stolen += 1;
+                        // The re-pin changed the projected spend: keep
+                        // the reservation in step so concurrent
+                        // admissions see the dearer placement.
+                        let projected =
+                            work_est.map_or(0.0, |w| lease.price * w.as_secs_f64());
+                        reservation.adjust_locked(&mut ledger, projected);
+                    }
+                }
+                None => {
+                    if lease.try_steal(None).is_some() {
+                        delta.stolen += 1;
+                    }
+                }
             }
         }
         let node = self
@@ -726,6 +940,14 @@ impl MigrationManager {
         // momentary pile-up tip the CostBased gate into declining the
         // step — after which no new samples arrive to ever undo it.
         self.record_costs(step, sim - queue_sim, remote_sim, node.speed);
+
+        // Commit the actual spend and release this offload's
+        // projection in one ledger update, so a concurrent budget gate
+        // never sees the charge and its reservation double-counted.
+        // Done after the last fallible step: an error above must leave
+        // the ledger's committed total in line with the stats ledger
+        // (the reservation alone is released, by its Drop).
+        reservation.settle(&self.ledger, spend);
 
         delta.offloads = 1;
         delta.protocol_bytes = (req_bytes.len() + resp_bytes.len()) as u64;
@@ -1088,6 +1310,104 @@ mod tests {
             "amortizing the WAN must win: batched {:?} vs unbatched {:?}",
             r2.sim_time,
             r1.sim_time
+        );
+    }
+
+    #[test]
+    fn cost_records_decay_to_uninformed_after_staleness() {
+        // WAN-dominated step on a high-latency link: the first
+        // observation teaches the cost gate that remote loses, and
+        // without decay that verdict is frozen forever (no new samples
+        // ever arrive to undo it).
+        let run_n = |decay: Option<u64>, runs: usize| {
+            let platform = Platform::new(crate::cloud::PlatformConfig {
+                wan_latency: Duration::from_millis(200),
+                ..Default::default()
+            })
+            .unwrap();
+            let services = Services::without_runtime(platform);
+            let reg = registry();
+            let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+            cfg.decision = Decision::CostBased;
+            cfg.decay_after = decay;
+            let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+            let engine = Engine::new(reg, services).with_offload(mgr.clone());
+            let wf = xaml::parse(
+                r#"<Workflow>
+                     <Variables><Variable Name="y"/></Variables>
+                     <Sequence>
+                       <InvokeActivity DisplayName="tiny" Activity="math.square" In.x="3"
+                                       Out.y="y" Remotable="true"/>
+                     </Sequence>
+                   </Workflow>"#,
+            )
+            .unwrap();
+            let (part, _) = partitioner::partition(&wf).unwrap();
+            for _ in 0..runs {
+                engine.run(&part).unwrap();
+            }
+            mgr.stats()
+        };
+        let frozen = run_n(None, 4);
+        assert_eq!(
+            (frozen.offloads, frozen.declined),
+            (1, 3),
+            "without decay the stale estimate gates forever"
+        );
+        // decay_after = 2: after two intervening attempts without an
+        // observation (runs 2 and 3, both declined) the record
+        // expires, so run 4 offloads again and re-seeds the averages.
+        let decayed = run_n(Some(2), 4);
+        assert_eq!(
+            (decayed.offloads, decayed.declined),
+            (2, 2),
+            "decay must let the step be re-observed"
+        );
+    }
+
+    #[test]
+    fn dataflow_engine_offloads_independent_siblings_concurrently() {
+        // Two independent remotable steps in a Sequence: dataflow mode
+        // runs them as one wavefront, so simulated time is one round
+        // trip (the critical path), not two — with identical results.
+        let wf = xaml::parse(
+            r#"<Workflow>
+                 <Variables><Variable Name="a"/><Variable Name="b"/></Variables>
+                 <Sequence>
+                   <InvokeActivity DisplayName="h1" Activity="heavy.op" In.x="1"
+                                   Out.y="a" Remotable="true"/>
+                   <InvokeActivity DisplayName="h2" Activity="heavy.op" In.x="2"
+                                   Out.y="b" Remotable="true"/>
+                   <WriteLine Text="str(a + b)"/>
+                 </Sequence>
+               </Workflow>"#,
+        )
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+
+        let (seq_engine, _) = setup(DataPolicy::Mdss);
+        let seq = seq_engine.run(&part).unwrap();
+
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let reg = registry();
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let df_engine = Engine::new(reg, services)
+            .with_offload(mgr.clone())
+            .with_dataflow(true);
+        let df = df_engine.run(&part).unwrap();
+
+        assert_eq!(df.lines, seq.lines, "dataflow must not change results");
+        assert_eq!(df.lines, vec!["5"]);
+        assert_eq!(df.offload_count(), 2);
+        assert_eq!(mgr.stats().offloads, 2);
+        // heavy.op = 300 ms reference -> 75 ms on the x4 cloud + WAN
+        // per trip. Sequential sums two trips; the dataflow critical
+        // path is the max of the two.
+        assert!(
+            df.sim_time < seq.sim_time,
+            "concurrent offloads must overlap: {:?} vs {:?}",
+            df.sim_time,
+            seq.sim_time
         );
     }
 

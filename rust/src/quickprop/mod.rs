@@ -164,9 +164,13 @@ mod tests {
     fn ident_is_valid() {
         forall(100, |g| {
             let s = g.ident(1..=12);
-            assert!(!s.is_empty());
-            let first = s.chars().next().unwrap();
-            assert!(first.is_ascii_alphabetic() || first == '_');
+            // Non-panicking guard: an (impossible) empty ident fails
+            // the assertion with context instead of panicking the
+            // harness on `unwrap`.
+            assert!(
+                s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_'),
+                "ident must start with a letter or underscore, got {s:?}"
+            );
         });
     }
 

@@ -272,6 +272,19 @@ impl NodeScheduler {
         (slot.pending_us + estimate_us) / slot.speed
     }
 
+    /// The pre-grant [`LeasePreview`] of `node` under the current
+    /// occupancy (shared by the dry-run preview and the combined
+    /// preview+lease path, so the two can never disagree).
+    fn preview_of(slots: &[Slot], node: usize) -> LeasePreview {
+        LeasePreview {
+            node,
+            speed: slots[node].speed,
+            price: slots[node].price,
+            wait: Duration::from_secs_f64(slots[node].pending_us / slots[node].speed / 1e6),
+            active: slots[node].active,
+        }
+    }
+
     /// The node the policy selects under the given occupancy. `rr` is
     /// the round-robin cursor value to use (callers decide whether the
     /// cursor advances). Only [`SchedulePolicy::LeastLoaded`] honours
@@ -351,6 +364,23 @@ impl NodeScheduler {
         estimate: Option<Duration>,
         objective: Objective,
     ) -> Result<Lease> {
+        Ok(self.lease_with_preview(estimate, objective)?.1)
+    }
+
+    /// Preview and grant the next lease in **one critical section**:
+    /// the returned [`LeasePreview`] describes the chosen node's
+    /// occupancy *before* this lease lands on it (exactly what
+    /// [`Self::preview_with`] would have reported), and the [`Lease`]
+    /// is granted atomically under the same slots lock — so two
+    /// concurrent placements can never both reason about, and then
+    /// both claim, the same idle VM. The migration manager's budget
+    /// and admission gates read the preview and simply drop the lease
+    /// (releasing the slot) when they decline.
+    pub fn lease_with_preview(
+        self: &Arc<Self>,
+        estimate: Option<Duration>,
+        objective: Objective,
+    ) -> Result<(LeasePreview, Lease)> {
         let mut slots = self.slots.lock().unwrap();
         if slots.is_empty() {
             bail!("no nodes available to schedule on (node count is 0)");
@@ -361,12 +391,16 @@ impl NodeScheduler {
             _ => 0,
         };
         let node = Self::choose(self.policy, objective, &slots, estimate_us, rr);
+        let preview = Self::preview_of(&slots, node);
         let position = slots[node].active;
         let speed = slots[node].speed;
         let price = slots[node].price;
         slots[node].active += 1;
         slots[node].pending_us += estimate_us;
-        Ok(Lease { sched: self.clone(), node, position, speed, price, estimate_us })
+        Ok((
+            preview,
+            Lease { sched: self.clone(), node, position, speed, price, estimate_us },
+        ))
     }
 
     /// Deterministic dry run of the next lease under the default time
@@ -374,10 +408,11 @@ impl NodeScheduler {
     /// occupancy, how long that node's pending work would delay the
     /// start, and how many leases it already holds. Round-robin
     /// previews the node the cursor points at without advancing it.
-    /// `None` on an empty pool. This is the migration manager's
-    /// admission-control probe; the probe and the eventual lease are
+    /// `None` on an empty pool. The probe and an eventual lease are
     /// separate lock acquisitions, so under concurrency the prediction
-    /// is best-effort, not a reservation.
+    /// is best-effort, not a reservation — the migration manager's
+    /// gates use [`Self::lease_with_preview`] instead, which previews
+    /// and claims in one critical section.
     pub fn preview(&self, estimate: Option<Duration>) -> Option<LeasePreview> {
         self.preview_with(estimate, Objective::Time)
     }
@@ -400,18 +435,28 @@ impl NodeScheduler {
             estimate_us,
             self.rr.load(Ordering::Relaxed),
         );
-        let wait = Duration::from_secs_f64(slots[node].pending_us / slots[node].speed / 1e6);
-        Some(LeasePreview {
-            node,
-            speed: slots[node].speed,
-            price: slots[node].price,
-            wait,
-            active: slots[node].active,
-        })
+        Some(Self::preview_of(&slots, node))
     }
 }
 
 impl Lease {
+    /// Release the lease as if the grant had been a dry-run preview:
+    /// occupancy is released (the normal drop) *and* the round-robin
+    /// cursor is rolled back one step, so a gate that
+    /// previewed-and-claimed atomically ([`NodeScheduler::lease_with_preview`])
+    /// but then declined leaves subsequent round-robin placement
+    /// exactly as a read-only probe would have — matching the
+    /// historical preview-only behaviour byte for byte on sequential
+    /// runs. Best-effort under concurrent round-robin leasing, like
+    /// the cursor itself. A no-op beyond the release for policies
+    /// without a cursor.
+    pub fn cancel(self) {
+        if self.sched.policy == SchedulePolicy::RoundRobin {
+            self.sched.rr.fetch_sub(1, Ordering::Relaxed);
+        }
+        // Dropped here: occupancy and pending work are released.
+    }
+
     /// Work-stealing pass: if this lease is queued behind other
     /// in-flight work on its node while a different node sits *idle*
     /// and would finish the work strictly sooner, re-pin the lease to
@@ -926,6 +971,42 @@ mod tests {
         let s2 = NodeScheduler::priced(SchedulePolicy::LeastLoaded, specs);
         assert_eq!(s2.lease_with(est, Objective::Weighted(0.0)).unwrap().node, 1);
         assert_eq!(s2.lease_with(est, Objective::Weighted(1e6)).unwrap().node, 0);
+    }
+
+    #[test]
+    fn lease_with_preview_is_atomic_and_matches_preview() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 2);
+        let est = Some(Duration::from_millis(10));
+        let expect = sched.preview(est).unwrap();
+        let (p, lease) = sched.lease_with_preview(est, Objective::Time).unwrap();
+        assert_eq!((p.node, p.wait, p.active), (expect.node, expect.wait, expect.active));
+        assert_eq!(lease.node, p.node);
+        assert_eq!(p.active, 0, "preview reports pre-grant occupancy");
+        assert_eq!(sched.active()[lease.node], 1, "the lease is already held");
+        // A second combined call sees the first lease's occupancy and
+        // steers away from the claimed VM.
+        let (p2, lease2) = sched.lease_with_preview(est, Objective::Time).unwrap();
+        assert_ne!(p2.node, p.node, "one critical section: no double-claimed idle VM");
+        drop((lease, lease2));
+        assert_eq!(sched.active(), vec![0, 0]);
+    }
+
+    #[test]
+    fn cancelled_lease_rewinds_the_round_robin_cursor() {
+        let sched = NodeScheduler::new(SchedulePolicy::RoundRobin, 3);
+        let (p, lease) = sched.lease_with_preview(None, Objective::Time).unwrap();
+        assert_eq!(p.node, 0);
+        lease.cancel();
+        assert_eq!(
+            sched.lease(None).unwrap().node,
+            0,
+            "a declined gate probe must not consume the round-robin cursor"
+        );
+        // Non-cursor policies: cancel is just a release.
+        let ll = NodeScheduler::new(SchedulePolicy::LeastLoaded, 2);
+        let (_, l) = ll.lease_with_preview(None, Objective::Time).unwrap();
+        l.cancel();
+        assert_eq!(ll.active(), vec![0, 0]);
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Dependence-DAG construction over sequence siblings (the engine's
+//! dataflow mode).
+//!
+//! The tree-walk engine executes `Sequence` children strictly one at a
+//! time even when their read/write sets prove them independent, so a
+//! fast cloud tier sits idle while an unrelated local step runs.
+//! Wavefront execution over a dependence DAG is the standard SWfMS
+//! answer (Bux & Leser, "Parallelization in Scientific Workflow
+//! Management Systems"): this module builds that DAG from the same
+//! flow analysis the migration packager uses
+//! ([`crate::workflow::analysis::step_io`]), and the engine's dataflow
+//! mode ([`crate::engine::Engine::with_dataflow`]) dispatches ready
+//! wavefronts onto scoped worker threads.
+//!
+//! Edges are the three classic hazards between siblings `i < j`:
+//! **write→read** (`j` reads a variable `i` writes), **write→write**
+//! (both write it), and **read→write** (`j` overwrites a variable `i`
+//! still reads). `Parallel` blocks are the fully-independent
+//! degenerate case (no pairing, no edges). `If`/`While` children stay
+//! **opaque barrier nodes** — ordered against every other unit —
+//! because their bodies run a data-dependent number of times and cheap
+//! conservatism beats a subtle reordering bug. A `MigrationPoint`
+//! fuses with the step it precedes into a single *offload unit*,
+//! mirroring exactly the sequential engine's pairing, so independent
+//! offload units in the same wavefront take their cloud leases
+//! concurrently.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::analysis::{self, StepIo};
+use super::{Step, StepKind};
+
+/// One schedulable unit of a sibling list: a child step, or a
+/// `MigrationPoint` fused with the remotable step it precedes.
+#[derive(Debug, Clone)]
+pub struct Unit {
+    /// Index of the *executed* step in the original child list (for an
+    /// offload unit the migration point itself sits at `step - 1`).
+    pub step: usize,
+    /// A `MigrationPoint` precedes the step: executing this unit goes
+    /// through the migration manager.
+    pub offload: bool,
+    /// Opaque barrier (`If`/`While`): ordered against every other
+    /// unit, before and after.
+    pub barrier: bool,
+    /// External read/write sets of the unit's subtree.
+    pub io: StepIo,
+}
+
+/// A dependence DAG over the units of one sibling list. Edges always
+/// point from a lower-indexed unit to a higher-indexed one, so program
+/// order is a topological order and a plain forward pass schedules it.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    /// Units in program order.
+    pub units: Vec<Unit>,
+    /// `deps[j]` = indices of the units that must finish before unit
+    /// `j` may start (every entry is strictly less than `j`).
+    pub deps: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    /// Build the dependence DAG for the children of a `Sequence`
+    /// (`independent = false`) or a `Parallel` (`independent = true` —
+    /// the fully-independent degenerate case: no migration-point
+    /// pairing and no edges).
+    ///
+    /// Fails when a child's expressions don't parse (the engine then
+    /// falls back to sequential execution so the error surfaces
+    /// exactly where the tree-walk interpreter would raise it) or when
+    /// a `MigrationPoint` has no following target step.
+    pub fn build(children: &[Step], independent: bool) -> Result<Dag> {
+        let mut units = Vec::with_capacity(children.len());
+        let mut i = 0;
+        while i < children.len() {
+            let child = &children[i];
+            if matches!(child.kind, StepKind::MigrationPoint) {
+                if independent {
+                    bail!("dangling MigrationPoint '{}'", child.display_name);
+                }
+                let Some(target) = children.get(i + 1) else {
+                    bail!("MigrationPoint at end of sequence has no target");
+                };
+                units.push(Unit {
+                    step: i + 1,
+                    offload: true,
+                    barrier: is_barrier(target),
+                    io: analysis::step_io(target)?,
+                });
+                i += 2;
+            } else {
+                units.push(Unit {
+                    step: i,
+                    offload: false,
+                    barrier: is_barrier(child),
+                    io: analysis::step_io(child)?,
+                });
+                i += 1;
+            }
+        }
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); units.len()];
+        if !independent {
+            for j in 1..units.len() {
+                for i in 0..j {
+                    if conflicts(&units[i], &units[j]) {
+                        deps[j].push(i);
+                    }
+                }
+            }
+        }
+        Ok(Dag { units, deps })
+    }
+
+    /// Deterministic critical-path makespan of the DAG given one
+    /// simulated duration per unit: a unit starts when its last
+    /// dependency finishes, and the makespan is the latest finish.
+    /// This is the dataflow generalization of "sequences add,
+    /// parallels max" — a fully-serial chain sums, an edge-free DAG
+    /// maxes — and what the engine charges as simulated time in
+    /// dataflow mode.
+    pub fn critical_path(&self, durations: &[Duration]) -> Duration {
+        debug_assert_eq!(durations.len(), self.units.len());
+        let mut finish = vec![Duration::ZERO; self.units.len()];
+        let mut makespan = Duration::ZERO;
+        for (j, d) in durations.iter().enumerate() {
+            let start = self.deps[j]
+                .iter()
+                .map(|&i| finish[i])
+                .max()
+                .unwrap_or(Duration::ZERO);
+            finish[j] = start + *d;
+            makespan = makespan.max(finish[j]);
+        }
+        makespan
+    }
+
+    /// Total number of dependence edges (diagnostics and tests).
+    pub fn edge_count(&self) -> usize {
+        self.deps.iter().map(Vec::len).sum()
+    }
+}
+
+/// `If`/`While` stay opaque barriers: their bodies execute a
+/// data-dependent number of times, so they are ordered against every
+/// sibling instead of being analyzed for overlap.
+fn is_barrier(step: &Step) -> bool {
+    matches!(step.kind, StepKind::If { .. } | StepKind::While { .. })
+}
+
+fn intersects(a: &BTreeSet<String>, b: &BTreeSet<String>) -> bool {
+    // The sets are tiny (one step's variable footprint): scan the
+    // smaller against the larger.
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    small.iter().any(|x| large.contains(x))
+}
+
+/// Must the later sibling `b` wait for `a`?
+fn conflicts(a: &Unit, b: &Unit) -> bool {
+    a.barrier
+        || b.barrier
+        || intersects(&a.io.writes, &b.io.reads) // write -> read
+        || intersects(&a.io.writes, &b.io.writes) // write -> write
+        || intersects(&a.io.reads, &b.io.writes) // read -> write
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    fn mp() -> Step {
+        Step::new("migration-point", StepKind::MigrationPoint)
+    }
+
+    #[test]
+    fn independent_steps_have_no_edges() {
+        let children = [assign("a", "1"), assign("b", "2"), assign("c", "3")];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.units.len(), 3);
+        assert_eq!(dag.edge_count(), 0);
+    }
+
+    #[test]
+    fn hazards_create_edges() {
+        // a=1 ; b=a (RAW on a) ; a=2 (WAW with 0, WAR with 1) ; c=9.
+        let children = [
+            assign("a", "1"),
+            assign("b", "a"),
+            assign("a", "2"),
+            assign("c", "9"),
+        ];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.deps[0], Vec::<usize>::new());
+        assert_eq!(dag.deps[1], vec![0], "reader waits for its writer");
+        assert_eq!(dag.deps[2], vec![0, 1], "overwrite waits for writer and reader");
+        assert_eq!(dag.deps[3], Vec::<usize>::new(), "unrelated step is free");
+    }
+
+    #[test]
+    fn if_and_while_are_barriers() {
+        let cond = Step::new(
+            "maybe",
+            StepKind::If {
+                condition: "a > 0".into(),
+                then_branch: Box::new(assign("b", "1")),
+                else_branch: None,
+            },
+        );
+        let children = [assign("x", "1"), cond, assign("y", "2")];
+        let dag = Dag::build(&children, false).unwrap();
+        assert!(dag.units[1].barrier);
+        assert_eq!(dag.deps[1], vec![0], "barrier waits for everything before it");
+        assert_eq!(dag.deps[2], vec![1], "everything after waits for the barrier");
+    }
+
+    #[test]
+    fn migration_point_fuses_into_an_offload_unit() {
+        let children = [mp(), assign("a", "1").remotable(), assign("b", "a")];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.units.len(), 2);
+        assert!(dag.units[0].offload);
+        assert_eq!(dag.units[0].step, 1, "the unit executes the target step");
+        assert_eq!(dag.deps[1], vec![0], "consumer waits for the offloaded producer");
+    }
+
+    #[test]
+    fn dangling_migration_point_is_an_error() {
+        assert!(Dag::build(&[assign("a", "1"), mp()], false).is_err());
+        assert!(Dag::build(&[mp()], true).is_err());
+    }
+
+    #[test]
+    fn parallel_mode_is_edge_free() {
+        let children = [assign("a", "1"), assign("b", "a")];
+        let dag = Dag::build(&children, true).unwrap();
+        assert_eq!(dag.edge_count(), 0, "Parallel is the fully-independent case");
+    }
+
+    #[test]
+    fn bad_expression_fails_the_build() {
+        assert!(Dag::build(&[assign("a", "1 +")], false).is_err());
+    }
+
+    #[test]
+    fn critical_path_sums_chains_and_maxes_antichains() {
+        let ms = Duration::from_millis;
+        // Chain a -> b -> a: serial. Independent c in parallel.
+        let children = [
+            assign("a", "1"),
+            assign("b", "a"),
+            assign("c", "9"),
+            assign("a", "b"),
+        ];
+        let dag = Dag::build(&children, false).unwrap();
+        // Durations: 10, 20, 100, 30. Chain 0->1->3 = 60ms; unit 2 is
+        // free at 100ms -> critical path 100ms, not the 160ms sum.
+        let cp = dag.critical_path(&[ms(10), ms(20), ms(100), ms(30)]);
+        assert_eq!(cp, ms(100));
+        // Fully dependent workloads degenerate to the sequential sum.
+        let serial = [assign("a", "1"), assign("a", "a"), assign("a", "a")];
+        let dag = Dag::build(&serial, false).unwrap();
+        assert_eq!(dag.critical_path(&[ms(10), ms(20), ms(30)]), ms(60));
+        // Empty DAG.
+        assert_eq!(Dag::build(&[], false).unwrap().critical_path(&[]), Duration::ZERO);
+    }
+}

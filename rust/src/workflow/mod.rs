@@ -10,9 +10,11 @@
 //! The XML (XAML-like) surface syntax lives in [`xaml`]; validation of
 //! the paper's partitioning Properties 1–3 lives in [`validate`];
 //! read/write-set analysis used by the partitioner and the migration
-//! packager lives in [`analysis`].
+//! packager lives in [`analysis`]; the dependence-DAG construction the
+//! engine's dataflow mode schedules from lives in [`dag`].
 
 pub mod analysis;
+pub mod dag;
 pub mod validate;
 pub mod xaml;
 

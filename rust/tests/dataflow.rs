@@ -1,0 +1,313 @@
+//! Dataflow DAG executor — legality and equivalence properties.
+//!
+//! The contract of `[engine] dataflow` (PR 4): generated workflows
+//! executed in dataflow mode must produce identical final variable
+//! stores and `RunReport.lines` to sequential mode (event *sequence
+//! numbers* may differ — they record real interleaving), no schedule
+//! may ever run a reader before its writer, and concurrent offloads
+//! must never overshoot the migration budget.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use emerald::cloud::{CloudTier, Platform, PlatformConfig};
+use emerald::engine::activity::need_num;
+use emerald::engine::{ActivityRegistry, Engine, Event, Services};
+use emerald::expr::Value;
+use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
+use emerald::partitioner;
+use emerald::quickprop::{forall, Gen};
+use emerald::workflow::{dag, xaml, Step, StepKind, Workflow};
+
+const VARS: [&str; 4] = ["a", "b", "c", "d"];
+
+fn gen_expr(g: &mut Gen) -> String {
+    fn operand(g: &mut Gen) -> String {
+        if g.bool() {
+            (*g.choose(&VARS)).to_string()
+        } else {
+            g.i64_in(0..=9).to_string()
+        }
+    }
+    let a = operand(g);
+    match g.usize_in(0..=2) {
+        0 => a,
+        1 => format!("{a} + {}", operand(g)),
+        _ => format!("{a} * {}", operand(g)),
+    }
+}
+
+fn gen_assign(g: &mut Gen, name: String) -> Step {
+    Step::new(name, StepKind::Assign { to: g.choose(&VARS).to_string(), value: gen_expr(g) })
+}
+
+/// One random sequence child: assignments (sometimes remotable),
+/// WriteLines, `If` barriers, nested sequences, and no-ops.
+fn gen_step(g: &mut Gen, idx: usize) -> Step {
+    match g.usize_in(0..=9) {
+        0..=4 => {
+            let s = gen_assign(g, format!("s{idx}"));
+            if g.bool() {
+                s.remotable()
+            } else {
+                s
+            }
+        }
+        5 | 6 => Step::new(format!("w{idx}"), StepKind::WriteLine { text: gen_expr(g) }),
+        7 => Step::new(
+            format!("if{idx}"),
+            StepKind::If {
+                condition: format!("{} % 2 == 0", gen_expr(g)),
+                then_branch: Box::new(gen_assign(g, format!("t{idx}"))),
+                else_branch: if g.bool() {
+                    Some(Box::new(gen_assign(g, format!("e{idx}"))))
+                } else {
+                    None
+                },
+            },
+        ),
+        8 => Step::new(
+            format!("seq{idx}"),
+            StepKind::Sequence(vec![
+                gen_assign(g, format!("n{idx}a")),
+                gen_assign(g, format!("n{idx}b")),
+            ]),
+        ),
+        _ => Step::new(format!("nop{idx}"), StepKind::Nop),
+    }
+}
+
+fn gen_workflow(g: &mut Gen) -> Workflow {
+    let n = g.usize_in(1..=12);
+    let mut steps: Vec<Step> = (0..n).map(|i| gen_step(g, i)).collect();
+    // Dump every variable at the end: line equality then implies
+    // final-store equality.
+    for v in VARS {
+        steps.push(Step::new(
+            format!("out-{v}"),
+            StepKind::WriteLine { text: format!("'{v}=' + str({v})") },
+        ));
+    }
+    let mut wf = Workflow::new("gen", Step::new("main", StepKind::Sequence(steps)));
+    for (i, v) in VARS.iter().enumerate() {
+        wf = wf.var(*v, Some(&(i + 1).to_string()));
+    }
+    wf
+}
+
+fn quiet_engine(dataflow: bool) -> Engine {
+    let services = Services::without_runtime(Platform::paper_testbed());
+    Engine::new(Arc::new(ActivityRegistry::new()), services).with_dataflow(dataflow)
+}
+
+#[test]
+fn property_dataflow_matches_sequential_results() {
+    forall(60, |g: &mut Gen| {
+        let wf = gen_workflow(g);
+        // Partition so remotable steps get migration points: dataflow
+        // pairs them into offload units (executed locally here — no
+        // handler — but through the same suspend path).
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let seq = quiet_engine(false).run(&part).unwrap();
+        let df = quiet_engine(true).run(&part).unwrap();
+        assert_eq!(df.lines, seq.lines, "dataflow must preserve output + final stores");
+        assert_eq!(df.events, seq.events, "program-order traces must match");
+    });
+}
+
+#[test]
+fn property_no_reader_runs_before_its_writer() {
+    // Workflows of tracked invoke steps: every dependence edge of the
+    // DAG must be respected by the real emission order of the
+    // activity events (writer finished before reader started).
+    forall(40, |g: &mut Gen| {
+        let n = g.usize_in(2..=10);
+        let steps: Vec<Step> = (0..n)
+            .map(|i| {
+                let read = *g.choose(&VARS);
+                let write = *g.choose(&VARS);
+                Step::new(
+                    format!("s{i}"),
+                    StepKind::InvokeActivity {
+                        activity: "track.op".into(),
+                        inputs: vec![("x".into(), read.to_string())],
+                        outputs: vec![("y".into(), write.to_string())],
+                    },
+                )
+            })
+            .collect();
+        let graph = dag::Dag::build(&steps, false).unwrap();
+        let mut wf = Workflow::new("gen", Step::new("main", StepKind::Sequence(steps)));
+        for v in VARS {
+            wf = wf.var(v, Some("1"));
+        }
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("track.op", |_c, inputs| {
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let engine = Engine::new(Arc::new(reg), services).with_dataflow(true);
+        let report = engine.run(&wf).unwrap();
+
+        let mut started: BTreeMap<String, u64> = BTreeMap::new();
+        let mut finished: BTreeMap<String, u64> = BTreeMap::new();
+        for (e, s) in report.events.iter().zip(&report.seqs) {
+            match e {
+                Event::ActivityStarted { step, .. } => {
+                    started.insert(step.clone(), *s);
+                }
+                Event::ActivityFinished { step, .. } => {
+                    finished.insert(step.clone(), *s);
+                }
+                _ => {}
+            }
+        }
+        for (j, deps) in graph.deps.iter().enumerate() {
+            let reader = format!("s{}", graph.units[j].step);
+            for &i in deps {
+                let writer = format!("s{}", graph.units[i].step);
+                assert!(
+                    finished[&writer] < started[&reader],
+                    "'{writer}' must finish before '{reader}' starts \
+                     (finish {} vs start {})",
+                    finished[&writer],
+                    started[&reader]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn concurrent_offloads_never_overshoot_the_budget() {
+    // 4 equal-cost remotable steps: 125 ms of reference work at price
+    // 1.0 costs exactly 0.125 per offload — every quantity below is
+    // exactly representable in binary, so the budget boundary is
+    // float-safe. Budget 0.8125 covers the 4 warm-up offloads (0.5)
+    // plus exactly 2.5 more: the second (concurrent) run must admit
+    // exactly 2 of its 4 offloads no matter how the races resolve,
+    // because each admitted offload reserves its projected spend
+    // before the next gate check.
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::priced(4, 2.0, 1.0)],
+        ..Default::default()
+    })
+    .unwrap();
+    let services = Services::without_runtime(platform);
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("paid.op", |c, inputs| {
+        let x = need_num(inputs, "x")?;
+        // Real wall time so concurrent offloads genuinely overlap.
+        std::thread::sleep(Duration::from_millis(5));
+        c.charge_compute(Duration::from_millis(125));
+        Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+    });
+    let reg = Arc::new(reg);
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.budget = Some(0.8125);
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services)
+        .with_offload(mgr.clone())
+        .with_dataflow(true);
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="r1"/><Variable Name="r2"/>
+               <Variable Name="r3"/><Variable Name="r4"/>
+             </Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="p-1" Activity="paid.op" In.x="1"
+                               Out.y="r1" Remotable="true"/>
+               <InvokeActivity DisplayName="p-2" Activity="paid.op" In.x="2"
+                               Out.y="r2" Remotable="true"/>
+               <InvokeActivity DisplayName="p-3" Activity="paid.op" In.x="3"
+                               Out.y="r3" Remotable="true"/>
+               <InvokeActivity DisplayName="p-4" Activity="paid.op" In.x="4"
+                               Out.y="r4" Remotable="true"/>
+               <WriteLine Text="str(r1 + r2 + r3 + r4)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+
+    // Warm run: estimate-less first sightings all offload (projected
+    // spend zero) and teach the cost model the exact per-step work.
+    let warm = engine.run(&part).unwrap();
+    assert_eq!(warm.lines, vec!["14"]);
+    assert_eq!(mgr.stats().offloads, 4);
+    assert!((mgr.stats().spend - 0.5).abs() < 1e-12, "{}", mgr.stats().spend);
+
+    // Budgeted concurrent run: 0.3125 of budget remains, which pays
+    // for exactly 2 more offloads.
+    let run2 = engine.run(&part).unwrap();
+    assert_eq!(run2.lines.last().map(String::as_str), Some("14"));
+    assert_eq!(
+        run2.lines.iter().filter(|l| l.contains("budget: spent")).count(),
+        2,
+        "exactly two decline notices: {:?}",
+        run2.lines
+    );
+    let stats = mgr.stats();
+    assert_eq!(stats.offloads, 6, "exactly 2 of 4 concurrent offloads fit the budget");
+    assert_eq!(stats.budget_declined, 2);
+    assert!(
+        stats.spend <= 0.8125 + 1e-12,
+        "cumulative spend must never exceed the budget: {}",
+        stats.spend
+    );
+    assert!((stats.spend - 0.75).abs() < 1e-12, "{}", stats.spend);
+}
+
+#[test]
+fn dataflow_and_sequential_agree_through_the_real_manager() {
+    // A dependent offload chain (each step reads the previous step's
+    // output): the DAG degenerates to the sequential order, so lines,
+    // results and offload counts must match the tree-walk exactly.
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="s1"/><Variable Name="s2"/><Variable Name="s3"/>
+             </Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="c-1" Activity="chain.op" In.x="1"
+                               Out.y="s1" Remotable="true"/>
+               <InvokeActivity DisplayName="c-2" Activity="chain.op" In.x="s1"
+                               Out.y="s2" Remotable="true"/>
+               <InvokeActivity DisplayName="c-3" Activity="chain.op" In.x="s2"
+                               Out.y="s3" Remotable="true"/>
+               <WriteLine Text="'final=' + str(s3)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let run_mode = |dataflow: bool| {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("chain.op", |c, inputs| {
+            let x = need_num(inputs, "x")?;
+            c.charge_compute(Duration::from_millis(40));
+            Ok([("y".to_string(), Value::Num(x * 2.0))].into())
+        });
+        let reg = Arc::new(reg);
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let engine = Engine::new(reg, services)
+            .with_offload(mgr.clone())
+            .with_dataflow(dataflow);
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let report = engine.run(&part).unwrap();
+        (report, mgr.stats())
+    };
+    let (seq, seq_stats) = run_mode(false);
+    let (df, df_stats) = run_mode(true);
+    assert_eq!(df.lines, seq.lines);
+    assert_eq!(df.lines, vec!["final=8"]);
+    assert_eq!((df_stats.offloads, seq_stats.offloads), (3, 3));
+    assert_eq!(
+        df.sim_time, seq.sim_time,
+        "a fully dependent chain has no parallelism to exploit"
+    );
+    assert_eq!(df.max_inflight_offloads(), 1, "chained offloads never overlap");
+}
