@@ -21,7 +21,8 @@
 //! schedule = "least-loaded"  # least-loaded | least-loaded-blind | round-robin
 //!
 //! [engine]
-//! dataflow = false         # dependence-DAG wavefront scheduling
+//! dataflow = false         # dependence-DAG scheduling
+//! dispatch = "dependency"  # dependency | wavefront (A/B baseline)
 //!
 //! [migration]
 //! policy = "mdss"          # mdss | bundle
@@ -51,6 +52,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cloud::{CloudTier, PlatformConfig};
+use crate::engine::DataflowDispatch;
 use crate::mdss::Codec;
 use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
 use crate::scheduler::{Objective, SchedulePolicy};
@@ -64,12 +66,17 @@ pub struct ConfigFile {
 /// Engine execution options from the `[engine]` section.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineConfig {
-    /// `[engine] dataflow`: execute `Sequence` children as a
-    /// dependence-DAG wavefront schedule
+    /// `[engine] dataflow`: execute `Sequence` children under a
+    /// dependence-DAG schedule
     /// ([`crate::engine::Engine::with_dataflow`]) instead of the
     /// sequential tree-walk. Default `false` (the paper's execution
     /// model, kept as the A/B baseline).
     pub dataflow: bool,
+    /// `[engine] dispatch`: which dataflow dispatcher to use —
+    /// `"dependency"` (the default; a unit starts the instant its last
+    /// dependency finishes) or `"wavefront"` (the barrier-synchronized
+    /// baseline). No effect unless `dataflow` is on.
+    pub dispatch: DataflowDispatch,
 }
 
 /// A config value.
@@ -383,7 +390,15 @@ impl ConfigFile {
     /// Build an [`EngineConfig`] from the `[engine]` section (missing
     /// keys take the sequential-engine defaults).
     pub fn engine(&self) -> Result<EngineConfig> {
-        Ok(EngineConfig { dataflow: self.boolean("engine", "dataflow", false)? })
+        let dispatch = match self.string("engine", "dispatch", "dependency")?.as_str() {
+            "dependency" => DataflowDispatch::Dependency,
+            "wavefront" => DataflowDispatch::Wavefront,
+            other => bail!("[engine] dispatch must be dependency|wavefront, got {other:?}"),
+        };
+        Ok(EngineConfig {
+            dataflow: self.boolean("engine", "dataflow", false)?,
+            dispatch,
+        })
     }
 
     /// Build a [`ManagerConfig`] from the `[migration]` section.
@@ -588,12 +603,19 @@ mod tests {
 
     #[test]
     fn parses_engine_section_and_decay() {
-        // Defaults: sequential engine, no decay.
+        // Defaults: sequential engine, dependency dispatch, no decay.
         let cfg = ConfigFile::parse("").unwrap();
         assert!(!cfg.engine().unwrap().dataflow);
+        assert_eq!(cfg.engine().unwrap().dispatch, DataflowDispatch::Dependency);
         assert_eq!(cfg.migration().unwrap().decay_after, None);
         let cfg = ConfigFile::parse("[engine]\ndataflow = true").unwrap();
         assert!(cfg.engine().unwrap().dataflow);
+        let cfg = ConfigFile::parse("[engine]\ndispatch = \"wavefront\"").unwrap();
+        assert_eq!(cfg.engine().unwrap().dispatch, DataflowDispatch::Wavefront);
+        let cfg = ConfigFile::parse("[engine]\ndispatch = \"dependency\"").unwrap();
+        assert_eq!(cfg.engine().unwrap().dispatch, DataflowDispatch::Dependency);
+        let cfg = ConfigFile::parse("[engine]\ndispatch = \"barrier\"").unwrap();
+        assert!(cfg.engine().is_err(), "unknown dispatch must be rejected");
         let cfg = ConfigFile::parse("[migration]\ndecay_after = 20").unwrap();
         assert_eq!(cfg.migration().unwrap().decay_after, Some(20));
         // Rejections.

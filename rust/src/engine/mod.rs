@@ -12,17 +12,25 @@
 //!   remotable steps offload concurrently to distinct cloud nodes
 //!   (Figure 9b);
 //! * an opt-in **dataflow mode** ([`Engine::with_dataflow`], `[engine]
-//!   dataflow` in the config file): `Sequence` children execute as a
-//!   dependence-DAG wavefront schedule ([`crate::workflow::dag`])
-//!   instead of strictly in order, so independent siblings — proved
-//!   independent by read/write-set analysis — run concurrently and
-//!   independent offloads take their cloud leases at the same time.
-//!   Simulated time becomes the DAG's critical path; lines and the
-//!   event trace are still reported in deterministic program order
-//!   (each unit records into private buffers spliced back in child
-//!   order), and every event carries a monotonic emission sequence
-//!   number ([`RunReport::seqs`]) so the real interleaving stays
-//!   observable;
+//!   dataflow` in the config file): `Sequence` children execute under
+//!   a dependence-DAG schedule ([`crate::workflow::dag`]) instead of
+//!   strictly in order, so independent siblings — proved independent
+//!   by read/write-set analysis — run concurrently and independent
+//!   offloads take their cloud leases at the same time. Dispatch is
+//!   **dependency-driven** ([`DataflowDispatch::Dependency`]): a
+//!   bounded worker pool drains a ready queue, each finishing unit
+//!   decrements its dependents' pending-dependency counters and
+//!   enqueues the ones that hit zero — a unit starts the instant its
+//!   last dependency finishes, so real wall-clock overlap matches the
+//!   charged critical-path model (the PR-4 wavefront-barrier schedule
+//!   is kept as the A/B baseline, [`DataflowDispatch::Wavefront`]).
+//!   Simulated time is the DAG's critical path; lines and the event
+//!   trace are still reported in deterministic program order (each
+//!   unit records into private buffers spliced back in child order),
+//!   local `ActivityStarted` events carry canonical program-order
+//!   node names (byte-stable payloads across runs), and every event
+//!   carries a monotonic emission sequence number
+//!   ([`RunReport::seqs`]) so the real interleaving stays observable;
 //! * **simulated-time accounting**: every step returns its simulated
 //!   duration; sequences add, parallels take the max. Compute cost is
 //!   real (measured PJRT wall time) scaled by node speed; transfer cost
@@ -38,9 +46,9 @@ pub mod state;
 pub use activity::{Activity, ActivityCtx, ActivityRegistry, Services};
 pub use state::{FrameId, VarStore};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -57,7 +65,11 @@ pub enum Event {
     /// cloud VM the scheduler leased and the worker executed on (one
     /// event per offload round trip), so the trace records where every
     /// piece of work actually ran — including work a steal pass
-    /// re-pinned.
+    /// re-pinned. In dataflow mode, *local* node names are
+    /// canonicalized to program order after the run (local nodes are
+    /// homogeneous; see [`Engine::run`]), so dataflow traces are
+    /// byte-stable across runs including payloads; cloud names always
+    /// record the real placement.
     ActivityStarted { step: String, node: String },
     /// An activity finished; simulated duration in microseconds.
     ActivityFinished { step: String, sim_us: u64 },
@@ -112,6 +124,28 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// Emission sequence number of the first `ActivityStarted` event
+    /// for `step`, if any: the moment the step actually began in the
+    /// run's real interleaving. Overlap assertions pair this with
+    /// [`Self::finished_seq`] — e.g. a dependent unit's start seq
+    /// preceding an unrelated in-flight sibling's finish proves the
+    /// two really overlapped.
+    pub fn started_seq(&self, step: &str) -> Option<u64> {
+        self.events.iter().zip(&self.seqs).find_map(|(e, s)| match e {
+            Event::ActivityStarted { step: st, .. } if st == step => Some(*s),
+            _ => None,
+        })
+    }
+
+    /// Emission sequence number of the first `ActivityFinished` event
+    /// for `step`, if any (see [`Self::started_seq`]).
+    pub fn finished_seq(&self, step: &str) -> Option<u64> {
+        self.events.iter().zip(&self.seqs).find_map(|(e, s)| match e {
+            Event::ActivityFinished { step: st, .. } if st == step => Some(*s),
+            _ => None,
+        })
+    }
+
     /// Number of offloaded steps.
     pub fn offload_count(&self) -> usize {
         self.events
@@ -221,6 +255,36 @@ pub trait OffloadHandler: Send + Sync {
     ) -> Result<OffloadVerdict>;
 }
 
+/// How dataflow mode turns the dependence DAG into running threads
+/// (`[engine] dispatch` in the config file). Both schedules produce
+/// identical lines and events, and identical simulated time wherever
+/// per-unit durations are schedule-independent — they differ in real
+/// wall-clock overlap, which is what the fig13h bench A/Bs. (The one
+/// schedule-dependent duration is an offload unit's queueing charge
+/// on an *oversubscribed* cloud, which reflects real lease overlap —
+/// the queueing model's documented best-effort stance; the bounded
+/// dependency pool and the unbounded wavefront waves can then overlap
+/// different lease sets.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DataflowDispatch {
+    /// Dependency-driven (event-driven) dispatch — the default. A
+    /// bounded worker pool drains a ready queue seeded with the
+    /// zero-in-degree units; each finishing unit decrements its
+    /// dependents' pending-dependency counters and enqueues any that
+    /// hit zero, so a unit starts the instant its last dependency
+    /// finishes and real overlap matches the charged critical-path
+    /// model.
+    #[default]
+    Dependency,
+    /// Wavefront barriers (the PR-4 schedule, kept as the A/B
+    /// baseline): all currently-ready units run as one wave and the
+    /// next wave starts only when the whole wave has finished — a
+    /// unit whose dependencies complete mid-wave idles until the
+    /// barrier, so live wall-clock systematically lags the charged
+    /// critical path on staircase-shaped DAGs.
+    Wavefront,
+}
+
 /// The workflow execution engine.
 pub struct Engine {
     registry: Arc<ActivityRegistry>,
@@ -233,6 +297,8 @@ pub struct Engine {
     /// Dataflow mode: schedule `Sequence` children by dependence DAG
     /// instead of strictly in order (see [`Self::with_dataflow`]).
     dataflow: bool,
+    /// Which dispatcher dataflow mode uses (see [`DataflowDispatch`]).
+    dispatch: DataflowDispatch,
     verbose: bool,
 }
 
@@ -295,6 +361,7 @@ impl Engine {
             offload: None,
             tier: crate::cloud::NodeKind::Local,
             dataflow: false,
+            dispatch: DataflowDispatch::default(),
             verbose: false,
         }
     }
@@ -306,25 +373,39 @@ impl Engine {
     }
 
     /// Dataflow mode (`[engine] dataflow` / `--dataflow`): execute
-    /// `Sequence` children as a dependence-DAG wavefront schedule
+    /// `Sequence` children under a dependence-DAG schedule
     /// ([`crate::workflow::dag`]) instead of strictly in order.
-    /// Independent siblings run concurrently on scoped worker threads
+    /// Independent siblings run concurrently on a bounded worker pool
     /// (independent offload units lease distinct cloud VMs at the same
     /// time), `If`/`While` children stay opaque barriers, and
     /// simulated time is the DAG's critical path instead of the
-    /// sequential sum. Lines and the event trace remain in
-    /// deterministic program order regardless of interleaving. The
-    /// critical path is computed deterministically from the per-unit
-    /// durations; an *offload* unit's duration carries the same
-    /// load-dependent queueing charge as every other execution mode,
-    /// so on an oversubscribed cloud the observed makespan can vary
-    /// with real lease overlap (the queueing model's documented
-    /// best-effort stance — use [`crate::workflow::dag::Dag::critical_path`]
-    /// with known durations for a machine-independent comparison).
-    /// Off by default — the sequential tree-walk is the A/B baseline
-    /// and the fallback for subtrees the flow analysis cannot model.
+    /// sequential sum. Dispatch is dependency-driven by default — a
+    /// unit starts the instant its last dependency finishes — with the
+    /// wavefront-barrier schedule available as an A/B baseline
+    /// ([`Self::with_dispatch`]). Lines and the event trace remain in
+    /// deterministic program order regardless of interleaving, and
+    /// local `ActivityStarted` node names are canonicalized to
+    /// program order so the trace is byte-stable across runs including
+    /// payloads. The critical path is computed deterministically from
+    /// the per-unit durations; an *offload* unit's duration carries
+    /// the same load-dependent queueing charge as every other
+    /// execution mode, so on an oversubscribed cloud the observed
+    /// makespan can vary with real lease overlap (the queueing model's
+    /// documented best-effort stance — use
+    /// [`crate::workflow::dag::Dag::critical_path`] with known
+    /// durations for a machine-independent comparison). Off by
+    /// default — the sequential tree-walk is the A/B baseline and the
+    /// fallback for subtrees the flow analysis cannot model.
     pub fn with_dataflow(mut self, on: bool) -> Self {
         self.dataflow = on;
+        self
+    }
+
+    /// Select the dataflow dispatcher (`[engine] dispatch`): the
+    /// dependency-driven default, or the wavefront-barrier baseline.
+    /// No effect unless dataflow mode is on.
+    pub fn with_dispatch(mut self, dispatch: DataflowDispatch) -> Self {
+        self.dispatch = dispatch;
         self
     }
 
@@ -389,6 +470,33 @@ impl Engine {
         for (s, e) in stamped {
             seqs.push(s);
             events.push(e);
+        }
+        // Dataflow mode: canonicalize *local* `ActivityStarted` node
+        // names to program order. Local nodes are homogeneous (one
+        // speed, one MDSS side), so which of them "ran" an activity is
+        // pure bookkeeping — but the shared round-robin cursor hands
+        // out names in arrival order, which under concurrent dispatch
+        // differs run to run. Renaming the k-th local activity of the
+        // program-order trace to `local-(k mod pool)` is exactly the
+        // assignment a fresh-platform sequential walk makes, so
+        // dataflow traces are byte-stable across runs *including
+        // payloads* and equal to the sequential trace of the same
+        // workflow. Cloud names are never touched: they record the
+        // real (priced, billed) placement. Sequential mode is left
+        // bit-for-bit alone.
+        if self.dataflow {
+            let pool = self.services.platform.local_size();
+            if pool > 0 {
+                let mut k = 0usize;
+                for e in events.iter_mut() {
+                    if let Event::ActivityStarted { node, .. } = e {
+                        if node.starts_with("local-") {
+                            *node = format!("local-{}", k % pool);
+                            k += 1;
+                        }
+                    }
+                }
+            }
         }
         let spend = events
             .iter()
@@ -605,24 +713,31 @@ impl Engine {
     }
 
     /// Dataflow execution of one sibling list: build the dependence
-    /// DAG ([`dag::Dag::build`]), dispatch ready wavefronts onto
-    /// scoped worker threads, and charge the DAG's critical path as
-    /// simulated time. Every unit records lines and events into
-    /// private buffers that are spliced back in program order, so
-    /// lines and the event *order* are byte-stable no matter how the
-    /// wavefronts interleave. (One payload caveat: the round-robin
-    /// node picked for a concurrently-executed local activity — the
-    /// `ActivityStarted` node name — depends on arrival order at the
-    /// shared cursor; local nodes are homogeneous, so simulated time
-    /// is unaffected.) Dispatch is wavefront-synchronized: a unit
-    /// whose dependencies completed mid-wave starts with the next
-    /// wave. That affects only real wall-clock overlap — simulated
-    /// time is always the charged critical path, where a unit starts
-    /// the instant its last dependency finishes. When the DAG cannot
-    /// be built (an expression the analysis cannot parse, a dangling
-    /// migration point), execution falls back to the sequential path
-    /// so errors — and partial successes — surface exactly as they
-    /// would without dataflow mode.
+    /// DAG ([`dag::Dag::build`]), dispatch each unit the instant its
+    /// last dependency finishes ([`DataflowDispatch::Dependency`] — a
+    /// bounded worker pool fed by a ready queue; the wavefront-barrier
+    /// schedule remains as the A/B baseline), and charge the DAG's
+    /// critical path as simulated time. Real wall-clock overlap now
+    /// matches the charged model: the critical path assumes a unit
+    /// starts when its last dependency finishes, and under
+    /// dependency-driven dispatch it actually does. Every unit records
+    /// lines and events into private buffers that are spliced back in
+    /// program order, so lines and the event *order* are byte-stable
+    /// no matter how the schedule interleaves (local `ActivityStarted`
+    /// *payloads* are canonicalized to program order once per run —
+    /// see [`Engine::run`]). When the DAG cannot be built (an
+    /// expression the analysis cannot parse, a dangling migration
+    /// point), execution falls back to the sequential path so
+    /// errors — and partial successes — surface exactly as they would
+    /// without dataflow mode.
+    ///
+    /// Failure semantics: a failing unit never unblocks its transitive
+    /// dependents (their pending counters never reach zero), but units
+    /// that do not depend on it still run; the lowest-indexed failure
+    /// among the units that ran is reported. Because the ran set under
+    /// continue-on-failure is exactly "not downstream of a failure",
+    /// the reported error is deterministic for the dependency-driven
+    /// dispatcher.
     fn exec_dataflow(
         &self,
         children: &[Step],
@@ -662,7 +777,7 @@ impl Engine {
         // predecessor, including the degenerate empty/one-unit cases —
         // has nothing to overlap: the plain sequential walk is the
         // identical schedule (same pairing, same event order, sim sum
-        // == critical path) without the wavefront machinery. This is
+        // == critical path) without the dispatcher machinery. This is
         // the common shape of accumulator-style While bodies, which
         // would otherwise pay per-iteration thread and buffer overhead
         // for zero parallelism. (An `independent` DAG has no edges, so
@@ -676,10 +791,6 @@ impl Engine {
         let unit_lines: Vec<Mutex<Vec<String>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
         let unit_events: Vec<Mutex<Vec<(u64, Event)>>> =
             (0..n).map(|_| Mutex::new(Vec::new())).collect();
-        let mut durs = vec![Duration::ZERO; n];
-        let mut done = vec![false; n];
-        let mut remaining = n;
-        let mut failure: Option<(usize, anyhow::Error)> = None;
         // One unit's execution, recording into its private buffers.
         // Captures only shared references, so the closure is Copy and
         // can be called from worker threads or inline.
@@ -701,57 +812,10 @@ impl Engine {
                 self.exec(target, &uctx)
             }
         };
-        while remaining > 0 && failure.is_none() {
-            let ready: Vec<usize> = (0..n)
-                .filter(|&j| !done[j] && graph.deps[j].iter().all(|&i| done[i]))
-                .collect();
-            // Dependencies always point backwards, so the smallest
-            // unfinished unit is always ready: progress is guaranteed.
-            // Guarded anyway — a scheduler bug must be an error, not a
-            // silent infinite loop.
-            if ready.is_empty() {
-                bail!("dataflow scheduler stalled in '{name}' (internal invariant violated)");
-            }
-            // A single-unit wave (fully dependent chains, one-child
-            // sequences) runs inline: no thread spawn for a schedule
-            // with nothing to overlap.
-            let results: Vec<(usize, Result<Duration>)> = if ready.len() == 1 {
-                vec![(ready[0], run_unit(ready[0]))]
-            } else {
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = ready
-                        .iter()
-                        .map(|&j| scope.spawn(move || run_unit(j)))
-                        .collect();
-                    ready
-                        .iter()
-                        .copied()
-                        .zip(handles.into_iter().map(|h| match h.join() {
-                            Ok(r) => r,
-                            Err(p) => std::panic::resume_unwind(p),
-                        }))
-                        .collect()
-                })
-            };
-            for (j, r) in results {
-                done[j] = true;
-                remaining -= 1;
-                match r {
-                    Ok(d) => durs[j] = d,
-                    Err(e) => {
-                        // Keep the lowest-index failure: the reported
-                        // error is deterministic under concurrency.
-                        let replace = match &failure {
-                            None => true,
-                            Some((fj, _)) => j < *fj,
-                        };
-                        if replace {
-                            failure = Some((j, e));
-                        }
-                    }
-                }
-            }
-        }
+        let (durs, failure) = match self.dispatch {
+            DataflowDispatch::Dependency => dispatch_dependency(&graph, &run_unit, name),
+            DataflowDispatch::Wavefront => dispatch_wavefront(&graph, &run_unit, name),
+        };
         // Splice the per-unit output back in program order: lines and
         // the event trace are identical to what sequential execution
         // of the same schedule would report.
@@ -906,6 +970,219 @@ impl Engine {
         });
         Ok(sim)
     }
+}
+
+/// What a dataflow dispatcher hands back: one simulated duration per
+/// unit (zero for units that never ran) plus the lowest-indexed
+/// failure among the units that did run.
+type DispatchOutcome = (Vec<Duration>, Option<(usize, anyhow::Error)>);
+
+/// Record `err` from unit `j` if it is the lowest-indexed failure so
+/// far — the reported error does not depend on completion order.
+fn keep_lowest_failure(slot: &mut Option<(usize, anyhow::Error)>, j: usize, err: anyhow::Error) {
+    let replace = match slot {
+        None => true,
+        Some((fj, _)) => j < *fj,
+    };
+    if replace {
+        *slot = Some((j, err));
+    }
+}
+
+/// Dependency-driven dispatch (the default): a bounded worker pool
+/// drains a ready queue seeded with the DAG's zero-in-degree units.
+/// Each finishing unit decrements its dependents' pending-dependency
+/// counters ([`dag::Dag::in_degrees`] gives the initial values,
+/// [`dag::Dag::dependents`] the forward edges) and enqueues any that
+/// hit zero — so a unit starts the instant its last dependency
+/// finishes, never at the next wavefront barrier, and real wall-clock
+/// overlap matches the critical-path model the engine charges.
+///
+/// The pool is bounded at `min(units, max(4, available_parallelism))`:
+/// enough workers to cover the machine (plus a floor so overlap exists
+/// even on tiny CI runners), never more threads than units. Simulated
+/// time is the critical path over the returned durations; durations
+/// are schedule-independent except an offload unit's queueing charge
+/// on an oversubscribed cloud, which reflects real lease overlap and
+/// can therefore vary with the pool size (the queueing model's
+/// documented best-effort stance).
+///
+/// A failing unit's transitive dependents are never dispatched (their
+/// counters never reach zero); independent units still run. The pool
+/// terminates when it goes quiescent — nothing ready, nothing in
+/// flight — which covers full completion, failure-blocked remainders,
+/// and (guarded, as an error rather than a hang) scheduler bugs. A
+/// panicking unit is caught so in-flight peers can finish and waiting
+/// workers are not stranded mid-quiesce; the payload is re-thrown
+/// after the pool drains, preserving panic semantics.
+fn dispatch_dependency<F>(graph: &dag::Dag, run_unit: &F, name: &str) -> DispatchOutcome
+where
+    F: Fn(usize) -> Result<Duration> + Sync,
+{
+    struct DepState {
+        /// Units whose last dependency has finished, in discovery
+        /// order (seeded in index order).
+        ready: VecDeque<usize>,
+        /// Remaining unfinished dependencies per unit.
+        pending: Vec<usize>,
+        /// Simulated duration per completed unit.
+        durs: Vec<Duration>,
+        /// Units that finished (successfully or not).
+        completed: usize,
+        /// Units currently executing on a worker.
+        inflight: usize,
+        /// Lowest-indexed failure among the units that ran.
+        failure: Option<(usize, anyhow::Error)>,
+        /// First caught unit panic, re-thrown after the pool drains.
+        panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+    }
+
+    let n = graph.units.len();
+    let pending = graph.in_degrees();
+    let dependents = graph.dependents();
+    let state = Mutex::new(DepState {
+        ready: (0..n).filter(|&j| pending[j] == 0).collect(),
+        pending,
+        durs: vec![Duration::ZERO; n],
+        completed: 0,
+        inflight: 0,
+        failure: None,
+        panic: None,
+    });
+    let cv = Condvar::new();
+    let workers = n.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).max(4));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let j = {
+                    let mut s = state.lock().unwrap();
+                    loop {
+                        if let Some(j) = s.ready.pop_front() {
+                            s.inflight += 1;
+                            break j;
+                        }
+                        if s.inflight == 0 {
+                            // Quiescent: nothing ready, nothing in
+                            // flight. Either every unit completed, or
+                            // the remainder sits behind a failure or a
+                            // panic. Dependencies always point
+                            // backwards, so anything else is a
+                            // scheduler bug — surfaced as an error,
+                            // never a silent hang.
+                            if s.completed < n && s.failure.is_none() && s.panic.is_none() {
+                                s.failure = Some((
+                                    usize::MAX,
+                                    anyhow::anyhow!(
+                                        "dataflow scheduler stalled in '{name}' \
+                                         (internal invariant violated)"
+                                    ),
+                                ));
+                            }
+                            cv.notify_all();
+                            return;
+                        }
+                        s = cv.wait(s).unwrap();
+                    }
+                };
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_unit(j)
+                }));
+                let mut s = state.lock().unwrap();
+                s.inflight -= 1;
+                s.completed += 1;
+                match result {
+                    Ok(Ok(d)) => {
+                        s.durs[j] = d;
+                        for &k in &dependents[j] {
+                            s.pending[k] -= 1;
+                            if s.pending[k] == 0 {
+                                s.ready.push_back(k);
+                            }
+                        }
+                    }
+                    Ok(Err(e)) => keep_lowest_failure(&mut s.failure, j, e),
+                    Err(p) => {
+                        if s.panic.is_none() {
+                            s.panic = Some(p);
+                        }
+                    }
+                }
+                cv.notify_all();
+            });
+        }
+    });
+    let state = state.into_inner().unwrap();
+    if let Some(p) = state.panic {
+        std::panic::resume_unwind(p);
+    }
+    (state.durs, state.failure)
+}
+
+/// Wavefront-barrier dispatch (the A/B baseline, `[engine] dispatch =
+/// "wavefront"`): all currently-ready units run as one scoped-thread
+/// wave, and the next wave is scheduled only when the whole wave has
+/// finished. A unit whose dependencies complete mid-wave idles until
+/// the barrier, so live wall-clock systematically lags the charged
+/// critical path on staircase DAGs — exactly what fig13h measures.
+/// Kept verbatim from the PR-4 dispatcher (including its
+/// stop-dispatching-after-a-failing-wave semantics).
+fn dispatch_wavefront<F>(graph: &dag::Dag, run_unit: &F, name: &str) -> DispatchOutcome
+where
+    F: Fn(usize) -> Result<Duration> + Sync,
+{
+    let n = graph.units.len();
+    let mut durs = vec![Duration::ZERO; n];
+    let mut done = vec![false; n];
+    let mut remaining = n;
+    let mut failure: Option<(usize, anyhow::Error)> = None;
+    while remaining > 0 && failure.is_none() {
+        let ready: Vec<usize> = (0..n)
+            .filter(|&j| !done[j] && graph.deps[j].iter().all(|&i| done[i]))
+            .collect();
+        // Dependencies always point backwards, so the smallest
+        // unfinished unit is always ready: progress is guaranteed.
+        // Guarded anyway — a scheduler bug must be an error, not a
+        // silent infinite loop.
+        if ready.is_empty() {
+            failure = Some((
+                usize::MAX,
+                anyhow::anyhow!(
+                    "dataflow scheduler stalled in '{name}' (internal invariant violated)"
+                ),
+            ));
+            break;
+        }
+        // A single-unit wave (fully dependent chains, one-child
+        // sequences) runs inline: no thread spawn for a schedule
+        // with nothing to overlap.
+        let results: Vec<(usize, Result<Duration>)> = if ready.len() == 1 {
+            vec![(ready[0], run_unit(ready[0]))]
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = ready
+                    .iter()
+                    .map(|&j| scope.spawn(move || run_unit(j)))
+                    .collect();
+                ready
+                    .iter()
+                    .copied()
+                    .zip(handles.into_iter().map(|h| match h.join() {
+                        Ok(r) => r,
+                        Err(p) => std::panic::resume_unwind(p),
+                    }))
+                    .collect()
+            })
+        };
+        for (j, r) in results {
+            done[j] = true;
+            remaining -= 1;
+            match r {
+                Ok(d) => durs[j] = d,
+                Err(e) => keep_lowest_failure(&mut failure, j, e),
+            }
+        }
+    }
+    (durs, failure)
 }
 
 #[cfg(test)]
@@ -1161,6 +1438,47 @@ mod tests {
         // Sequential runs emit in program order: seqs are 0..n.
         let seq = engine().run(&wf).unwrap();
         assert_eq!(seq.seqs, (0..seq.events.len() as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dataflow_local_trace_payloads_are_canonical_and_byte_stable() {
+        // Three independent steps execute concurrently, so the shared
+        // round-robin cursor would hand out node names in arrival
+        // order; the canonical program-order renaming makes the trace
+        // byte-stable across runs *including payloads*, and equal to
+        // the fresh-platform sequential trace.
+        let wf = xaml::parse(INDEPENDENT_SLOW).unwrap();
+        let seq = engine().run(&wf).unwrap();
+        let df1 = engine().with_dataflow(true).run(&wf).unwrap();
+        let df2 = engine().with_dataflow(true).run(&wf).unwrap();
+        assert_eq!(df1.events, df2.events, "dataflow payloads must be byte-stable");
+        assert_eq!(df1.events, seq.events, "canonical names match the sequential trace");
+        let nodes: Vec<&str> = df1
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::ActivityStarted { node, .. } => Some(node.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nodes, vec!["local-0", "local-1", "local-2"]);
+    }
+
+    #[test]
+    fn wavefront_baseline_matches_dependency_dispatch() {
+        // Both dispatchers produce the same lines, events and charged
+        // critical path — they differ only in real wall-clock overlap.
+        let wf = xaml::parse(INDEPENDENT_SLOW).unwrap();
+        let dep = engine().with_dataflow(true).run(&wf).unwrap();
+        let wave = engine()
+            .with_dataflow(true)
+            .with_dispatch(DataflowDispatch::Wavefront)
+            .run(&wf)
+            .unwrap();
+        assert_eq!(wave.sim_time, dep.sim_time);
+        assert_eq!(wave.sim_time, Duration::from_millis(100));
+        assert_eq!(wave.lines, dep.lines);
+        assert_eq!(wave.events, dep.events);
     }
 
     #[test]

@@ -23,12 +23,15 @@
 //! Paper contributions: [`workflow`] (§3.1–3.2, plus the dependence
 //! DAG in `workflow::dag`), [`partitioner`] (§3.1, plus offload
 //! batching — runs of consecutive remotable steps fuse into one
-//! migration point), [`engine`] (§3.3, with offloaded subtrees pinned
+//! migration point; dataflow-aware batching fuses only *dependent*
+//! runs), [`engine`] (§3.3, with offloaded subtrees pinned
 //! to the scheduler-leased VM and an opt-in dataflow mode that
-//! schedules sequence siblings as DAG wavefronts with concurrent
-//! offloads), [`migration`] (§3.3, with an EWMA cost model that
-//! decays on staleness, multi-step requests, queue-aware admission
-//! control and concurrency-safe budget reservations), [`mdss`]
+//! dispatches sequence siblings the instant their dependencies
+//! finish, with concurrent offloads and a wavefront-barrier A/B
+//! baseline), [`migration`] (§3.3, with an EWMA cost model that
+//! re-probes on staleness, multi-step requests, queue-aware admission
+//! control, concurrency-safe budget reservations and serialized
+//! estimate-less admissions), [`mdss`]
 //! (§3.4), [`cloud`] (§4 testbed, generalized to heterogeneous cloud
 //! tiers), [`at`] (§4 application).
 //!

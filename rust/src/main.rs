@@ -35,7 +35,7 @@ emerald — scientific workflows with cloud offloading (Qian 2017 reproduction)
 
 USAGE:
   emerald validate <workflow.xml>
-  emerald partition <workflow.xml> [--out <file>] [--batch]
+  emerald partition <workflow.xml> [--out <file>] [--batch] [--dataflow]
   emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--policy mdss|bundle] [--tcp <addr>]
   emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--alpha0 X]
   emerald serve
@@ -67,6 +67,8 @@ fn policy_of(args: &Args) -> Result<DataPolicy> {
 }
 
 /// `--platform <file>`: load a ConfigFile (empty = all defaults).
+/// Commands load it once and thread it through `partition_opts`,
+/// `services_of` and `build_engine`.
 fn config_of(args: &Args) -> Result<emerald::cli::ConfigFile> {
     match args.options.get("platform") {
         Some(path) => emerald::cli::ConfigFile::load(path),
@@ -75,15 +77,21 @@ fn config_of(args: &Args) -> Result<emerald::cli::ConfigFile> {
 }
 
 /// Build the platform + services from the config file.
-fn services_of(args: &Args, runtime: Option<Arc<Runtime>>) -> Result<Arc<Services>> {
-    let cfg = config_of(args)?;
+fn services_of(
+    cfg: &emerald::cli::ConfigFile,
+    runtime: Option<Arc<Runtime>>,
+) -> Result<Arc<Services>> {
     let platform = Platform::new(cfg.platform()?)?;
     Ok(Services::custom(runtime, platform, cfg.codec()?))
 }
 
-/// Partitioner options from the command line.
-fn partition_opts(args: &Args) -> PartitionOptions {
-    PartitionOptions { batch: args.flag("batch") }
+/// Partitioner options from the command line (and the `[engine]`
+/// config section: when the run will execute under dataflow mode,
+/// batching fuses only dependent runs so independent offload units
+/// keep their concurrency).
+fn partition_opts(args: &Args, cfg: &emerald::cli::ConfigFile) -> Result<PartitionOptions> {
+    let dataflow = cfg.engine()?.dataflow || args.flag("dataflow");
+    Ok(PartitionOptions { batch: args.flag("batch"), dataflow })
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
@@ -100,7 +108,8 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
 fn cmd_partition(args: &Args) -> Result<()> {
     let wf = load_workflow(args)?;
-    let (out, report) = partitioner::partition_with(&wf, partition_opts(args))?;
+    let cfg = config_of(args)?;
+    let (out, report) = partitioner::partition_with(&wf, partition_opts(args, &cfg)?)?;
     let xml = xaml::to_xml(&out);
     match args.options.get("out") {
         Some(path) => {
@@ -115,13 +124,21 @@ fn cmd_partition(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_engine(args: &Args, services: Arc<Services>, reg: Arc<ActivityRegistry>) -> Result<Engine> {
-    let cfg = config_of(args)?;
+fn build_engine(
+    args: &Args,
+    cfg: &emerald::cli::ConfigFile,
+    services: Arc<Services>,
+    reg: Arc<ActivityRegistry>,
+) -> Result<Engine> {
     // `--dataflow` or `[engine] dataflow = true` turns on the
-    // dependence-DAG wavefront scheduler; default is the sequential
-    // tree-walk (the A/B baseline).
+    // dependence-DAG scheduler (dependency-driven dispatch by
+    // default; `[engine] dispatch = "wavefront"` selects the barrier
+    // baseline); default is the sequential tree-walk (the A/B
+    // baseline).
+    let engine_cfg = cfg.engine()?;
     let engine = Engine::new(reg.clone(), services.clone())
-        .with_dataflow(cfg.engine()?.dataflow || args.flag("dataflow"));
+        .with_dataflow(engine_cfg.dataflow || args.flag("dataflow"))
+        .with_dispatch(engine_cfg.dispatch);
     if !args.flag("offload") {
         return Ok(engine);
     }
@@ -143,7 +160,8 @@ fn build_engine(args: &Args, services: Arc<Services>, reg: Arc<ActivityRegistry>
 
 fn cmd_run(args: &Args) -> Result<()> {
     let wf = load_workflow(args)?;
-    let (partitioned, prep) = partitioner::partition_with(&wf, partition_opts(args))?;
+    let cfg = config_of(args)?;
+    let (partitioned, prep) = partitioner::partition_with(&wf, partition_opts(args, &cfg)?)?;
     println!(
         "partitioned: {} migration point(s), {} fused batch(es)",
         prep.migration_points, prep.batches
@@ -152,8 +170,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let reg = registry_with_at();
     // Runtime is optional: pure-coordination workflows don't need it.
     let runtime = Runtime::new(artifact_dir()).ok().map(Arc::new);
-    let services = services_of(args, runtime)?;
-    let engine = build_engine(args, services.clone(), reg)?.verbose();
+    let services = services_of(&cfg, runtime)?;
+    let engine = build_engine(args, &cfg, services.clone(), reg)?.verbose();
     let report = engine.run(&partitioned)?;
     println!(
         "done: sim_time={:.3}s wall={:.3}s offloads={} spend={:.3}",
@@ -178,11 +196,12 @@ fn cmd_at(args: &Args) -> Result<()> {
     cfg.iterations = args.opt_parse("iters", 3)?;
     cfg.alpha0 = args.opt_parse("alpha0", 0.3)?;
     let wf = at::inversion_workflow(&cfg)?;
-    let (partitioned, _) = partitioner::partition_with(&wf, partition_opts(args))?;
+    let platform_cfg = config_of(args)?;
+    let (partitioned, _) = partitioner::partition_with(&wf, partition_opts(args, &platform_cfg)?)?;
 
     let runtime = Arc::new(Runtime::new(artifact_dir())?);
-    let services = services_of(args, Some(runtime))?;
-    let engine = build_engine(args, services.clone(), registry_with_at())?.verbose();
+    let services = services_of(&platform_cfg, Some(runtime))?;
+    let engine = build_engine(args, &platform_cfg, services.clone(), registry_with_at())?.verbose();
     let report = engine.run(&partitioned)?;
     println!(
         "done: sim_time={:.3}s offloads={} spend={:.3}",

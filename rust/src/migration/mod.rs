@@ -47,9 +47,10 @@
 //! is set — declines any offload whose projected spend would push the
 //! run past its budget (`budget = 0` disables offloading entirely; a
 //! projected spend that lands exactly on the budget is still
-//! admitted). Estimate-less first sightings project zero spend, so one
-//! offload may overshoot a partially-consumed budget by one
-//! observation; from then on the ledger gates exactly. A **steal
+//! admitted). Estimate-less first sightings project zero spend and are
+//! serialized (one in flight at a time, see below), so a budgeted run
+//! can overshoot by at most one unknown charge in total — the
+//! irreducible cost of learning a price by observing it. A **steal
 //! pass** ([`ManagerConfig::steal`], [`crate::scheduler::Lease::try_steal`])
 //! runs between leasing and packaging: a lease queued behind in-flight
 //! work re-pins to an idle VM that would finish strictly sooner,
@@ -67,23 +68,29 @@
 //! and the budget gate reserves each admitted offload's projected
 //! spend in a shared ledger until the offload commits or fails, so
 //! concurrent siblings with known estimates cannot collectively
-//! overshoot the budget. Estimate-less first sightings still project
-//! zero, so a *burst* of K never-before-seen steps admitted
-//! concurrently may overshoot by up to K offloads — one unknown
-//! charge per step name, after which the ledger gates exactly. All
+//! overshoot the budget. Estimate-less first sightings project zero,
+//! so a budgeted run **serializes** them ([`FirstSightGate`]): at most
+//! one unknown-cost offload is in flight at a time, its real spend is
+//! committed before the next is judged, and a burst of K
+//! never-before-seen steps can therefore overshoot by at most one
+//! offload in total (closing PR 4's once-per-step-name window; the
+//! dependency-driven dispatcher makes such bursts the normal case,
+//! not a corner). Known-cost offloads are never serialized. All
 //! statistics continue to commit through the single
 //! `MigrationStats::absorb` point.
 //!
-//! **Staleness decay** ([`ManagerConfig::decay_after`]): a cost record
-//! that has gone `n` offload attempts without a fresh observation —
-//! which is exactly what happens once the gate starts declining a
-//! step — decays to uninformed: the gates stop trusting it and the
-//! next attempt re-observes from scratch, so a stale estimate cannot
-//! gate admission forever. Uninformed means uninformed everywhere: a
-//! decayed step's next offload projects zero spend again, re-opening
-//! the one-shot estimate-less budget window for that step name (by
-//! design — a decayed estimate is no more trustworthy for money than
-//! for time).
+//! **Staleness re-probing** ([`ManagerConfig::decay_after`]): a losing
+//! cost verdict that has gone `n` offload attempts without a fresh
+//! observation — which is exactly what happens once the gate starts
+//! declining a step — is no longer trusted blindly: the gate keeps
+//! declining but admits one *probe* offload per window, whose round
+//! trip blends into the EWMA (history is refreshed, never discarded),
+//! so a stale estimate cannot gate a step forever and a single noisy
+//! observation cannot erase a long history either. Estimates keep
+//! serving the admission and budget gates while stale — in particular
+//! a stale step still projects real spend, so decay does not re-open
+//! the estimate-less budget window (an improvement over the PR-4
+//! cliff, which forgot everything at once).
 
 pub mod protocol;
 pub mod security;
@@ -94,7 +101,7 @@ pub use security::SigningKey;
 pub use transport::{serve_tcp, InProcTransport, TcpTransport, Transport};
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -175,16 +182,17 @@ pub struct ManagerConfig {
     /// default (placement then exactly matches the lease the policy
     /// granted).
     pub steal: bool,
-    /// Cost-model staleness decay (`[migration] decay_after`): a cost
-    /// record that has gone this many offload *attempts* (counting
-    /// attempts for any step) without observing a round trip is
-    /// treated as uninformed — the `cost` gate stops declining on it,
-    /// the admission and budget gates stop trusting its estimates,
-    /// and the next observation re-seeds the averages like a first
-    /// sighting. A decayed step's next offload therefore projects
-    /// zero spend and re-opens the estimate-less budget-overshoot
-    /// window for that step name. `None` (the default) keeps records
-    /// live forever.
+    /// Cost-model staleness re-probe rate (`[migration] decay_after`):
+    /// once a losing `cost`-gate verdict has gone this many offload
+    /// *attempts* (counting attempts for any step) without observing a
+    /// round trip, the gate admits one **probe** offload instead of
+    /// declining — the probe's observation blends into the EWMA
+    /// (history is refreshed, not discarded), and if remote still
+    /// loses the gate resumes declining until the next window opens
+    /// another `decay_after` attempts later. Estimates keep serving
+    /// the admission and budget gates while stale, so a stale step
+    /// still projects real spend. `None` (the default) keeps verdicts
+    /// live forever — a declined step is then never re-probed.
     pub decay_after: Option<u64>,
 }
 
@@ -242,9 +250,9 @@ pub struct MigrationStats {
     /// this ledger that additionally reserves the projected spend of
     /// in-flight admitted offloads, so concurrent offloads with known
     /// estimates cannot collectively overshoot the budget.
-    /// Estimate-less first sightings project zero, so concurrent
-    /// never-before-seen steps may each overshoot once (once per step
-    /// name; exact from then on).
+    /// Estimate-less first sightings project zero but are serialized
+    /// (one in flight at a time), so a budgeted run overshoots by at
+    /// most one unknown charge in total; exact from then on.
     pub spend: f64,
     /// The subset of `declined` due to the budget gate (projected
     /// spend past [`ManagerConfig::budget`]).
@@ -296,8 +304,10 @@ struct CostRecord {
     work_us: f64,
     /// Observations folded into the averages.
     samples: u64,
-    /// Staleness-clock value at the last observation (see
-    /// [`CostHistory::clock`] and [`ManagerConfig::decay_after`]).
+    /// Staleness-clock value at the last time the record was
+    /// refreshed: an observation, or a probe the cost gate admitted
+    /// after staleness (taking the probe consumes the window even if
+    /// it never completes — see [`ManagerConfig::decay_after`]).
     last_tick: u64,
 }
 
@@ -332,8 +342,9 @@ impl CostRecord {
 
 /// The cost model's shared state: per-step records plus the staleness
 /// clock — `clock` advances once per offload attempt (any step), and
-/// with [`ManagerConfig::decay_after`] = `n` a record that has not
-/// observed a round trip for `n` ticks is treated as uninformed.
+/// with [`ManagerConfig::decay_after`] = `n` a losing verdict that has
+/// not been refreshed for more than `n` ticks admits one probe offload
+/// instead of declining.
 #[derive(Debug, Default)]
 struct CostHistory {
     clock: u64,
@@ -405,6 +416,46 @@ impl Drop for SpendReservation<'_> {
     }
 }
 
+/// Serializes estimate-less **first sightings** while a budget is
+/// configured. An offload with no cost history projects zero spend, so
+/// K of them racing the budget gate used to each be admitted against
+/// the same remaining budget — up to K unknown charges past the cap
+/// (the PR-4 documented overshoot). With the gate, at most one
+/// unknown-cost offload is in flight at a time: it commits its real
+/// spend before the next one is judged, so same-name siblings inherit
+/// its estimates and different-name siblings are declined the moment
+/// the committed ledger reaches the budget. The overshoot window
+/// shrinks from "once per step name" to "at most once per run" — the
+/// irreducible minimum, since an unknown cost can only be learned by
+/// observing it. Unused (and cost-free) when no budget is set.
+struct FirstSightGate {
+    busy: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// RAII hold on the [`FirstSightGate`]: released — with a wake-up for
+/// waiting siblings — on every path out of the offload (commit,
+/// decline and error alike), *after* the spend has been settled, so a
+/// woken sibling always sees the updated ledger and estimates.
+struct FirstSightPass<'a> {
+    gate: Option<&'a FirstSightGate>,
+}
+
+impl FirstSightPass<'_> {
+    fn none() -> Self {
+        Self { gate: None }
+    }
+}
+
+impl Drop for FirstSightPass<'_> {
+    fn drop(&mut self) {
+        if let Some(g) = self.gate {
+            *g.busy.lock().unwrap() = false;
+            g.cv.notify_all();
+        }
+    }
+}
+
 /// Local-side migration manager.
 pub struct MigrationManager {
     services: Arc<Services>,
@@ -413,6 +464,7 @@ pub struct MigrationManager {
     stats: Mutex<MigrationStats>,
     history: Mutex<CostHistory>,
     ledger: Mutex<SpendLedger>,
+    first_sight: FirstSightGate,
 }
 
 impl MigrationManager {
@@ -438,6 +490,7 @@ impl MigrationManager {
             stats: Mutex::new(Default::default()),
             history: Mutex::new(Default::default()),
             ledger: Mutex::new(Default::default()),
+            first_sight: FirstSightGate { busy: Mutex::new(false), cv: Condvar::new() },
         })
     }
 
@@ -532,57 +585,65 @@ impl MigrationManager {
 }
 
 impl MigrationManager {
-    /// The step's cost record, unless staleness decay has expired it:
-    /// with [`ManagerConfig::decay_after`] = `n`, a record that has
-    /// not observed a round trip for `n` offload attempts is treated
-    /// exactly like an absent one — the gates fall back to
-    /// first-sighting behaviour and the next observation re-seeds it.
-    fn live<'h>(&self, history: &'h CostHistory, step: &Step) -> Option<&'h CostRecord> {
-        let rec = history.records.get(&step.display_name)?;
-        if let Some(n) = self.config.decay_after {
-            // The clock already counts the *current* attempt, so the
-            // number of intervening attempts without an observation is
-            // staleness - 1: expire strictly past `n`, or
-            // `decay_after = 1` would expire every record on the very
-            // next attempt and silently disable the gates.
-            if history.clock.saturating_sub(rec.last_tick) > n {
-                return None;
-            }
-        }
-        Some(rec)
-    }
-
     /// Cost-model gate: should this step be offloaded at all? Compares
     /// the EWMA of observed round trips against the EWMA local
     /// estimate.
+    ///
+    /// **Staleness re-probing** ([`ManagerConfig::decay_after`] = `n`):
+    /// a losing verdict that has gone more than `n` offload attempts
+    /// without a fresh observation keeps gating, but admits one
+    /// *probe* offload — the probe's round trip refreshes the EWMA
+    /// (blended into the history, never discarding it), and if remote
+    /// still loses the gate resumes declining until the next window
+    /// `n` attempts later. Taking the probe touches the record, so
+    /// concurrent stale attempts cannot all probe at once, and a probe
+    /// that never observes a round trip (declined downstream, or
+    /// failed) still closes the window it consumed.
     fn should_offload(&self, step: &Step) -> Option<String> {
         if self.config.decision == Decision::Always {
             return None;
         }
-        let history = self.history.lock().unwrap();
-        match self.live(&history, step) {
-            Some(rec) if rec.samples > 0 && rec.remote_obs_us >= rec.local_est_us => {
-                Some(format!(
-                    "cost model: remote {:.0}ms >= local {:.0}ms for '{}' (ewma over {} run(s))",
-                    rec.remote_obs_us / 1e3,
-                    rec.local_est_us / 1e3,
-                    step.display_name,
-                    rec.samples
-                ))
+        let mut history = self.history.lock().unwrap();
+        let clock = history.clock;
+        let Some(rec) = history.records.get_mut(&step.display_name) else {
+            return None;
+        };
+        if rec.samples > 0 && rec.remote_obs_us >= rec.local_est_us {
+            if let Some(n) = self.config.decay_after {
+                // The clock already counts the *current* attempt, so
+                // the number of intervening attempts without an
+                // observation is staleness - 1: probe strictly past
+                // `n`, or `decay_after = 1` would re-probe on the very
+                // next attempt and effectively disable the gate.
+                if clock.saturating_sub(rec.last_tick) > n {
+                    rec.last_tick = clock;
+                    return None;
+                }
             }
-            _ => None,
+            return Some(format!(
+                "cost model: remote {:.0}ms >= local {:.0}ms for '{}' (ewma over {} run(s))",
+                rec.remote_obs_us / 1e3,
+                rec.local_est_us / 1e3,
+                step.display_name,
+                rec.samples
+            ));
         }
+        None
     }
 
     /// One locked history lookup serving the whole offload path:
     /// the reference-work estimate (the scheduler's
     /// earliest-finish-time placement weight) and the
     /// `(local estimate, expected remote round trip)` pair the
-    /// admission gate compares. `(None, None)` before any observation
-    /// — or after the record decayed to uninformed.
+    /// admission gate compares. `(None, None)` before any observation.
+    /// A stale record (see [`ManagerConfig::decay_after`]) still
+    /// serves its estimates: an aged EWMA is a weaker signal, not a
+    /// missing one — in particular a stale step's projected spend
+    /// stays real money, so decay no longer re-opens the estimate-less
+    /// budget window.
     fn estimates(&self, step: &Step) -> (Option<Duration>, Option<(Duration, Duration)>) {
         let history = self.history.lock().unwrap();
-        match self.live(&history, step) {
+        match history.records.get(&step.display_name) {
             Some(rec) => (
                 rec.work_estimate(),
                 rec.remote_estimate().map(|remote| {
@@ -593,14 +654,48 @@ impl MigrationManager {
         }
     }
 
+    /// The estimates plus, when needed, a hold on the first-sighting
+    /// gate: with a budget configured, an offload with no cost history
+    /// waits here until no other estimate-less offload is in flight,
+    /// then re-reads the estimates under the gate — a sibling that
+    /// just settled may have seeded the record, in which case this is
+    /// no longer a first sighting and the gate is released
+    /// immediately. The returned pass is held for the whole round trip
+    /// and released on every exit path. Budget-less runs (and steps
+    /// with history) skip the gate entirely.
+    fn first_sighting_pass(
+        &self,
+        step: &Step,
+    ) -> (Option<Duration>, Option<(Duration, Duration)>, FirstSightPass<'_>) {
+        let (work, cost) = self.estimates(step);
+        if self.config.budget.is_none() || work.is_some() {
+            return (work, cost, FirstSightPass::none());
+        }
+        {
+            let mut busy = self.first_sight.busy.lock().unwrap();
+            while *busy {
+                busy = self.first_sight.cv.wait(busy).unwrap();
+            }
+            *busy = true;
+        }
+        let pass = FirstSightPass { gate: Some(&self.first_sight) };
+        let (work, cost) = self.estimates(step);
+        if work.is_some() {
+            drop(pass); // no longer a first sighting: release + wake
+            return (work, cost, FirstSightPass::none());
+        }
+        (work, cost, pass)
+    }
+
     /// Fold an observed round trip into the cost model.
     /// `remote_compute` is simulated time on the leased node (speed
     /// `node_speed`), so the reference work is `remote_compute ×
     /// node_speed` and the local estimate divides that by the local
     /// tier's speed — the `CostBased` gate stays unbiased when
     /// `local_speed != 1.0` (the old formula silently assumed a
-    /// speed-1.0 local cluster). A record that decayed to uninformed
-    /// is re-seeded instead of blended with its ancient history.
+    /// speed-1.0 local cluster). Observations always blend into the
+    /// existing EWMA — a probe after staleness refreshes the history
+    /// instead of discarding it.
     fn record_costs(
         &self,
         step: &Step,
@@ -614,12 +709,7 @@ impl MigrationManager {
         );
         let mut history = self.history.lock().unwrap();
         let clock = history.clock;
-        let stale = self.live(&history, step).is_none()
-            && history.records.contains_key(&step.display_name);
         let rec = history.records.entry(step.display_name.clone()).or_default();
-        if stale {
-            *rec = CostRecord::default();
-        }
         rec.observe(local_est, remote_total, work);
         rec.last_tick = clock;
     }
@@ -673,6 +763,18 @@ impl MigrationManager {
             return Ok(OffloadVerdict::Declined { reason });
         }
 
+        // 0c-pre. Estimate-less first sightings project zero spend, so
+        //     with a budget on, K of them racing the gate could each
+        //     be admitted against the same remaining budget. The
+        //     first-sighting gate serializes them: at most one
+        //     unknown-cost offload is in flight at a time, it settles
+        //     its real spend before the next is judged, and the pass
+        //     (held through the whole round trip, released on every
+        //     exit) wakes the waiters into an informed world — either
+        //     fresh estimates for their step name, or a committed
+        //     ledger at/past the budget. Skipped without a budget.
+        let (work_est, cost_est, _first_sight) = self.first_sighting_pass(step);
+
         // 0c/0d. Budget and admission gates share ONE scheduler
         //     critical section: when either gate is on, the manager
         //     previews *and takes* the lease atomically
@@ -682,7 +784,6 @@ impl MigrationManager {
         //     simply drops the lease, releasing the slot. Skipped
         //     entirely when neither gate is on: the probe costs a
         //     slots lock plus an O(pool) policy scan per offload.
-        let (work_est, cost_est) = self.estimates(step);
         let mut reservation = SpendReservation::none();
         let early_lease = if self.config.budget.is_some() || self.config.admission {
             let (preview, lease) = self
@@ -701,8 +802,10 @@ impl MigrationManager {
             //     this offload's own reservation is released when it
             //     commits, declines or fails. Exactly reaching the
             //     budget is allowed; estimate-less first sightings
-            //     project zero and may overshoot once per step name
-            //     (the module doc spells this out).
+            //     project zero but arrive serialized through the
+            //     first-sighting gate above, so at most one unknown
+            //     charge can cross the boundary per run (the module
+            //     doc spells this out).
             if let Some(budget) = self.config.budget {
                 let projected = work_est.map_or(0.0, |w| preview.price * w.as_secs_f64());
                 let mut ledger = self.ledger.lock().unwrap();
@@ -1295,7 +1398,7 @@ mod tests {
         let (engine2, mgr2) = setup(DataPolicy::Mdss);
         let (fused, rep) = partitioner::partition_with(
             &chain_wf(),
-            partitioner::PartitionOptions { batch: true },
+            partitioner::PartitionOptions { batch: true, ..Default::default() },
         )
         .unwrap();
         assert_eq!(rep.migration_points, 1);
@@ -1314,11 +1417,11 @@ mod tests {
     }
 
     #[test]
-    fn cost_records_decay_to_uninformed_after_staleness() {
+    fn stale_cost_verdicts_reprobe_without_discarding_the_ewma() {
         // WAN-dominated step on a high-latency link: the first
         // observation teaches the cost gate that remote loses, and
-        // without decay that verdict is frozen forever (no new samples
-        // ever arrive to undo it).
+        // without re-probing that verdict is frozen forever (no new
+        // samples ever arrive to undo it).
         let run_n = |decay: Option<u64>, runs: usize| {
             let platform = Platform::new(crate::cloud::PlatformConfig {
                 wan_latency: Duration::from_millis(200),
@@ -1346,22 +1449,29 @@ mod tests {
             for _ in 0..runs {
                 engine.run(&part).unwrap();
             }
-            mgr.stats()
+            let samples = mgr.history.lock().unwrap().records["tiny"].samples;
+            (mgr.stats(), samples)
         };
-        let frozen = run_n(None, 4);
+        let (frozen, frozen_samples) = run_n(None, 4);
         assert_eq!(
             (frozen.offloads, frozen.declined),
             (1, 3),
-            "without decay the stale estimate gates forever"
+            "without re-probing the stale estimate gates forever"
         );
-        // decay_after = 2: after two intervening attempts without an
-        // observation (runs 2 and 3, both declined) the record
-        // expires, so run 4 offloads again and re-seeds the averages.
-        let decayed = run_n(Some(2), 4);
+        assert_eq!(frozen_samples, 1);
+        // decay_after = 2: runs 2 and 3 decline (staleness 1, then 2);
+        // run 4 crosses the window (staleness 3 > 2), so the gate
+        // admits a probe — the step is re-observed and the fresh
+        // sample BLENDS into the record instead of re-seeding it.
+        let (probed, probed_samples) = run_n(Some(2), 4);
         assert_eq!(
-            (decayed.offloads, decayed.declined),
+            (probed.offloads, probed.declined),
             (2, 2),
-            "decay must let the step be re-observed"
+            "a stale decline must re-probe"
+        );
+        assert_eq!(
+            probed_samples, 2,
+            "the probe's observation must extend the EWMA history, not restart it"
         );
     }
 

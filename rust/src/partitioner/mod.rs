@@ -31,10 +31,31 @@
 //! sequence offloads exactly once, with one suspend/resume pair.
 //! Fusion never crosses a non-remotable step, a scope boundary, or
 //! `Parallel`/`If`/`While` branch boundaries.
+//!
+//! ## Dataflow-aware batching ([`PartitionOptions::dataflow`])
+//!
+//! Whole-run fusion is the right call for the sequential engine —
+//! every round trip it removes is pure WAN savings. Under the
+//! dataflow engine it can *cost* time: fusing two **independent**
+//! remotable siblings into one offload unit serializes work the
+//! dependence DAG would have offloaded to two VMs concurrently. With
+//! `dataflow` set alongside `batch`, the partitioner therefore fuses
+//! only **dependent** sub-runs ([`crate::workflow::dag::dependent_runs`]):
+//! walking each maximal run of consecutive remotable siblings in
+//! program order, a step joins the open sub-run only when it conflicts
+//! (write→read / write→write / read→write) with an earlier member of
+//! that sub-run. A dependent chain has no parallelism to lose — its
+//! members could never overlap — so fusing it is all savings; steps
+//! independent of the open sub-run stay separate offload units the
+//! DAG can run concurrently. Steps are never reordered. When a
+//! member's expressions defeat the analysis, the run falls back to
+//! whole-run fusion, which is always legal (and the dataflow engine
+//! falls back to the sequential walk on the same workflows, so no
+//! parallelism is lost that the engine could have exploited).
 
 use anyhow::Result;
 
-use crate::workflow::{validate, Step, StepKind, Workflow};
+use crate::workflow::{dag, validate, Step, StepKind, Workflow};
 
 /// Partitioning statistics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,6 +79,12 @@ pub struct PartitionOptions {
     /// migration point (see module docs). Off by default: one point
     /// per remotable step, the paper's Figure-5 shape.
     pub batch: bool,
+    /// The workflow will run under the engine's dataflow mode: fuse
+    /// only *dependent* sub-runs, keeping independent remotable
+    /// siblings separate offload units the dependence DAG can run
+    /// concurrently (see "Dataflow-aware batching" in the module
+    /// docs). No effect unless `batch` is also set.
+    pub dataflow: bool,
 }
 
 #[derive(Default)]
@@ -118,15 +145,15 @@ fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
                     // P3 guarantees nothing remotable inside: no recursion.
                     run.push(c);
                     if !opts.batch {
-                        flush_run(&mut run, &mut rebuilt, stats);
+                        flush_run(&mut run, &mut rebuilt, opts, stats);
                     }
                 } else {
-                    flush_run(&mut run, &mut rebuilt, stats);
+                    flush_run(&mut run, &mut rebuilt, opts, stats);
                     rewrite(&mut c, opts, stats);
                     rebuilt.push(c);
                 }
             }
-            flush_run(&mut run, &mut rebuilt, stats);
+            flush_run(&mut run, &mut rebuilt, opts, stats);
             *children = rebuilt;
         }
         StepKind::Parallel(children) => {
@@ -161,10 +188,44 @@ fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
     }
 }
 
-/// Emit the pending run of remotable steps: a single step gets its own
+/// Emit the pending run of remotable steps. Plain batching fuses the
+/// whole run; with `dataflow` also set, the run is first split into
+/// maximal dependent sub-runs ([`dag::dependent_runs`]) and each
+/// sub-run is emitted on its own — independent siblings keep separate
+/// migration points for the dataflow engine to overlap. An
+/// unanalyzable run (an expression the flow analysis cannot parse)
+/// falls back to whole-run fusion, which is legal regardless of
+/// analysis.
+fn flush_run(
+    run: &mut Vec<Step>,
+    out: &mut Vec<Step>,
+    opts: PartitionOptions,
+    stats: &mut RewriteStats,
+) {
+    if opts.dataflow && run.len() >= 2 {
+        let members = std::mem::take(run);
+        match dag::dependent_runs(&members) {
+            Ok(spans) => {
+                let mut iter = members.into_iter();
+                for (_, len) in spans {
+                    let mut chunk: Vec<Step> = iter.by_ref().take(len).collect();
+                    emit_chunk(&mut chunk, out, stats);
+                }
+            }
+            Err(_) => {
+                let mut chunk = members;
+                emit_chunk(&mut chunk, out, stats);
+            }
+        }
+        return;
+    }
+    emit_chunk(run, out, stats);
+}
+
+/// Emit one chunk of remotable steps: a single step gets its own
 /// migration point; two or more fuse into one point behind a synthetic
 /// sequence.
-fn flush_run(run: &mut Vec<Step>, out: &mut Vec<Step>, stats: &mut RewriteStats) {
+fn emit_chunk(run: &mut Vec<Step>, out: &mut Vec<Step>, stats: &mut RewriteStats) {
     match run.len() {
         0 => {}
         1 => {
@@ -217,7 +278,11 @@ mod tests {
     }
 
     fn batched() -> PartitionOptions {
-        PartitionOptions { batch: true }
+        PartitionOptions { batch: true, ..Default::default() }
+    }
+
+    fn dataflow_batched() -> PartitionOptions {
+        PartitionOptions { batch: true, dataflow: true }
     }
 
     #[test]
@@ -321,6 +386,68 @@ mod tests {
         let (_, fused) = partition_with(&w, batched()).unwrap();
         assert_eq!(fused.migration_points, 1);
         assert_eq!(fused.batched_steps, 2);
+    }
+
+    #[test]
+    fn dataflow_batching_fuses_only_dependent_runs() {
+        // a=1 ; b=a (dependent) ; c=9 (independent of both): plain
+        // batching fuses all three; dataflow-aware batching fuses the
+        // a→b chain and leaves c its own offload unit to overlap.
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "a + 1").remotable(),
+            assign("c", "9").remotable(),
+        ]);
+        let (_, plain) = partition_with(&w, batched()).unwrap();
+        assert_eq!((plain.migration_points, plain.batched_steps), (1, 3));
+        let (out, df) = partition_with(&w, dataflow_batched()).unwrap();
+        assert_eq!(df.migration_points, 2, "independent step keeps its own point");
+        assert_eq!((df.batches, df.batched_steps), (1, 2), "only the chain fuses");
+        let kids = out.root.children();
+        assert_eq!(kids[0].kind_name(), "MigrationPoint");
+        assert!(kids[1].display_name.starts_with("batch("), "{}", kids[1].display_name);
+        assert_eq!(kids[2].kind_name(), "MigrationPoint");
+        assert_eq!(kids[3].display_name, "c");
+    }
+
+    #[test]
+    fn dataflow_batching_without_dependence_is_point_per_step() {
+        // A fully independent run degenerates to unbatched shape.
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "2").remotable(),
+            assign("c", "3").remotable(),
+        ]);
+        let (out, report) = partition_with(&w, dataflow_batched()).unwrap();
+        assert_eq!(report.migration_points, 3);
+        assert_eq!(report.batches, 0);
+        let (unbatched_out, unbatched) = partition(&w).unwrap();
+        assert_eq!(unbatched.migration_points, 3);
+        assert_eq!(out, unbatched_out, "no dependence -> identical to plain partitioning");
+    }
+
+    #[test]
+    fn dataflow_batching_fuses_fully_dependent_chains_whole() {
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "a").remotable(),
+            assign("c", "b").remotable(),
+        ]);
+        let (_, report) = partition_with(&w, dataflow_batched()).unwrap();
+        assert_eq!(report.migration_points, 1);
+        assert_eq!(report.batched_steps, 3, "a chain has no parallelism to protect");
+    }
+
+    #[test]
+    fn dataflow_flag_alone_does_not_batch() {
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "a").remotable(),
+        ]);
+        let (_, report) =
+            partition_with(&w, PartitionOptions { batch: false, dataflow: true }).unwrap();
+        assert_eq!(report.migration_points, 2);
+        assert_eq!(report.batches, 0, "dataflow only modulates batching");
     }
 
     #[test]

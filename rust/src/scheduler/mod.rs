@@ -29,7 +29,15 @@
 //!   already active on the chosen node records `position = k`; the
 //!   migration manager charges `position × remote_time` of simulated
 //!   queueing delay, modelling the wait behind in-flight work when
-//!   offloads outnumber nodes.
+//!   offloads outnumber nodes. The ledger is **event-driven** — slots
+//!   are claimed at grant, moved at steal, and released at drop, with
+//!   no notion of a scheduling round — so it is indifferent to *when*
+//!   leases arrive: the engine's dependency-driven dispatcher, which
+//!   trickles leases in as dependencies finish instead of the
+//!   wavefront barrier's synchronized bursts, sees exactly the same
+//!   accounting (audited for the no-barrier world; positions remain
+//!   grant-time snapshots, the documented best-effort stance under
+//!   concurrency).
 //! * **The lease pins the executing node.** [`Lease::node`] and
 //!   [`Lease::speed`] travel with the offload request, and the remote
 //!   engine scales compute on exactly that VM — placement and

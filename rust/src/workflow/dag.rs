@@ -4,13 +4,18 @@
 //! The tree-walk engine executes `Sequence` children strictly one at a
 //! time even when their read/write sets prove them independent, so a
 //! fast cloud tier sits idle while an unrelated local step runs.
-//! Wavefront execution over a dependence DAG is the standard SWfMS
-//! answer (Bux & Leser, "Parallelization in Scientific Workflow
-//! Management Systems"): this module builds that DAG from the same
-//! flow analysis the migration packager uses
+//! Event-driven (dependency-triggered) task dispatch over a dependence
+//! DAG is the standard SWfMS answer (Bux & Leser, "Parallelization in
+//! Scientific Workflow Management Systems"): this module builds that
+//! DAG from the same flow analysis the migration packager uses
 //! ([`crate::workflow::analysis::step_io`]), and the engine's dataflow
-//! mode ([`crate::engine::Engine::with_dataflow`]) dispatches ready
-//! wavefronts onto scoped worker threads.
+//! mode ([`crate::engine::Engine::with_dataflow`]) dispatches each
+//! unit onto a bounded worker pool the instant its last dependency
+//! finishes ([`Dag::in_degrees`] seeds the per-unit completion
+//! counters, [`Dag::dependents`] is the forward view a finishing unit
+//! walks to unblock its dependents). The older wavefront-barrier
+//! schedule is kept as an A/B baseline
+//! ([`crate::engine::DataflowDispatch::Wavefront`]).
 //!
 //! Edges are the three classic hazards between siblings `i < j`:
 //! **write→read** (`j` reads a variable `i` writes), **write→write**
@@ -21,8 +26,8 @@
 //! because their bodies run a data-dependent number of times and cheap
 //! conservatism beats a subtle reordering bug. A `MigrationPoint`
 //! fuses with the step it precedes into a single *offload unit*,
-//! mirroring exactly the sequential engine's pairing, so independent
-//! offload units in the same wavefront take their cloud leases
+//! mirroring exactly the sequential engine's pairing, so offload
+//! units that become ready together take their cloud leases
 //! concurrently.
 
 use std::collections::BTreeSet;
@@ -141,6 +146,64 @@ impl Dag {
     pub fn edge_count(&self) -> usize {
         self.deps.iter().map(Vec::len).sum()
     }
+
+    /// In-degree per unit: how many dependencies must finish before
+    /// the unit may start. This is the initial value of the
+    /// dependency-driven dispatcher's per-unit completion counter —
+    /// units with in-degree 0 seed the ready queue.
+    pub fn in_degrees(&self) -> Vec<usize> {
+        self.deps.iter().map(Vec::len).collect()
+    }
+
+    /// Forward view of [`Dag::deps`]: `dependents()[i]` = indices of
+    /// the units waiting on unit `i` (every entry is strictly greater
+    /// than `i`). The dependency-driven dispatcher walks this list
+    /// when unit `i` finishes, decrementing each dependent's pending
+    /// count and enqueueing the ones that hit zero.
+    pub fn dependents(&self) -> Vec<Vec<usize>> {
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); self.units.len()];
+        for (j, deps) in self.deps.iter().enumerate() {
+            for &i in deps {
+                out[i].push(j);
+            }
+        }
+        out
+    }
+}
+
+/// Split a run of consecutive siblings into maximal **dependent
+/// sub-runs**: walking in program order, a step joins the current
+/// sub-run iff it conflicts (the same three hazards the DAG uses) with
+/// at least one earlier member of that sub-run; otherwise the sub-run
+/// is flushed and the step starts a new one. Steps are never
+/// reordered, so each sub-run is a contiguous chunk — returned as
+/// `(start, len)` pairs covering the whole slice in order.
+///
+/// This is the partitioner's dataflow-aware batching rule: fusing a
+/// dependent sub-run into one offload unit amortizes WAN round trips
+/// over steps that could never overlap anyway, while steps independent
+/// of the current sub-run stay separate units the dataflow engine can
+/// run — and offload — concurrently. Fails when a step's expressions
+/// don't parse (callers fall back to whole-run fusion, which is legal
+/// regardless of analysis).
+pub fn dependent_runs(steps: &[Step]) -> Result<Vec<(usize, usize)>> {
+    let ios: Vec<StepIo> = steps
+        .iter()
+        .map(analysis::step_io)
+        .collect::<Result<_>>()?;
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for j in 1..steps.len() {
+        let dependent = (start..j).any(|i| io_conflicts(&ios[i], &ios[j]));
+        if !dependent {
+            runs.push((start, j - start));
+            start = j;
+        }
+    }
+    if !steps.is_empty() {
+        runs.push((start, steps.len() - start));
+    }
+    Ok(runs)
 }
 
 /// `If`/`While` stay opaque barriers: their bodies execute a
@@ -157,13 +220,17 @@ fn intersects(a: &BTreeSet<String>, b: &BTreeSet<String>) -> bool {
     small.iter().any(|x| large.contains(x))
 }
 
+/// The three classic hazards between an earlier step's footprint `a`
+/// and a later step's footprint `b`.
+fn io_conflicts(a: &StepIo, b: &StepIo) -> bool {
+    intersects(&a.writes, &b.reads) // write -> read
+        || intersects(&a.writes, &b.writes) // write -> write
+        || intersects(&a.reads, &b.writes) // read -> write
+}
+
 /// Must the later sibling `b` wait for `a`?
 fn conflicts(a: &Unit, b: &Unit) -> bool {
-    a.barrier
-        || b.barrier
-        || intersects(&a.io.writes, &b.io.reads) // write -> read
-        || intersects(&a.io.writes, &b.io.writes) // write -> write
-        || intersects(&a.io.reads, &b.io.writes) // read -> write
+    a.barrier || b.barrier || io_conflicts(&a.io, &b.io)
 }
 
 #[cfg(test)]
@@ -245,6 +312,52 @@ mod tests {
     #[test]
     fn bad_expression_fails_the_build() {
         assert!(Dag::build(&[assign("a", "1 +")], false).is_err());
+    }
+
+    #[test]
+    fn dependents_and_in_degrees_mirror_deps() {
+        // a=1 ; b=a ; a=2 ; c=9 — same shape as hazards_create_edges.
+        let children = [
+            assign("a", "1"),
+            assign("b", "a"),
+            assign("a", "2"),
+            assign("c", "9"),
+        ];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.in_degrees(), vec![0, 1, 2, 0]);
+        let forward = dag.dependents();
+        assert_eq!(forward[0], vec![1, 2], "the writer unblocks its reader and overwriter");
+        assert_eq!(forward[1], vec![2]);
+        assert_eq!(forward[2], Vec::<usize>::new());
+        assert_eq!(forward[3], Vec::<usize>::new());
+        // Every edge appears exactly once in each view.
+        let edges: usize = forward.iter().map(Vec::len).sum();
+        assert_eq!(edges, dag.edge_count());
+    }
+
+    #[test]
+    fn dependent_runs_split_at_independence() {
+        // a=1 ; b=a (dependent) ; c=9 (independent) ; d=c (dependent).
+        let steps = [
+            assign("a", "1"),
+            assign("b", "a"),
+            assign("c", "9"),
+            assign("d", "c"),
+        ];
+        let runs = dependent_runs(&steps).unwrap();
+        assert_eq!(runs, vec![(0, 2), (2, 2)]);
+        // A fully independent run never fuses.
+        let indep = [assign("a", "1"), assign("b", "2"), assign("c", "3")];
+        assert_eq!(dependent_runs(&indep).unwrap(), vec![(0, 1), (1, 1), (2, 1)]);
+        // A fully dependent chain is one run.
+        let chain = [assign("a", "1"), assign("a", "a"), assign("b", "a")];
+        assert_eq!(dependent_runs(&chain).unwrap(), vec![(0, 3)]);
+        // Dependence on *any* earlier member of the open run counts,
+        // not just the immediately preceding step.
+        let gap = [assign("a", "1"), assign("b", "a"), assign("c", "a")];
+        assert_eq!(dependent_runs(&gap).unwrap(), vec![(0, 3)]);
+        assert_eq!(dependent_runs(&[]).unwrap(), Vec::<(usize, usize)>::new());
+        assert!(dependent_runs(&[assign("a", "1 +")]).is_err());
     }
 
     #[test]

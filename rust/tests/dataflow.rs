@@ -1,11 +1,16 @@
 //! Dataflow DAG executor — legality and equivalence properties.
 //!
-//! The contract of `[engine] dataflow` (PR 4): generated workflows
-//! executed in dataflow mode must produce identical final variable
-//! stores and `RunReport.lines` to sequential mode (event *sequence
-//! numbers* may differ — they record real interleaving), no schedule
-//! may ever run a reader before its writer, and concurrent offloads
-//! must never overshoot the migration budget.
+//! The contract of `[engine] dataflow`: generated workflows executed
+//! under **either** dataflow dispatcher (dependency-driven, or the
+//! wavefront-barrier baseline) must produce byte-identical
+//! `RunReport.lines` and `RunReport.events` — *including
+//! `ActivityStarted` node payloads* — to sequential mode (event
+//! sequence numbers may differ: they record real interleaving), no
+//! schedule may ever run a reader before its writer, a dependent unit
+//! must start the instant its last dependency finishes (before an
+//! unrelated slow sibling's barrier would have released it), and
+//! concurrent offloads must never overshoot the migration budget —
+//! estimate-less first sightings included.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -13,7 +18,7 @@ use std::time::Duration;
 
 use emerald::cloud::{CloudTier, Platform, PlatformConfig};
 use emerald::engine::activity::need_num;
-use emerald::engine::{ActivityRegistry, Engine, Event, Services};
+use emerald::engine::{ActivityRegistry, DataflowDispatch, Engine, Event, Services};
 use emerald::expr::Value;
 use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
 use emerald::partitioner;
@@ -42,11 +47,28 @@ fn gen_assign(g: &mut Gen, name: String) -> Step {
     Step::new(name, StepKind::Assign { to: g.choose(&VARS).to_string(), value: gen_expr(g) })
 }
 
-/// One random sequence child: assignments (sometimes remotable),
-/// WriteLines, `If` barriers, nested sequences, and no-ops.
+/// A tracked activity invocation: reads one variable, writes one.
+/// Exercises the `ActivityStarted` node payloads the equivalence
+/// property pins down (concurrently-dispatched local activities used
+/// to take arrival-order node names from the shared cursor).
+fn gen_invoke(g: &mut Gen, name: String) -> Step {
+    Step::new(
+        name,
+        StepKind::InvokeActivity {
+            activity: "calc.op".into(),
+            inputs: vec![("x".into(), (*g.choose(&VARS)).to_string())],
+            outputs: vec![("y".into(), g.choose(&VARS).to_string())],
+        },
+    )
+}
+
+/// One random sequence child: assignments and activity invocations
+/// (sometimes remotable), WriteLines, `If` barriers (sometimes
+/// invoking in a branch — the data-dependent activity-count case),
+/// nested sequences, and no-ops.
 fn gen_step(g: &mut Gen, idx: usize) -> Step {
-    match g.usize_in(0..=9) {
-        0..=4 => {
+    match g.usize_in(0..=11) {
+        0..=3 => {
             let s = gen_assign(g, format!("s{idx}"));
             if g.bool() {
                 s.remotable()
@@ -54,12 +76,24 @@ fn gen_step(g: &mut Gen, idx: usize) -> Step {
                 s
             }
         }
-        5 | 6 => Step::new(format!("w{idx}"), StepKind::WriteLine { text: gen_expr(g) }),
-        7 => Step::new(
+        4 | 5 => {
+            let s = gen_invoke(g, format!("a{idx}"));
+            if g.bool() {
+                s.remotable()
+            } else {
+                s
+            }
+        }
+        6 | 7 => Step::new(format!("w{idx}"), StepKind::WriteLine { text: gen_expr(g) }),
+        8 => Step::new(
             format!("if{idx}"),
             StepKind::If {
                 condition: format!("{} % 2 == 0", gen_expr(g)),
-                then_branch: Box::new(gen_assign(g, format!("t{idx}"))),
+                then_branch: Box::new(if g.bool() {
+                    gen_invoke(g, format!("t{idx}"))
+                } else {
+                    gen_assign(g, format!("t{idx}"))
+                }),
                 else_branch: if g.bool() {
                     Some(Box::new(gen_assign(g, format!("e{idx}"))))
                 } else {
@@ -67,11 +101,11 @@ fn gen_step(g: &mut Gen, idx: usize) -> Step {
                 },
             },
         ),
-        8 => Step::new(
+        9 => Step::new(
             format!("seq{idx}"),
             StepKind::Sequence(vec![
                 gen_assign(g, format!("n{idx}a")),
-                gen_assign(g, format!("n{idx}b")),
+                gen_invoke(g, format!("n{idx}b")),
             ]),
         ),
         _ => Step::new(format!("nop{idx}"), StepKind::Nop),
@@ -98,11 +132,22 @@ fn gen_workflow(g: &mut Gen) -> Workflow {
 
 fn quiet_engine(dataflow: bool) -> Engine {
     let services = Services::without_runtime(Platform::paper_testbed());
-    Engine::new(Arc::new(ActivityRegistry::new()), services).with_dataflow(dataflow)
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("calc.op", |_c, inputs| {
+        let x = need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x * 2.0 + 1.0))].into())
+    });
+    Engine::new(Arc::new(reg), services).with_dataflow(dataflow)
 }
 
 #[test]
-fn property_dataflow_matches_sequential_results() {
+fn property_all_dispatchers_match_sequential_results_and_payloads() {
+    // Random workflows through all three schedules: the sequential
+    // tree-walk, the wavefront-barrier baseline, and dependency-driven
+    // dispatch. Lines AND events must be byte-identical — including
+    // the `ActivityStarted` node payloads, which the canonical
+    // program-order naming pins to the fresh-platform sequential
+    // assignment no matter how the concurrent schedule interleaves.
     forall(60, |g: &mut Gen| {
         let wf = gen_workflow(g);
         // Partition so remotable steps get migration points: dataflow
@@ -110,9 +155,21 @@ fn property_dataflow_matches_sequential_results() {
         // handler — but through the same suspend path).
         let (part, _) = partitioner::partition(&wf).unwrap();
         let seq = quiet_engine(false).run(&part).unwrap();
-        let df = quiet_engine(true).run(&part).unwrap();
-        assert_eq!(df.lines, seq.lines, "dataflow must preserve output + final stores");
-        assert_eq!(df.events, seq.events, "program-order traces must match");
+        let dep = quiet_engine(true).run(&part).unwrap();
+        let wave = quiet_engine(true)
+            .with_dispatch(DataflowDispatch::Wavefront)
+            .run(&part)
+            .unwrap();
+        assert_eq!(dep.lines, seq.lines, "dependency dispatch must preserve output");
+        assert_eq!(
+            dep.events, seq.events,
+            "program-order traces must match, payloads included"
+        );
+        assert_eq!(wave.lines, seq.lines, "wavefront baseline must preserve output");
+        assert_eq!(
+            wave.events, seq.events,
+            "wavefront traces must match, payloads included"
+        );
     });
 }
 
@@ -178,6 +235,203 @@ fn property_no_reader_runs_before_its_writer() {
             }
         }
     });
+}
+
+#[test]
+fn dependent_unit_starts_before_unrelated_slow_sibling_finishes() {
+    // The 3-unit staircase: A → C (C reads A's output), B unrelated
+    // and slow in real wall time. Dependency-driven dispatch starts C
+    // the instant A finishes — while B is still asleep — so C's
+    // emission seqs precede B's completion. The wavefront baseline
+    // holds C at the barrier behind B: its seqs follow B's. This is
+    // the live/model divergence the dispatcher closes: the charged
+    // critical path always assumed C starts when A finishes, and now
+    // it actually does.
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="a"/><Variable Name="b"/><Variable Name="c"/>
+             </Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="A" Activity="fast.op" In.x="1" Out.y="a"/>
+               <InvokeActivity DisplayName="B" Activity="slow.wall" In.x="2" Out.y="b"/>
+               <InvokeActivity DisplayName="C" Activity="fast.op" In.x="a" Out.y="c"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let run_with = |dispatch: DataflowDispatch| {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("fast.op", |_c, inputs| {
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        reg.register_fn("slow.wall", |_c, inputs| {
+            let x = need_num(inputs, "x")?;
+            // Real wall time, so the barrier (or its absence) is
+            // observable in the emission order with a wide margin.
+            std::thread::sleep(Duration::from_millis(200));
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        Engine::new(Arc::new(reg), services)
+            .with_dataflow(true)
+            .with_dispatch(dispatch)
+            .run(&wf)
+            .unwrap()
+    };
+    let dep = run_with(DataflowDispatch::Dependency);
+    let (c_start, b_finish) = (dep.started_seq("C").unwrap(), dep.finished_seq("B").unwrap());
+    assert!(
+        c_start < b_finish,
+        "dependency dispatch must start C before the unrelated slow B finishes \
+         (C start {c_start} vs B finish {b_finish})"
+    );
+    let wave = run_with(DataflowDispatch::Wavefront);
+    assert!(
+        wave.started_seq("C").unwrap() > wave.finished_seq("B").unwrap(),
+        "the wavefront baseline holds C at the barrier behind B"
+    );
+    // Program-order traces and lines are identical either way; only
+    // the real interleaving (the seqs) differs.
+    assert_eq!(dep.events, wave.events);
+}
+
+#[test]
+fn racing_first_sightings_admit_exactly_one_within_budget() {
+    // 4 remotable steps with NO cost history race a budgeted manager
+    // concurrently (dataflow mode dispatches all four at once; the
+    // activity sleeps real wall time so the race is genuine).
+    // Estimate-less admissions project zero spend, so before the
+    // first-sighting gate each racer judged the same untouched ledger
+    // and all 4 were admitted — overshooting the budget by up to 4
+    // unknown charges. Serialized, the first offload commits its real
+    // spend (exactly 0.125: 125 ms of reference work at price 1.0 —
+    // binary-exact) before the rest are judged.
+    let run_race = |names: [&str; 4], budget: f64| {
+        let platform = Platform::new(PlatformConfig {
+            tiers: vec![CloudTier::priced(4, 2.0, 1.0)],
+            ..Default::default()
+        })
+        .unwrap();
+        let services = Services::without_runtime(platform);
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("paid.op", |c, inputs| {
+            let x = need_num(inputs, "x")?;
+            std::thread::sleep(Duration::from_millis(5));
+            c.charge_compute(Duration::from_millis(125));
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        let reg = Arc::new(reg);
+        let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+        cfg.budget = Some(budget);
+        let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+        let engine = Engine::new(reg, services)
+            .with_offload(mgr.clone())
+            .with_dataflow(true);
+        let steps: String = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                format!(
+                    r#"<InvokeActivity DisplayName="{n}" Activity="paid.op" In.x="{}"
+                        Out.y="r{}" Remotable="true"/>"#,
+                    i + 1,
+                    i + 1
+                )
+            })
+            .collect();
+        let wf = xaml::parse(&format!(
+            r#"<Workflow>
+                 <Workflow.Variables>
+                   <Variable Name="r1"/><Variable Name="r2"/>
+                   <Variable Name="r3"/><Variable Name="r4"/>
+                 </Workflow.Variables>
+                 <Sequence>
+                   {steps}
+                   <WriteLine Text="str(r1 + r2 + r3 + r4)"/>
+                 </Sequence>
+               </Workflow>"#
+        ))
+        .unwrap();
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let report = engine.run(&part).unwrap();
+        assert_eq!(report.lines.last().map(String::as_str), Some("14"));
+        mgr.stats()
+    };
+
+    // Same step name ×4, budget 0.2: the first sighting commits 0.125,
+    // the survivors inherit its estimates (same cost record) and each
+    // projects 0.125 past the budget — exactly one admitted, spend
+    // within budget, ZERO overshoot.
+    let stats = run_race(["p", "p", "p", "p"], 0.2);
+    assert_eq!(stats.offloads, 1, "exactly one racing first sighting fits the budget");
+    assert_eq!(stats.budget_declined, 3);
+    assert!((stats.spend - 0.125).abs() < 1e-12, "{}", stats.spend);
+    assert!(stats.spend <= 0.2, "zero overshoot: {}", stats.spend);
+
+    // Distinct step names ×4, budget 0.1 (below one charge): the first
+    // sighting's commit crosses the budget — the one irreducible
+    // unknown charge — and every later racer sees a consumed ledger.
+    // Before serialization all four would have been admitted (each
+    // projecting zero against the same untouched ledger), spending
+    // 0.5 against a 0.1 budget.
+    let stats = run_race(["q1", "q2", "q3", "q4"], 0.1);
+    assert_eq!(
+        stats.offloads, 1,
+        "a burst of distinct unknown steps must overshoot at most once in total"
+    );
+    assert_eq!(stats.budget_declined, 3);
+    assert!((stats.spend - 0.125).abs() < 1e-12, "{}", stats.spend);
+}
+
+#[test]
+fn dataflow_traces_with_offloads_are_byte_stable_across_runs() {
+    // Concurrent local activities + a dependent offload chain: two
+    // fresh runs must produce byte-identical traces including event
+    // payloads (local node names used to follow arrival order at the
+    // shared round-robin cursor).
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="l1"/><Variable Name="l2"/><Variable Name="l3"/>
+               <Variable Name="s1"/><Variable Name="s2"/>
+             </Workflow.Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="loc-1" Activity="hold.op" In.x="1" Out.y="l1"/>
+               <InvokeActivity DisplayName="loc-2" Activity="hold.op" In.x="2" Out.y="l2"/>
+               <InvokeActivity DisplayName="loc-3" Activity="hold.op" In.x="3" Out.y="l3"/>
+               <InvokeActivity DisplayName="off-1" Activity="hold.op" In.x="4" Out.y="s1"
+                               Remotable="true"/>
+               <InvokeActivity DisplayName="off-2" Activity="hold.op" In.x="s1" Out.y="s2"
+                               Remotable="true"/>
+               <WriteLine Text="str(l1 + l2 + l3 + s2)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let run_once = || {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("hold.op", |c, inputs| {
+            let x = need_num(inputs, "x")?;
+            // Enough wall time that the independent units genuinely
+            // race the cursor.
+            std::thread::sleep(Duration::from_millis(5));
+            c.charge_compute(Duration::from_millis(20));
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        let reg = Arc::new(reg);
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let engine = Engine::new(reg, services).with_offload(mgr).with_dataflow(true);
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        engine.run(&part).unwrap()
+    };
+    let r1 = run_once();
+    let r2 = run_once();
+    assert_eq!(r1.lines, r2.lines);
+    assert_eq!(r1.events, r2.events, "payload-identical traces across dataflow runs");
+    assert_eq!(r1.lines.last().map(String::as_str), Some("15"));
 }
 
 #[test]

@@ -145,7 +145,8 @@ fn run_chain(batch: bool) -> (emerald::engine::RunReport, emerald::migration::Mi
     let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
     let engine = Engine::new(reg, services).with_offload(mgr.clone());
     let wf = xaml::parse(CHAIN_WF).unwrap();
-    let (part, _) = partitioner::partition_with(&wf, PartitionOptions { batch }).unwrap();
+    let opts = PartitionOptions { batch, ..Default::default() };
+    let (part, _) = partitioner::partition_with(&wf, opts).unwrap();
     let report = engine.run(&part).unwrap();
     let stats = mgr.stats();
     (report, stats)
