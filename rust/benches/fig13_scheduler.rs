@@ -64,7 +64,7 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::Duration;
 
-use emerald::benchkit::Series;
+use emerald::benchkit::{Series, Trajectory};
 use emerald::cloud::{CloudTier, Platform, PlatformConfig};
 use emerald::engine::activity::need_num;
 use emerald::engine::{ActivityRegistry, DataflowDispatch, Engine, Event, RunReport, Services};
@@ -371,6 +371,9 @@ fn run_priced(
 
 fn main() -> anyhow::Result<()> {
     println!("== Fig 13: load-aware scheduling + batched offload round trips ==");
+    // Every printed series is also recorded here and committed as
+    // BENCH_fig13.json, so scheduler regressions show up as diffs.
+    let mut traj = Trajectory::new("fig13");
 
     // -- End-to-end: seed baseline vs this PR's scheduler + batching --
     let (baseline, baseline_offloads) = run(SchedulePolicy::RoundRobin, false)?;
@@ -393,6 +396,7 @@ fn main() -> anyhow::Result<()> {
         vec![("sim".into(), 100.0 * (1.0 - treatment.as_secs_f64() / baseline.as_secs_f64()))],
     );
     series.print();
+    traj.record(&series);
     println!(
         "round trips: baseline {baseline_offloads} -> treatment {treatment_offloads} \
          (batch fused the 3-step run)"
@@ -417,6 +421,7 @@ fn main() -> anyhow::Result<()> {
     model.row("round-robin", vec![("makespan".into(), rr.as_secs_f64())]);
     model.row("least-loaded", vec![("makespan".into(), ll.as_secs_f64())]);
     model.print();
+    traj.record(&model);
     assert!(
         ll < rr,
         "least-loaded must beat round-robin on skewed tasks: {ll:?} vs {rr:?}"
@@ -442,6 +447,7 @@ fn main() -> anyhow::Result<()> {
         vec![("sim".into(), eft_time.as_secs_f64())],
     );
     tiers.print();
+    traj.record(&tiers);
     println!("blind executed on {blind_nodes:?}; EFT executed on {eft_nodes:?}");
     assert!(
         eft_time < blind_time,
@@ -500,6 +506,7 @@ fn main() -> anyhow::Result<()> {
         vec![("sim".into(), cost_sim.as_secs_f64()), ("spend".into(), cost_spend)],
     );
     priced.print();
+    traj.record(&priced);
     println!("time executed on {time_nodes:?}; cost executed on {cost_nodes:?}");
     assert!(
         cost_spend < time_spend,
@@ -617,6 +624,7 @@ fn main() -> anyhow::Result<()> {
         )],
     );
     dataflow_series.print();
+    traj.record(&dataflow_series);
     assert_eq!(seq_run.offload_count(), 4);
     assert_eq!(df_run.offload_count(), 4);
     assert!(
@@ -736,6 +744,7 @@ fn main() -> anyhow::Result<()> {
         curve.push((w, plan.makespan, plan.spend));
     }
     pareto.print();
+    traj.record(&pareto);
     for pair in curve.windows(2) {
         let (w0, m0, s0) = pair[0];
         let (w1, m1, s1) = pair[1];
@@ -791,6 +800,7 @@ fn main() -> anyhow::Result<()> {
         )],
     );
     stair.print();
+    traj.record(&stair);
     // Deterministic: both dispatchers charge the same critical path
     // (the 4-stair chain dominates the 180 ms siblings).
     assert_eq!(dep_run.sim_time, wave_run.sim_time);
@@ -842,5 +852,9 @@ fn main() -> anyhow::Result<()> {
         eft_mk.as_secs_f64(),
         blind_mk.as_secs_f64(),
     );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fig13.json");
+    traj.write(&out)?;
+    println!("trajectory written to {}", out.display());
     Ok(())
 }

@@ -1,0 +1,400 @@
+//! Effect inference: may-read / may-write / must-write summaries for
+//! every [`StepKind`], including `If`/`While` bodies.
+//!
+//! The **may** sets are sound over-approximations of every variable a
+//! subtree can touch at runtime, no matter which branches execute or
+//! how many loop iterations run. The **must-write** set is the dual
+//! under-approximation: variables the subtree is guaranteed to write
+//! whenever it completes. Together they let downstream consumers be
+//! both safe and precise:
+//!
+//! * [`crate::workflow::dag::Dag::build`] orders two sibling units
+//!   only when their may sets actually conflict — an `If` whose
+//!   branches write disjoint variables no longer serializes unrelated
+//!   neighbors (it used to be an opaque barrier).
+//! * [`crate::workflow::analysis::step_io`] is a thin wrapper over
+//!   [`infer`]: its reads/writes are exactly the may sets, so the
+//!   migration packager and partitioner keep their flow-aware
+//!   batching semantics unchanged.
+//! * The [`super::lints`] diagnostics use the must-write sets to tell
+//!   conditional writes from definite ones.
+//! * The runtime [`super::AccessValidator`] asserts that every store
+//!   access a unit performs during execution lies inside the unit's
+//!   static may sets — the soundness claim, continuously checked.
+//!
+//! ## Branch and loop rules
+//!
+//! | kind | may sets | must-write |
+//! |---|---|---|
+//! | `Assign`/`InvokeActivity` | own exprs / outputs | outputs |
+//! | `Sequence` | flow-aware union (definite leaf writes kill later sibling reads) | union of children |
+//! | `Parallel` | union, no kills between siblings | union of children (the join waits for all branches) |
+//! | `If` | condition ∪ both branches | then ∩ else (empty without an else) |
+//! | `While` | condition ∪ body | empty (zero iterations possible) |
+//!
+//! The `While` body needs a fixpoint in general, but the transfer
+//! function here is a monotone union over a finite syntactic universe
+//! with kills scoped inside the body, so Kleene iteration converges
+//! after the first pass: a variable the body reads before producing
+//! it is an external read on iteration 1 already, and a variable the
+//! body definitely produces before reading is internal on *every*
+//! iteration. A single body pass therefore *is* the fixpoint.
+
+use std::collections::BTreeSet;
+
+use anyhow::{Context, Result};
+
+use crate::expr;
+use crate::workflow::{Step, StepKind};
+
+/// Effect summary of a step subtree, excluding variables declared
+/// inside the subtree itself (those never escape).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Effects {
+    /// Variables the subtree *may* read from enclosing scopes
+    /// (excluding reads definitely satisfied inside the subtree).
+    pub may_read: BTreeSet<String>,
+    /// Variables the subtree *may* write in enclosing scopes.
+    pub may_write: BTreeSet<String>,
+    /// Variables the subtree is *guaranteed* to write whenever it
+    /// runs to completion (`must_write ⊆ may_write`).
+    pub must_write: BTreeSet<String>,
+}
+
+impl Effects {
+    /// Union of the may sets: everything the subtree can touch.
+    pub fn footprint(&self) -> BTreeSet<String> {
+        self.may_read.union(&self.may_write).cloned().collect()
+    }
+}
+
+/// Infer the effect summary of a step subtree. Errors when an
+/// embedded expression does not parse.
+pub fn infer(step: &Step) -> Result<Effects> {
+    let mut fx = Effects::default();
+    collect(step, &mut BTreeSet::new(), &mut BTreeSet::new(), &mut fx)?;
+    fx.must_write = must_writes(step, &mut BTreeSet::new());
+    debug_assert!(fx.must_write.is_subset(&fx.may_write));
+    Ok(fx)
+}
+
+/// Free variables of one expression.
+pub(crate) fn expr_vars(src: &str) -> Result<BTreeSet<String>> {
+    Ok(expr::parse(src)
+        .with_context(|| format!("in expression {src:?}"))?
+        .free_vars()
+        .into_iter()
+        .collect())
+}
+
+/// Variables a step writes unconditionally when it is an unconditional
+/// leaf at its sequence level; `None` for containers and control flow
+/// (whose writes may not happen, or happen behind their own scope).
+fn definite_leaf_writes(step: &Step) -> Option<Vec<&str>> {
+    match &step.kind {
+        StepKind::Assign { to, .. } => Some(vec![to.as_str()]),
+        StepKind::InvokeActivity { outputs, .. } => {
+            Some(outputs.iter().map(|(_, var)| var.as_str()).collect())
+        }
+        _ => None,
+    }
+}
+
+/// May-set computation. `local` holds variables declared inside the
+/// analyzed subtree; `defined` holds variables definitely written by
+/// earlier siblings of the sequence currently being walked. Both
+/// suppress reads; only `local` suppresses writes. (These are exactly
+/// the flow-aware rules `step_io` has always used — the wrapper in
+/// [`crate::workflow::analysis`] keeps byte-identical semantics.)
+fn collect(
+    step: &Step,
+    local: &mut BTreeSet<String>,
+    defined: &mut BTreeSet<String>,
+    fx: &mut Effects,
+) -> Result<()> {
+    // Variables declared at this step: init expressions evaluate in the
+    // *enclosing* scope, so their free vars count as reads first.
+    for v in &step.variables {
+        if let Some(init) = &v.init {
+            for name in expr_vars(init)? {
+                if !local.contains(&name) && !defined.contains(&name) {
+                    fx.may_read.insert(name);
+                }
+            }
+        }
+    }
+    let added: Vec<String> = step
+        .variables
+        .iter()
+        .filter(|v| local.insert(v.name.clone()))
+        .map(|v| v.name.clone())
+        .collect();
+
+    let read = |src: &str,
+                local: &BTreeSet<String>,
+                defined: &BTreeSet<String>,
+                fx: &mut Effects|
+     -> Result<()> {
+        for name in expr_vars(src)? {
+            if !local.contains(&name) && !defined.contains(&name) {
+                fx.may_read.insert(name);
+            }
+        }
+        Ok(())
+    };
+
+    match &step.kind {
+        StepKind::Assign { to, value } => {
+            read(value, local, defined, fx)?;
+            if !local.contains(to) {
+                fx.may_write.insert(to.clone());
+            }
+        }
+        StepKind::WriteLine { text } => read(text, local, defined, fx)?,
+        StepKind::InvokeActivity { inputs, outputs, .. } => {
+            for (_, e) in inputs {
+                read(e, local, defined, fx)?;
+            }
+            for (_, var) in outputs {
+                if !local.contains(var) {
+                    fx.may_write.insert(var.clone());
+                }
+            }
+        }
+        StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
+            read(condition, local, defined, fx)?;
+        }
+        _ => {}
+    }
+
+    match &step.kind {
+        StepKind::Sequence(children) => {
+            // Straight-line dataflow: a definite write at this level
+            // suppresses later sibling reads. The kills are scoped to
+            // this sequence (conservative: they don't leak upward).
+            let mut killed_here: Vec<String> = Vec::new();
+            for c in children {
+                collect(c, local, defined, fx)?;
+                if let Some(writes) = definite_leaf_writes(c) {
+                    for w in writes {
+                        if !local.contains(w) && defined.insert(w.to_string()) {
+                            killed_here.push(w.to_string());
+                        }
+                    }
+                }
+            }
+            for name in killed_here {
+                defined.remove(&name);
+            }
+        }
+        _ => {
+            // Parallel branches and control-flow bodies see the kills
+            // established by preceding sequence siblings, but never add
+            // to them (their own execution is concurrent/conditional).
+            // For `While` this single body pass is the loop fixpoint
+            // (see the module docs).
+            for c in step.children() {
+                collect(c, local, defined, fx)?;
+            }
+        }
+    }
+
+    for name in added {
+        local.remove(&name);
+    }
+    Ok(())
+}
+
+/// Must-write computation: variables guaranteed written whenever the
+/// subtree runs to completion, excluding subtree-local declarations.
+fn must_writes(step: &Step, local: &mut BTreeSet<String>) -> BTreeSet<String> {
+    let added: Vec<String> = step
+        .variables
+        .iter()
+        .filter(|v| local.insert(v.name.clone()))
+        .map(|v| v.name.clone())
+        .collect();
+
+    let mut out: BTreeSet<String> = BTreeSet::new();
+    match &step.kind {
+        StepKind::Assign { to, .. } => {
+            if !local.contains(to) {
+                out.insert(to.clone());
+            }
+        }
+        StepKind::InvokeActivity { outputs, .. } => {
+            for (_, var) in outputs {
+                if !local.contains(var) {
+                    out.insert(var.clone());
+                }
+            }
+        }
+        // Every child of a Sequence runs; every Parallel branch runs
+        // to completion before the join releases the step.
+        StepKind::Sequence(children) | StepKind::Parallel(children) => {
+            for c in children {
+                out.extend(must_writes(c, local));
+            }
+        }
+        // A write is definite across an If only when *both* branches
+        // perform it; with no else branch nothing is definite.
+        StepKind::If { then_branch, else_branch, .. } => {
+            if let Some(els) = else_branch {
+                let t = must_writes(then_branch, local);
+                let e = must_writes(els, local);
+                out.extend(t.intersection(&e).cloned());
+            }
+        }
+        // Zero iterations are possible, so a loop guarantees nothing.
+        StepKind::While { .. } => {}
+        StepKind::WriteLine { .. } | StepKind::MigrationPoint | StepKind::Nop => {}
+    }
+
+    for name in added {
+        local.remove(&name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{Step, StepKind};
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    fn names(items: &[&str]) -> BTreeSet<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn iff(cond: &str, then: Step, els: Option<Step>) -> Step {
+        Step::new(
+            "br",
+            StepKind::If {
+                condition: cond.into(),
+                then_branch: Box::new(then),
+                else_branch: els.map(Box::new),
+            },
+        )
+    }
+
+    #[test]
+    fn leaf_assign_must_writes() {
+        let fx = infer(&assign("y", "x + 1")).unwrap();
+        assert_eq!(fx.may_read, names(&["x"]));
+        assert_eq!(fx.may_write, names(&["y"]));
+        assert_eq!(fx.must_write, names(&["y"]));
+    }
+
+    #[test]
+    fn if_must_write_is_branch_intersection() {
+        let both = iff("c", assign("x", "1"), Some(assign("x", "2")));
+        let fx = infer(&both).unwrap();
+        assert_eq!(fx.may_write, names(&["x"]));
+        assert_eq!(fx.must_write, names(&["x"]));
+
+        let split = iff("c", assign("x", "1"), Some(assign("y", "2")));
+        let fx = infer(&split).unwrap();
+        assert_eq!(fx.may_write, names(&["x", "y"]));
+        assert!(fx.must_write.is_empty(), "disjoint branches guarantee nothing");
+
+        let no_else = iff("c", assign("x", "1"), None);
+        let fx = infer(&no_else).unwrap();
+        assert_eq!(fx.may_write, names(&["x"]));
+        assert!(fx.must_write.is_empty(), "no else: the write may be skipped");
+    }
+
+    #[test]
+    fn while_guarantees_nothing_but_may_sets_cover_the_body() {
+        let s = Step::new(
+            "loop",
+            StepKind::While {
+                condition: "i < n".into(),
+                body: Box::new(assign("i", "i + 1")),
+                max_iters: 10,
+            },
+        );
+        let fx = infer(&s).unwrap();
+        assert_eq!(fx.may_read, names(&["i", "n"]));
+        assert_eq!(fx.may_write, names(&["i"]));
+        assert!(fx.must_write.is_empty());
+    }
+
+    #[test]
+    fn loop_fixpoint_keeps_internally_produced_reads_internal() {
+        // Each iteration writes a before reading it: a is internal on
+        // every iteration, so the single body pass (= the fixpoint)
+        // reports no external read of a.
+        let body = Step::new(
+            "body",
+            StepKind::Sequence(vec![assign("a", "1"), assign("b", "a")]),
+        );
+        let s = Step::new(
+            "loop",
+            StepKind::While { condition: "b < n".into(), body: Box::new(body), max_iters: 10 },
+        );
+        let fx = infer(&s).unwrap();
+        assert_eq!(fx.may_read, names(&["b", "n"]));
+        // The converse shape reads before producing: external on pass 1.
+        let body = Step::new(
+            "body",
+            StepKind::Sequence(vec![assign("b", "a"), assign("a", "1")]),
+        );
+        let s = Step::new(
+            "loop",
+            StepKind::While { condition: "b < n".into(), body: Box::new(body), max_iters: 10 },
+        );
+        let fx = infer(&s).unwrap();
+        assert!(fx.may_read.contains("a"));
+    }
+
+    #[test]
+    fn sequence_and_parallel_must_writes_union() {
+        let seq = Step::new(
+            "seq",
+            StepKind::Sequence(vec![assign("x", "1"), assign("y", "2")]),
+        );
+        assert_eq!(infer(&seq).unwrap().must_write, names(&["x", "y"]));
+        let par = Step::new(
+            "par",
+            StepKind::Parallel(vec![assign("x", "1"), assign("y", "2")]),
+        );
+        assert_eq!(infer(&par).unwrap().must_write, names(&["x", "y"]));
+    }
+
+    #[test]
+    fn locals_never_escape_any_set() {
+        let s = Step::new(
+            "seq",
+            StepKind::Sequence(vec![assign("t", "1"), assign("o", "t")]),
+        )
+        .var("t", None);
+        let fx = infer(&s).unwrap();
+        assert!(fx.may_read.is_empty());
+        assert_eq!(fx.may_write, names(&["o"]));
+        assert_eq!(fx.must_write, names(&["o"]));
+    }
+
+    #[test]
+    fn matches_step_io_wrapper() {
+        // step_io must be exactly the may sets (shared implementation).
+        let s = Step::new(
+            "seq",
+            StepKind::Sequence(vec![
+                assign("x", "a + 1"),
+                iff("x > 0", assign("y", "x"), None),
+            ]),
+        );
+        let fx = infer(&s).unwrap();
+        let io = crate::workflow::analysis::step_io(&s).unwrap();
+        assert_eq!(io.reads, fx.may_read);
+        assert_eq!(io.writes, fx.may_write);
+    }
+
+    #[test]
+    fn bad_expression_is_error() {
+        assert!(infer(&assign("x", "1 +")).is_err());
+    }
+}

@@ -1,0 +1,728 @@
+//! The diagnostics engine behind `emerald check`.
+//!
+//! Every diagnostic is a [`Finding`] with a stable code, a severity,
+//! and (when the workflow came from XAML) a source span resolved via
+//! [`crate::xmlmini::line_col`]. Two producers exist:
+//!
+//! * [`check_workflow`] — structural well-formedness and the paper's
+//!   partitioning Properties 1–3 (codes `WF100`–`WF103`), plus the
+//!   advisory effect-analysis lints (`WF001`–`WF005`) built on
+//!   [`super::effects::infer`].
+//! * [`check_config`] — platform/engine/migration config diagnostics
+//!   (`WF006`–`WF008`), including unknown-key detection with
+//!   did-you-mean suggestions.
+//!
+//! [`crate::workflow::validate::validate`] is a thin wrapper over
+//! [`structural_findings`]: the run path and the check path share one
+//! implementation and can never disagree about what is legal.
+//!
+//! ## Lint catalog
+//!
+//! | code | severity | meaning |
+//! |---|---|---|
+//! | `WF001` | error | two `Parallel` branches may write the same variable (write-write race) |
+//! | `WF002` | warning | a variable is read but never written anywhere |
+//! | `WF003` | warning | a variable is written but never read (dead write) |
+//! | `WF004` | warning | a remotable / migration-targeted step writes nothing; offloading it buys nothing |
+//! | `WF005` | warning | a branch/loop condition is constant; a branch is unreachable |
+//! | `WF006` | warning | config options contradict each other (e.g. `budget = 0` with `steal = true`) |
+//! | `WF007` | error | unknown config section or key (with did-you-mean) |
+//! | `WF008` | error | config value is invalid for its key |
+//! | `WF100` | error | malformed workflow (duplicate variables, unparseable expressions, pre-existing migration points) |
+//! | `WF101` | error | Property 1: remotable step requires local hardware |
+//! | `WF102` | error | Property 2: remotable step I/O not declared at its level |
+//! | `WF103` | error | Property 3: nested remotable steps |
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cli::config::ConfigFile;
+use crate::expr;
+use crate::workflow::{Step, StepKind, Workflow};
+use crate::xmlmini;
+
+use super::effects::{self, Effects};
+
+/// Write-write race between `Parallel` branches.
+pub const WF001: &str = "WF001";
+/// Read of a variable nothing ever writes.
+pub const WF002: &str = "WF002";
+/// Dead write: a variable nothing ever reads.
+pub const WF003: &str = "WF003";
+/// Offload target with no store effect.
+pub const WF004: &str = "WF004";
+/// Constant branch/loop condition.
+pub const WF005: &str = "WF005";
+/// Contradictory configuration options.
+pub const WF006: &str = "WF006";
+/// Unknown configuration section/key.
+pub const WF007: &str = "WF007";
+/// Invalid configuration value.
+pub const WF008: &str = "WF008";
+/// Malformed workflow.
+pub const WF100: &str = "WF100";
+/// Property 1 violation (local hardware).
+pub const WF101: &str = "WF101";
+/// Property 2 violation (I/O scope).
+pub const WF102: &str = "WF102";
+/// Property 3 violation (nested offload).
+pub const WF103: &str = "WF103";
+
+/// How bad a finding is. `Error` findings make `emerald check` exit
+/// nonzero (and, for the structural codes, make `emerald run` refuse
+/// the workflow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but legal; the workflow still runs.
+    Warning,
+    /// Illegal; the check fails.
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Stable lint code (`WF001`…).
+    pub code: &'static str,
+    /// Severity class.
+    pub severity: Severity,
+    /// Display name of the step the finding is anchored to, when any.
+    pub step: Option<String>,
+    /// Byte offset into the source XAML (0 when unknown — e.g.
+    /// builder-constructed workflows or config findings).
+    pub pos: usize,
+    /// Human-readable description. For the structural codes this is
+    /// exactly the message [`crate::workflow::validate::ValidationError`]
+    /// carries, so both paths word failures identically.
+    pub message: String,
+}
+
+impl Finding {
+    fn new(code: &'static str, severity: Severity, message: impl Into<String>) -> Self {
+        Finding { code, severity, step: None, pos: 0, message: message.into() }
+    }
+
+    fn at(mut self, step: &Step) -> Self {
+        self.step = Some(step.display_name.clone());
+        self.pos = step.pos;
+        self
+    }
+
+    /// Render as a compiler-style diagnostic. When the source XAML is
+    /// provided and the finding has a position, a `line:col` span is
+    /// appended.
+    pub fn render(&self, source: Option<&str>) -> String {
+        let mut out = format!("{}[{}]: {}", self.severity, self.code, self.message);
+        match (&self.step, source) {
+            (Some(step), Some(src)) if self.pos > 0 => {
+                let (line, col) = xmlmini::line_col(src, self.pos);
+                out.push_str(&format!("\n  --> step '{step}' at {line}:{col}"));
+            }
+            (Some(step), _) => out.push_str(&format!("\n  --> step '{step}'")),
+            _ => {}
+        }
+        out
+    }
+}
+
+/// Highest severity in a batch (`None` when empty).
+pub fn max_severity(findings: &[Finding]) -> Option<Severity> {
+    findings.iter().map(|f| f.severity).max()
+}
+
+/// All diagnostics for a workflow: structural errors first, then the
+/// advisory effect-analysis lints.
+pub fn check_workflow(wf: &Workflow) -> Vec<Finding> {
+    let mut out = structural_findings(wf);
+    out.extend(race_findings(&wf.root));
+    out.extend(liveness_findings(wf));
+    out.extend(offload_effect_findings(&wf.root));
+    out.extend(constant_condition_findings(&wf.root));
+    out
+}
+
+/// The structural (error-severity) findings, in exactly the order the
+/// legacy `validate()` checked them: duplicate workflow variables,
+/// per-step duplicates and expression parse errors (preorder), the
+/// per-remotable-step Property 1/3/2 checks, and finally pre-existing
+/// migration points. `validate()` fails on the first of these.
+pub fn structural_findings(wf: &Workflow) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    duplicate_var_findings(&wf.variables, "workflow", None, &mut out);
+    wf.root.walk(&mut |s| {
+        duplicate_var_findings(
+            &s.variables,
+            &format!("step '{}'", s.display_name),
+            Some(s),
+            &mut out,
+        );
+        own_expr_findings(s, &mut out);
+    });
+
+    walk_with_parent_vars(wf, &mut |step, parent_vars| {
+        if !step.remotable {
+            return;
+        }
+        // Property 1: the remotable subtree must not touch local HW.
+        if step.any(&|s| s.requires_local_hardware) {
+            out.push(
+                Finding::new(
+                    WF101,
+                    Severity::Error,
+                    "remotable step (or a nested step) requires local hardware",
+                )
+                .at(step),
+            );
+            return;
+        }
+        // Property 3: no remotable step nested inside another.
+        let nested: usize = step
+            .children()
+            .iter()
+            .map(|c| crate::workflow::validate::count_remotable(c))
+            .sum();
+        if nested > 0 {
+            out.push(
+                Finding::new(
+                    WF103,
+                    Severity::Error,
+                    format!(
+                        "{nested} nested remotable step(s); migration and \
+                              re-integration must alternate"
+                    ),
+                )
+                .at(step),
+            );
+            return;
+        }
+        // Property 2: I/O variables declared at the step's own level.
+        // Expression errors were already reported above; skip here.
+        if let Ok(fx) = effects::infer(step) {
+            for name in fx.footprint() {
+                if !parent_vars.iter().any(|v| v == &name) {
+                    out.push(
+                        Finding::new(
+                            WF102,
+                            Severity::Error,
+                            format!(
+                                "variable '{name}' used by the remotable step is not declared \
+                         at the step's level (Figure 8)"
+                            ),
+                        )
+                        .at(step),
+                    );
+                    return;
+                }
+            }
+        }
+    });
+
+    // MigrationPoint is partitioner output, not developer input.
+    if wf.root.any(&|s| matches!(s.kind, StepKind::MigrationPoint)) {
+        out.push(Finding::new(
+            WF100,
+            Severity::Error,
+            "workflow already contains MigrationPoint steps; validate before partitioning",
+        ));
+    }
+
+    out
+}
+
+fn duplicate_var_findings(
+    vars: &[crate::workflow::VarDecl],
+    at: &str,
+    step: Option<&Step>,
+    out: &mut Vec<Finding>,
+) {
+    let mut seen = BTreeSet::new();
+    for v in vars {
+        if !seen.insert(&v.name) {
+            let mut f = Finding::new(
+                WF100,
+                Severity::Error,
+                format!("variable '{}' declared twice at {at}", v.name),
+            );
+            if let Some(s) = step {
+                f = f.at(s);
+            }
+            out.push(f);
+        }
+    }
+}
+
+/// Expression parse errors for *this* step's own expressions (variable
+/// initializers plus whatever its kind embeds). Checking per step, in
+/// preorder, surfaces the same first error `step_io` at the root would.
+fn own_expr_findings(step: &Step, out: &mut Vec<Finding>) {
+    let mut check = |src: &str| {
+        if let Err(e) = effects::expr_vars(src) {
+            out.push(Finding::new(WF100, Severity::Error, format!("{e:#}")).at(step));
+        }
+    };
+    for v in &step.variables {
+        if let Some(init) = &v.init {
+            check(init);
+        }
+    }
+    match &step.kind {
+        StepKind::Assign { value, .. } => check(value),
+        StepKind::WriteLine { text } => check(text),
+        StepKind::InvokeActivity { inputs, .. } => {
+            for (_, e) in inputs {
+                check(e);
+            }
+        }
+        StepKind::If { condition, .. } | StepKind::While { condition, .. } => check(condition),
+        _ => {}
+    }
+}
+
+/// Walk all steps, passing the variable names visible at each step's
+/// own level (ancestor declarations plus the workflow's — the same
+/// scoping `validate()` has always used for Property 2).
+fn walk_with_parent_vars(wf: &Workflow, f: &mut impl FnMut(&Step, &[String])) {
+    fn go(step: &Step, parent_vars: &[String], f: &mut impl FnMut(&Step, &[String])) {
+        f(step, parent_vars);
+        let mut level: Vec<String> = parent_vars.to_vec();
+        level.extend(step.variables.iter().map(|v| v.name.clone()));
+        for c in step.children() {
+            go(c, &level, f);
+        }
+    }
+    let root_vars: Vec<String> = wf.variables.iter().map(|v| v.name.clone()).collect();
+    go(&wf.root, &root_vars, f)
+}
+
+/// WF001: two branches of the same `Parallel` may write one variable.
+/// The branches race and the final value depends on scheduling — an
+/// error, because no dispatch order is "the right one".
+fn race_findings(root: &Step) -> Vec<Finding> {
+    let mut out = Vec::new();
+    root.walk(&mut |s| {
+        let StepKind::Parallel(children) = &s.kind else { return };
+        let summaries: Vec<Option<Effects>> =
+            children.iter().map(|c| effects::infer(c).ok()).collect();
+        for i in 0..children.len() {
+            for j in i + 1..children.len() {
+                let (Some(a), Some(b)) = (&summaries[i], &summaries[j]) else { continue };
+                let shared: Vec<&String> = a.may_write.intersection(&b.may_write).collect();
+                if !shared.is_empty() {
+                    let vars =
+                        shared.iter().map(|v| format!("'{v}'")).collect::<Vec<_>>().join(", ");
+                    out.push(
+                        Finding::new(
+                            WF001,
+                            Severity::Error,
+                            format!(
+                                "parallel branches '{}' and '{}' may both write {vars} \
+                                 (write-write race: the surviving value depends on scheduling)",
+                                children[i].display_name, children[j].display_name
+                            ),
+                        )
+                        .at(s),
+                    );
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Raw (kill-free) per-variable access census used by the liveness
+/// lints: which variables are ever read / ever written anywhere, and
+/// the first step doing each.
+struct Census<'a> {
+    reads: BTreeMap<String, &'a Step>,
+    writes: BTreeMap<String, &'a Step>,
+}
+
+fn census(root: &Step) -> Census<'_> {
+    let mut c = Census { reads: BTreeMap::new(), writes: BTreeMap::new() };
+    root.walk(&mut |s| {
+        let mut read_srcs: Vec<&str> =
+            s.variables.iter().filter_map(|v| v.init.as_deref()).collect();
+        match &s.kind {
+            StepKind::Assign { to, value } => {
+                read_srcs.push(value);
+                c.writes.entry(to.clone()).or_insert(s);
+            }
+            StepKind::WriteLine { text } => read_srcs.push(text),
+            StepKind::InvokeActivity { inputs, outputs, .. } => {
+                read_srcs.extend(inputs.iter().map(|(_, e)| e.as_str()));
+                for (_, var) in outputs {
+                    c.writes.entry(var.clone()).or_insert(s);
+                }
+            }
+            StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
+                read_srcs.push(condition)
+            }
+            _ => {}
+        }
+        for src in read_srcs {
+            for name in effects::expr_vars(src).unwrap_or_default() {
+                c.reads.entry(name).or_insert(s);
+            }
+        }
+    });
+    c
+}
+
+/// WF002 + WF003: whole-workflow liveness. A declared, uninitialized
+/// variable that is read but never written evaluates to an undefined
+/// lookup at runtime (WF002); a variable written but never read is
+/// wasted work (WF003). Variable initializers count as writes.
+fn liveness_findings(wf: &Workflow) -> Vec<Finding> {
+    let c = census(&wf.root);
+    let mut initialized = BTreeSet::new();
+    let mut declared = BTreeSet::new();
+    for v in &wf.variables {
+        declared.insert(v.name.clone());
+        if v.init.is_some() {
+            initialized.insert(v.name.clone());
+        }
+    }
+    wf.root.walk(&mut |s| {
+        for v in &s.variables {
+            declared.insert(v.name.clone());
+            if v.init.is_some() {
+                initialized.insert(v.name.clone());
+            }
+        }
+    });
+
+    let mut out = Vec::new();
+    for (name, step) in &c.reads {
+        if declared.contains(name) && !initialized.contains(name) && !c.writes.contains_key(name)
+        {
+            out.push(
+                Finding::new(
+                    WF002,
+                    Severity::Warning,
+                    format!(
+                        "variable '{name}' is read but never written or initialized; \
+                         the lookup fails at runtime"
+                    ),
+                )
+                .at(step),
+            );
+        }
+    }
+    for (name, step) in &c.writes {
+        if !c.reads.contains_key(name) {
+            out.push(
+                Finding::new(
+                    WF003,
+                    Severity::Warning,
+                    format!("variable '{name}' is written but never read (dead write)"),
+                )
+                .at(step),
+            );
+        }
+    }
+    out
+}
+
+/// WF004: a step annotated `Remotable` (or sitting behind a
+/// `MigrationPoint`) whose may-write set is empty produces nothing the
+/// migration manager could re-integrate — the offload pays transfer
+/// and latency for no store effect.
+fn offload_effect_findings(root: &Step) -> Vec<Finding> {
+    let mut targets: Vec<&Step> = Vec::new();
+    root.walk(&mut |s| {
+        if s.remotable {
+            targets.push(s);
+        }
+        // A MigrationPoint hands its *next sibling* to the manager.
+        if let StepKind::Sequence(children) = &s.kind {
+            for pair in children.windows(2) {
+                if matches!(pair[0].kind, StepKind::MigrationPoint) && !pair[1].remotable {
+                    targets.push(&pair[1]);
+                }
+            }
+        }
+    });
+    let mut out = Vec::new();
+    for step in targets {
+        let Ok(fx) = effects::infer(step) else { continue };
+        if fx.may_write.is_empty() {
+            out.push(
+                Finding::new(
+                    WF004,
+                    Severity::Warning,
+                    "offload target writes no variables; migrating it pays \
+                     packaging and transfer cost for no re-integrable effect",
+                )
+                .at(step),
+            );
+        }
+    }
+    out
+}
+
+/// WF005: an `If`/`While` condition with no free variables evaluates
+/// to the same boolean on every run — one branch is unreachable (or
+/// the loop never runs / only stops at its iteration ceiling).
+fn constant_condition_findings(root: &Step) -> Vec<Finding> {
+    let mut out = Vec::new();
+    root.walk(&mut |s| {
+        let condition = match &s.kind {
+            StepKind::If { condition, .. } | StepKind::While { condition, .. } => condition,
+            _ => return,
+        };
+        let Ok(ast) = expr::parse(condition) else { return };
+        if !ast.free_vars().is_empty() {
+            return;
+        }
+        if let Ok(expr::Value::Bool(b)) = ast.eval(&|_| None) {
+            let consequence = match (&s.kind, b) {
+                (StepKind::If { .. }, true) => "the else branch is unreachable",
+                (StepKind::If { .. }, false) => "the then branch is unreachable",
+                (StepKind::While { .. }, true) => "the loop only stops at its iteration ceiling",
+                (StepKind::While { .. }, false) => "the loop body is unreachable",
+                _ => unreachable!(),
+            };
+            out.push(
+                Finding::new(
+                    WF005,
+                    Severity::Warning,
+                    format!("condition {condition:?} is always {b}; {consequence}"),
+                )
+                .at(s),
+            );
+        }
+    });
+    out
+}
+
+/// All diagnostics for a platform/engine/migration config file:
+/// unknown keys (WF007, with did-you-mean), invalid values (WF008),
+/// and self-contradictory combinations (WF006).
+pub fn check_config(cfg: &ConfigFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for unknown in cfg.unknown_entries() {
+        out.push(Finding::new(WF007, Severity::Error, unknown.message()));
+    }
+
+    let platform = cfg.platform();
+    let engine = cfg.engine();
+    let migration = cfg.migration();
+    let codec = cfg.codec();
+    for err in [
+        platform.as_ref().err(),
+        engine.as_ref().err(),
+        migration.as_ref().err(),
+        codec.as_ref().err(),
+    ]
+    .into_iter()
+    .flatten()
+    {
+        out.push(Finding::new(WF008, Severity::Error, format!("{err:#}")));
+    }
+
+    if let Ok(m) = &migration {
+        if m.budget == Some(0.0) && m.steal {
+            out.push(Finding::new(
+                WF006,
+                Severity::Warning,
+                "[migration] budget = 0 admits no offloads, but steal = true expects \
+                 idle cloud VMs to re-pin queued work; the stealer can never fire",
+            ));
+        }
+    }
+    if let Ok(e) = &engine {
+        if cfg.contains("engine", "dispatch") && !e.dataflow {
+            out.push(Finding::new(
+                WF006,
+                Severity::Warning,
+                "[engine] dispatch is set but dataflow = false; the dispatch \
+                 strategy only applies to dataflow runs",
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{Step, StepKind, Workflow};
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    fn wrap(steps: Vec<Step>) -> Workflow {
+        Workflow::new("t", Step::new("main", StepKind::Sequence(steps)))
+    }
+
+    fn codes(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.code).collect()
+    }
+
+    #[test]
+    fn clean_workflow_has_no_findings() {
+        let wf = wrap(vec![
+            assign("x", "1"),
+            assign("y", "x + 1"),
+            Step::new("out", StepKind::WriteLine { text: "y".into() }),
+        ])
+        .var("x", None)
+        .var("y", None);
+        assert!(check_workflow(&wf).is_empty(), "{:?}", check_workflow(&wf));
+    }
+
+    #[test]
+    fn wf001_flags_parallel_write_write_race() {
+        let par = Step::new(
+            "par",
+            StepKind::Parallel(vec![assign("x", "1"), assign("x", "2")]),
+        );
+        let wf = Workflow::new("t", par).var("x", None);
+        let fs = check_workflow(&wf);
+        assert!(fs.iter().any(|f| f.code == WF001 && f.severity == Severity::Error), "{fs:?}");
+        // Disjoint writes race nothing.
+        let par = Step::new(
+            "par",
+            StepKind::Parallel(vec![assign("x", "1"), assign("y", "2")]),
+        );
+        let wf = Workflow::new("t", par).var("x", None).var("y", None);
+        assert!(!check_workflow(&wf).iter().any(|f| f.code == WF001));
+    }
+
+    #[test]
+    fn wf002_flags_read_of_never_written_variable() {
+        let wf = wrap(vec![Step::new("out", StepKind::WriteLine { text: "ghost".into() })])
+            .var("ghost", None);
+        let fs = check_workflow(&wf);
+        assert!(fs.iter().any(|f| f.code == WF002), "{fs:?}");
+        // An initializer counts as a write.
+        let wf = wrap(vec![Step::new("out", StepKind::WriteLine { text: "g".into() })])
+            .var("g", Some("1"));
+        assert!(!check_workflow(&wf).iter().any(|f| f.code == WF002));
+    }
+
+    #[test]
+    fn wf003_flags_dead_write() {
+        let wf = wrap(vec![
+            assign("used", "1"),
+            assign("dead", "2"),
+            Step::new("out", StepKind::WriteLine { text: "used".into() }),
+        ])
+        .var("used", None)
+        .var("dead", None);
+        let fs = check_workflow(&wf);
+        let dead: Vec<_> = fs.iter().filter(|f| f.code == WF003).collect();
+        assert_eq!(dead.len(), 1, "{fs:?}");
+        assert!(dead[0].message.contains("'dead'"));
+    }
+
+    #[test]
+    fn wf004_flags_effectless_offload_target() {
+        let wf = wrap(vec![
+            Step::new("shout", StepKind::WriteLine { text: "'hi'".into() }).remotable(),
+        ]);
+        let fs = check_workflow(&wf);
+        assert!(fs.iter().any(|f| f.code == WF004), "{fs:?}");
+        // A remotable step that writes something is a fine target.
+        let wf = wrap(vec![
+            assign("x", "1").remotable(),
+            Step::new("out", StepKind::WriteLine { text: "x".into() }),
+        ])
+        .var("x", None);
+        assert!(!check_workflow(&wf).iter().any(|f| f.code == WF004));
+    }
+
+    #[test]
+    fn wf005_flags_constant_conditions() {
+        let s = Step::new(
+            "br",
+            StepKind::If {
+                condition: "1 < 2".into(),
+                then_branch: Box::new(assign("x", "1")),
+                else_branch: Some(Box::new(assign("x", "2"))),
+            },
+        );
+        let wf = Workflow::new("t", Step::new("main", StepKind::Sequence(vec![
+            s,
+            Step::new("out", StepKind::WriteLine { text: "x".into() }),
+        ])))
+        .var("x", None);
+        let fs = check_workflow(&wf);
+        let f = fs.iter().find(|f| f.code == WF005).expect("constant condition flagged");
+        assert!(f.message.contains("always true"), "{}", f.message);
+        assert!(f.message.contains("else branch is unreachable"), "{}", f.message);
+    }
+
+    #[test]
+    fn structural_findings_match_validate_order_and_messages() {
+        // First structural finding must be what validate() errors with.
+        let wf = wrap(vec![assign("x", "1").remotable().local_hardware()]).var("x", None);
+        let fs = structural_findings(&wf);
+        assert_eq!(codes(&fs), vec![WF101]);
+        let err = crate::workflow::validate::validate(&wf).unwrap_err();
+        assert!(format!("{err:#}").contains(&fs[0].message), "{err:#} vs {}", fs[0].message);
+    }
+
+    #[test]
+    fn render_includes_code_and_span() {
+        let src = "<Workflow Name=\"t\">\n  <Assign DisplayName=\"a\" To=\"x\" Value=\"1\"/>\n</Workflow>";
+        let mut f = Finding::new(WF003, Severity::Warning, "variable 'x' is dead");
+        f.step = Some("a".into());
+        f.pos = src.find("<Assign").unwrap();
+        let rendered = f.render(Some(src));
+        assert!(rendered.starts_with("warning[WF003]:"), "{rendered}");
+        assert!(rendered.contains("step 'a' at 2:3"), "{rendered}");
+    }
+
+    #[test]
+    fn config_unknown_key_gets_did_you_mean() {
+        let cfg = ConfigFile::parse("[migration]\nbugdet = 5.0\n").unwrap();
+        let fs = check_config(&cfg);
+        let f = fs.iter().find(|f| f.code == WF007).expect("unknown key flagged");
+        assert_eq!(f.severity, Severity::Error);
+        assert!(f.message.contains("bugdet"), "{}", f.message);
+        assert!(f.message.contains("did you mean `budget`?"), "{}", f.message);
+    }
+
+    #[test]
+    fn config_contradictions_are_wf006() {
+        let cfg = ConfigFile::parse("[migration]\nbudget = 0.0\nsteal = true\n").unwrap();
+        let fs = check_config(&cfg);
+        assert!(fs.iter().any(|f| f.code == WF006), "{fs:?}");
+
+        let cfg = ConfigFile::parse("[engine]\ndataflow = false\ndispatch = \"wavefront\"\n")
+            .unwrap();
+        let fs = check_config(&cfg);
+        assert!(fs.iter().any(|f| f.code == WF006), "{fs:?}");
+
+        let cfg = ConfigFile::parse("[engine]\ndataflow = true\ndispatch = \"wavefront\"\n")
+            .unwrap();
+        assert!(check_config(&cfg).is_empty());
+    }
+
+    #[test]
+    fn config_bad_values_are_wf008() {
+        let cfg = ConfigFile::parse("[migration]\npolicy = \"sometimes\"\n").unwrap();
+        let fs = check_config(&cfg);
+        assert!(fs.iter().any(|f| f.code == WF008), "{fs:?}");
+    }
+
+    #[test]
+    fn max_severity_drives_exit_status() {
+        assert_eq!(max_severity(&[]), None);
+        let w = Finding::new(WF003, Severity::Warning, "w");
+        let e = Finding::new(WF001, Severity::Error, "e");
+        assert_eq!(max_severity(&[w.clone()]), Some(Severity::Warning));
+        assert_eq!(max_severity(&[w, e]), Some(Severity::Error));
+    }
+}

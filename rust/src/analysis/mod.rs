@@ -1,0 +1,31 @@
+//! Whole-workflow static analysis and diagnostics (`emerald check`).
+//!
+//! Three layers, each consuming the one below:
+//!
+//! 1. [`effects`] — per-subtree **effect inference**: sound
+//!    may-read/may-write sets and a dual must-write set for every
+//!    [`crate::workflow::StepKind`], including `If`/`While` bodies
+//!    (the loop body's single analysis pass is its fixpoint). The
+//!    legacy [`crate::workflow::analysis::step_io`] is a thin wrapper
+//!    over [`effects::infer`], and [`crate::workflow::dag::Dag::build`]
+//!    uses the may sets to order branch-bearing steps only against
+//!    true hazards instead of treating them as opaque barriers.
+//! 2. [`lints`] — the **diagnostics engine**: stable `WF…` codes with
+//!    severities and source spans (captured by the XAML parser,
+//!    resolved via [`crate::xmlmini::line_col`]). Structural legality
+//!    (the paper's Properties 1–3 and general well-formedness) and
+//!    advisory effect lints share one implementation with
+//!    [`crate::workflow::validate::validate`], so `emerald run` and
+//!    `emerald check` can never disagree about what is legal.
+//! 3. [`validator`] — the **runtime access validator**: a debug/test
+//!    harness recording every store access a dataflow unit performs
+//!    and checking containment in the unit's static effect sets — the
+//!    soundness claim behind layer 1, continuously verified.
+
+pub mod effects;
+pub mod lints;
+pub mod validator;
+
+pub use effects::{infer, Effects};
+pub use lints::{check_config, check_workflow, max_severity, Finding, Severity};
+pub use validator::{AccessScope, AccessValidator};

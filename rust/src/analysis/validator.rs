@@ -1,0 +1,164 @@
+//! Runtime access validation: the dynamic check of the static story.
+//!
+//! The dataflow scheduler removes ordering edges wherever the effect
+//! analysis ([`super::effects`]) proves two units independent. That is
+//! only sound if the static may sets really do over-approximate every
+//! access a unit performs at runtime. An [`AccessValidator`] attached
+//! via [`crate::engine::Engine::with_validator`] checks exactly that:
+//! each dataflow unit executes inside an [`AccessScope`] holding its
+//! static sets, every store read/write the engine performs is reported
+//! to the scope, and any access outside the sets is recorded as a
+//! violation. Debug/test harnesses call [`AccessValidator::assert_clean`]
+//! after the run — the soundness claim, continuously checked (this
+//! generalizes the emission-sequence race check the dataflow property
+//! tests started with).
+//!
+//! Containment rules (why reads check against reads ∪ writes): the
+//! may-read set is flow-aware — a read definitely satisfied by an
+//! earlier write *inside the same unit* is dropped from `may_read`,
+//! but the variable then necessarily appears in `may_write`. Locals
+//! declared while the unit runs are registered via
+//! [`AccessScope::note_declare`] and exempt from both checks.
+//!
+//! Recording is non-fatal: a violation never aborts the run (the run's
+//! own behaviour is the evidence under test); it is surfaced when the
+//! harness asks.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex};
+
+/// Collects access-containment violations across one or more runs.
+#[derive(Debug, Default)]
+pub struct AccessValidator {
+    violations: Mutex<Vec<String>>,
+}
+
+impl AccessValidator {
+    /// Fresh validator, ready to hand to
+    /// [`crate::engine::Engine::with_validator`].
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Open a scope for one scheduled unit with its static effect sets.
+    pub fn scope(
+        self: &Arc<Self>,
+        unit: impl Into<String>,
+        reads: &BTreeSet<String>,
+        writes: &BTreeSet<String>,
+    ) -> AccessScope {
+        AccessScope {
+            validator: Arc::clone(self),
+            unit: unit.into(),
+            reads: reads.clone(),
+            writes: writes.clone(),
+            locals: Mutex::new(BTreeSet::new()),
+        }
+    }
+
+    /// All violations recorded so far.
+    pub fn violations(&self) -> Vec<String> {
+        self.violations.lock().unwrap().clone()
+    }
+
+    /// Panic with the full list if any access escaped its static sets.
+    pub fn assert_clean(&self) {
+        let v = self.violations();
+        assert!(v.is_empty(), "static effect sets violated at runtime:\n  {}", v.join("\n  "));
+    }
+
+    fn record(&self, msg: String) {
+        self.violations.lock().unwrap().push(msg);
+    }
+}
+
+/// One unit's runtime access checker (created by
+/// [`AccessValidator::scope`]; the engine threads it through the
+/// unit's execution context).
+#[derive(Debug)]
+pub struct AccessScope {
+    validator: Arc<AccessValidator>,
+    unit: String,
+    reads: BTreeSet<String>,
+    writes: BTreeSet<String>,
+    /// Variables declared inside the unit while it runs; they never
+    /// appear in the static sets (locals don't escape) and are exempt.
+    locals: Mutex<BTreeSet<String>>,
+}
+
+impl AccessScope {
+    /// A variable was declared inside the unit's subtree.
+    pub fn note_declare(&self, name: &str) {
+        self.locals.lock().unwrap().insert(name.to_string());
+    }
+
+    /// The unit read `name` from the store.
+    pub fn note_read(&self, name: &str) {
+        if !self.reads.contains(name)
+            && !self.writes.contains(name)
+            && !self.locals.lock().unwrap().contains(name)
+        {
+            self.validator.record(format!(
+                "unit '{}' read '{name}' outside its static may-read/may-write sets",
+                self.unit
+            ));
+        }
+    }
+
+    /// The unit wrote `name` to the store.
+    pub fn note_write(&self, name: &str) {
+        if !self.writes.contains(name) && !self.locals.lock().unwrap().contains(name) {
+            self.validator.record(format!(
+                "unit '{}' wrote '{name}' outside its static may-write set",
+                self.unit
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(items: &[&str]) -> BTreeSet<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn contained_accesses_are_clean() {
+        let v = AccessValidator::new();
+        let scope = v.scope("u0", &names(&["a"]), &names(&["b"]));
+        scope.note_read("a");
+        scope.note_write("b");
+        // Flow-aware reads: a killed-then-read variable lives in the
+        // write set only.
+        scope.note_read("b");
+        // Locals declared at runtime are exempt from both checks.
+        scope.note_declare("tmp");
+        scope.note_read("tmp");
+        scope.note_write("tmp");
+        assert!(v.violations().is_empty(), "{:?}", v.violations());
+        v.assert_clean();
+    }
+
+    #[test]
+    fn escaping_accesses_are_recorded() {
+        let v = AccessValidator::new();
+        let scope = v.scope("u1", &names(&["a"]), &names(&[]));
+        scope.note_write("a"); // read-only in the static sets
+        scope.note_read("ghost");
+        let viols = v.violations();
+        assert_eq!(viols.len(), 2, "{viols:?}");
+        assert!(viols[0].contains("wrote 'a'"), "{viols:?}");
+        assert!(viols[1].contains("read 'ghost'"), "{viols:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "static effect sets violated")]
+    fn assert_clean_panics_on_violations() {
+        let v = AccessValidator::new();
+        let scope = v.scope("u2", &names(&[]), &names(&[]));
+        scope.note_write("x");
+        v.assert_clean();
+    }
+}

@@ -157,6 +157,12 @@ impl Series {
             }
             println!();
         }
+        println!("SERIES_JSON {}", self.to_json());
+    }
+
+    /// The series as a JSON value (what `print` emits after
+    /// `SERIES_JSON`, and what [`Trajectory`] records).
+    pub fn to_json(&self) -> Value {
         let rows_json = Value::Arr(
             self.rows
                 .iter()
@@ -177,14 +183,55 @@ impl Series {
                 })
                 .collect(),
         );
-        println!(
-            "SERIES_JSON {}",
-            Value::obj([
-                ("title", Value::str(self.title.clone())),
-                ("unit", Value::str(self.unit.clone())),
-                ("rows", rows_json),
-            ])
-        );
+        Value::obj([
+            ("title", Value::str(self.title.clone())),
+            ("unit", Value::str(self.unit.clone())),
+            ("rows", rows_json),
+        ])
+    }
+}
+
+/// A whole figure bench's machine-readable trajectory: every
+/// [`Series`] the bench prints is also recorded here, and the result
+/// is written as one pretty-printed JSON document (committed as
+/// `BENCH_<fig>.json` at the crate root, so per-PR regressions show up
+/// as ordinary diffs instead of numbers scrolling by in CI logs).
+pub struct Trajectory {
+    bench: String,
+    series: Vec<Value>,
+}
+
+impl Trajectory {
+    /// New trajectory for the named figure bench.
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), series: Vec::new() }
+    }
+
+    /// Record one series (call right next to `Series::print`).
+    pub fn record(&mut self, series: &Series) {
+        self.series.push(series.to_json());
+    }
+
+    /// The whole trajectory as a pretty-printed JSON document.
+    pub fn to_json_string(&self) -> String {
+        let doc = Value::obj([
+            ("bench", Value::str(self.bench.clone())),
+            (
+                "note",
+                Value::str(format!(
+                    "generated by: cargo bench --bench {}_scheduler",
+                    self.bench
+                )),
+            ),
+            ("series", Value::Arr(self.series.clone())),
+        ]);
+        crate::jsonmini::to_string_pretty(&doc)
+    }
+
+    /// Write the document to `path` (with a trailing newline, so the
+    /// committed file is diff-friendly).
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_string() + "\n")
     }
 }
 
@@ -211,6 +258,20 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(1500)), "1.5µs");
         assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn trajectory_round_trips_through_json() {
+        let mut s = Series::new("Fig X", "seconds");
+        s.row("baseline", vec![("sim".into(), 1.5)]);
+        let mut t = Trajectory::new("figx");
+        t.record(&s);
+        let doc = crate::jsonmini::parse(&t.to_json_string()).unwrap();
+        let Value::Obj(top) = &doc else { panic!("object expected") };
+        assert_eq!(top.get("bench"), Some(&Value::str("figx")));
+        let Some(Value::Arr(series)) = top.get("series") else { panic!("series expected") };
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0], s.to_json());
     }
 
     #[test]

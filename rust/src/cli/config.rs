@@ -468,6 +468,146 @@ impl ConfigFile {
             other => bail!("[migration] codec must be raw|deflate, got {other:?}"),
         }
     }
+
+    /// Every key each section accepts. The accessors above ignore
+    /// anything else, so without a strict pass a misspelled key (e.g.
+    /// `bugdet = 5.0`) silently falls back to its default — a run that
+    /// was meant to be capped runs uncapped.
+    const KNOWN_KEYS: &'static [(&'static str, &'static [&'static str])] = &[
+        (
+            "platform",
+            &[
+                "local_nodes",
+                "local_speed",
+                "tiers",
+                "cloud_nodes",
+                "cloud_speed",
+                "cloud_price",
+                "wan_mbits",
+                "wan_latency_ms",
+                "schedule",
+            ],
+        ),
+        ("engine", &["dataflow", "dispatch"]),
+        (
+            "migration",
+            &[
+                "policy",
+                "decision",
+                "attempts",
+                "local_fallback",
+                "admission",
+                "steal",
+                "objective",
+                "weight",
+                "budget",
+                "decay_after",
+                "signing_key",
+                "codec",
+            ],
+        ),
+    ];
+
+    /// Does the file set `[section] key` explicitly?
+    pub fn contains(&self, section: &str, key: &str) -> bool {
+        self.get(section, key).is_some()
+    }
+
+    /// All unknown sections and unknown keys inside known sections,
+    /// each with a nearest-known did-you-mean suggestion. Empty for a
+    /// clean file. [`ConfigFile::check_keys`] turns the first entry
+    /// into a hard error; `emerald check` reports all of them as
+    /// lint findings.
+    pub fn unknown_entries(&self) -> Vec<UnknownKey> {
+        let mut out = Vec::new();
+        let section_names: Vec<&str> =
+            Self::KNOWN_KEYS.iter().map(|(s, _)| *s).collect();
+        for (section, keys) in &self.sections {
+            match Self::KNOWN_KEYS.iter().find(|(s, _)| s == section) {
+                None => out.push(UnknownKey {
+                    section: section.clone(),
+                    key: None,
+                    suggestion: nearest(section, &section_names),
+                }),
+                Some((_, known)) => {
+                    for key in keys.keys() {
+                        if !known.contains(&key.as_str()) {
+                            out.push(UnknownKey {
+                                section: section.clone(),
+                                key: Some(key.clone()),
+                                suggestion: nearest(key, known),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reject unknown sections/keys with a did-you-mean diagnostic.
+    /// Called on every CLI config load, so a typo fails fast instead
+    /// of silently running with defaults.
+    pub fn check_keys(&self) -> Result<()> {
+        if let Some(bad) = self.unknown_entries().into_iter().next() {
+            bail!("{}", bad.message());
+        }
+        Ok(())
+    }
+}
+
+/// One unknown config entry found by [`ConfigFile::unknown_entries`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownKey {
+    /// The section the entry appeared in (or the unknown section
+    /// name itself when `key` is `None`).
+    pub section: String,
+    /// The unknown key, or `None` when the whole section is unknown.
+    pub key: Option<String>,
+    /// Closest known key/section name, when one is plausibly close.
+    pub suggestion: Option<String>,
+}
+
+impl UnknownKey {
+    /// Human-readable one-line diagnostic.
+    pub fn message(&self) -> String {
+        let mut msg = match &self.key {
+            Some(key) => format!("[{}] unknown key `{key}`", self.section),
+            None => format!("unknown config section [{}]", self.section),
+        };
+        if let Some(s) = &self.suggestion {
+            msg.push_str(&format!("; did you mean `{s}`?"));
+        }
+        msg
+    }
+}
+
+/// Closest candidate within a small edit distance (did-you-mean).
+fn nearest(word: &str, candidates: &[&str]) -> Option<String> {
+    let budget = 2.max(word.len() / 3);
+    candidates
+        .iter()
+        .map(|c| (levenshtein(word, c), *c))
+        .filter(|(d, _)| *d <= budget)
+        .min()
+        .map(|(_, c)| c.to_string())
+}
+
+/// Classic two-row Levenshtein edit distance.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]

@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::analysis::{AccessScope, AccessValidator};
 use crate::cloud::Node;
 use crate::expr::{self, Value};
 use crate::workflow::{analysis, dag, Step, StepKind, Workflow};
@@ -299,6 +300,10 @@ pub struct Engine {
     dataflow: bool,
     /// Which dispatcher dataflow mode uses (see [`DataflowDispatch`]).
     dispatch: DataflowDispatch,
+    /// Debug/test harness: record every store access of each dataflow
+    /// unit and check containment in the unit's static effect sets
+    /// (see [`Self::with_validator`]).
+    validator: Option<Arc<AccessValidator>>,
     verbose: bool,
 }
 
@@ -324,6 +329,10 @@ struct Ctx<'e> {
     /// Node every activity in this context executes on (the offload
     /// lease's VM on the cloud side); None = tier round-robin.
     pin: Option<&'e Arc<Node>>,
+    /// Access-validation scope of the dataflow unit this context
+    /// belongs to (None outside validated dataflow units): every store
+    /// read/write/declare is reported to it.
+    scope: Option<&'e AccessScope>,
 }
 
 impl<'e> Ctx<'e> {
@@ -336,6 +345,7 @@ impl<'e> Ctx<'e> {
             seq: self.seq,
             dags: self.dags,
             pin: self.pin,
+            scope: self.scope,
         }
     }
 
@@ -347,8 +357,14 @@ impl<'e> Ctx<'e> {
     fn eval(&self, src: &str) -> Result<Value> {
         let store = self.store;
         let frame = self.frame;
-        expr::eval_str(src, &move |name| store.lock().unwrap().lookup(frame, name))
-            .with_context(|| format!("evaluating {src:?}"))
+        let scope = self.scope;
+        expr::eval_str(src, &move |name| {
+            if let Some(sc) = scope {
+                sc.note_read(name);
+            }
+            store.lock().unwrap().lookup(frame, name)
+        })
+        .with_context(|| format!("evaluating {src:?}"))
     }
 }
 
@@ -362,6 +378,7 @@ impl Engine {
             tier: crate::cloud::NodeKind::Local,
             dataflow: false,
             dispatch: DataflowDispatch::default(),
+            validator: None,
             verbose: false,
         }
     }
@@ -377,7 +394,11 @@ impl Engine {
     /// ([`crate::workflow::dag`]) instead of strictly in order.
     /// Independent siblings run concurrently on a bounded worker pool
     /// (independent offload units lease distinct cloud VMs at the same
-    /// time), `If`/`While` children stay opaque barriers, and
+    /// time), `If`/`While` children are ordered by the same hazard
+    /// rule as everything else — the effect analysis
+    /// ([`crate::analysis::effects`]) folds conditions, branches and
+    /// loop bodies into their may sets, so a branch whose writes are
+    /// disjoint from a neighbor's footprint overlaps it — and
     /// simulated time is the DAG's critical path instead of the
     /// sequential sum. Dispatch is dependency-driven by default — a
     /// unit starts the instant its last dependency finishes — with the
@@ -406,6 +427,20 @@ impl Engine {
     /// No effect unless dataflow mode is on.
     pub fn with_dispatch(mut self, dispatch: DataflowDispatch) -> Self {
         self.dispatch = dispatch;
+        self
+    }
+
+    /// Attach a runtime access validator (debug/test harness): every
+    /// dataflow unit executes inside an
+    /// [`crate::analysis::AccessScope`] holding its static effect
+    /// sets, and every store read/write the engine performs on the
+    /// unit's behalf is checked for containment. Violations are
+    /// recorded, never fatal; call
+    /// [`crate::analysis::AccessValidator::assert_clean`] after the
+    /// run. This is the dynamic check of the soundness claim the
+    /// barrier-free DAG scheduling rests on.
+    pub fn with_validator(mut self, validator: Arc<AccessValidator>) -> Self {
+        self.validator = Some(validator);
         self
     }
 
@@ -448,6 +483,7 @@ impl Engine {
             seq: &seq,
             dags: &dags,
             pin: None,
+            scope: None,
         };
 
         // Workflow-level variables.
@@ -562,6 +598,7 @@ impl Engine {
             seq: &seq,
             dags: &dags,
             pin: node.as_ref(),
+            scope: None,
         };
         let sim = self.exec(step, &ctx)?;
 
@@ -587,6 +624,9 @@ impl Engine {
                 // Init expressions evaluate in the enclosing scope.
                 let init = v.init.as_deref().map(|src| ctx.eval(src)).transpose()?;
                 ctx.store.lock().unwrap().declare(child, &v.name, init)?;
+                if let Some(sc) = ctx.scope {
+                    sc.note_declare(&v.name);
+                }
             }
             child
         };
@@ -602,6 +642,9 @@ impl Engine {
             }
             StepKind::Assign { to, value } => {
                 let v = ctx.eval(value)?;
+                if let Some(sc) = ctx.scope {
+                    sc.note_write(to);
+                }
                 ctx.store
                     .lock()
                     .unwrap()
@@ -791,6 +834,24 @@ impl Engine {
         let unit_lines: Vec<Mutex<Vec<String>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
         let unit_events: Vec<Mutex<Vec<(u64, Event)>>> =
             (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        // With a validator attached, each unit gets an access scope
+        // holding its static effect sets; the unit's whole subtree
+        // (including nested schedules) reports store accesses to it.
+        let unit_scopes: Option<Vec<AccessScope>> = self.validator.as_ref().map(|v| {
+            graph
+                .units
+                .iter()
+                .enumerate()
+                .map(|(j, u)| {
+                    let target = &children[u.step];
+                    v.scope(
+                        format!("{name}[{j}]:'{}'", target.display_name),
+                        &u.io.reads,
+                        &u.io.writes,
+                    )
+                })
+                .collect()
+        });
         // One unit's execution, recording into its private buffers.
         // Captures only shared references, so the closure is Copy and
         // can be called from worker threads or inline.
@@ -805,6 +866,10 @@ impl Engine {
                 seq: ctx.seq,
                 dags: ctx.dags,
                 pin: ctx.pin,
+                // A nested schedule's narrower per-unit scope replaces
+                // the enclosing unit's (its sets are what the inner
+                // edges were derived from).
+                scope: unit_scopes.as_ref().map(|s| &s[j]).or(ctx.scope),
             };
             if unit.offload {
                 self.migrate_or_local(target, &uctx)
@@ -852,6 +917,9 @@ impl Engine {
         {
             let s = ctx.store.lock().unwrap();
             for name in &io.reads {
+                if let Some(sc) = ctx.scope {
+                    sc.note_read(name);
+                }
                 match s.lookup(ctx.frame, name) {
                     Some(v) => {
                         inputs.insert(name.clone(), v);
@@ -893,6 +961,9 @@ impl Engine {
         {
             let mut s = ctx.store.lock().unwrap();
             for (name, value) in outcome.outputs {
+                if let Some(sc) = ctx.scope {
+                    sc.note_write(&name);
+                }
                 s.set(ctx.frame, &name, value).with_context(|| {
                     format!("re-integrating output '{name}' of '{}'", target.display_name)
                 })?;
@@ -962,6 +1033,9 @@ impl Engine {
             let v = out_vals.get(param).with_context(|| {
                 format!("activity '{activity}' did not produce output '{param}'")
             })?;
+            if let Some(sc) = ctx.scope {
+                sc.note_write(var);
+            }
             ctx.store.lock().unwrap().set(ctx.frame, var, v.clone())?;
         }
         ctx.event(Event::ActivityFinished {

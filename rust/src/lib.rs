@@ -35,7 +35,14 @@
 //! (§3.4), [`cloud`] (§4 testbed, generalized to heterogeneous cloud
 //! tiers), [`at`] (§4 application).
 //!
-//! Beyond the paper: [`scheduler`] — load-, speed- and **price**-aware
+//! Beyond the paper: [`analysis`] — whole-workflow static analysis
+//! behind `emerald check`: per-subtree may/must effect inference
+//! (including `If`/`While` bodies) that also drives hazard-precise
+//! dataflow scheduling, a lint engine with stable `WF…` codes and
+//! source spans shared with the run-path validator, and a runtime
+//! access validator asserting the static sets over-approximate every
+//! real store access (see `docs/ANALYSIS.md` for the lint catalog).
+//! [`scheduler`] — load-, speed- and **price**-aware
 //! cloud-VM placement (earliest estimated finish time over mixed
 //! tiers, under a configurable time-vs-money objective) with per-node
 //! lease/occupancy tracking, a queueing-delay model, idle-VM work
@@ -78,7 +85,12 @@
 //! ```
 
 #![warn(missing_docs)]
+// The crate is safe Rust throughout; the one exception is the scoped
+// byte-transmute pair in `runtime::tensor`, which carries its own
+// `#[allow]` and safety comments.
+#![deny(unsafe_code)]
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod cloud;

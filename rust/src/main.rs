@@ -3,6 +3,10 @@
 //! Subcommands:
 //!
 //! * `validate <wf.xml>` — check the three legal-partition properties.
+//! * `check <wf.xml> [--platform cfg.toml]` — the full linter: all
+//!   structural checks plus the effect-analysis lints (races, dead
+//!   writes, effectless offloads, constant conditions) and, with
+//!   `--platform`, config diagnostics. Exits nonzero on errors.
 //! * `partition <wf.xml> [--out out.xml]` — emit the modified workflow
 //!   with migration points (paper Fig 5).
 //! * `run <wf.xml> [--offload] [--batch] [--policy mdss|bundle]
@@ -19,6 +23,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use emerald::analysis::{self, Severity};
 use emerald::cli::Args;
 use emerald::cloud::Platform;
 use emerald::engine::{ActivityRegistry, Engine, Services};
@@ -35,6 +40,7 @@ emerald — scientific workflows with cloud offloading (Qian 2017 reproduction)
 
 USAGE:
   emerald validate <workflow.xml>
+  emerald check <workflow.xml> [--platform <file>]
   emerald partition <workflow.xml> [--out <file>] [--batch] [--dataflow]
   emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--policy mdss|bundle] [--tcp <addr>]
   emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--alpha0 X]
@@ -68,10 +74,17 @@ fn policy_of(args: &Args) -> Result<DataPolicy> {
 
 /// `--platform <file>`: load a ConfigFile (empty = all defaults).
 /// Commands load it once and thread it through `partition_opts`,
-/// `services_of` and `build_engine`.
+/// `services_of` and `build_engine`. Unknown sections/keys are
+/// rejected here with a did-you-mean suggestion, so a typo like
+/// `bugdet = 5.0` fails the run instead of silently running
+/// unbudgeted.
 fn config_of(args: &Args) -> Result<emerald::cli::ConfigFile> {
     match args.options.get("platform") {
-        Some(path) => emerald::cli::ConfigFile::load(path),
+        Some(path) => {
+            let cfg = emerald::cli::ConfigFile::load(path)?;
+            cfg.check_keys().with_context(|| format!("in config file {path}"))?;
+            Ok(cfg)
+        }
         None => Ok(emerald::cli::ConfigFile::default()),
     }
 }
@@ -103,6 +116,44 @@ fn cmd_validate(args: &Args) -> Result<()> {
         wf.size(),
         remotable.len()
     );
+    Ok(())
+}
+
+/// `emerald check`: run every workflow lint (and, with `--platform`,
+/// every config lint), print compiler-style diagnostics with source
+/// spans, and exit nonzero when any finding is error-severity.
+fn cmd_check(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("missing <workflow.xml> argument")?;
+    let source = std::fs::read_to_string(path)
+        .with_context(|| format!("reading workflow file {path}"))?;
+    let wf = xaml::parse(&source)?;
+
+    let mut findings = analysis::check_workflow(&wf);
+    if let Some(cfg_path) = args.options.get("platform") {
+        let cfg = emerald::cli::ConfigFile::load(cfg_path)?;
+        findings.extend(analysis::check_config(&cfg));
+    }
+
+    for f in &findings {
+        println!("{}\n", f.render(Some(&source)));
+    }
+    let errors = findings.iter().filter(|f| f.severity == Severity::Error).count();
+    let warnings = findings.len() - errors;
+    if findings.is_empty() {
+        println!(
+            "OK: workflow '{}' ({} steps) is clean; no findings",
+            wf.name,
+            wf.size()
+        );
+    } else {
+        println!("{} finding(s): {errors} error(s), {warnings} warning(s)", findings.len());
+    }
+    if analysis::max_severity(&findings) == Some(Severity::Error) {
+        bail!("check failed with {errors} error(s)");
+    }
     Ok(())
 }
 
@@ -278,6 +329,7 @@ fn main() {
     let args = Args::from_env(&["offload", "verbose", "batch", "dataflow"]);
     let result = match args.subcommand() {
         Some("validate") => cmd_validate(&args),
+        Some("check") => cmd_check(&args),
         Some("partition") => cmd_partition(&args),
         Some("run") => cmd_run(&args),
         Some("at") => cmd_at(&args),

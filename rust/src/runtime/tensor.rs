@@ -92,6 +92,9 @@ impl HostTensor {
     /// boundary goes through here. On little-endian targets (all our
     /// platforms) this is a single memcpy of the f32 buffer; the
     /// per-element encode is kept as the big-endian fallback.
+    // Scoped exception to the crate-wide `deny(unsafe_code)`: the
+    // little-endian fast path reinterprets the f32 buffer as bytes.
+    #[allow(unsafe_code)]
     pub fn to_le_bytes(&self) -> Vec<u8> {
         #[cfg(target_endian = "little")]
         {
@@ -111,6 +114,9 @@ impl HostTensor {
     }
 
     /// Deserialize from little-endian bytes with a known shape.
+    // Scoped exception to the crate-wide `deny(unsafe_code)` (see
+    // `to_le_bytes`).
+    #[allow(unsafe_code)]
     pub fn from_le_bytes(dims: &[usize], bytes: &[u8]) -> Result<Self> {
         let n: usize = dims.iter().product();
         if bytes.len() != n * 4 {

@@ -1,4 +1,5 @@
-//! Static analysis over workflow trees: read/write-set computation.
+//! Read/write-set computation over workflow trees — the legacy facade
+//! over [`crate::analysis::effects`].
 //!
 //! Used by [`crate::workflow::validate`] to enforce Property 2, and by
 //! the [`crate::migration`] packager to decide which variable values to
@@ -16,14 +17,19 @@
 //! next) never cross the WAN. Writes under `If`/`While` are
 //! conditional, so they never suppress later reads; `Parallel`
 //! branches run concurrently, so siblings never suppress each other.
+//!
+//! [`step_io`] is a thin wrapper over [`crate::analysis::effects::infer`]:
+//! its reads/writes are exactly the inferred **may** sets, so every
+//! consumer — packager, partitioner, DAG builder, lints, the runtime
+//! access validator — shares one implementation of the semantics
+//! above. The must-write half of the summary is available from
+//! [`crate::analysis::Effects`] directly.
 
 use std::collections::BTreeSet;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::expr;
-
-use super::{Step, StepKind};
+use super::Step;
 
 /// The externally-visible variable footprint of a step subtree.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -42,135 +48,12 @@ impl StepIo {
     }
 }
 
-fn expr_vars(src: &str) -> Result<BTreeSet<String>> {
-    Ok(expr::parse(src)
-        .with_context(|| format!("in expression {src:?}"))?
-        .free_vars()
-        .into_iter()
-        .collect())
-}
-
 /// Compute the read/write sets of a step subtree, excluding variables
 /// declared inside the subtree itself (those are internal and never
 /// cross the migration boundary).
 pub fn step_io(step: &Step) -> Result<StepIo> {
-    let mut io = StepIo::default();
-    collect(step, &mut BTreeSet::new(), &mut BTreeSet::new(), &mut io)?;
-    Ok(io)
-}
-
-/// Variables a step writes unconditionally when it is an unconditional
-/// leaf at its sequence level; `None` for containers and control flow
-/// (whose writes may not happen).
-fn definite_leaf_writes(step: &Step) -> Option<Vec<&str>> {
-    match &step.kind {
-        StepKind::Assign { to, .. } => Some(vec![to.as_str()]),
-        StepKind::InvokeActivity { outputs, .. } => {
-            Some(outputs.iter().map(|(_, var)| var.as_str()).collect())
-        }
-        _ => None,
-    }
-}
-
-/// `local` holds variables declared inside the analyzed subtree;
-/// `defined` holds variables definitely written by earlier siblings of
-/// the sequence currently being walked. Both suppress reads; only
-/// `local` suppresses writes.
-fn collect(
-    step: &Step,
-    local: &mut BTreeSet<String>,
-    defined: &mut BTreeSet<String>,
-    io: &mut StepIo,
-) -> Result<()> {
-    // Variables declared at this step: init expressions evaluate in the
-    // *enclosing* scope, so their free vars count as reads first.
-    for v in &step.variables {
-        if let Some(init) = &v.init {
-            for name in expr_vars(init)? {
-                if !local.contains(&name) && !defined.contains(&name) {
-                    io.reads.insert(name);
-                }
-            }
-        }
-    }
-    let added: Vec<String> = step
-        .variables
-        .iter()
-        .filter(|v| local.insert(v.name.clone()))
-        .map(|v| v.name.clone())
-        .collect();
-
-    let read = |src: &str,
-                local: &BTreeSet<String>,
-                defined: &BTreeSet<String>,
-                io: &mut StepIo|
-     -> Result<()> {
-        for name in expr_vars(src)? {
-            if !local.contains(&name) && !defined.contains(&name) {
-                io.reads.insert(name);
-            }
-        }
-        Ok(())
-    };
-
-    match &step.kind {
-        StepKind::Assign { to, value } => {
-            read(value, local, defined, io)?;
-            if !local.contains(to) {
-                io.writes.insert(to.clone());
-            }
-        }
-        StepKind::WriteLine { text } => read(text, local, defined, io)?,
-        StepKind::InvokeActivity { inputs, outputs, .. } => {
-            for (_, e) in inputs {
-                read(e, local, defined, io)?;
-            }
-            for (_, var) in outputs {
-                if !local.contains(var) {
-                    io.writes.insert(var.clone());
-                }
-            }
-        }
-        StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
-            read(condition, local, defined, io)?;
-        }
-        _ => {}
-    }
-
-    match &step.kind {
-        StepKind::Sequence(children) => {
-            // Straight-line dataflow: a definite write at this level
-            // suppresses later sibling reads. The kills are scoped to
-            // this sequence (conservative: they don't leak upward).
-            let mut killed_here: Vec<String> = Vec::new();
-            for c in children {
-                collect(c, local, defined, io)?;
-                if let Some(writes) = definite_leaf_writes(c) {
-                    for w in writes {
-                        if !local.contains(w) && defined.insert(w.to_string()) {
-                            killed_here.push(w.to_string());
-                        }
-                    }
-                }
-            }
-            for name in killed_here {
-                defined.remove(&name);
-            }
-        }
-        _ => {
-            // Parallel branches and control-flow bodies see the kills
-            // established by preceding sequence siblings, but never add
-            // to them (their own execution is concurrent/conditional).
-            for c in step.children() {
-                collect(c, local, defined, io)?;
-            }
-        }
-    }
-
-    for name in added {
-        local.remove(&name);
-    }
-    Ok(())
+    let fx = crate::analysis::effects::infer(step)?;
+    Ok(StepIo { reads: fx.may_read, writes: fx.may_write })
 }
 
 #[cfg(test)]

@@ -21,10 +21,19 @@
 //! **write→read** (`j` reads a variable `i` writes), **write→write**
 //! (both write it), and **read→write** (`j` overwrites a variable `i`
 //! still reads). `Parallel` blocks are the fully-independent
-//! degenerate case (no pairing, no edges). `If`/`While` children stay
-//! **opaque barrier nodes** — ordered against every other unit —
-//! because their bodies run a data-dependent number of times and cheap
-//! conservatism beats a subtle reordering bug. A `MigrationPoint`
+//! degenerate case (no pairing, no edges). `If`/`While` children are
+//! ordered by the same hazard rule as everything else: the effect
+//! analysis ([`crate::analysis::effects`]) folds their conditions,
+//! branches and loop bodies into sound may-read/may-write sets, so a
+//! branch-bearing step serializes only against siblings it actually
+//! interferes with — an `If` whose branches write disjoint variables
+//! no longer blocks unrelated neighbors the way the old opaque-barrier
+//! rule did. (Soundness: every runtime access of the subtree lies
+//! inside its may sets no matter which branch runs or how many
+//! iterations execute, so hazard edges over the may sets order every
+//! true interference; the runtime
+//! [`crate::analysis::AccessValidator`] checks the containment claim
+//! continuously under the dataflow property tests.) A `MigrationPoint`
 //! fuses with the step it precedes into a single *offload unit*,
 //! mirroring exactly the sequential engine's pairing, so offload
 //! units that become ready together take their cloud leases
@@ -48,10 +57,10 @@ pub struct Unit {
     /// A `MigrationPoint` precedes the step: executing this unit goes
     /// through the migration manager.
     pub offload: bool,
-    /// Opaque barrier (`If`/`While`): ordered against every other
-    /// unit, before and after.
-    pub barrier: bool,
-    /// External read/write sets of the unit's subtree.
+    /// External read/write sets of the unit's subtree. For `If`/`While`
+    /// units these cover the condition plus every branch / the loop
+    /// body (see [`crate::analysis::effects`]), so hazard edges over
+    /// them are sound without an opaque-barrier rule.
     pub io: StepIo,
 }
 
@@ -92,17 +101,11 @@ impl Dag {
                 units.push(Unit {
                     step: i + 1,
                     offload: true,
-                    barrier: is_barrier(target),
                     io: analysis::step_io(target)?,
                 });
                 i += 2;
             } else {
-                units.push(Unit {
-                    step: i,
-                    offload: false,
-                    barrier: is_barrier(child),
-                    io: analysis::step_io(child)?,
-                });
+                units.push(Unit { step: i, offload: false, io: analysis::step_io(child)? });
                 i += 1;
             }
         }
@@ -206,13 +209,6 @@ pub fn dependent_runs(steps: &[Step]) -> Result<Vec<(usize, usize)>> {
     Ok(runs)
 }
 
-/// `If`/`While` stay opaque barriers: their bodies execute a
-/// data-dependent number of times, so they are ordered against every
-/// sibling instead of being analyzed for overlap.
-fn is_barrier(step: &Step) -> bool {
-    matches!(step.kind, StepKind::If { .. } | StepKind::While { .. })
-}
-
 fn intersects(a: &BTreeSet<String>, b: &BTreeSet<String>) -> bool {
     // The sets are tiny (one step's variable footprint): scan the
     // smaller against the larger.
@@ -228,9 +224,11 @@ fn io_conflicts(a: &StepIo, b: &StepIo) -> bool {
         || intersects(&a.reads, &b.writes) // read -> write
 }
 
-/// Must the later sibling `b` wait for `a`?
+/// Must the later sibling `b` wait for `a`? Pure hazard check over the
+/// units' may sets — control-flow units carry their branch/body
+/// effects in `io`, so no extra barrier rule is needed.
 fn conflicts(a: &Unit, b: &Unit) -> bool {
-    a.barrier || b.barrier || io_conflicts(&a.io, &b.io)
+    io_conflicts(&a.io, &b.io)
 }
 
 #[cfg(test)]
@@ -269,21 +267,61 @@ mod tests {
         assert_eq!(dag.deps[3], Vec::<usize>::new(), "unrelated step is free");
     }
 
-    #[test]
-    fn if_and_while_are_barriers() {
-        let cond = Step::new(
+    fn iff(cond: &str, then: Step, els: Option<Step>) -> Step {
+        Step::new(
             "maybe",
             StepKind::If {
-                condition: "a > 0".into(),
-                then_branch: Box::new(assign("b", "1")),
-                else_branch: None,
+                condition: cond.into(),
+                then_branch: Box::new(then),
+                else_branch: els.map(Box::new),
             },
-        );
-        let children = [assign("x", "1"), cond, assign("y", "2")];
+        )
+    }
+
+    #[test]
+    fn control_flow_orders_only_on_true_hazards() {
+        // The If reads a and may write b; x and y are unrelated, so the
+        // old opaque-barrier rule's two edges vanish entirely.
+        let children = [assign("x", "1"), iff("a > 0", assign("b", "1"), None), assign("y", "2")];
         let dag = Dag::build(&children, false).unwrap();
-        assert!(dag.units[1].barrier);
-        assert_eq!(dag.deps[1], vec![0], "barrier waits for everything before it");
-        assert_eq!(dag.deps[2], vec![1], "everything after waits for the barrier");
+        assert_eq!(dag.edge_count(), 0, "no interference, no edges");
+        // Real hazards through control flow still serialize: the If
+        // reads what 0 writes and may write what 2 reads.
+        let children =
+            [assign("a", "1"), iff("a > 0", assign("b", "1"), None), assign("c", "b")];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.deps[1], vec![0], "condition read waits for its writer");
+        assert_eq!(dag.deps[2], vec![1], "reader waits for the conditional writer");
+    }
+
+    #[test]
+    fn disjoint_branch_if_beats_the_opaque_barrier() {
+        // [a=1 ; If (reads a) {writes b | writes c} ; d=2]: the opaque
+        // barrier ordered 0→1 and 1→2 (2 edges); hazard analysis keeps
+        // only the true condition dependence 0→1.
+        let children = [
+            assign("a", "1"),
+            iff("a > 0", assign("b", "1"), Some(assign("c", "1"))),
+            assign("d", "2"),
+        ];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.deps[1], vec![0]);
+        assert_eq!(dag.deps[2], Vec::<usize>::new(), "disjoint-write sibling is free");
+        assert_eq!(dag.edge_count(), 1, "strictly fewer than the 2 barrier edges");
+    }
+
+    #[test]
+    fn while_bodies_carry_their_effects() {
+        let body = assign("i", "i + 1");
+        let lp = Step::new(
+            "loop",
+            StepKind::While { condition: "i < n".into(), body: Box::new(body), max_iters: 99 },
+        );
+        let children = [assign("i", "0"), lp, assign("m", "i"), assign("z", "7")];
+        let dag = Dag::build(&children, false).unwrap();
+        assert_eq!(dag.deps[1], vec![0], "loop reads/writes i");
+        assert_eq!(dag.deps[2], vec![0, 1], "post-loop reader waits for the loop");
+        assert_eq!(dag.deps[3], Vec::<usize>::new(), "unrelated sibling overlaps the loop");
     }
 
     #[test]

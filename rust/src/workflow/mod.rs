@@ -34,7 +34,7 @@ pub struct VarDecl {
 }
 
 /// One computation step.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Step {
     /// Preorder index within the workflow (see [`Workflow::renumber`]).
     pub id: StepId,
@@ -50,6 +50,23 @@ pub struct Step {
     pub variables: Vec<VarDecl>,
     /// The step's behaviour.
     pub kind: StepKind,
+    /// Byte offset of the defining element in the source XAML (0 for
+    /// builder-constructed steps). Used by [`crate::analysis`] lints
+    /// to report source spans; ignored by equality so serialization
+    /// round-trips compare equal.
+    pub pos: usize,
+}
+
+/// Structural equality: `pos` is source provenance, not behaviour.
+impl PartialEq for Step {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+            && self.display_name == other.display_name
+            && self.remotable == other.remotable
+            && self.requires_local_hardware == other.requires_local_hardware
+            && self.variables == other.variables
+            && self.kind == other.kind
+    }
 }
 
 /// Step behaviours.
@@ -132,6 +149,7 @@ impl Step {
             requires_local_hardware: false,
             variables: Vec::new(),
             kind,
+            pos: 0,
         }
     }
 

@@ -9,10 +9,18 @@
 //!   them.
 //! * **Property 3** — nested offloading is not allowed: once suspended
 //!   for offloading, the workflow must resume before suspending again.
+//!
+//! The checks themselves live in [`crate::analysis::lints`] (codes
+//! `WF100`–`WF103`); [`validate`] is a thin wrapper that fails on the
+//! first structural finding. `emerald run` (through this function) and
+//! `emerald check` (through [`crate::analysis::check_workflow`]) share
+//! one implementation and can never disagree about what is legal.
 
 use anyhow::{bail, Result};
 
-use super::{analysis, Step, StepKind, Workflow};
+use crate::analysis::lints::{self, Finding};
+
+use super::{Step, Workflow};
 
 /// A validation failure, tagged with the property it violates.
 #[derive(Debug)]
@@ -62,61 +70,24 @@ impl std::fmt::Display for ValidationError {
 
 impl std::error::Error for ValidationError {}
 
-/// Validate a workflow for partitioning. Returns the list of remotable
-/// step ids on success.
-pub fn validate(wf: &Workflow) -> Result<Vec<super::StepId>> {
-    check_duplicate_vars(&wf.variables, "workflow")?;
-    check_step(&wf.root)?;
-
-    // Property checks per remotable step.
-    walk_with_parent_vars(wf, &mut |step, parent_vars| {
-        if !step.remotable {
-            return Ok(());
-        }
-        // Property 1: the remotable subtree must not touch local HW.
-        if step.any(&|s| s.requires_local_hardware) {
-            bail!(ValidationError::Property1 {
-                step: step.display_name.clone(),
-                msg: "remotable step (or a nested step) requires local hardware".into(),
-            });
-        }
-        // Property 3: no remotable step nested inside another.
-        let nested: usize = step
-            .children()
-            .iter()
-            .map(|c| count_remotable(c))
-            .sum();
-        if nested > 0 {
-            bail!(ValidationError::Property3 {
-                step: step.display_name.clone(),
-                msg: format!("{nested} nested remotable step(s); migration and \
-                              re-integration must alternate"),
-            });
-        }
-        // Property 2: I/O variables declared at the step's own level.
-        let io = analysis::step_io(step)
-            .map_err(|e| ValidationError::Malformed(format!("{e:#}")))?;
-        for name in io.all() {
-            if !parent_vars.iter().any(|v| v == &name) {
-                bail!(ValidationError::Property2 {
-                    step: step.display_name.clone(),
-                    msg: format!(
-                        "variable '{name}' used by the remotable step is not declared \
-                         at the step's level (Figure 8)"
-                    ),
-                });
-            }
-        }
-        Ok(())
-    })?;
-
-    // MigrationPoint is partitioner output, not developer input.
-    if wf.root.any(&|s| matches!(s.kind, StepKind::MigrationPoint)) {
-        bail!(ValidationError::Malformed(
-            "workflow already contains MigrationPoint steps; validate before partitioning".into()
-        ));
+/// Rebuild the typed error from the lint finding that produced it.
+fn to_validation_error(f: Finding) -> ValidationError {
+    let step = f.step.unwrap_or_default();
+    match f.code {
+        lints::WF101 => ValidationError::Property1 { step, msg: f.message },
+        lints::WF102 => ValidationError::Property2 { step, msg: f.message },
+        lints::WF103 => ValidationError::Property3 { step, msg: f.message },
+        _ => ValidationError::Malformed(f.message),
     }
+}
 
+/// Validate a workflow for partitioning. Returns the list of remotable
+/// step ids on success, or the first structural finding as a typed
+/// [`ValidationError`].
+pub fn validate(wf: &Workflow) -> Result<Vec<super::StepId>> {
+    if let Some(first) = lints::structural_findings(wf).into_iter().next() {
+        bail!(to_validation_error(first));
+    }
     Ok(wf.remotable_ids())
 }
 
@@ -129,62 +100,6 @@ pub fn count_remotable(step: &Step) -> usize {
         }
     });
     n
-}
-
-fn check_duplicate_vars(vars: &[super::VarDecl], at: &str) -> Result<()> {
-    let mut seen = std::collections::BTreeSet::new();
-    for v in vars {
-        if !seen.insert(&v.name) {
-            bail!(ValidationError::Malformed(format!(
-                "variable '{}' declared twice at {at}",
-                v.name
-            )));
-        }
-    }
-    Ok(())
-}
-
-fn check_step(step: &Step) -> Result<()> {
-    check_duplicate_vars(&step.variables, &format!("step '{}'", step.display_name))?;
-    // Expressions must at least parse.
-    analysis::step_io(step).map_err(|e| ValidationError::Malformed(format!("{e:#}")))?;
-    for c in step.children() {
-        check_step(c)?;
-    }
-    Ok(())
-}
-
-/// Walk all steps, passing the variable names declared at each step's
-/// own level (the enclosing container's declarations, or the workflow
-/// declarations for the root — paper Figure 7/8 scoping).
-fn walk_with_parent_vars(
-    wf: &Workflow,
-    f: &mut impl FnMut(&Step, &[String]) -> Result<()>,
-) -> Result<()> {
-    fn go(
-        step: &Step,
-        parent_vars: &[String],
-        f: &mut impl FnMut(&Step, &[String]) -> Result<()>,
-    ) -> Result<()> {
-        f(step, parent_vars)?;
-        // Children's "same level" = this step's declarations plus
-        // everything already visible... no: the paper's Property 2 is
-        // about *this level*. We pass exactly the variables declared on
-        // `step` (its scope level), plus the ones it inherited — WF
-        // variables are visible to nested workflows (Figure 7), and
-        // "same level" declarations are what migration captures. We
-        // accept ancestors too (visible ⊆ capturable) but the strict
-        // same-level check is what tests rely on; keep union for
-        // usability, ordered.
-        let mut level: Vec<String> = parent_vars.to_vec();
-        level.extend(step.variables.iter().map(|v| v.name.clone()));
-        for c in step.children() {
-            go(c, &level, f)?;
-        }
-        Ok(())
-    }
-    let root_vars: Vec<String> = wf.variables.iter().map(|v| v.name.clone()).collect();
-    go(&wf.root, &root_vars, f)
 }
 
 #[cfg(test)]

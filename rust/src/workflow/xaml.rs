@@ -55,6 +55,7 @@ pub fn element_to_step(el: &Element) -> Result<Step> {
         el.get_attr("DisplayName").unwrap_or(&el.name).to_string(),
         StepKind::Nop,
     );
+    step.pos = el.pos; // source span for analysis diagnostics
     step.remotable = flag(el, ATTR_REMOTABLE)?;
     step.requires_local_hardware = flag(el, ATTR_LOCAL_HW)?;
     step.variables = parse_variables(el, &el.name)?;
@@ -352,6 +353,17 @@ mod tests {
         .unwrap();
         let back = parse(&to_xml(&wf)).unwrap();
         assert_eq!(back, wf);
+    }
+
+    #[test]
+    fn parser_records_source_spans() {
+        let wf = parse(GREETING).unwrap();
+        // Every step carries the byte offset of its defining element.
+        let concat = wf.find(2).unwrap();
+        assert!(concat.pos > 0);
+        assert!(GREETING[concat.pos..].starts_with("<Assign DisplayName=\"concatenate\""));
+        let (line, _) = crate::xmlmini::line_col(GREETING, concat.pos);
+        assert_eq!(line, 9);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::fmt;
 
 /// An XML element node.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Element {
     /// Tag name (may contain `.` like XAML property elements).
     pub name: String,
@@ -21,12 +21,32 @@ pub struct Element {
     pub children: Vec<Element>,
     /// Concatenated text content directly under this element.
     pub text: String,
+    /// Byte offset of this element's `<` in the source document
+    /// (0 for builder-constructed trees). Diagnostics only — ignored
+    /// by equality so codec round-trips still compare equal.
+    pub pos: usize,
+}
+
+/// Structural equality: `pos` is provenance, not content.
+impl PartialEq for Element {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.attrs == other.attrs
+            && self.children == other.children
+            && self.text == other.text
+    }
 }
 
 impl Element {
     /// New element with a tag name.
     pub fn new(name: impl Into<String>) -> Self {
-        Self { name: name.into(), attrs: Vec::new(), children: Vec::new(), text: String::new() }
+        Self {
+            name: name.into(),
+            attrs: Vec::new(),
+            children: Vec::new(),
+            text: String::new(),
+            pos: 0,
+        }
     }
 
     /// Builder: add an attribute.
@@ -186,9 +206,11 @@ impl<'a> Parser<'a> {
         if self.peek() != Some(b'<') {
             return Err(self.err("expected '<'"));
         }
+        let start = self.pos;
         self.pos += 1;
         let name = self.name()?;
         let mut el = Element::new(name);
+        el.pos = start;
 
         // Attributes.
         loop {
@@ -273,6 +295,15 @@ impl<'a> Parser<'a> {
             }
         }
     }
+}
+
+/// 1-based (line, column) of a byte offset in `text` (diagnostics:
+/// maps [`Element::pos`] / [`XmlError::pos`] back to the source).
+pub fn line_col(text: &str, pos: usize) -> (usize, usize) {
+    let upto = &text.as_bytes()[..pos.min(text.len())];
+    let line = upto.iter().filter(|&&b| b == b'\n').count() + 1;
+    let col = upto.iter().rev().take_while(|&&b| b != b'\n').count() + 1;
+    (line, col)
 }
 
 fn find_from(haystack: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
@@ -431,6 +462,19 @@ mod tests {
         assert_eq!(el.get_attr("k"), Some("w"));
         assert_eq!(el.remove_attr("n"), Some("1".to_string()));
         assert_eq!(el.get_attr("n"), None);
+    }
+
+    #[test]
+    fn positions_point_at_open_tags() {
+        let src = "<A>\n  <B/>\n  <C x=\"1\"/>\n</A>";
+        let root = parse(src).unwrap();
+        assert_eq!(root.pos, 0);
+        assert_eq!(&src[root.children[0].pos..root.children[0].pos + 2], "<B");
+        assert_eq!(&src[root.children[1].pos..root.children[1].pos + 2], "<C");
+        assert_eq!(line_col(src, root.children[1].pos), (3, 3));
+        // pos never participates in equality (round-trips reset it).
+        let rebuilt = parse(&to_string(&root)).unwrap();
+        assert_eq!(rebuilt, root);
     }
 
     #[test]

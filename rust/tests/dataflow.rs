@@ -16,6 +16,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
+use emerald::analysis::AccessValidator;
 use emerald::cloud::{CloudTier, Platform, PlatformConfig};
 use emerald::engine::activity::need_num;
 use emerald::engine::{ActivityRegistry, DataflowDispatch, Engine, Event, Services};
@@ -155,11 +156,19 @@ fn property_all_dispatchers_match_sequential_results_and_payloads() {
         // handler — but through the same suspend path).
         let (part, _) = partitioner::partition(&wf).unwrap();
         let seq = quiet_engine(false).run(&part).unwrap();
-        let dep = quiet_engine(true).run(&part).unwrap();
+        // Every dataflow run doubles as a soundness check of the static
+        // effect analysis: the validator records each unit's store
+        // accesses and asserts containment in its static may sets.
+        let dep_v = AccessValidator::new();
+        let dep = quiet_engine(true).with_validator(dep_v.clone()).run(&part).unwrap();
+        dep_v.assert_clean();
+        let wave_v = AccessValidator::new();
         let wave = quiet_engine(true)
+            .with_validator(wave_v.clone())
             .with_dispatch(DataflowDispatch::Wavefront)
             .run(&part)
             .unwrap();
+        wave_v.assert_clean();
         assert_eq!(dep.lines, seq.lines, "dependency dispatch must preserve output");
         assert_eq!(
             dep.events, seq.events,
@@ -205,8 +214,12 @@ fn property_no_reader_runs_before_its_writer() {
             Ok([("y".to_string(), Value::Num(x + 1.0))].into())
         });
         let services = Services::without_runtime(Platform::paper_testbed());
-        let engine = Engine::new(Arc::new(reg), services).with_dataflow(true);
+        let validator = AccessValidator::new();
+        let engine = Engine::new(Arc::new(reg), services)
+            .with_dataflow(true)
+            .with_validator(validator.clone());
         let report = engine.run(&wf).unwrap();
+        validator.assert_clean();
 
         let mut started: BTreeMap<String, u64> = BTreeMap::new();
         let mut finished: BTreeMap<String, u64> = BTreeMap::new();
@@ -513,6 +526,66 @@ fn concurrent_offloads_never_overshoot_the_budget() {
         stats.spend
     );
     assert!((stats.spend - 0.75).abs() < 1e-12, "{}", stats.spend);
+}
+
+#[test]
+fn disjoint_branch_if_overlaps_unrelated_work_and_preserves_semantics() {
+    // The effect analysis folds an `If`'s condition + branch effects
+    // into its may sets, so unrelated neighbors overlap it instead of
+    // serializing behind an opaque barrier — with byte-identical
+    // results in every dispatch mode, validated at runtime.
+    let assign = |name: &str, to: &str, value: &str| {
+        Step::new(name, StepKind::Assign { to: to.into(), value: value.into() })
+    };
+    let steps = vec![
+        assign("set-a", "a", "1"),
+        Step::new(
+            "branch",
+            StepKind::If {
+                condition: "0 < a".into(),
+                then_branch: Box::new(assign("then", "b", "10")),
+                else_branch: Some(Box::new(assign("else", "c", "20"))),
+            },
+        ),
+        assign("set-d", "d", "2"),
+        Step::new(
+            "dump",
+            StepKind::WriteLine {
+                text: "'a=' + str(a) + ' b=' + str(b) + ' c=' + str(c) + ' d=' + str(d)"
+                    .into(),
+            },
+        ),
+    ];
+    let graph = dag::Dag::build(&steps, false).unwrap();
+    assert_eq!(graph.deps[1], vec![0], "the If reads 'a'");
+    assert!(graph.deps[2].is_empty(), "'set-d' must not wait on the unrelated If");
+    assert_eq!(graph.deps[3], vec![0, 1, 2], "the dump reads every variable");
+    assert_eq!(
+        graph.edge_count(),
+        4,
+        "strictly fewer than the 5 edges an opaque-barrier If would force"
+    );
+
+    let mut wf = Workflow::new("disjoint", Step::new("main", StepKind::Sequence(steps)));
+    for v in VARS {
+        wf = wf.var(v, Some("0"));
+    }
+    let seq = quiet_engine(false).run(&wf).unwrap();
+    assert_eq!(seq.lines, vec!["a=1 b=10 c=0 d=2"]);
+    let dep_v = AccessValidator::new();
+    let dep = quiet_engine(true).with_validator(dep_v.clone()).run(&wf).unwrap();
+    dep_v.assert_clean();
+    let wave_v = AccessValidator::new();
+    let wave = quiet_engine(true)
+        .with_validator(wave_v.clone())
+        .with_dispatch(DataflowDispatch::Wavefront)
+        .run(&wf)
+        .unwrap();
+    wave_v.assert_clean();
+    assert_eq!(dep.lines, seq.lines);
+    assert_eq!(dep.events, seq.events, "identical program-order traces, payloads included");
+    assert_eq!(wave.lines, seq.lines);
+    assert_eq!(wave.events, seq.events);
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! `emerald check` — the lint corpus and the run/check agreement
+//! contract.
+//!
+//! `tests/lint_corpus/` holds deliberately-bad inputs, one per lint:
+//! each must trip *exactly* its expected code (no collateral findings,
+//! which would teach users to ignore the tool), carry a usable source
+//! span, and classify with the right severity. The shipped examples
+//! must stay clean — `emerald check` on them is also a CI gate (see
+//! `.github/workflows/ci.yml`).
+
+use std::path::{Path, PathBuf};
+
+use emerald::analysis::{check_config, check_workflow, max_severity, Severity};
+use emerald::cli::ConfigFile;
+use emerald::workflow::{validate, xaml, Workflow};
+
+fn corpus_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_corpus").join(name)
+}
+
+fn corpus(name: &str) -> String {
+    std::fs::read_to_string(corpus_path(name)).unwrap()
+}
+
+fn parsed(name: &str) -> (String, Workflow) {
+    let src = corpus(name);
+    let wf = xaml::parse(&src).unwrap();
+    (src, wf)
+}
+
+fn codes(name: &str) -> Vec<&'static str> {
+    let (_, wf) = parsed(name);
+    check_workflow(&wf).iter().map(|f| f.code).collect()
+}
+
+#[test]
+fn seeded_bad_workflows_trip_exactly_their_codes() {
+    assert_eq!(codes("ww_race.xml"), vec!["WF001"]);
+    assert_eq!(codes("read_never_written.xml"), vec!["WF002"]);
+    assert_eq!(codes("dead_write.xml"), vec!["WF003"]);
+    assert_eq!(codes("useless_offload.xml"), vec!["WF004"]);
+    assert_eq!(codes("const_condition.xml"), vec!["WF005"]);
+}
+
+#[test]
+fn race_is_an_error_and_advisories_are_warnings() {
+    let (_, wf) = parsed("ww_race.xml");
+    assert_eq!(max_severity(&check_workflow(&wf)), Some(Severity::Error));
+    for name in ["read_never_written.xml", "dead_write.xml", "useless_offload.xml",
+                 "const_condition.xml"] {
+        let (_, wf) = parsed(name);
+        assert_eq!(max_severity(&check_workflow(&wf)), Some(Severity::Warning), "{name}");
+    }
+}
+
+#[test]
+fn findings_carry_source_spans() {
+    let (src, wf) = parsed("dead_write.xml");
+    let findings = check_workflow(&wf);
+    assert_eq!(findings.len(), 1);
+    let rendered = findings[0].render(Some(&src));
+    assert!(rendered.starts_with("warning[WF003]:"), "{rendered}");
+    // The offending <Assign DisplayName="wasted"> sits at line 8, col 5.
+    assert!(rendered.contains("--> step 'wasted' at 8:5"), "{rendered}");
+}
+
+#[test]
+fn seeded_bad_configs_trip_their_codes() {
+    let cfg = ConfigFile::parse(&corpus("contradiction.toml")).unwrap();
+    let findings = check_config(&cfg);
+    assert_eq!(
+        findings.iter().map(|f| f.code).collect::<Vec<_>>(),
+        vec!["WF006"],
+        "{findings:?}"
+    );
+    assert_eq!(max_severity(&findings), Some(Severity::Warning));
+
+    let cfg = ConfigFile::parse(&corpus("typo_key.toml")).unwrap();
+    let findings = check_config(&cfg);
+    assert_eq!(
+        findings.iter().map(|f| f.code).collect::<Vec<_>>(),
+        vec!["WF007"],
+        "{findings:?}"
+    );
+    assert!(findings[0].message.contains("did you mean `budget`?"), "{}", findings[0].message);
+    // Strict key checking (the `emerald run --platform` gate) rejects
+    // the same file check flags.
+    assert!(cfg.check_keys().is_err());
+    let clean = ConfigFile::parse(&corpus("contradiction.toml")).unwrap();
+    assert!(clean.check_keys().is_ok(), "contradictory but known keys still load");
+}
+
+#[test]
+fn shipped_examples_are_clean() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/workflows");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("xml") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).unwrap();
+        let wf = xaml::parse(&src).unwrap();
+        let findings = check_workflow(&wf);
+        assert!(
+            findings.is_empty(),
+            "{} must lint clean, got: {:?}",
+            path.display(),
+            findings.iter().map(|f| f.render(Some(&src))).collect::<Vec<_>>()
+        );
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected the shipped examples, found {checked}");
+}
+
+#[test]
+fn run_and_check_agree_on_legality() {
+    // `emerald run` (validate) refuses a workflow iff `emerald check`
+    // reports a structural finding — advisory lints never block a run,
+    // and nothing blocks a run without appearing in check's output.
+    for name in ["ww_race.xml", "read_never_written.xml", "dead_write.xml",
+                 "useless_offload.xml", "const_condition.xml"] {
+        let (_, wf) = parsed(name);
+        let structural = emerald::analysis::lints::structural_findings(&wf);
+        assert_eq!(
+            validate::validate(&wf).is_ok(),
+            structural.is_empty(),
+            "{name}: validate() and structural findings must agree"
+        );
+        // The whole corpus is structurally legal: only effect lints fire.
+        assert!(validate::validate(&wf).is_ok(), "{name}");
+    }
+    // A structural error shows up in both paths with the same message.
+    let src = r#"<Workflow Name="bad">
+        <Sequence>
+          <Assign DisplayName="a" To="x" Value="1" Remotable="true" />
+        </Sequence>
+      </Workflow>"#;
+    let wf = xaml::parse(src).unwrap();
+    let findings = check_workflow(&wf);
+    let first = findings.first().expect("undeclared I/O is a finding");
+    assert_eq!(first.code, "WF102");
+    let err = format!("{:#}", validate::validate(&wf).unwrap_err());
+    assert!(err.contains(&first.message), "{err} vs {}", first.message);
+}
