@@ -59,6 +59,15 @@
 //! identical critical-path sim time), and the emission seqs must show
 //! the dependent stair starting before an unrelated slow sibling
 //! finishes — live overlap matching the charged model.
+//!
+//! A ninth section (**Fig 13i**) exercises the whole-workflow IR's
+//! **scatter/gather ForEach** (`[engine] ir`): a carried-free loop
+//! over 6 elements with a remotable body scatters into one offload
+//! unit per element on the heterogeneous pool. Scatter must strictly
+//! beat the sequential walk end to end *and* in the deterministic
+//! queueing model, with ≥ 2 element offloads in flight concurrently
+//! on distinct VMs and every offload's `ActivityStarted` naming the
+//! VM it executed on — while the gathered list stays identical.
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
@@ -244,6 +253,47 @@ fn run_staircase(dispatch: DataflowDispatch) -> anyhow::Result<RunReport> {
     assert!(
         report.lines.iter().any(|l| l == "sum=68"),
         "the dispatcher must not change results: {:?}",
+        report.lines
+    );
+    Ok(report)
+}
+
+/// Fig 13i workload: a carried-free ForEach (the body writes only its
+/// yield variable) over 6 elements with a remotable body. Under the
+/// whole-workflow IR each element becomes its own offload unit; the
+/// sequential walk offloads them one at a time.
+const FOREACH_WORKFLOW: &str = r#"<Workflow Name="fig13i">
+  <Workflow.Variables>
+    <Variable Name="results" Init="0"/>
+  </Workflow.Variables>
+  <Sequence>
+    <ForEach DisplayName="scatter" Var="item" In="range(6)" Yield="acc" Out="results">
+      <InvokeActivity DisplayName="element" Activity="load.hold" In.ms="160" In.x="item"
+                      Out.y="acc" Remotable="true"/>
+    </ForEach>
+    <WriteLine Text="'results=' + str(results)"/>
+  </Sequence>
+</Workflow>"#;
+
+/// One Fig 13i run on the mixed 2-tier pool, sequential walk
+/// (`ir = false`) or whole-workflow IR with scatter (`ir = true`).
+fn run_foreach(ir: bool) -> anyhow::Result<RunReport> {
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::new(2, 2.0), CloudTier::new(2, 8.0)],
+        ..Default::default()
+    })?;
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+    let engine = Engine::new(reg, services).with_offload(mgr).with_ir(ir);
+    let wf = xaml::parse(FOREACH_WORKFLOW)?;
+    let (part, rep) = partitioner::partition(&wf)?;
+    assert_eq!(rep.migration_points, 1, "the remotable ForEach body gets one point");
+    let report = engine.run(&part)?;
+    // Each element maps item -> item + 1; gather preserves order.
+    assert!(
+        report.lines.iter().any(|l| l == "results=[1, 2, 3, 4, 5, 6]"),
+        "scatter must not change the gathered list: {:?}",
         report.lines
     );
     Ok(report)
@@ -836,6 +886,108 @@ fn main() -> anyhow::Result<()> {
         wave_run.wall_time.as_secs_f64(),
         dep_run.wall_time.as_secs_f64(),
         dep_run.sim_time.as_secs_f64()
+    );
+
+    // -- Fig 13i: scatter/gather ForEach under the whole-workflow IR
+    //    vs the sequential walk on the same pool. Scatter must win end
+    //    to end AND in the deterministic queueing model, with ≥ 2
+    //    element offloads in flight on distinct VMs and every offload
+    //    naming its executing VM. --
+    let foreach_seq = run_foreach(false)?;
+    let mut foreach_scat = run_foreach(true)?;
+    // As with fig13f, the concurrency proof rides on real thread
+    // overlap (load.hold sleeps 10 ms); the makespan assertions are
+    // deterministic on every attempt.
+    for _ in 0..4 {
+        if foreach_scat.max_inflight_offloads() >= 2 {
+            break;
+        }
+        foreach_scat = run_foreach(true)?;
+    }
+    let mut scatter_series = Series::new(
+        "Fig 13i: carried-free ForEach, sequential walk vs IR scatter (6 elements)",
+        "seconds (simulated)",
+    );
+    scatter_series.row(
+        "sequential tree-walk",
+        vec![("sim".into(), foreach_seq.sim_time.as_secs_f64())],
+    );
+    scatter_series.row(
+        "IR scatter/gather ([engine] ir)",
+        vec![("sim".into(), foreach_scat.sim_time.as_secs_f64())],
+    );
+    scatter_series.row(
+        "reduction %",
+        vec![(
+            "sim".into(),
+            100.0
+                * (1.0
+                    - foreach_scat.sim_time.as_secs_f64() / foreach_seq.sim_time.as_secs_f64()),
+        )],
+    );
+    scatter_series.print();
+    traj.record(&scatter_series);
+    assert_eq!(foreach_seq.offload_count(), 6, "one round trip per element");
+    assert_eq!(foreach_scat.offload_count(), 6, "scatter keeps one round trip per element");
+    assert!(
+        foreach_scat.sim_time < foreach_seq.sim_time,
+        "scatter must strictly beat the sequential walk: {:?} vs {:?}",
+        foreach_scat.sim_time,
+        foreach_seq.sim_time
+    );
+    assert_eq!(
+        foreach_seq.max_inflight_offloads(),
+        1,
+        "the sequential walk offloads one element at a time"
+    );
+    // Per-offload executed-node assertions: every element's
+    // ActivityStarted names the VM it ran on. The sequential walk
+    // reuses the single fastest idle VM; scattered elements spread.
+    assert_eq!(
+        executed(&foreach_seq),
+        vec!["cloud-2"; 6],
+        "sequential elements reuse the fastest idle VM"
+    );
+    let scat_nodes_all = executed(&foreach_scat);
+    assert_eq!(scat_nodes_all.len(), 6, "every element offload records its cloud VM");
+    let scat_nodes: BTreeSet<String> = scat_nodes_all.into_iter().collect();
+    if std::env::var_os("EMERALD_SKIP_OVERLAP_PROOF").is_none() {
+        assert!(
+            foreach_scat.max_inflight_offloads() >= 2,
+            "scatter must drive concurrent element offloads: max in flight {}",
+            foreach_scat.max_inflight_offloads()
+        );
+        assert!(
+            scat_nodes.len() >= 2,
+            "concurrent elements must lease distinct VMs: {scat_nodes:?}"
+        );
+    } else {
+        println!("fig13i overlap proof skipped (EMERALD_SKIP_OVERLAP_PROOF set)");
+    }
+    println!(
+        "Fig 13i: {} element offloads, {} in flight at peak, executed on {:?} \
+         (sequential: all on cloud-2)",
+        foreach_scat.offload_count(),
+        foreach_scat.max_inflight_offloads(),
+        scat_nodes
+    );
+
+    // The same comparison through the deterministic queueing model:
+    // 6 equal element tasks on the mixed pool vs one at a time on the
+    // fastest VM (what the sequential walk degenerates to).
+    let element_tasks = [ms(160); 6];
+    let scatter_mk =
+        simulate_makespan(SchedulePolicy::LeastLoaded, &[2.0, 2.0, 8.0, 8.0], &element_tasks)?;
+    let serial_mk = simulate_makespan(SchedulePolicy::LeastLoaded, &[8.0], &element_tasks)?;
+    assert!(
+        scatter_mk < serial_mk,
+        "model: scattering over the pool must beat draining the fastest VM: \
+         {scatter_mk:?} vs {serial_mk:?}"
+    );
+    println!(
+        "Fig 13i model: scattered makespan {:.3}s vs serial-on-fastest {:.3}s",
+        scatter_mk.as_secs_f64(),
+        serial_mk.as_secs_f64()
     );
 
     println!(

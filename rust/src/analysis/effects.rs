@@ -31,6 +31,7 @@
 //! | `Parallel` | union, no kills between siblings | union of children (the join waits for all branches) |
 //! | `If` | condition ∪ both branches | then ∩ else (empty without an else) |
 //! | `While` | condition ∪ body | empty (zero iterations possible) |
+//! | `ForEach` | collection ∪ body (loop var and yield var are iteration-scoped, never escape) ∪ {out} | {out} (the gather stores even an empty list) |
 //!
 //! The `While` body needs a fixpoint in general, but the transfer
 //! function here is a monotone union over a finite syntactic universe
@@ -76,6 +77,24 @@ pub fn infer(step: &Step) -> Result<Effects> {
     fx.must_write = must_writes(step, &mut BTreeSet::new());
     debug_assert!(fx.must_write.is_subset(&fx.may_write));
     Ok(fx)
+}
+
+/// Outer variables a `ForEach` body writes — its loop-carried
+/// dependences. An iteration writing an enclosing-scope variable
+/// conflicts with every other iteration (WW at least), so a non-empty
+/// result blocks scattering: the engine falls back to iteration-order
+/// hazards and lint WF009 names the carrying variables. Returns the
+/// empty set for non-`ForEach` steps.
+pub fn foreach_carried_vars(step: &Step) -> Result<BTreeSet<String>> {
+    let StepKind::ForEach { var, yield_var, body, .. } = &step.kind else {
+        return Ok(BTreeSet::new());
+    };
+    let mut writes = infer(body)?.may_write;
+    writes.remove(var.as_str());
+    if let Some(y) = yield_var {
+        writes.remove(y.as_str());
+    }
+    Ok(writes)
 }
 
 /// Free variables of one expression.
@@ -164,6 +183,9 @@ fn collect(
         StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
             read(condition, local, defined, fx)?;
         }
+        StepKind::ForEach { collection, .. } => {
+            read(collection, local, defined, fx)?;
+        }
         _ => {}
     }
 
@@ -185,6 +207,26 @@ fn collect(
             }
             for name in killed_here {
                 defined.remove(&name);
+            }
+        }
+        StepKind::ForEach { var, yield_var, out, body, .. } => {
+            // The loop variable and the yield variable live in the
+            // per-iteration scope: body accesses to them are internal
+            // and never escape (the same single-pass fixpoint argument
+            // as `While` applies to the body's other effects).
+            let scoped: Vec<String> = std::iter::once(var.clone())
+                .chain(yield_var.clone())
+                .filter(|n| local.insert(n.clone()))
+                .collect();
+            collect(body, local, defined, fx)?;
+            for n in scoped {
+                local.remove(&n);
+            }
+            // The gather writes the outer collection variable.
+            if let Some(o) = out {
+                if !local.contains(o) {
+                    fx.may_write.insert(o.clone());
+                }
             }
         }
         _ => {
@@ -247,6 +289,15 @@ fn must_writes(step: &Step, local: &mut BTreeSet<String>) -> BTreeSet<String> {
         }
         // Zero iterations are possible, so a loop guarantees nothing.
         StepKind::While { .. } => {}
+        // …except the ForEach gather, which stores `out` even for an
+        // empty collection (an empty list). Body writes stay may-only.
+        StepKind::ForEach { out: gather, .. } => {
+            if let Some(o) = gather {
+                if !local.contains(o) {
+                    out.insert(o.clone());
+                }
+            }
+        }
         StepKind::WriteLine { .. } | StepKind::MigrationPoint | StepKind::Nop => {}
     }
 
@@ -348,6 +399,39 @@ mod tests {
         );
         let fx = infer(&s).unwrap();
         assert!(fx.may_read.contains("a"));
+    }
+
+    fn foreach(var: &str, coll: &str, yield_out: Option<(&str, &str)>, body: Step) -> Step {
+        Step::new(
+            "scan",
+            StepKind::ForEach {
+                var: var.into(),
+                collection: coll.into(),
+                yield_var: yield_out.map(|(y, _)| y.to_string()),
+                out: yield_out.map(|(_, o)| o.to_string()),
+                body: Box::new(body),
+            },
+        )
+    }
+
+    #[test]
+    fn foreach_scopes_loop_and_yield_vars() {
+        // Carried-free gather: body reads the loop var, writes the
+        // yield var — both iteration-scoped, neither escapes.
+        let s = foreach("item", "range(n)", Some(("acc", "results")), assign("acc", "item * 2"));
+        let fx = infer(&s).unwrap();
+        assert_eq!(fx.may_read, names(&["n"]));
+        assert_eq!(fx.may_write, names(&["results"]));
+        assert_eq!(fx.must_write, names(&["results"]), "the gather always stores");
+        assert!(foreach_carried_vars(&s).unwrap().is_empty(), "scatter-legal");
+
+        // Loop-carried accumulation: the body writes an outer var.
+        let s = foreach("item", "xs", None, assign("sum", "sum + item"));
+        let fx = infer(&s).unwrap();
+        assert_eq!(fx.may_read, names(&["xs", "sum"]));
+        assert_eq!(fx.may_write, names(&["sum"]));
+        assert!(fx.must_write.is_empty(), "zero elements write nothing");
+        assert_eq!(foreach_carried_vars(&s).unwrap(), names(&["sum"]));
     }
 
     #[test]

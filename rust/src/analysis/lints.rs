@@ -26,6 +26,7 @@
 //! | `WF004` | warning | a remotable / migration-targeted step writes nothing; offloading it buys nothing |
 //! | `WF005` | warning | a branch/loop condition is constant; a branch is unreachable |
 //! | `WF006` | warning | config options contradict each other (e.g. `budget = 0` with `steal = true`) |
+//! | `WF009` | warning | a `ForEach` body carries a dependence between iterations; scatter is blocked |
 //! | `WF007` | error | unknown config section or key (with did-you-mean) |
 //! | `WF008` | error | config value is invalid for its key |
 //! | `WF100` | error | malformed workflow (duplicate variables, unparseable expressions, pre-existing migration points) |
@@ -58,6 +59,8 @@ pub const WF006: &str = "WF006";
 pub const WF007: &str = "WF007";
 /// Invalid configuration value.
 pub const WF008: &str = "WF008";
+/// Loop-carried dependence blocks `ForEach` scatter.
+pub const WF009: &str = "WF009";
 /// Malformed workflow.
 pub const WF100: &str = "WF100";
 /// Property 1 violation (local hardware).
@@ -146,6 +149,7 @@ pub fn check_workflow(wf: &Workflow) -> Vec<Finding> {
     out.extend(liveness_findings(wf));
     out.extend(offload_effect_findings(&wf.root));
     out.extend(constant_condition_findings(&wf.root));
+    out.extend(loop_carried_findings(&wf.root));
     out
 }
 
@@ -283,6 +287,7 @@ fn own_expr_findings(step: &Step, out: &mut Vec<Finding>) {
             }
         }
         StepKind::If { condition, .. } | StepKind::While { condition, .. } => check(condition),
+        StepKind::ForEach { collection, .. } => check(collection),
         _ => {}
     }
 }
@@ -295,6 +300,17 @@ fn walk_with_parent_vars(wf: &Workflow, f: &mut impl FnMut(&Step, &[String])) {
         f(step, parent_vars);
         let mut level: Vec<String> = parent_vars.to_vec();
         level.extend(step.variables.iter().map(|v| v.name.clone()));
+        // A ForEach body's level also sees the iteration-scoped loop
+        // and yield variables the construct itself declares, so a
+        // remotable body reading the element (or writing its yield)
+        // satisfies Property 2: both live in the frame the migration
+        // manager captures from and re-integrates into.
+        if let StepKind::ForEach { var, yield_var, .. } = &step.kind {
+            level.push(var.clone());
+            if let Some(y) = yield_var {
+                level.push(y.clone());
+            }
+        }
         for c in step.children() {
             go(c, &level, f);
         }
@@ -365,6 +381,19 @@ fn census(root: &Step) -> Census<'_> {
             }
             StepKind::If { condition, .. } | StepKind::While { condition, .. } => {
                 read_srcs.push(condition)
+            }
+            StepKind::ForEach { var, collection, yield_var, out, .. } => {
+                read_srcs.push(collection);
+                // The construct itself binds the loop variable and, when
+                // gathering, consumes each iteration's yield value and
+                // writes the out list (even for an empty collection).
+                c.writes.entry(var.clone()).or_insert(s);
+                if let Some(y) = yield_var {
+                    c.reads.entry(y.clone()).or_insert(s);
+                }
+                if let Some(o) = out {
+                    c.writes.entry(o.clone()).or_insert(s);
+                }
             }
             _ => {}
         }
@@ -500,6 +529,38 @@ fn constant_condition_findings(root: &Step) -> Vec<Finding> {
                 .at(s),
             );
         }
+    });
+    out
+}
+
+/// WF009: a `ForEach` body writes a variable that outlives the
+/// iteration (anything beyond the loop variable and the declared yield
+/// variable). Iteration i+1 then observes iteration i's write, so the
+/// engine must run iterations in order — the scatter/gather path that
+/// leases one VM per element is blocked, and so is body pipelining on
+/// the units touching that variable.
+fn loop_carried_findings(root: &Step) -> Vec<Finding> {
+    let mut out = Vec::new();
+    root.walk(&mut |s| {
+        if !matches!(s.kind, StepKind::ForEach { .. }) {
+            return;
+        }
+        let Ok(carried) = effects::foreach_carried_vars(s) else { return };
+        if carried.is_empty() {
+            return;
+        }
+        let vars = carried.iter().map(|v| format!("'{v}'")).collect::<Vec<_>>().join(", ");
+        out.push(
+            Finding::new(
+                WF009,
+                Severity::Warning,
+                format!(
+                    "ForEach body carries {vars} between iterations; \
+                     iterations serialize instead of scattering across the pool"
+                ),
+            )
+            .at(s),
+        );
     });
     out
 }
@@ -661,6 +722,49 @@ mod tests {
         let f = fs.iter().find(|f| f.code == WF005).expect("constant condition flagged");
         assert!(f.message.contains("always true"), "{}", f.message);
         assert!(f.message.contains("else branch is unreachable"), "{}", f.message);
+    }
+
+    #[test]
+    fn wf009_flags_loop_carried_foreach() {
+        let carried = Step::new(
+            "sumup",
+            StepKind::ForEach {
+                var: "item".into(),
+                collection: "range(3)".into(),
+                yield_var: None,
+                out: None,
+                body: Box::new(assign("sum", "sum + item")),
+            },
+        );
+        let wf = Workflow::new("t", Step::new("main", StepKind::Sequence(vec![
+            assign("sum", "0"),
+            carried,
+            Step::new("out", StepKind::WriteLine { text: "sum".into() }),
+        ])))
+        .var("sum", None);
+        let fs = check_workflow(&wf);
+        let f = fs.iter().find(|f| f.code == WF009).expect("carried loop flagged");
+        assert_eq!(f.severity, Severity::Warning);
+        assert!(f.message.contains("'sum'"), "{}", f.message);
+
+        // A gather-shaped body (writes only the yield var) is scatterable.
+        let free = Step::new(
+            "scatter",
+            StepKind::ForEach {
+                var: "item".into(),
+                collection: "range(3)".into(),
+                yield_var: Some("acc".into()),
+                out: Some("results".into()),
+                body: Box::new(assign("acc", "item * 2")),
+            },
+        );
+        let wf = Workflow::new("t", Step::new("main", StepKind::Sequence(vec![
+            free,
+            Step::new("out", StepKind::WriteLine { text: "str(results)".into() }),
+        ])))
+        .var("results", None);
+        let fs = check_workflow(&wf);
+        assert!(!fs.iter().any(|f| f.code == WF009), "{fs:?}");
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //! [engine]
 //! dataflow = false         # dependence-DAG scheduling
 //! dispatch = "dependency"  # dependency | wavefront (A/B baseline)
+//! ir = false               # whole-workflow IR: cross-sequence overlap,
+//!                          # ForEach scatter/gather, loop pipelining
+//! # workers = 8            # dispatcher worker-pool override (positive
+//!                          # integer; absent = max(4, cores))
 //!
 //! [migration]
 //! policy = "mdss"          # mdss | bundle
@@ -77,6 +81,16 @@ pub struct EngineConfig {
     /// dependency finishes) or `"wavefront"` (the barrier-synchronized
     /// baseline). No effect unless `dataflow` is on.
     pub dispatch: DataflowDispatch,
+    /// `[engine] ir`: compile the whole workflow into one hazard graph
+    /// and execute it with cross-sequence overlap, `ForEach`
+    /// scatter/gather and loop-body pipelining
+    /// ([`crate::engine::Engine::with_ir`]). Default `false`.
+    pub ir: bool,
+    /// `[engine] workers`: worker-pool size for the dependency-driven
+    /// dispatcher and the IR executor
+    /// ([`crate::engine::Engine::with_workers`]). Absent = the
+    /// work-conserving default `max(4, available_parallelism)`.
+    pub workers: Option<usize>,
 }
 
 /// A config value.
@@ -395,9 +409,19 @@ impl ConfigFile {
             "wavefront" => DataflowDispatch::Wavefront,
             other => bail!("[engine] dispatch must be dependency|wavefront, got {other:?}"),
         };
+        let workers = match self.get("engine", "workers") {
+            None => None,
+            Some(ConfigValue::Num(n)) if *n >= 1.0 && n.fract() == 0.0 => Some(*n as usize),
+            Some(ConfigValue::Num(n)) => {
+                bail!("[engine] workers must be a positive integer, got {n}")
+            }
+            Some(v) => bail!("[engine] workers must be a number, got {}", v.kind()),
+        };
         Ok(EngineConfig {
             dataflow: self.boolean("engine", "dataflow", false)?,
             dispatch,
+            ir: self.boolean("engine", "ir", false)?,
+            workers,
         })
     }
 
@@ -488,7 +512,7 @@ impl ConfigFile {
                 "schedule",
             ],
         ),
-        ("engine", &["dataflow", "dispatch"]),
+        ("engine", &["dataflow", "dispatch", "ir", "workers"]),
         (
             "migration",
             &[
@@ -758,9 +782,26 @@ mod tests {
         assert!(cfg.engine().is_err(), "unknown dispatch must be rejected");
         let cfg = ConfigFile::parse("[migration]\ndecay_after = 20").unwrap();
         assert_eq!(cfg.migration().unwrap().decay_after, Some(20));
+        // Whole-workflow IR mode and the worker-pool override.
+        let cfg = ConfigFile::parse("").unwrap();
+        assert!(!cfg.engine().unwrap().ir);
+        assert_eq!(cfg.engine().unwrap().workers, None);
+        let cfg = ConfigFile::parse("[engine]\nir = true\nworkers = 8").unwrap();
+        assert!(cfg.engine().unwrap().ir);
+        assert_eq!(cfg.engine().unwrap().workers, Some(8));
         // Rejections.
         let cfg = ConfigFile::parse("[engine]\ndataflow = 1").unwrap();
         assert!(cfg.engine().is_err());
+        for bad in [
+            "[engine]\nworkers = 0",
+            "[engine]\nworkers = 2.5",
+            "[engine]\nworkers = -1",
+            "[engine]\nworkers = \"many\"",
+            "[engine]\nir = 1",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(cfg.engine().is_err(), "should reject {bad:?}");
+        }
         for bad in [
             "[migration]\ndecay_after = 0",
             "[migration]\ndecay_after = 2.5",

@@ -1,0 +1,593 @@
+//! Whole-workflow IR execution (`--ir` / `[engine] ir`).
+//!
+//! The per-sequence dataflow mode ([`Engine::with_dataflow`]) overlaps
+//! independent *siblings*, but every sequence boundary, loop iteration
+//! and control region is still a barrier. This executor compiles the
+//! entire workflow tree into one graph ([`crate::workflow::ir::Ir`]) —
+//! nodes are execution units (leaf steps, fused offload units, whole
+//! control regions), edges are true hazards from the effect analysis —
+//! and drives it with the same dependency-driven worker pool, so
+//! independence is exploited *across* sequence and control-flow
+//! boundaries. Two constructs additionally get dynamic expansion,
+//! because their unit count is runtime data:
+//!
+//! * **`ForEach` scatter/gather** ([`exec_scatter`]): a carried-free
+//!   loop body is scattered into one task per collection element, each
+//!   in a fresh scope binding the loop variable; independent iterations
+//!   run concurrently — remotable bodies lease distinct cloud VMs at
+//!   the same time — and yields are gathered into the `Out` list in
+//!   element order. A body that carries a variable between iterations
+//!   (lint WF009) runs sequentially instead.
+//! * **loop-body pipelining** ([`exec_loop`]): a `While` body's
+//!   per-iteration unit DAG is instantiated iteration by iteration as
+//!   the condition re-evaluates; a unit of iteration i+1 starts as soon
+//!   as its intra-iteration dependencies, its cross-iteration conflicts
+//!   in iteration i, and the condition check allow — iteration i+1's
+//!   independent prefix overlaps iteration i's drain. Consecutive-
+//!   iteration conflict edges suffice: in any conflicting pair one side
+//!   writes, a writing unit WW-conflicts with its own next-iteration
+//!   instance, so distant iterations are ordered transitively through
+//!   the intermediate instances of the writing unit.
+//!
+//! Equivalence contract (checked by the three-way property tests):
+//! lines, the event trace and the final store are byte-identical to
+//! the sequential walk. Every task records into private buffers that
+//! are spliced back in program order (iteration-major, unit order for
+//! loops; element order for scatter), and store hazards are exactly
+//! the edges, so the writes each read observes are those of the
+//! program-order schedule. Simulated time is the dynamic graph's
+//! critical path — that is the whole point of the mode. Anything the
+//! analysis cannot model (unparsable expressions, dangling migration
+//! points, carried loops) falls back to the tree walk for that
+//! subtree, so errors surface exactly as without IR mode.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::effects;
+use crate::expr::Value;
+use crate::workflow::dag::{self, io_conflicts};
+use crate::workflow::ir::{Ir, NodeKind};
+use crate::workflow::{analysis, Step, StepKind, VarDecl};
+
+use super::{dispatch_dependency, keep_lowest_failure, Ctx, Engine, Event};
+
+/// Open a scope for `vars` (a step's own declarations) exactly as the
+/// tree walk does: init expressions evaluate in the enclosing scope,
+/// declarations are reported to the access-validation scope.
+fn open_scope(vars: &[VarDecl], ctx: &Ctx) -> Result<super::FrameId> {
+    if vars.is_empty() {
+        return Ok(ctx.frame);
+    }
+    let child = ctx.store.lock().unwrap().push_frame(ctx.frame);
+    for v in vars {
+        let init = v.init.as_deref().map(|src| ctx.eval(src)).transpose()?;
+        ctx.store.lock().unwrap().declare(child, &v.name, init)?;
+        if let Some(sc) = ctx.scope {
+            sc.note_declare(&v.name);
+        }
+    }
+    Ok(child)
+}
+
+/// Execute the whole workflow as one hazard graph. Called by
+/// [`Engine::run`] when IR mode is on; returns the dynamic graph's
+/// critical path as simulated time.
+pub(super) fn run_ir(engine: &Engine, root: &Step, ctx: &Ctx) -> Result<Duration> {
+    let Ok(graph) = Ir::compile(root) else {
+        // Unanalyzable workflows (an expression the parser rejects, a
+        // dangling migration point) take the tree walk so errors — and
+        // partial successes — surface exactly as without IR mode.
+        return engine.exec(root, ctx);
+    };
+    // A flattened container root has had its scope hoisted out of the
+    // nodes; open it here. A non-container root is a single node that
+    // handles its own scope in `Engine::exec`.
+    let frame = if matches!(root.kind, StepKind::Sequence(_) | StepKind::Parallel(_)) {
+        open_scope(&root.variables, ctx)?
+    } else {
+        ctx.frame
+    };
+    let ctx = ctx.at(frame);
+
+    let n = graph.nodes.len();
+    if n == 0 {
+        return Ok(Duration::ZERO);
+    }
+    // Private per-node output buffers, spliced back in program order.
+    let node_lines: Vec<Mutex<Vec<String>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+    let node_events: Vec<Mutex<Vec<(u64, Event)>>> =
+        (0..n).map(|_| Mutex::new(Vec::new())).collect();
+    // With a validator attached, each IR node gets an access scope
+    // holding its static effect sets (a region node's sets cover its
+    // whole subtree), and everything it executes reports to it.
+    let node_scopes = engine.validator.as_ref().map(|v| {
+        graph
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(j, nd)| v.scope(format!("ir[{j}]:'{}'", nd.label), &nd.io.reads, &nd.io.writes))
+            .collect::<Vec<_>>()
+    });
+    let run_node = |j: usize| -> Result<Duration> {
+        let node = &graph.nodes[j];
+        let target = graph.resolve(root, j);
+        let nctx = Ctx {
+            store: ctx.store,
+            frame: ctx.frame,
+            lines: &node_lines[j],
+            events: &node_events[j],
+            seq: ctx.seq,
+            dags: ctx.dags,
+            pin: ctx.pin,
+            scope: node_scopes.as_ref().map(|s| &s[j]).or(ctx.scope),
+        };
+        match node.kind {
+            NodeKind::Offload => engine.migrate_or_local(target, &nctx),
+            NodeKind::Scatter => exec_scatter(engine, target, &nctx),
+            NodeKind::Loop => exec_loop(engine, target, &nctx),
+            NodeKind::Leaf | NodeKind::Region | NodeKind::If => engine.exec(target, &nctx),
+        }
+    };
+    let (durs, failure) = dispatch_dependency(
+        graph.in_degrees(),
+        graph.dependents(),
+        &run_node,
+        "whole-workflow IR",
+        engine.worker_pool(n),
+    );
+    // Program-order splice: the trace is identical to the tree walk's
+    // no matter how the schedule interleaved.
+    {
+        let mut out = ctx.lines.lock().unwrap();
+        for l in &node_lines {
+            out.append(&mut l.lock().unwrap());
+        }
+    }
+    {
+        let mut out = ctx.events.lock().unwrap();
+        for e in &node_events {
+            out.append(&mut e.lock().unwrap());
+        }
+    }
+    if let Some((_, e)) = failure {
+        // No extra context wrapper: error text stays byte-compatible
+        // with the sequential walk (the three execution modes must be
+        // interchangeable to callers matching on messages).
+        return Err(e);
+    }
+    Ok(graph.critical_path(&durs))
+}
+
+/// Scatter/gather execution of a carried-free `ForEach`: one task per
+/// collection element, all independent, dispatched through the same
+/// bounded worker pool as dataflow units. Remotable bodies offload
+/// concurrently — each element's migration point takes its own cloud
+/// lease, so K independent iterations occupy K distinct VMs instead of
+/// queueing behind one another. Simulated time is the slowest element
+/// (the gather join), not the sum.
+fn exec_scatter(engine: &Engine, step: &Step, ctx: &Ctx) -> Result<Duration> {
+    let StepKind::ForEach { var, collection, yield_var, out, body } = &step.kind else {
+        return engine.exec(step, ctx);
+    };
+    // A body that carries a variable between iterations (WF009) — or
+    // one the analysis cannot model — must iterate in order.
+    match effects::foreach_carried_vars(step) {
+        Ok(carried) if carried.is_empty() => {}
+        _ => return engine.exec(step, ctx),
+    }
+    let frame = open_scope(&step.variables, ctx)?;
+    let ctx = ctx.at(frame);
+    let coll = ctx.eval(collection)?;
+    let kind = coll.kind();
+    let Value::List(items) = coll else {
+        bail!("ForEach '{}': In expression must evaluate to a list, got {kind}", step.display_name)
+    };
+    let k = items.len();
+    let el_lines: Vec<Mutex<Vec<String>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
+    let el_events: Vec<Mutex<Vec<(u64, Event)>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
+    let yields: Vec<Mutex<Option<Value>>> = (0..k).map(|_| Mutex::new(None)).collect();
+    let run_el = |e: usize| -> Result<Duration> {
+        // Fresh iteration scope: the loop variable bound to this
+        // element, the yield variable declared unassigned — exactly
+        // the sequential arm's per-element prologue.
+        let iter_frame = {
+            let mut s = ctx.store.lock().unwrap();
+            let f = s.push_frame(frame);
+            s.declare(f, var, Some(items[e].clone()))?;
+            if let Some(y) = yield_var {
+                s.declare(f, y, None)?;
+            }
+            f
+        };
+        if let Some(sc) = ctx.scope {
+            sc.note_declare(var);
+            if let Some(y) = yield_var {
+                sc.note_declare(y);
+            }
+        }
+        let ictx = Ctx {
+            store: ctx.store,
+            frame: iter_frame,
+            lines: &el_lines[e],
+            events: &el_events[e],
+            seq: ctx.seq,
+            dags: ctx.dags,
+            pin: ctx.pin,
+            scope: ctx.scope,
+        };
+        let d = engine.exec(body, &ictx)?;
+        if let Some(y) = yield_var {
+            let v = ctx.store.lock().unwrap().lookup(iter_frame, y).with_context(|| {
+                format!(
+                    "ForEach '{}' element {e}: yield variable '{y}' was never assigned",
+                    step.display_name
+                )
+            })?;
+            *yields[e].lock().unwrap() = Some(v);
+        }
+        Ok(d)
+    };
+    // Every element is independent (that is what carried-free means):
+    // a zero-edge graph through the shared dependency dispatcher.
+    let (durs, failure) = dispatch_dependency(
+        vec![0; k],
+        vec![Vec::new(); k],
+        &run_el,
+        &step.display_name,
+        engine.worker_pool(k),
+    );
+    {
+        let mut lout = ctx.lines.lock().unwrap();
+        for l in &el_lines {
+            lout.append(&mut l.lock().unwrap());
+        }
+    }
+    {
+        let mut eout = ctx.events.lock().unwrap();
+        for e in &el_events {
+            eout.append(&mut e.lock().unwrap());
+        }
+    }
+    if let Some((_, e)) = failure {
+        return Err(e);
+    }
+    // Gather join: the Out list is written unconditionally, in element
+    // order — an empty collection stores an empty list.
+    if let Some(o) = out {
+        if let Some(sc) = ctx.scope {
+            sc.note_write(o);
+        }
+        let gathered: Vec<Value> = if yield_var.is_some() {
+            yields
+                .iter()
+                .map(|y| y.lock().unwrap().take().expect("every element recorded its yield"))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        ctx.store
+            .lock()
+            .unwrap()
+            .set(frame, o, Value::List(gathered))
+            .with_context(|| format!("gathering ForEach '{}' into '{o}'", step.display_name))?;
+    }
+    Ok(durs.iter().copied().max().unwrap_or(Duration::ZERO))
+}
+
+/// The per-iteration unit plan of a `While` body: the body's own
+/// dependence DAG when it is a variable-free `Sequence`, otherwise the
+/// whole body as a single unit. `None` = unanalyzable, caller falls
+/// back to the tree walk.
+struct BodyPlan {
+    units: Vec<dag::Unit>,
+    deps: Vec<Vec<usize>>,
+}
+
+fn plan_body(body: &Step) -> Option<BodyPlan> {
+    match &body.kind {
+        StepKind::Sequence(children) if body.variables.is_empty() => {
+            let d = dag::Dag::build(children, false).ok()?;
+            Some(BodyPlan { units: d.units, deps: d.deps })
+        }
+        _ => {
+            let io = analysis::step_io(body).ok()?;
+            Some(BodyPlan { units: vec![dag::Unit { step: 0, offload: false, io }], deps: vec![Vec::new()] })
+        }
+    }
+}
+
+/// What one pipeline task is.
+enum TaskKind {
+    /// The condition check gating iteration `iter`'s expansion.
+    Cond(usize),
+    /// Body unit `unit` of some iteration.
+    Unit(usize),
+}
+
+/// Private output buffers of one body-unit task.
+struct TaskBufs {
+    lines: Mutex<Vec<String>>,
+    events: Mutex<Vec<(u64, Event)>>,
+}
+
+struct Task {
+    kind: TaskKind,
+    /// Task ids this one waits for (also the finish-time frontier).
+    deps: Vec<usize>,
+    /// Deps not yet done.
+    pending: usize,
+    /// Tasks waiting on this one (registered at their creation).
+    dependents: Vec<usize>,
+    done: bool,
+    /// Simulated completion time: max dep finish + own duration.
+    finish: Duration,
+    /// `Some` for unit tasks, `None` for condition checks.
+    bufs: Option<Arc<TaskBufs>>,
+}
+
+struct PipeState {
+    tasks: Vec<Task>,
+    ready: VecDeque<usize>,
+    inflight: usize,
+    failure: Option<(usize, anyhow::Error)>,
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+    /// Task ids of the previous iteration's units (cross-iteration
+    /// conflict edges attach here).
+    prev_units: Vec<usize>,
+}
+
+/// Pipelined `While` execution: a dynamic task graph grown one
+/// iteration at a time. `Cond(k)` evaluates the loop condition; when
+/// true it expands iteration k's body units — each depending on its
+/// intra-iteration DAG predecessors, on its conflicts in iteration
+/// k−1, and on the condition check itself — plus `Cond(k+1)`, which
+/// waits only for the iteration-k units that write a condition
+/// variable. Units of iteration k+1 therefore start while iteration k
+/// is still draining, exactly as far as the hazards allow. When the
+/// condition comes back false the graph stops growing and drains.
+///
+/// Equivalence: the condition sees exactly the writes the sequential
+/// walk's k-th check sees (everything that writes a condition variable
+/// is ordered before it; nothing else affects it), conflicting unit
+/// instances are ordered program-order by construction, and buffers
+/// splice in creation order = iteration-major, unit order. The
+/// MaxIters guard raises the sequential walk's exact error.
+fn exec_loop(engine: &Engine, step: &Step, ctx: &Ctx) -> Result<Duration> {
+    let StepKind::While { condition, body, max_iters } = &step.kind else {
+        return engine.exec(step, ctx);
+    };
+    let Some(plan) = plan_body(body) else {
+        return engine.exec(step, ctx);
+    };
+    let Ok(cond_reads) = effects::expr_vars(condition) else {
+        return engine.exec(step, ctx);
+    };
+    // A body that is one self-conflicting unit serializes completely —
+    // the tree walk is the identical schedule without the machinery.
+    // (This is the common accumulator-style loop.)
+    if plan.units.is_empty()
+        || (plan.units.len() == 1 && io_conflicts(&plan.units[0].io, &plan.units[0].io))
+    {
+        return engine.exec(step, ctx);
+    }
+    let frame = open_scope(&step.variables, ctx)?;
+    let ctx = ctx.at(frame);
+    // Unit targets: the body's children, or the whole body as the one
+    // unit of a non-Sequence plan (`dag::Unit::step` indexes this).
+    let children: &[Step] = match &body.kind {
+        StepKind::Sequence(c) if body.variables.is_empty() => c,
+        _ => std::slice::from_ref(body.as_ref()),
+    };
+
+    let state = Mutex::new(PipeState {
+        tasks: vec![Task {
+            kind: TaskKind::Cond(0),
+            deps: Vec::new(),
+            pending: 0,
+            dependents: Vec::new(),
+            done: false,
+            finish: Duration::ZERO,
+            bufs: None,
+        }],
+        ready: VecDeque::from([0]),
+        inflight: 0,
+        failure: None,
+        panic: None,
+        prev_units: Vec::new(),
+    });
+    let cv = Condvar::new();
+    // Two iterations' units can be in flight at once, plus a check.
+    let workers = engine.worker_pool(2 * plan.units.len() + 1);
+
+    // Expand iteration `iter` after its condition check `cond_id` came
+    // back true. Called with the state lock held.
+    let expand = |s: &mut PipeState, cond_id: usize, iter: usize| {
+        let link = |s: &mut PipeState, kind: TaskKind, deps: Vec<usize>, bufs: Option<Arc<TaskBufs>>| {
+            let id = s.tasks.len();
+            let pending = deps.iter().filter(|&&d| !s.tasks[d].done).count();
+            for &d in &deps {
+                if !s.tasks[d].done {
+                    s.tasks[d].dependents.push(id);
+                }
+            }
+            s.tasks.push(Task {
+                kind,
+                deps,
+                pending,
+                dependents: Vec::new(),
+                done: false,
+                finish: Duration::ZERO,
+                bufs,
+            });
+            if pending == 0 {
+                s.ready.push_back(id);
+            }
+            id
+        };
+        let mut unit_ids = Vec::with_capacity(plan.units.len());
+        for (u, unit) in plan.units.iter().enumerate() {
+            let mut deps = vec![cond_id];
+            for &d in &plan.deps[u] {
+                deps.push(unit_ids[d]);
+            }
+            for (pu, &pid) in s.prev_units.clone().iter().enumerate() {
+                if io_conflicts(&plan.units[pu].io, &unit.io) {
+                    deps.push(pid);
+                }
+            }
+            let bufs = Arc::new(TaskBufs { lines: Mutex::new(Vec::new()), events: Mutex::new(Vec::new()) });
+            unit_ids.push(link(s, TaskKind::Unit(u), deps, Some(bufs)));
+        }
+        let mut cdeps = vec![cond_id];
+        for (u, unit) in plan.units.iter().enumerate() {
+            if !unit.io.writes.is_disjoint(&cond_reads) {
+                cdeps.push(unit_ids[u]);
+            }
+        }
+        link(s, TaskKind::Cond(iter + 1), cdeps, None);
+        s.prev_units = unit_ids;
+    };
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let (tid, dep_finish, kind_unit, bufs) = {
+                    let mut s = state.lock().unwrap();
+                    let tid = loop {
+                        if let Some(t) = s.ready.pop_front() {
+                            s.inflight += 1;
+                            break t;
+                        }
+                        if s.inflight == 0 {
+                            // Quiescent: the graph stopped growing and
+                            // drained, or the remainder sits behind a
+                            // failure or panic. Anything else is a
+                            // scheduler bug — an error, never a hang.
+                            if s.tasks.iter().any(|t| !t.done)
+                                && s.failure.is_none()
+                                && s.panic.is_none()
+                            {
+                                s.failure = Some((
+                                    usize::MAX,
+                                    anyhow::anyhow!(
+                                        "pipelined loop scheduler stalled in '{}' \
+                                         (internal invariant violated)",
+                                        step.display_name
+                                    ),
+                                ));
+                            }
+                            cv.notify_all();
+                            return;
+                        }
+                        s = cv.wait(s).unwrap();
+                    };
+                    let t = &s.tasks[tid];
+                    let dep_finish =
+                        t.deps.iter().map(|&d| s.tasks[d].finish).max().unwrap_or(Duration::ZERO);
+                    let kind_unit = match t.kind {
+                        TaskKind::Cond(i) => Err(i),
+                        TaskKind::Unit(u) => Ok(u),
+                    };
+                    (tid, dep_finish, kind_unit, t.bufs.clone())
+                };
+                // Run outside the lock.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> Result<(Duration, Option<bool>)> {
+                        match kind_unit {
+                            Err(_) => {
+                                let v = ctx.eval(condition)?.as_condition()?;
+                                Ok((Duration::ZERO, Some(v)))
+                            }
+                            Ok(u) => {
+                                let b = bufs.as_ref().expect("unit tasks carry buffers");
+                                let uctx = Ctx {
+                                    store: ctx.store,
+                                    frame: ctx.frame,
+                                    lines: &b.lines,
+                                    events: &b.events,
+                                    seq: ctx.seq,
+                                    dags: ctx.dags,
+                                    pin: ctx.pin,
+                                    scope: ctx.scope,
+                                };
+                                let unit = &plan.units[u];
+                                let target = &children[unit.step];
+                                let d = if unit.offload {
+                                    engine.migrate_or_local(target, &uctx)
+                                } else {
+                                    engine.exec(target, &uctx)
+                                }?;
+                                Ok((d, None))
+                            }
+                        }
+                    },
+                ));
+                let mut s = state.lock().unwrap();
+                s.inflight -= 1;
+                match result {
+                    Ok(Ok((dur, cond_value))) => {
+                        s.tasks[tid].done = true;
+                        s.tasks[tid].finish = dep_finish + dur;
+                        for k in std::mem::take(&mut s.tasks[tid].dependents) {
+                            s.tasks[k].pending -= 1;
+                            if s.tasks[k].pending == 0 {
+                                s.ready.push_back(k);
+                            }
+                        }
+                        if let Some(true) = cond_value {
+                            let iter = match kind_unit {
+                                Err(i) => i,
+                                Ok(_) => unreachable!(),
+                            };
+                            if iter >= *max_iters {
+                                keep_lowest_failure(
+                                    &mut s.failure,
+                                    tid,
+                                    anyhow::anyhow!(
+                                        "while loop '{}' exceeded MaxIters={max_iters}",
+                                        step.display_name
+                                    ),
+                                );
+                            } else {
+                                expand(&mut s, tid, iter);
+                            }
+                        }
+                    }
+                    Ok(Err(e)) => keep_lowest_failure(&mut s.failure, tid, e),
+                    Err(p) => {
+                        if s.panic.is_none() {
+                            s.panic = Some(p);
+                        }
+                    }
+                }
+                cv.notify_all();
+            });
+        }
+    });
+
+    let state = state.into_inner().unwrap();
+    if let Some(p) = state.panic {
+        std::panic::resume_unwind(p);
+    }
+    // Splice in creation order: Cond(0), iteration-0 units in DAG
+    // (child) order, Cond(1), iteration-1 units, … — the sequential
+    // walk's program order.
+    {
+        let mut lout = ctx.lines.lock().unwrap();
+        let mut eout = ctx.events.lock().unwrap();
+        for t in &state.tasks {
+            if let Some(b) = &t.bufs {
+                lout.append(&mut b.lines.lock().unwrap());
+                eout.append(&mut b.events.lock().unwrap());
+            }
+        }
+    }
+    if let Some((_, e)) = state.failure {
+        return Err(e);
+    }
+    Ok(state.tasks.iter().map(|t| t.finish).max().unwrap_or(Duration::ZERO))
+}

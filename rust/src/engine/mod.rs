@@ -41,6 +41,7 @@
 //!   compute time reflects the node placement actually chose.
 
 pub mod activity;
+mod ir;
 pub mod state;
 
 pub use activity::{Activity, ActivityCtx, ActivityRegistry, Services};
@@ -298,8 +299,18 @@ pub struct Engine {
     /// Dataflow mode: schedule `Sequence` children by dependence DAG
     /// instead of strictly in order (see [`Self::with_dataflow`]).
     dataflow: bool,
+    /// Whole-workflow IR mode: compile the entire tree into one graph
+    /// ([`crate::workflow::ir`]) and execute it with cross-sequence
+    /// overlap, `ForEach` scatter/gather and loop-body pipelining (see
+    /// [`Self::with_ir`]).
+    ir: bool,
     /// Which dispatcher dataflow mode uses (see [`DataflowDispatch`]).
     dispatch: DataflowDispatch,
+    /// Worker-pool size override for the dependency-driven dispatcher
+    /// and the IR executor (`[engine] workers` / `--workers`). `None`
+    /// keeps the work-conserving default `max(4,
+    /// available_parallelism)` (see [`Self::with_workers`]).
+    workers: Option<usize>,
     /// Debug/test harness: record every store access of each dataflow
     /// unit and check containment in the unit's static effect sets
     /// (see [`Self::with_validator`]).
@@ -377,7 +388,9 @@ impl Engine {
             offload: None,
             tier: crate::cloud::NodeKind::Local,
             dataflow: false,
+            ir: false,
             dispatch: DataflowDispatch::default(),
+            workers: None,
             validator: None,
             verbose: false,
         }
@@ -428,6 +441,47 @@ impl Engine {
     pub fn with_dispatch(mut self, dispatch: DataflowDispatch) -> Self {
         self.dispatch = dispatch;
         self
+    }
+
+    /// Whole-workflow IR mode (`[engine] ir` / `--ir`): compile the
+    /// entire workflow tree into one graph ([`crate::workflow::ir`])
+    /// and execute it with a dynamic dependency-driven task graph —
+    /// hazard edges cross sequence and control-flow boundaries, a
+    /// carried-free `ForEach` *scatters* into one unit per collection
+    /// element (independent iterations lease distinct cloud VMs
+    /// concurrently), and `While` bodies *pipeline*: iteration i+1's
+    /// independent prefix starts before iteration i fully drains.
+    /// Lines, events and final stores are identical to the sequential
+    /// walk (per-node buffers spliced in program order, same hazard
+    /// soundness argument as dataflow mode, checked by the same
+    /// [`AccessValidator`] harness); simulated time is the dynamic
+    /// graph's critical path. Subtrees the analysis cannot model fall
+    /// back to the tree walk. Off by default.
+    pub fn with_ir(mut self, on: bool) -> Self {
+        self.ir = on;
+        self
+    }
+
+    /// Override the dependency-driven worker-pool size (`[engine]
+    /// workers` / `--workers`). The default bound is work-conserving:
+    /// `max(4, available_parallelism)`, never more threads than ready
+    /// work. Traces are byte-stable across pool sizes — lines/events
+    /// splice in program order and local `ActivityStarted` payloads
+    /// are canonicalized — so this knob trades only wall-clock
+    /// overlap, not determinism.
+    pub fn with_workers(mut self, workers: Option<usize>) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Bounded pool size for dispatching `units` concurrent tasks: the
+    /// configured override, or `max(4, available_parallelism)` — and
+    /// never more threads than there are units to run.
+    fn worker_pool(&self, units: usize) -> usize {
+        let cap = self.workers.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).max(4)
+        });
+        units.min(cap.max(1)).max(1)
     }
 
     /// Attach a runtime access validator (debug/test harness): every
@@ -496,9 +550,12 @@ impl Engine {
                 .with_context(|| format!("declaring workflow variable '{}'", v.name))?;
         }
 
-        let sim_time = self
-            .exec(&wf.root, &ctx)
-            .with_context(|| format!("running workflow '{}'", wf.name))?;
+        let sim_time = if self.ir {
+            ir::run_ir(self, &wf.root, &ctx)
+        } else {
+            self.exec(&wf.root, &ctx)
+        }
+        .with_context(|| format!("running workflow '{}'", wf.name))?;
 
         let stamped = events.into_inner().unwrap();
         let mut events = Vec::with_capacity(stamped.len());
@@ -507,20 +564,21 @@ impl Engine {
             seqs.push(s);
             events.push(e);
         }
-        // Dataflow mode: canonicalize *local* `ActivityStarted` node
-        // names to program order. Local nodes are homogeneous (one
+        // Dataflow and IR modes: canonicalize *local* `ActivityStarted`
+        // node names to program order. Local nodes are homogeneous (one
         // speed, one MDSS side), so which of them "ran" an activity is
         // pure bookkeeping — but the shared round-robin cursor hands
         // out names in arrival order, which under concurrent dispatch
-        // differs run to run. Renaming the k-th local activity of the
-        // program-order trace to `local-(k mod pool)` is exactly the
-        // assignment a fresh-platform sequential walk makes, so
-        // dataflow traces are byte-stable across runs *including
-        // payloads* and equal to the sequential trace of the same
-        // workflow. Cloud names are never touched: they record the
+        // differs run to run *and across worker-pool sizes*. Renaming
+        // the k-th local activity of the program-order trace to
+        // `local-(k mod pool)` is exactly the assignment a
+        // fresh-platform sequential walk makes, so concurrent-mode
+        // traces are byte-stable across runs and `--workers` settings
+        // *including payloads* and equal to the sequential trace of the
+        // same workflow. Cloud names are never touched: they record the
         // real (priced, billed) placement. Sequential mode is left
         // bit-for-bit alone.
-        if self.dataflow {
+        if self.dataflow || self.ir {
             let pool = self.services.platform.local_size();
             if pool > 0 {
                 let mut k = 0usize;
@@ -684,6 +742,64 @@ impl Engine {
                     }
                     sim += self.exec(body, &ctx)?;
                     iters += 1;
+                }
+                Ok(sim)
+            }
+            StepKind::ForEach { var, collection, yield_var, out, body } => {
+                let coll = ctx.eval(collection)?;
+                let kind = coll.kind();
+                let Value::List(items) = coll else {
+                    bail!(
+                        "ForEach '{}': In expression must evaluate to a list, got {kind}",
+                        step.display_name
+                    )
+                };
+                // Sequential semantics (the baseline the IR executor's
+                // scatter must reproduce byte-for-byte): each element
+                // gets a fresh scope binding the loop variable (and the
+                // unassigned yield variable), the body runs in element
+                // order, yields are gathered in element order, and the
+                // Out list is written unconditionally — an empty
+                // collection stores an empty list.
+                let mut sim = Duration::ZERO;
+                let mut gathered = Vec::with_capacity(items.len());
+                for (k, item) in items.into_iter().enumerate() {
+                    let iter_frame = {
+                        let mut s = ctx.store.lock().unwrap();
+                        let f = s.push_frame(frame);
+                        s.declare(f, var, Some(item))?;
+                        if let Some(y) = yield_var {
+                            s.declare(f, y, None)?;
+                        }
+                        f
+                    };
+                    if let Some(sc) = ctx.scope {
+                        sc.note_declare(var);
+                        if let Some(y) = yield_var {
+                            sc.note_declare(y);
+                        }
+                    }
+                    let ictx = ctx.at(iter_frame);
+                    sim += self.exec(body, &ictx)?;
+                    if let Some(y) = yield_var {
+                        let v =
+                            ctx.store.lock().unwrap().lookup(iter_frame, y).with_context(|| {
+                                format!(
+                                    "ForEach '{}' element {k}: yield variable '{y}' was never \
+                                     assigned",
+                                    step.display_name
+                                )
+                            })?;
+                        gathered.push(v);
+                    }
+                }
+                if let Some(o) = out {
+                    if let Some(sc) = ctx.scope {
+                        sc.note_write(o);
+                    }
+                    ctx.store.lock().unwrap().set(frame, o, Value::List(gathered)).with_context(
+                        || format!("gathering ForEach '{}' into '{o}'", step.display_name),
+                    )?;
                 }
                 Ok(sim)
             }
@@ -878,7 +994,13 @@ impl Engine {
             }
         };
         let (durs, failure) = match self.dispatch {
-            DataflowDispatch::Dependency => dispatch_dependency(&graph, &run_unit, name),
+            DataflowDispatch::Dependency => dispatch_dependency(
+                graph.in_degrees(),
+                graph.dependents(),
+                &run_unit,
+                name,
+                self.worker_pool(n),
+            ),
             DataflowDispatch::Wavefront => dispatch_wavefront(&graph, &run_unit, name),
         };
         // Splice the per-unit output back in program order: lines and
@@ -1064,22 +1186,25 @@ fn keep_lowest_failure(slot: &mut Option<(usize, anyhow::Error)>, j: usize, err:
 }
 
 /// Dependency-driven dispatch (the default): a bounded worker pool
-/// drains a ready queue seeded with the DAG's zero-in-degree units.
+/// drains a ready queue seeded with the graph's zero-in-degree units.
 /// Each finishing unit decrements its dependents' pending-dependency
-/// counters ([`dag::Dag::in_degrees`] gives the initial values,
-/// [`dag::Dag::dependents`] the forward edges) and enqueues any that
-/// hit zero — so a unit starts the instant its last dependency
-/// finishes, never at the next wavefront barrier, and real wall-clock
-/// overlap matches the critical-path model the engine charges.
+/// counters (`pending` gives the initial values, `dependents` the
+/// forward edges — [`dag::Dag::in_degrees`]/[`dag::Dag::dependents`]
+/// for the per-sequence DAG, [`crate::workflow::ir::Ir`]'s views for
+/// the whole-workflow IR) and enqueues any that hit zero — so a unit
+/// starts the instant its last dependency finishes, never at the next
+/// wavefront barrier, and real wall-clock overlap matches the
+/// critical-path model the engine charges.
 ///
-/// The pool is bounded at `min(units, max(4, available_parallelism))`:
-/// enough workers to cover the machine (plus a floor so overlap exists
-/// even on tiny CI runners), never more threads than units. Simulated
-/// time is the critical path over the returned durations; durations
-/// are schedule-independent except an offload unit's queueing charge
-/// on an oversubscribed cloud, which reflects real lease overlap and
-/// can therefore vary with the pool size (the queueing model's
-/// documented best-effort stance).
+/// `pool` bounds the worker count ([`Engine::worker_pool`]: the
+/// configured `--workers` override or `max(4,
+/// available_parallelism)`); the pool is work-conserving — never more
+/// threads than units, and a worker only idles when nothing is ready.
+/// Simulated time is the critical path over the returned durations;
+/// durations are schedule-independent except an offload unit's
+/// queueing charge on an oversubscribed cloud, which reflects real
+/// lease overlap and can therefore vary with the pool size (the
+/// queueing model's documented best-effort stance).
 ///
 /// A failing unit's transitive dependents are never dispatched (their
 /// counters never reach zero); independent units still run. The pool
@@ -1089,7 +1214,13 @@ fn keep_lowest_failure(slot: &mut Option<(usize, anyhow::Error)>, j: usize, err:
 /// panicking unit is caught so in-flight peers can finish and waiting
 /// workers are not stranded mid-quiesce; the payload is re-thrown
 /// after the pool drains, preserving panic semantics.
-fn dispatch_dependency<F>(graph: &dag::Dag, run_unit: &F, name: &str) -> DispatchOutcome
+fn dispatch_dependency<F>(
+    pending: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+    run_unit: &F,
+    name: &str,
+    pool: usize,
+) -> DispatchOutcome
 where
     F: Fn(usize) -> Result<Duration> + Sync,
 {
@@ -1111,9 +1242,7 @@ where
         panic: Option<Box<dyn std::any::Any + Send + 'static>>,
     }
 
-    let n = graph.units.len();
-    let pending = graph.in_degrees();
-    let dependents = graph.dependents();
+    let n = pending.len();
     let state = Mutex::new(DepState {
         ready: (0..n).filter(|&j| pending[j] == 0).collect(),
         pending,
@@ -1124,7 +1253,7 @@ where
         panic: None,
     });
     let cv = Condvar::new();
-    let workers = n.min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).max(4));
+    let workers = n.min(pool);
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {

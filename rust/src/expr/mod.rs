@@ -6,7 +6,8 @@
 //! variable references, arithmetic (`+ - * / %`), comparisons
 //! (`== != < <= > >=`), logic (`&& || !`), unary minus, parentheses,
 //! string concatenation via `+`, and a few builtins (`len`, `min`,
-//! `max`, `abs`, `str`, `num`).
+//! `max`, `abs`, `str`, `num`, `uri`, plus the list constructors
+//! `range` and `split` that feed `ForEach` collections).
 //!
 //! Evaluation happens against a [`Scope`]-like lookup function, so the
 //! engine can enforce WF variable-scoping rules (paper Property 2).
@@ -31,6 +32,10 @@ pub enum Value {
     /// Expressions can pass it around and compare it but not operate
     /// on its contents.
     Uri(String),
+    /// Ordered collection of values (the element type of `ForEach`).
+    /// Built by `range(n)` / `split(s, sep)`; `len()` measures it and
+    /// `+` concatenates two lists.
+    List(Vec<Value>),
 }
 
 impl Value {
@@ -41,6 +46,7 @@ impl Value {
             Value::Str(_) => "string",
             Value::Bool(_) => "bool",
             Value::Uri(_) => "uri",
+            Value::List(_) => "list",
         }
     }
 
@@ -54,6 +60,11 @@ impl Value {
             Value::Str(s) => s.clone(),
             Value::Bool(b) => format!("{b}"),
             Value::Uri(u) => u.clone(),
+            Value::List(items) => {
+                let inner: Vec<String> =
+                    items.iter().map(Value::display_string).collect();
+                format!("[{}]", inner.join(", "))
+            }
         }
     }
 
@@ -238,6 +249,13 @@ fn eval_binary(op: BinOp, lhs: Value, rhs: Value) -> Result<Value, EvalError> {
                 Ok(Num(a % b))
             }
         }
+        // List concatenation (before string promotion, so two lists
+        // join element-wise instead of stringifying).
+        (Add, List(a), List(b)) => {
+            let mut out = a.clone();
+            out.extend(b.iter().cloned());
+            Ok(List(out))
+        }
         // String concatenation: either side a string promotes.
         (Add, Str(_), _) | (Add, _, Str(_)) => {
             Ok(Str(lhs.display_string() + &rhs.display_string()))
@@ -276,7 +294,35 @@ fn eval_call(name: &str, args: Vec<Value>) -> Result<Value, EvalError> {
             arity(1)?;
             match &args[0] {
                 Value::Str(s) => Ok(Value::Num(s.chars().count() as f64)),
-                v => Err(EvalError::Type(format!("len() needs a string, got {}", v.kind()))),
+                Value::List(items) => Ok(Value::Num(items.len() as f64)),
+                v => Err(EvalError::Type(format!(
+                    "len() needs a string or list, got {}",
+                    v.kind()
+                ))),
+            }
+        }
+        "range" => {
+            arity(1)?;
+            match &args[0] {
+                Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(Value::List(
+                    (0..*n as u64).map(|i| Value::Num(i as f64)).collect(),
+                )),
+                v => Err(EvalError::Type(format!(
+                    "range() needs a non-negative integer, got {v}"
+                ))),
+            }
+        }
+        "split" => {
+            arity(2)?;
+            match (&args[0], &args[1]) {
+                (Value::Str(s), Value::Str(sep)) if !sep.is_empty() => Ok(Value::List(
+                    s.split(sep.as_str())
+                        .map(|p| Value::Str(p.to_string()))
+                        .collect(),
+                )),
+                _ => Err(EvalError::Type(
+                    "split() needs a string and a non-empty separator".into(),
+                )),
             }
         }
         "abs" => {
@@ -390,6 +436,26 @@ mod tests {
         assert_eq!(ev("abs(0 - 9)"), Value::Num(9.0));
         assert_eq!(ev("num('2.5') * 2"), Value::Num(5.0));
         assert_eq!(ev("str(x) + '!'"), Value::Str("4!".into()));
+    }
+
+    #[test]
+    fn lists() {
+        assert_eq!(
+            ev("range(3)"),
+            Value::List(vec![Value::Num(0.0), Value::Num(1.0), Value::Num(2.0)])
+        );
+        assert_eq!(ev("range(0)"), Value::List(vec![]));
+        assert_eq!(
+            ev("split('a,b', ',')"),
+            Value::List(vec![Value::Str("a".into()), Value::Str("b".into())])
+        );
+        assert_eq!(ev("len(range(4))"), Value::Num(4.0));
+        assert_eq!(ev("len(range(2) + range(3))"), Value::Num(5.0));
+        assert_eq!(ev("range(2) == range(2)"), Value::Bool(true));
+        assert_eq!(ev("str(range(2))"), Value::Str("[0, 1]".into()));
+        assert!(matches!(eval_str("range(0-1)", &env), Err(EvalError::Type(_))));
+        assert!(matches!(eval_str("range(1.5)", &env), Err(EvalError::Type(_))));
+        assert!(matches!(eval_str("split('a', '')", &env), Err(EvalError::Type(_))));
     }
 
     #[test]

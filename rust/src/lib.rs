@@ -21,14 +21,22 @@
 //! ## Module map
 //!
 //! Paper contributions: [`workflow`] (§3.1–3.2, plus the dependence
-//! DAG in `workflow::dag`), [`partitioner`] (§3.1, plus offload
+//! DAG in `workflow::dag` and the whole-workflow graph IR in
+//! `workflow::ir` — one hazard graph across every sequence boundary,
+//! with `ForEach` scatter/gather and `While` control regions),
+//! [`partitioner`] (§3.1, plus offload
 //! batching — runs of consecutive remotable steps fuse into one
 //! migration point; dataflow-aware batching fuses only *dependent*
-//! runs), [`engine`] (§3.3, with offloaded subtrees pinned
-//! to the scheduler-leased VM and an opt-in dataflow mode that
+//! runs at top level and whole runs inside loop bodies), [`engine`]
+//! (§3.3, with offloaded subtrees pinned
+//! to the scheduler-leased VM, an opt-in dataflow mode that
 //! dispatches sequence siblings the instant their dependencies
 //! finish, with concurrent offloads and a wavefront-barrier A/B
-//! baseline), [`migration`] (§3.3, with an EWMA cost model that
+//! baseline, and an opt-in IR mode that executes the whole-workflow
+//! graph on a configurable worker pool — scattering carried-free
+//! `ForEach` elements to distinct VMs and pipelining `While`
+//! iterations — while keeping the trace byte-identical to the
+//! sequential walk), [`migration`] (§3.3, with an EWMA cost model that
 //! re-probes on staleness, multi-step requests, queue-aware admission
 //! control, concurrency-safe budget reservations and serialized
 //! estimate-less admissions), [`mdss`]

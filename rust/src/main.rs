@@ -41,9 +41,9 @@ emerald — scientific workflows with cloud offloading (Qian 2017 reproduction)
 USAGE:
   emerald validate <workflow.xml>
   emerald check <workflow.xml> [--platform <file>]
-  emerald partition <workflow.xml> [--out <file>] [--batch] [--dataflow]
-  emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--policy mdss|bundle] [--tcp <addr>]
-  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--alpha0 X]
+  emerald partition <workflow.xml> [--out <file>] [--batch] [--dataflow] [--ir]
+  emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--ir] [--workers N] [--policy mdss|bundle] [--tcp <addr>]
+  emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--ir] [--alpha0 X]
   emerald serve
   emerald info
 ";
@@ -99,11 +99,15 @@ fn services_of(
 }
 
 /// Partitioner options from the command line (and the `[engine]`
-/// config section: when the run will execute under dataflow mode,
-/// batching fuses only dependent runs so independent offload units
-/// keep their concurrency).
+/// config section: when the run will execute under dataflow mode —
+/// or the whole-workflow IR, which overlaps independent offload units
+/// the same way — batching fuses only dependent runs so independent
+/// offload units keep their concurrency; runs inside loop bodies
+/// always fuse whole).
 fn partition_opts(args: &Args, cfg: &emerald::cli::ConfigFile) -> Result<PartitionOptions> {
-    let dataflow = cfg.engine()?.dataflow || args.flag("dataflow");
+    let engine_cfg = cfg.engine()?;
+    let dataflow =
+        engine_cfg.dataflow || engine_cfg.ir || args.flag("dataflow") || args.flag("ir");
     Ok(PartitionOptions { batch: args.flag("batch"), dataflow })
 }
 
@@ -184,11 +188,26 @@ fn build_engine(
     // `--dataflow` or `[engine] dataflow = true` turns on the
     // dependence-DAG scheduler (dependency-driven dispatch by
     // default; `[engine] dispatch = "wavefront"` selects the barrier
-    // baseline); default is the sequential tree-walk (the A/B
-    // baseline).
+    // baseline); `--ir` or `[engine] ir = true` compiles the whole
+    // workflow into one hazard graph (cross-sequence overlap, ForEach
+    // scatter/gather, loop pipelining); default is the sequential
+    // tree-walk (the A/B baseline). `--workers N` (or `[engine]
+    // workers`) bounds the dispatcher's worker pool.
     let engine_cfg = cfg.engine()?;
+    let workers = match args.options.get("workers") {
+        Some(_) => {
+            let n: usize = args.opt_parse("workers", 0)?;
+            if n == 0 {
+                bail!("--workers must be a positive integer");
+            }
+            Some(n)
+        }
+        None => engine_cfg.workers,
+    };
     let engine = Engine::new(reg.clone(), services.clone())
         .with_dataflow(engine_cfg.dataflow || args.flag("dataflow"))
+        .with_ir(engine_cfg.ir || args.flag("ir"))
+        .with_workers(workers)
         .with_dispatch(engine_cfg.dispatch);
     if !args.flag("offload") {
         return Ok(engine);
@@ -326,7 +345,7 @@ fn cmd_info(_args: &Args) -> Result<()> {
 }
 
 fn main() {
-    let args = Args::from_env(&["offload", "verbose", "batch", "dataflow"]);
+    let args = Args::from_env(&["offload", "verbose", "batch", "dataflow", "ir"]);
     let result = match args.subcommand() {
         Some("validate") => cmd_validate(&args),
         Some("check") => cmd_check(&args),

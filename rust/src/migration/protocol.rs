@@ -108,6 +108,10 @@ pub fn value_to_json(v: &Value) -> J {
         Value::Str(s) => J::obj([("t", J::str("str")), ("v", J::str(s.clone()))]),
         Value::Bool(b) => J::obj([("t", J::str("bool")), ("v", J::Bool(*b))]),
         Value::Uri(u) => J::obj([("t", J::str("uri")), ("v", J::str(u.clone()))]),
+        Value::List(items) => J::obj([
+            ("t", J::str("list")),
+            ("v", J::Arr(items.iter().map(value_to_json).collect())),
+        ]),
     }
 }
 
@@ -120,6 +124,10 @@ pub fn value_from_json(j: &J) -> Result<Value> {
         "str" => Value::Str(v.as_str()?.to_string()),
         "bool" => Value::Bool(v.as_bool()?),
         "uri" => Value::Uri(v.as_str()?.to_string()),
+        "list" => {
+            let J::Arr(items) = v else { bail!("list value must be an array") };
+            Value::List(items.iter().map(value_from_json).collect::<Result<_>>()?)
+        }
         other => bail!("unknown value tag {other:?}"),
     })
 }
@@ -365,6 +373,10 @@ mod tests {
         inputs.insert("syn".to_string(), Value::Uri("mdss://at/syn".into()));
         inputs.insert("k".to_string(), Value::Num(3.5));
         inputs.insert("quote".to_string(), Value::Str("a\"b\nc".into()));
+        inputs.insert(
+            "items".to_string(),
+            Value::List(vec![Value::Num(1.0), Value::Str("x".into())]),
+        );
         let mut req = OffloadRequest::package(&sample_step(), inputs, &["misfit".to_string()]);
         req.node = Some(PinnedNode { index: 7, speed: 8.0 });
         let back = OffloadRequest::decode(&req.encode()).unwrap();

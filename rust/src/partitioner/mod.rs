@@ -52,6 +52,18 @@
 //! whole-run fusion, which is always legal (and the dataflow engine
 //! falls back to the sequential walk on the same workflows, so no
 //! parallelism is lost that the engine could have exploited).
+//!
+//! **Loop bodies fuse whole runs.** Inside a `While` or `ForEach`
+//! body the trade flips: the body re-executes every iteration, so a
+//! split run multiplies its extra WAN round trips by the iteration
+//! count, while the overlap the split was protecting is confined to a
+//! single iteration — and the whole-workflow IR executor walks each
+//! iteration's (or each scattered element's) body sequentially, where
+//! split points are pure round-trip loss with no overlap at all.
+//! Runs inside loop bodies therefore always take whole-run fusion,
+//! exactly the fallback shape, even when the body is analyzable;
+//! `--batch --dataflow` never silently degrades to the unbatched
+//! point-per-step shape inside a loop.
 
 use anyhow::Result;
 
@@ -111,7 +123,7 @@ pub fn partition_with(
 
     let mut out = wf.clone();
     let mut stats = RewriteStats::default();
-    rewrite(&mut out.root, opts, &mut stats);
+    rewrite(&mut out.root, opts, &mut stats, false);
     out.renumber();
 
     let report = PartitionReport {
@@ -130,11 +142,15 @@ pub fn partition_with(
 ///   inserted before them; with batching, maximal runs of consecutive
 ///   remotable children share one point behind a fused `Sequence`.
 /// * Remotable children of other containers (`Parallel` branches, `If`
-///   branches, `While` bodies) are wrapped in a small `Sequence`
-///   [MigrationPoint, step] so the engine's sequence scanner finds
-///   them; each parallel branch therefore offloads independently
-///   (Figure 9b).
-fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
+///   branches, `While`/`ForEach` bodies) are wrapped in a small
+///   `Sequence` [MigrationPoint, step] so the engine's sequence
+///   scanner finds them; each parallel branch therefore offloads
+///   independently (Figure 9b), and each scattered `ForEach` element
+///   takes its own cloud lease.
+///
+/// `in_loop` tracks whether we are inside a `While`/`ForEach` body:
+/// runs there always take whole-run fusion (see module docs).
+fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats, in_loop: bool) {
     match &mut step.kind {
         StepKind::Sequence(children) => {
             let old = std::mem::take(children);
@@ -145,15 +161,15 @@ fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
                     // P3 guarantees nothing remotable inside: no recursion.
                     run.push(c);
                     if !opts.batch {
-                        flush_run(&mut run, &mut rebuilt, opts, stats);
+                        flush_run(&mut run, &mut rebuilt, opts, stats, in_loop);
                     }
                 } else {
-                    flush_run(&mut run, &mut rebuilt, opts, stats);
-                    rewrite(&mut c, opts, stats);
+                    flush_run(&mut run, &mut rebuilt, opts, stats, in_loop);
+                    rewrite(&mut c, opts, stats, in_loop);
                     rebuilt.push(c);
                 }
             }
-            flush_run(&mut run, &mut rebuilt, opts, stats);
+            flush_run(&mut run, &mut rebuilt, opts, stats, in_loop);
             *children = rebuilt;
         }
         StepKind::Parallel(children) => {
@@ -162,7 +178,7 @@ fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
                     wrap_in_sequence(c);
                     stats.inserted += 1;
                 } else {
-                    rewrite(c, opts, stats);
+                    rewrite(c, opts, stats, in_loop);
                 }
             }
         }
@@ -172,16 +188,16 @@ fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
                     wrap_in_sequence(b);
                     stats.inserted += 1;
                 } else {
-                    rewrite(b, opts, stats);
+                    rewrite(b, opts, stats, in_loop);
                 }
             }
         }
-        StepKind::While { body, .. } => {
+        StepKind::While { body, .. } | StepKind::ForEach { body, .. } => {
             if body.remotable {
                 wrap_in_sequence(body);
                 stats.inserted += 1;
             } else {
-                rewrite(body, opts, stats);
+                rewrite(body, opts, stats, true);
             }
         }
         _ => {}
@@ -195,14 +211,18 @@ fn rewrite(step: &mut Step, opts: PartitionOptions, stats: &mut RewriteStats) {
 /// migration points for the dataflow engine to overlap. An
 /// unanalyzable run (an expression the flow analysis cannot parse)
 /// falls back to whole-run fusion, which is legal regardless of
-/// analysis.
+/// analysis — and so does any run inside a `While`/`ForEach` body
+/// (`in_loop`), where the split would multiply round trips per
+/// iteration for overlap confined to a single one (module docs,
+/// "Loop bodies fuse whole runs").
 fn flush_run(
     run: &mut Vec<Step>,
     out: &mut Vec<Step>,
     opts: PartitionOptions,
     stats: &mut RewriteStats,
+    in_loop: bool,
 ) {
-    if opts.dataflow && run.len() >= 2 {
+    if opts.dataflow && !in_loop && run.len() >= 2 {
         let members = std::mem::take(run);
         match dag::dependent_runs(&members) {
             Ok(spans) => {
@@ -448,6 +468,64 @@ mod tests {
             partition_with(&w, PartitionOptions { batch: false, dataflow: true }).unwrap();
         assert_eq!(report.migration_points, 2);
         assert_eq!(report.batches, 0, "dataflow only modulates batching");
+    }
+
+    #[test]
+    fn foreach_bodies_get_wrapped() {
+        let body = assign("acc", "item * 2").remotable();
+        let w = Workflow::new(
+            "fe",
+            Step::new(
+                "loop",
+                StepKind::ForEach {
+                    var: "item".into(),
+                    collection: "range(3)".into(),
+                    yield_var: Some("acc".into()),
+                    out: Some("results".into()),
+                    body: Box::new(body),
+                },
+            ),
+        )
+        .var("results", None);
+        let (out, report) = partition(&w).unwrap();
+        assert_eq!(report.migration_points, 1);
+        let wrapped = out.root.children()[0];
+        assert_eq!(wrapped.kind_name(), "Sequence");
+        assert!(wrapped.display_name.starts_with("offload("));
+        assert_eq!(wrapped.children()[0].kind_name(), "MigrationPoint");
+    }
+
+    #[test]
+    fn loop_bodies_fuse_whole_runs_under_dataflow_batching() {
+        // The same independent remotable run splits point-per-step at
+        // top level (dataflow-aware batching) but fuses whole inside a
+        // While body: per-iteration round trips dominate there, and
+        // the IR executor walks loop bodies sequentially anyway.
+        let body = Step::new(
+            "body",
+            StepKind::Sequence(vec![
+                assign("a", "1").remotable(),
+                assign("b", "2").remotable(),
+                assign("i", "i + 1"),
+            ]),
+        );
+        let w = Workflow::new(
+            "loop",
+            Step::new(
+                "w",
+                StepKind::While {
+                    condition: "i < 2".into(),
+                    body: Box::new(body),
+                    max_iters: 10,
+                },
+            ),
+        )
+        .var("i", Some("0"))
+        .var("a", None)
+        .var("b", None);
+        let (_, report) = partition_with(&w, dataflow_batched()).unwrap();
+        assert_eq!(report.migration_points, 1, "whole-run fusion inside the loop body");
+        assert_eq!((report.batches, report.batched_steps), (1, 2));
     }
 
     #[test]

@@ -217,8 +217,10 @@ fn intersects(a: &BTreeSet<String>, b: &BTreeSet<String>) -> bool {
 }
 
 /// The three classic hazards between an earlier step's footprint `a`
-/// and a later step's footprint `b`.
-fn io_conflicts(a: &StepIo, b: &StepIo) -> bool {
+/// and a later step's footprint `b`. Shared with the whole-workflow IR
+/// ([`crate::workflow::ir`]) and the engine's cross-iteration
+/// pipelining so every layer agrees on what "interferes" means.
+pub(crate) fn io_conflicts(a: &StepIo, b: &StepIo) -> bool {
     intersects(&a.writes, &b.reads) // write -> read
         || intersects(&a.writes, &b.writes) // write -> write
         || intersects(&a.reads, &b.writes) // read -> write

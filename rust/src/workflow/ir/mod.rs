@@ -1,0 +1,499 @@
+//! The whole-workflow graph IR (ROADMAP: "runs are just graphs").
+//!
+//! [`super::dag`] builds a dependence DAG over the children of **one**
+//! `Sequence` at a time: nested sequences, `If`/`While` bodies and
+//! sibling containers each become opaque units, and the boundaries
+//! between them are hard barriers even when the effect analysis proves
+//! the steps on either side independent. This module compiles the
+//! *whole* workflow tree into a single graph:
+//!
+//! * **Nodes** are execution units — plain leaf steps, offload units
+//!   (`MigrationPoint` fused with its target, exactly the sequential
+//!   engine's pairing), and *control regions* (`If`/`While`/`ForEach`
+//!   subtrees, plus any container that declares its own variables and
+//!   therefore opens a scope).
+//! * **Edges** are the three classic hazards (write→read, write→write,
+//!   read→write) over the may-read/may-write sets inferred by
+//!   [`crate::analysis::effects`] — and nothing else. Variable-free
+//!   `Sequence` nesting is flattened away, so a step buried two
+//!   containers deep overlaps an unrelated top-level sibling that the
+//!   per-sequence DAG would have serialized behind the whole container.
+//! * `Parallel` branches are **unordered by declaration**: nodes from
+//!   different branches of the same `Parallel` never get an edge, even
+//!   when their footprints touch (matching
+//!   [`super::dag::Dag::build`]'s `independent` mode; write-write
+//!   races across branches are already an error, lint `WF001`).
+//!
+//! Program order (preorder over the flattened tree) is a topological
+//! order of the graph — every dependence points from a lower index to
+//! a higher one — so a plain forward pass schedules it and the
+//! dependency-driven executor ([`crate::engine`]'s IR mode) can seed
+//! its ready queue from [`Ir::in_degrees`].
+//!
+//! Control regions stay whole here; their *insides* are the
+//! executor's business (per-iteration pipelining for `While`, and
+//! scatter/gather for a carried-free `ForEach` — one unit per
+//! collection element, since the collection's length is runtime data
+//! and the nodes can only be expanded at scatter time). The region
+//! node's `io` covers the condition plus every branch / the whole
+//! body, so hazard edges against its neighbors are sound no matter
+//! which branch runs or how many iterations execute — the same
+//! soundness argument (and the same runtime
+//! [`crate::analysis::AccessValidator`] back-check) the per-sequence
+//! DAG relies on.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::analysis::{self, StepIo};
+use super::dag::io_conflicts;
+use super::{Step, StepKind};
+
+/// What a node is to the executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// A plain step executed by the tree walk (`Assign`, `WriteLine`,
+    /// `InvokeActivity`, `Nop`).
+    Leaf,
+    /// A `MigrationPoint` fused with the step it precedes; executing
+    /// this node goes through the migration manager. The node's path
+    /// points at the *target* step (the migration point itself sits at
+    /// the preceding sibling index).
+    Offload,
+    /// A container (`Sequence`/`Parallel`) that declares variables and
+    /// therefore opens a scope; kept whole and executed as a subtree.
+    Region,
+    /// An `If` region (condition + both branches in `io`).
+    If,
+    /// A `While` region — the executor may pipeline its iterations.
+    Loop,
+    /// A `ForEach` region — the executor scatters a carried-free body
+    /// into one unit per element at runtime.
+    Scatter,
+}
+
+/// One node of the whole-workflow graph.
+#[derive(Debug, Clone)]
+pub struct IrNode {
+    /// Child-index path from the compiled root to the executed step
+    /// (resolvable with [`Ir::resolve`]).
+    pub path: Vec<usize>,
+    /// Execution class.
+    pub kind: NodeKind,
+    /// External may-read/may-write footprint of the node's subtree.
+    pub io: StepIo,
+    /// Display name of the executed step (diagnostics).
+    pub label: String,
+}
+
+/// The compiled whole-workflow graph. Same shape and invariants as
+/// [`super::dag::Dag`]: `deps[j]` lists the nodes that must finish
+/// before node `j` starts, every entry strictly less than `j`.
+#[derive(Debug, Clone)]
+pub struct Ir {
+    /// Nodes in program (preorder) order.
+    pub nodes: Vec<IrNode>,
+    /// Reverse dependence lists.
+    pub deps: Vec<Vec<usize>>,
+}
+
+/// Flattening state: nodes plus, per node, the stack of
+/// `(parallel region id, branch index)` pairs it sits under. Two nodes
+/// that share a region id with *different* branch indices are
+/// concurrent by declaration and never get an edge.
+struct Flattener {
+    nodes: Vec<IrNode>,
+    sigs: Vec<Vec<(usize, usize)>>,
+    next_par: usize,
+}
+
+impl Flattener {
+    fn push(&mut self, step: &Step, path: Vec<usize>, kind: NodeKind, sig: &[(usize, usize)]) -> Result<()> {
+        self.nodes.push(IrNode {
+            path,
+            kind,
+            io: analysis::step_io(step)?,
+            label: step.display_name.clone(),
+        });
+        self.sigs.push(sig.to_vec());
+        Ok(())
+    }
+
+    fn flatten(&mut self, step: &Step, path: Vec<usize>, sig: &[(usize, usize)], is_root: bool) -> Result<()> {
+        match &step.kind {
+            // A variable-free Sequence is pure structure: inline its
+            // children. The root container is always inlined — its
+            // declarations form the base frame the executor pushes
+            // before the first node runs.
+            StepKind::Sequence(children) if is_root || step.variables.is_empty() => {
+                let mut i = 0;
+                while i < children.len() {
+                    let child = &children[i];
+                    if matches!(child.kind, StepKind::MigrationPoint) {
+                        let Some(target) = children.get(i + 1) else {
+                            bail!("MigrationPoint at end of sequence has no target");
+                        };
+                        let mut p = path.clone();
+                        p.push(i + 1);
+                        self.push(target, p, NodeKind::Offload, sig)?;
+                        i += 2;
+                    } else {
+                        let mut p = path.clone();
+                        p.push(i);
+                        self.flatten(child, p, sig, false)?;
+                        i += 1;
+                    }
+                }
+                Ok(())
+            }
+            StepKind::Parallel(children) if is_root || step.variables.is_empty() => {
+                let pid = self.next_par;
+                self.next_par += 1;
+                for (b, child) in children.iter().enumerate() {
+                    if matches!(child.kind, StepKind::MigrationPoint) {
+                        bail!("dangling MigrationPoint '{}'", child.display_name);
+                    }
+                    let mut p = path.clone();
+                    p.push(b);
+                    let mut s = sig.to_vec();
+                    s.push((pid, b));
+                    self.flatten(child, p, &s, false)?;
+                }
+                Ok(())
+            }
+            // Scope-opening containers stay whole: their variables are
+            // iteration-/region-local and must not leak into the flat
+            // node list.
+            StepKind::Sequence(_) | StepKind::Parallel(_) => {
+                self.push(step, path, NodeKind::Region, sig)
+            }
+            StepKind::If { .. } => self.push(step, path, NodeKind::If, sig),
+            StepKind::While { .. } => self.push(step, path, NodeKind::Loop, sig),
+            StepKind::ForEach { .. } => self.push(step, path, NodeKind::Scatter, sig),
+            StepKind::MigrationPoint => {
+                bail!("dangling MigrationPoint '{}'", step.display_name)
+            }
+            StepKind::Assign { .. }
+            | StepKind::WriteLine { .. }
+            | StepKind::InvokeActivity { .. }
+            | StepKind::Nop => self.push(step, path, NodeKind::Leaf, sig),
+        }
+    }
+}
+
+/// Are the two nodes concurrent by a shared `Parallel` declaration?
+fn unordered(a: &[(usize, usize)], b: &[(usize, usize)]) -> bool {
+    a.iter().any(|(pid, ba)| b.iter().any(|(pb, bb)| pid == pb && ba != bb))
+}
+
+impl Ir {
+    /// Compile a workflow root into the whole-workflow graph.
+    ///
+    /// Fails when an expression doesn't parse or a `MigrationPoint`
+    /// dangles (same conditions as [`super::dag::Dag::build`]); the
+    /// engine then falls back to the tree walk so the error surfaces
+    /// where the sequential interpreter would raise it.
+    pub fn compile(root: &Step) -> Result<Ir> {
+        let mut fl = Flattener { nodes: Vec::new(), sigs: Vec::new(), next_par: 0 };
+        fl.flatten(root, Vec::new(), &[], true)?;
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); fl.nodes.len()];
+        for j in 1..fl.nodes.len() {
+            for i in 0..j {
+                if unordered(&fl.sigs[i], &fl.sigs[j]) {
+                    continue;
+                }
+                if io_conflicts(&fl.nodes[i].io, &fl.nodes[j].io) {
+                    deps[j].push(i);
+                }
+            }
+        }
+        Ok(Ir { nodes: fl.nodes, deps })
+    }
+
+    /// Resolve a node's path back to its step in the compiled tree.
+    pub fn resolve<'a>(&self, root: &'a Step, node: usize) -> &'a Step {
+        let mut cur = root;
+        for &i in &self.nodes[node].path {
+            cur = cur.children()[i];
+        }
+        cur
+    }
+
+    /// Total number of dependence edges (diagnostics and tests).
+    pub fn edge_count(&self) -> usize {
+        self.deps.iter().map(Vec::len).sum()
+    }
+
+    /// Dependence edges whose *target* is a control region
+    /// (`If`/`Loop`/`Scatter`) — the quantity the acceptance criterion
+    /// bounds against the per-sequence DAG's barrier edges.
+    pub fn control_edge_count(&self) -> usize {
+        self.deps
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| {
+                matches!(self.nodes[*j].kind, NodeKind::If | NodeKind::Loop | NodeKind::Scatter)
+            })
+            .map(|(_, d)| d.len())
+            .sum()
+    }
+
+    /// In-degree per node — the dependency-driven executor's initial
+    /// pending counters (in-degree 0 seeds the ready queue).
+    pub fn in_degrees(&self) -> Vec<usize> {
+        self.deps.iter().map(Vec::len).collect()
+    }
+
+    /// Forward view of [`Ir::deps`]: `dependents()[i]` = nodes waiting
+    /// on node `i`, walked when `i` finishes.
+    pub fn dependents(&self) -> Vec<Vec<usize>> {
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        for (j, deps) in self.deps.iter().enumerate() {
+            for &i in deps {
+                out[i].push(j);
+            }
+        }
+        out
+    }
+
+    /// Deterministic critical-path makespan given one simulated
+    /// duration per node (same recurrence as
+    /// [`super::dag::Dag::critical_path`]).
+    pub fn critical_path(&self, durations: &[Duration]) -> Duration {
+        debug_assert_eq!(durations.len(), self.nodes.len());
+        let mut finish = vec![Duration::ZERO; self.nodes.len()];
+        let mut makespan = Duration::ZERO;
+        for (j, d) in durations.iter().enumerate() {
+            let start =
+                self.deps[j].iter().map(|&i| finish[i]).max().unwrap_or(Duration::ZERO);
+            finish[j] = start + *d;
+            makespan = makespan.max(finish[j]);
+        }
+        makespan
+    }
+
+    /// Variables any node may write (used by the executor to
+    /// cross-check gather targets).
+    pub fn may_writes(&self) -> BTreeSet<String> {
+        self.nodes.iter().flat_map(|n| n.io.writes.iter().cloned()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dag::Dag;
+    use super::*;
+
+    fn assign(to: &str, value: &str) -> Step {
+        Step::new(to, StepKind::Assign { to: to.into(), value: value.into() })
+    }
+
+    fn seq(name: &str, children: Vec<Step>) -> Step {
+        Step::new(name, StepKind::Sequence(children))
+    }
+
+    fn mp() -> Step {
+        Step::new("migration-point", StepKind::MigrationPoint)
+    }
+
+    fn iff(cond: &str, then: Step) -> Step {
+        Step::new(
+            "maybe",
+            StepKind::If {
+                condition: cond.into(),
+                then_branch: Box::new(then),
+                else_branch: None,
+            },
+        )
+    }
+
+    #[test]
+    fn flattens_variable_free_sequences() {
+        // [a=1 ; Seq[b=a ; c=2] ; d=c]: the per-sequence DAG keeps the
+        // inner Seq opaque and serializes d behind all of it; the IR
+        // sees four leaves and only the two true hazards.
+        let root = seq(
+            "main",
+            vec![
+                assign("a", "1"),
+                seq("inner", vec![assign("b", "a"), assign("c", "2")]),
+                assign("d", "c"),
+            ],
+        );
+        let ir = Ir::compile(&root).unwrap();
+        assert_eq!(ir.nodes.len(), 4);
+        assert!(ir.nodes.iter().all(|n| n.kind == NodeKind::Leaf));
+        assert_eq!(ir.deps[1], vec![0], "b=a waits for a=1 across the boundary");
+        assert_eq!(ir.deps[2], Vec::<usize>::new(), "c=2 is free");
+        assert_eq!(ir.deps[3], vec![2], "d=c waits only for c, not the whole container");
+        // Paths resolve back to the real steps.
+        assert_eq!(ir.resolve(&root, 2).display_name, "c");
+        assert_eq!(ir.nodes[2].path, vec![1, 1]);
+    }
+
+    #[test]
+    fn variable_declaring_container_stays_a_region() {
+        let inner = seq("inner", vec![assign("tmp", "a"), assign("out", "tmp")]).var("tmp", None);
+        let root = seq("main", vec![assign("a", "1"), inner, assign("z", "out")]);
+        let ir = Ir::compile(&root).unwrap();
+        assert_eq!(ir.nodes.len(), 3);
+        assert_eq!(ir.nodes[1].kind, NodeKind::Region);
+        assert!(!ir.nodes[1].io.all().contains("tmp"), "region-local vars stay hidden");
+        assert_eq!(ir.deps[1], vec![0]);
+        assert_eq!(ir.deps[2], vec![1]);
+    }
+
+    #[test]
+    fn migration_point_fuses_into_an_offload_node() {
+        let root = seq(
+            "main",
+            vec![mp(), assign("a", "1").remotable(), assign("b", "a")],
+        );
+        let ir = Ir::compile(&root).unwrap();
+        assert_eq!(ir.nodes.len(), 2);
+        assert_eq!(ir.nodes[0].kind, NodeKind::Offload);
+        assert_eq!(ir.nodes[0].path, vec![1], "the node executes the target step");
+        assert_eq!(ir.deps[1], vec![0]);
+    }
+
+    #[test]
+    fn dangling_migration_points_fail() {
+        assert!(Ir::compile(&seq("main", vec![assign("a", "1"), mp()])).is_err());
+        let par = Step::new("par", StepKind::Parallel(vec![mp(), assign("a", "1")]));
+        assert!(Ir::compile(&par).is_err());
+    }
+
+    #[test]
+    fn parallel_branches_are_unordered_by_declaration() {
+        // [a=1 ; Par[b=a | c=a] ; d=b+c]: both branches read a (edges
+        // in), d reads both (edges out), but the branches themselves
+        // never get an edge even though read/write analysis alone
+        // can't prove them apart from sequence siblings.
+        let par = Step::new(
+            "par",
+            StepKind::Parallel(vec![assign("b", "a"), assign("c", "a")]),
+        );
+        let root = seq("main", vec![assign("a", "1"), par, assign("d", "b + c")]);
+        let ir = Ir::compile(&root).unwrap();
+        assert_eq!(ir.nodes.len(), 4);
+        assert_eq!(ir.deps[1], vec![0]);
+        assert_eq!(ir.deps[2], vec![0]);
+        assert_eq!(ir.deps[3], vec![1, 2]);
+        // Nested parallels keep outer unordering.
+        let inner = Step::new(
+            "inner",
+            StepKind::Parallel(vec![assign("x", "a"), assign("y", "a")]),
+        );
+        let outer = Step::new(
+            "outer",
+            StepKind::Parallel(vec![inner, assign("z", "x")]),
+        );
+        let ir = Ir::compile(&Step::new("root", StepKind::Sequence(vec![outer]))).unwrap();
+        assert_eq!(ir.edge_count(), 0, "z=x sits in a sibling branch of x's parallel");
+    }
+
+    #[test]
+    fn control_regions_keep_their_kind_and_effects() {
+        let lp = Step::new(
+            "loop",
+            StepKind::While {
+                condition: "i < n".into(),
+                body: Box::new(assign("i", "i + 1")),
+                max_iters: 99,
+            },
+        );
+        let fe = Step::new(
+            "scatter",
+            StepKind::ForEach {
+                var: "item".into(),
+                collection: "range(n)".into(),
+                yield_var: Some("acc".into()),
+                out: Some("results".into()),
+                body: Box::new(assign("acc", "item * 2")),
+            },
+        );
+        let root = seq(
+            "main",
+            vec![assign("i", "0"), lp, iff("i > 1", assign("b", "1")), fe],
+        );
+        let ir = Ir::compile(&root).unwrap();
+        let kinds: Vec<NodeKind> = ir.nodes.iter().map(|n| n.kind).collect();
+        assert_eq!(kinds, vec![NodeKind::Leaf, NodeKind::Loop, NodeKind::If, NodeKind::Scatter]);
+        assert!(ir.nodes[3].io.writes.contains("results"));
+        assert!(!ir.nodes[3].io.all().contains("item"), "loop var is iteration-scoped");
+    }
+
+    #[test]
+    fn control_edges_never_exceed_the_per_sequence_dag() {
+        // Acceptance criterion: for any sibling list, the IR's edges
+        // into If/While/ForEach nodes are no more than the per-sequence
+        // DAG's — both use pure hazard analysis, and flattening can
+        // only remove spurious container serialization.
+        let shapes: Vec<Vec<Step>> = vec![
+            vec![assign("a", "1"), iff("a > 0", assign("b", "1")), assign("c", "b")],
+            vec![
+                assign("i", "0"),
+                Step::new(
+                    "loop",
+                    StepKind::While {
+                        condition: "i < 3".into(),
+                        body: Box::new(assign("i", "i + 1")),
+                        max_iters: 99,
+                    },
+                ),
+                assign("m", "i"),
+                assign("z", "7"),
+            ],
+            vec![
+                assign("n", "3"),
+                Step::new(
+                    "scatter",
+                    StepKind::ForEach {
+                        var: "e".into(),
+                        collection: "range(n)".into(),
+                        yield_var: Some("y".into()),
+                        out: Some("rs".into()),
+                        body: Box::new(assign("y", "e + 1")),
+                    },
+                ),
+                Step::new("show", StepKind::WriteLine { text: "str(rs)".into() }),
+            ],
+        ];
+        for children in shapes {
+            let dag = Dag::build(&children, false).unwrap();
+            let root = seq("main", children);
+            let ir = Ir::compile(&root).unwrap();
+            assert!(
+                ir.control_edge_count() <= dag.edge_count(),
+                "IR control edges {} > DAG edges {}",
+                ir.control_edge_count(),
+                dag.edge_count()
+            );
+            assert!(ir.edge_count() <= dag.edge_count());
+        }
+    }
+
+    #[test]
+    fn views_and_critical_path_are_consistent() {
+        let ms = Duration::from_millis;
+        let root = seq(
+            "main",
+            vec![
+                assign("a", "1"),
+                seq("inner", vec![assign("b", "a"), assign("c", "9")]),
+                assign("d", "b"),
+            ],
+        );
+        let ir = Ir::compile(&root).unwrap();
+        assert_eq!(ir.in_degrees(), vec![0, 1, 0, 1]);
+        let fwd = ir.dependents();
+        assert_eq!(fwd[0], vec![1]);
+        assert_eq!(fwd[1], vec![3]);
+        let total: usize = fwd.iter().map(Vec::len).sum();
+        assert_eq!(total, ir.edge_count());
+        // Chain a -> b -> d (10+20+30); c free at 100 -> makespan 100.
+        assert_eq!(ir.critical_path(&[ms(10), ms(20), ms(100), ms(30)]), ms(100));
+    }
+}

@@ -11,10 +11,13 @@
 //! the paper's partitioning Properties 1–3 lives in [`validate`];
 //! read/write-set analysis used by the partitioner and the migration
 //! packager lives in [`analysis`]; the dependence-DAG construction the
-//! engine's dataflow mode schedules from lives in [`dag`].
+//! engine's dataflow mode schedules from lives in [`dag`]; the
+//! whole-workflow graph IR (cross-sequence hazards, `ForEach`
+//! scatter/gather, loop regions) lives in [`ir`].
 
 pub mod analysis;
 pub mod dag;
+pub mod ir;
 pub mod validate;
 pub mod xaml;
 
@@ -118,6 +121,34 @@ pub enum StepKind {
         /// Iteration ceiling; exceeding it fails the run.
         max_iters: usize,
     },
+    /// Data-parallel loop over a collection (scatter/gather). The
+    /// collection expression must evaluate to a list; the body runs
+    /// once per element with `var` bound in a fresh iteration scope
+    /// (the loop variable never escapes — rhythm's scope-stack model).
+    /// When `yield_var`/`out` are set, each iteration's final value of
+    /// `yield_var` (also iteration-scoped) is gathered, in element
+    /// order, into a list stored to the outer variable `out`.
+    ///
+    /// A body whose writes all stay in the iteration scope is free of
+    /// loop-carried dependences, so the whole-workflow IR *scatters*
+    /// it: one execution unit per element, iterations offloading to
+    /// distinct cloud VMs concurrently. A body that writes an outer
+    /// variable is loop-carried (lint WF009) and executes with
+    /// iteration-order hazards preserved.
+    ForEach {
+        /// Loop variable, bound per element in the iteration scope.
+        var: String,
+        /// Expression producing the collection (a list value).
+        collection: String,
+        /// Iteration-scoped variable whose per-iteration final value
+        /// is gathered (paired with `out`).
+        yield_var: Option<String>,
+        /// Outer variable receiving the gathered list (paired with
+        /// `yield_var`).
+        out: Option<String>,
+        /// Loop body.
+        body: Box<Step>,
+    },
     /// The *temporary step* the partitioner inserts before a remotable
     /// step (paper Fig 6): suspends the workflow, hands the **next
     /// sibling** to the migration manager, resumes after
@@ -185,7 +216,9 @@ impl Step {
                 }
                 v
             }
-            StepKind::While { body, .. } => vec![body.as_ref()],
+            StepKind::While { body, .. } | StepKind::ForEach { body, .. } => {
+                vec![body.as_ref()]
+            }
             _ => Vec::new(),
         }
     }
@@ -201,7 +234,9 @@ impl Step {
                 }
                 v
             }
-            StepKind::While { body, .. } => vec![body.as_mut()],
+            StepKind::While { body, .. } | StepKind::ForEach { body, .. } => {
+                vec![body.as_mut()]
+            }
             _ => Vec::new(),
         }
     }
@@ -239,6 +274,7 @@ impl Step {
             StepKind::InvokeActivity { .. } => "InvokeActivity",
             StepKind::If { .. } => "If",
             StepKind::While { .. } => "While",
+            StepKind::ForEach { .. } => "ForEach",
             StepKind::MigrationPoint => "MigrationPoint",
             StepKind::Nop => "Nop",
         }

@@ -132,6 +132,23 @@ pub fn element_to_step(el: &Element) -> Result<Step> {
                     .unwrap_or(10_000),
             }
         }
+        "ForEach" => {
+            if body.len() != 1 {
+                bail!("<ForEach> must contain exactly one body step");
+            }
+            let yield_var = el.get_attr("Yield").map(str::to_string);
+            let out = el.get_attr("Out").map(str::to_string);
+            if yield_var.is_some() != out.is_some() {
+                bail!("<ForEach> Yield= and Out= must be given together");
+            }
+            StepKind::ForEach {
+                var: req_attr(el, "Var")?,
+                collection: req_attr(el, "In")?,
+                yield_var,
+                out,
+                body: Box::new(element_to_step(body[0])?),
+            }
+        }
         "MigrationPoint" => StepKind::MigrationPoint,
         "Nop" => StepKind::Nop,
         other => bail!("unknown step element <{other}>"),
@@ -215,6 +232,7 @@ fn step_to_element(step: &Step) -> Element {
         StepKind::InvokeActivity { .. } => "InvokeActivity",
         StepKind::If { .. } => "If",
         StepKind::While { .. } => "While",
+        StepKind::ForEach { .. } => "ForEach",
         StepKind::MigrationPoint => "MigrationPoint",
         StepKind::Nop => "Nop",
     };
@@ -250,6 +268,12 @@ fn step_to_element(step: &Step) -> Element {
                 el = el.attr("MaxIters", max_iters.to_string());
             }
         }
+        StepKind::ForEach { var, collection, yield_var, out, .. } => {
+            el = el.attr("Var", var.clone()).attr("In", collection.clone());
+            if let (Some(y), Some(o)) = (yield_var, out) {
+                el = el.attr("Yield", y.clone()).attr("Out", o.clone());
+            }
+        }
         _ => {}
     }
     if !step.variables.is_empty() {
@@ -268,7 +292,7 @@ fn step_to_element(step: &Step) -> Element {
                 el.children.push(Element::new("If.Else").child(step_to_element(e)));
             }
         }
-        StepKind::While { body, .. } => {
+        StepKind::While { body, .. } | StepKind::ForEach { body, .. } => {
             el.children.push(step_to_element(body));
         }
         _ => {}
@@ -353,6 +377,60 @@ mod tests {
         .unwrap();
         let back = parse(&to_xml(&wf)).unwrap();
         assert_eq!(back, wf);
+    }
+
+    #[test]
+    fn foreach_roundtrip() {
+        let wf = parse(
+            r#"<Workflow Name="scatter">
+                 <Workflow.Variables><Variable Name="results"/></Workflow.Variables>
+                 <ForEach DisplayName="scan" Var="item" In="range(4)" Yield="acc" Out="results">
+                   <InvokeActivity Activity="calc.op" In.x="item" Out.y="acc" Remotable="true"/>
+                 </ForEach>
+               </Workflow>"#,
+        )
+        .unwrap();
+        match &wf.root.kind {
+            StepKind::ForEach { var, collection, yield_var, out, body } => {
+                assert_eq!(var, "item");
+                assert_eq!(collection, "range(4)");
+                assert_eq!(yield_var.as_deref(), Some("acc"));
+                assert_eq!(out.as_deref(), Some("results"));
+                assert_eq!(body.kind_name(), "InvokeActivity");
+            }
+            k => panic!("wrong kind {k:?}"),
+        }
+        let back = parse(&to_xml(&wf)).unwrap();
+        assert_eq!(back, wf);
+
+        // A gather-free ForEach round-trips without Yield/Out.
+        let plain = parse(
+            r#"<Workflow><ForEach Var="x" In="split('a,b', ',')">
+                 <WriteLine Text="x"/>
+               </ForEach></Workflow>"#,
+        )
+        .unwrap();
+        assert_eq!(parse(&to_xml(&plain)).unwrap(), plain);
+    }
+
+    #[test]
+    fn foreach_errors() {
+        // Yield without Out (and vice versa) is rejected.
+        assert!(parse(
+            "<Workflow><ForEach Var='x' In='range(2)' Yield='y'><Nop/></ForEach></Workflow>"
+        )
+        .is_err());
+        assert!(parse(
+            "<Workflow><ForEach Var='x' In='range(2)' Out='o'><Nop/></ForEach></Workflow>"
+        )
+        .is_err());
+        // Exactly one body step; Var and In are required.
+        assert!(parse(
+            "<Workflow><ForEach Var='x' In='range(2)'><Nop/><Nop/></ForEach></Workflow>"
+        )
+        .is_err());
+        assert!(parse("<Workflow><ForEach In='range(2)'><Nop/></ForEach></Workflow>").is_err());
+        assert!(parse("<Workflow><ForEach Var='x'><Nop/></ForEach></Workflow>").is_err());
     }
 
     #[test]

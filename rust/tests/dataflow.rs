@@ -63,10 +63,55 @@ fn gen_invoke(g: &mut Gen, name: String) -> Step {
     )
 }
 
+/// A random `ForEach`: half the time carried-free (body writes only
+/// the scoped yield variable, so the whole-workflow IR may scatter
+/// it), half the time loop-carried (body folds into an outer
+/// variable, so every mode must run it sequentially). Carried-free
+/// loops gather into the dedicated list variable `g` — never read by
+/// arithmetic steps — so list values cannot leak into numeric
+/// expressions.
+fn gen_foreach(g: &mut Gen, idx: usize) -> Step {
+    let k = g.usize_in(0..=3);
+    if g.bool() {
+        let m = g.i64_in(1..=5);
+        let body = Step::new(
+            format!("fe{idx}b"),
+            StepKind::Assign { to: "acc".into(), value: format!("item * {m} + 1") },
+        );
+        let body = if g.bool() { body.remotable() } else { body };
+        Step::new(
+            format!("fe{idx}"),
+            StepKind::ForEach {
+                var: "item".into(),
+                collection: format!("range({k})"),
+                yield_var: Some("acc".into()),
+                out: Some("g".into()),
+                body: Box::new(body),
+            },
+        )
+    } else {
+        let to = g.choose(&VARS).to_string();
+        let body = Step::new(
+            format!("fe{idx}b"),
+            StepKind::Assign { to: to.clone(), value: format!("{to} + item") },
+        );
+        Step::new(
+            format!("fe{idx}"),
+            StepKind::ForEach {
+                var: "item".into(),
+                collection: format!("range({k})"),
+                yield_var: None,
+                out: None,
+                body: Box::new(body),
+            },
+        )
+    }
+}
+
 /// One random sequence child: assignments and activity invocations
 /// (sometimes remotable), WriteLines, `If` barriers (sometimes
 /// invoking in a branch — the data-dependent activity-count case),
-/// nested sequences, and no-ops.
+/// nested sequences, `ForEach` loops, and no-ops.
 fn gen_step(g: &mut Gen, idx: usize) -> Step {
     match g.usize_in(0..=11) {
         0..=3 => {
@@ -109,6 +154,7 @@ fn gen_step(g: &mut Gen, idx: usize) -> Step {
                 gen_invoke(g, format!("n{idx}b")),
             ]),
         ),
+        10 => gen_foreach(g, idx),
         _ => Step::new(format!("nop{idx}"), StepKind::Nop),
     }
 }
@@ -117,8 +163,8 @@ fn gen_workflow(g: &mut Gen) -> Workflow {
     let n = g.usize_in(1..=12);
     let mut steps: Vec<Step> = (0..n).map(|i| gen_step(g, i)).collect();
     // Dump every variable at the end: line equality then implies
-    // final-store equality.
-    for v in VARS {
+    // final-store equality (`g` holds gathered ForEach lists).
+    for v in VARS.iter().chain(&["g"]) {
         steps.push(Step::new(
             format!("out-{v}"),
             StepKind::WriteLine { text: format!("'{v}=' + str({v})") },
@@ -128,7 +174,7 @@ fn gen_workflow(g: &mut Gen) -> Workflow {
     for (i, v) in VARS.iter().enumerate() {
         wf = wf.var(*v, Some(&(i + 1).to_string()));
     }
-    wf
+    wf.var("g", Some("0"))
 }
 
 fn quiet_engine(dataflow: bool) -> Engine {
@@ -637,4 +683,236 @@ fn dataflow_and_sequential_agree_through_the_real_manager() {
         "a fully dependent chain has no parallelism to exploit"
     );
     assert_eq!(df.max_inflight_offloads(), 1, "chained offloads never overlap");
+}
+
+#[test]
+fn property_whole_workflow_ir_matches_sequential_and_dataflow() {
+    // The three-way equivalence the IR acceptance criterion demands:
+    // random workflows (including carried and carried-free ForEach
+    // loops) through the sequential tree-walk, the per-sequence DAG
+    // dispatcher, and the whole-workflow IR must produce byte-identical
+    // lines AND events — payloads included. The final WriteLine dump in
+    // `gen_workflow` makes line equality imply final-store equality.
+    forall(60, |g: &mut Gen| {
+        let wf = gen_workflow(g);
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let seq = quiet_engine(false).run(&part).unwrap();
+        let dag_v = AccessValidator::new();
+        let dag = quiet_engine(true).with_validator(dag_v.clone()).run(&part).unwrap();
+        dag_v.assert_clean();
+        let ir_v = AccessValidator::new();
+        let ir = quiet_engine(false)
+            .with_ir(true)
+            .with_validator(ir_v.clone())
+            .run(&part)
+            .unwrap();
+        ir_v.assert_clean();
+        assert_eq!(dag.lines, seq.lines, "per-sequence DAG must preserve output");
+        assert_eq!(dag.events, seq.events, "per-sequence DAG traces must match");
+        assert_eq!(ir.lines, seq.lines, "whole-workflow IR must preserve output");
+        assert_eq!(ir.events, seq.events, "whole-workflow IR traces must match");
+    });
+}
+
+#[test]
+fn foreach_scatter_offloads_elements_concurrently_on_distinct_vms() {
+    // The fig-13i shape: a carried-free ForEach whose remotable body
+    // scatters into one offload unit per element. Under the
+    // whole-workflow IR the elements lease distinct cloud VMs
+    // concurrently (≥2 in flight at once), while lines — and therefore
+    // the gathered list — stay byte-identical to the sequential walk.
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="results" Init="0"/>
+             </Workflow.Variables>
+             <Sequence>
+               <ForEach Var="item" In="range(4)" Yield="acc" Out="results">
+                 <InvokeActivity DisplayName="el" Activity="hold.op" In.x="item"
+                                 Out.y="acc" Remotable="true"/>
+               </ForEach>
+               <WriteLine Text="'r=' + str(results)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let run_mode = |ir: bool| {
+        let platform = Platform::new(PlatformConfig {
+            tiers: vec![CloudTier::new(4, 2.0)],
+            ..Default::default()
+        })
+        .unwrap();
+        let services = Services::without_runtime(platform);
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("hold.op", |c, inputs| {
+            let x = need_num(inputs, "x")?;
+            // Real wall time so scattered offloads genuinely overlap.
+            std::thread::sleep(Duration::from_millis(150));
+            c.charge_compute(Duration::from_millis(200));
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        let reg = Arc::new(reg);
+        let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+        let engine = Engine::new(reg, services).with_offload(mgr.clone()).with_ir(ir);
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let report = engine.run(&part).unwrap();
+        (report, mgr.stats())
+    };
+    let (seq, seq_stats) = run_mode(false);
+    assert_eq!(seq.lines, vec!["r=[1, 2, 3, 4]"]);
+    let (scat, scat_stats) = run_mode(true);
+    assert_eq!(scat.lines, seq.lines, "scatter must preserve the gathered list");
+    assert_eq!(
+        (scat_stats.offloads, seq_stats.offloads),
+        (4, 4),
+        "every element offloads in both modes"
+    );
+    assert!(
+        scat.max_inflight_offloads() >= 2,
+        "scattered elements must overlap in flight (got {})",
+        scat.max_inflight_offloads()
+    );
+    // Per-offload executed-node check: each element's ActivityStarted
+    // records the cloud VM that ran it; concurrent leases spread over
+    // the pool instead of piling onto one VM.
+    let vms: std::collections::BTreeSet<&str> = scat
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ActivityStarted { node, .. } if node.starts_with("cloud") => {
+                Some(node.as_str())
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(vms.len() >= 2, "concurrent elements must lease distinct VMs: {vms:?}");
+}
+
+#[test]
+fn pipelined_while_starts_next_iteration_before_slow_unit_drains() {
+    // Loop-body pipelining: the While body splits into a fast counter
+    // unit (reads/writes `i`) and a slow unit (writes `v`, reads
+    // nothing the counter touches). Only consecutive instances of the
+    // SAME unit are ordered, and the next condition waits only on the
+    // counter — so iteration 2's counter starts while iteration 1's
+    // slow unit is still asleep. Sequential mode orders them strictly.
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="i" Init="0"/><Variable Name="v" Init="0"/>
+             </Workflow.Variables>
+             <Sequence>
+               <While Condition="i &lt; 3" MaxIters="10">
+                 <Sequence>
+                   <InvokeActivity DisplayName="counter" Activity="fast.op"
+                                   In.x="i" Out.y="i"/>
+                   <InvokeActivity DisplayName="slow" Activity="slow.wall"
+                                   In.x="9" Out.y="v"/>
+                 </Sequence>
+               </While>
+               <WriteLine Text="'i=' + str(i) + ' v=' + str(v)"/>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let run_mode = |ir: bool| {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("fast.op", |_c, inputs| {
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        reg.register_fn("slow.wall", |_c, inputs| {
+            let x = need_num(inputs, "x")?;
+            // Wide real-time margin so the pipelining (or its absence)
+            // is observable in the emission seqs.
+            std::thread::sleep(Duration::from_millis(200));
+            Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+        });
+        Engine::new(Arc::new(reg), services).with_ir(ir).run(&wf).unwrap()
+    };
+    let seq = run_mode(false);
+    assert_eq!(seq.lines, vec!["i=3 v=10"]);
+    let pipe = run_mode(true);
+    assert_eq!(pipe.lines, seq.lines);
+    assert_eq!(
+        pipe.events, seq.events,
+        "pipelined traces must stay in program order, payloads included"
+    );
+    // Real interleaving: the second counter instance must start before
+    // the first slow instance finishes.
+    let mut counter_starts = Vec::new();
+    let mut slow_finishes = Vec::new();
+    for (e, s) in pipe.events.iter().zip(&pipe.seqs) {
+        match e {
+            Event::ActivityStarted { step, .. } if step == "counter" => {
+                counter_starts.push(*s);
+            }
+            Event::ActivityFinished { step, .. } if step == "slow" => {
+                slow_finishes.push(*s);
+            }
+            _ => {}
+        }
+    }
+    assert_eq!((counter_starts.len(), slow_finishes.len()), (3, 3));
+    assert!(
+        counter_starts[1] < slow_finishes[0],
+        "iteration 2's counter must start while iteration 1's slow unit is in flight \
+         (counter start {} vs slow finish {})",
+        counter_starts[1],
+        slow_finishes[0]
+    );
+}
+
+#[test]
+fn while_max_iters_error_is_identical_across_modes() {
+    // The pipelined executor must surface the exact sequential error
+    // text when a loop overruns MaxIters — no added context layers.
+    let wf = xaml::parse(
+        r#"<Workflow>
+             <Workflow.Variables>
+               <Variable Name="i" Init="0"/><Variable Name="v" Init="0"/>
+             </Workflow.Variables>
+             <Sequence>
+               <While DisplayName="spin" Condition="i &lt; 100" MaxIters="3">
+                 <Sequence>
+                   <Assign To="i" Value="i + 1"/>
+                   <Assign To="v" Value="9"/>
+                 </Sequence>
+               </While>
+             </Sequence>
+           </Workflow>"#,
+    )
+    .unwrap();
+    let run_mode = |ir: bool| {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let reg = Arc::new(ActivityRegistry::new());
+        Engine::new(reg, services).with_ir(ir).run(&wf).unwrap_err()
+    };
+    let seq = format!("{:#}", run_mode(false));
+    let ir = format!("{:#}", run_mode(true));
+    assert!(seq.contains("exceeded MaxIters=3"), "{seq}");
+    assert_eq!(ir, seq, "error text must be byte-identical across modes");
+}
+
+#[test]
+fn traces_are_byte_stable_across_worker_pool_sizes() {
+    // `[engine] workers` (or `--workers`) bounds the dispatcher pool.
+    // The canonical program-order naming makes traces byte-identical
+    // whether one worker drains the graph or eight race it — in both
+    // the per-sequence DAG and whole-workflow IR modes.
+    forall(20, |g: &mut Gen| {
+        let wf = gen_workflow(g);
+        let (part, _) = partitioner::partition(&wf).unwrap();
+        let narrow = quiet_engine(true).with_workers(Some(1)).run(&part).unwrap();
+        let wide = quiet_engine(true).with_workers(Some(8)).run(&part).unwrap();
+        assert_eq!(narrow.lines, wide.lines);
+        assert_eq!(narrow.events, wide.events, "dataflow traces must not depend on pool size");
+        let ir_narrow =
+            quiet_engine(false).with_ir(true).with_workers(Some(1)).run(&part).unwrap();
+        let ir_wide =
+            quiet_engine(false).with_ir(true).with_workers(Some(8)).run(&part).unwrap();
+        assert_eq!(ir_narrow.lines, ir_wide.lines);
+        assert_eq!(ir_narrow.events, ir_wide.events, "IR traces must not depend on pool size");
+    });
 }

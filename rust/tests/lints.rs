@@ -40,6 +40,7 @@ fn seeded_bad_workflows_trip_exactly_their_codes() {
     assert_eq!(codes("dead_write.xml"), vec!["WF003"]);
     assert_eq!(codes("useless_offload.xml"), vec!["WF004"]);
     assert_eq!(codes("const_condition.xml"), vec!["WF005"]);
+    assert_eq!(codes("loop_carried.xml"), vec!["WF009"]);
 }
 
 #[test]
@@ -47,7 +48,7 @@ fn race_is_an_error_and_advisories_are_warnings() {
     let (_, wf) = parsed("ww_race.xml");
     assert_eq!(max_severity(&check_workflow(&wf)), Some(Severity::Error));
     for name in ["read_never_written.xml", "dead_write.xml", "useless_offload.xml",
-                 "const_condition.xml"] {
+                 "const_condition.xml", "loop_carried.xml"] {
         let (_, wf) = parsed(name);
         assert_eq!(max_severity(&check_workflow(&wf)), Some(Severity::Warning), "{name}");
     }
@@ -119,7 +120,7 @@ fn run_and_check_agree_on_legality() {
     // reports a structural finding — advisory lints never block a run,
     // and nothing blocks a run without appearing in check's output.
     for name in ["ww_race.xml", "read_never_written.xml", "dead_write.xml",
-                 "useless_offload.xml", "const_condition.xml"] {
+                 "useless_offload.xml", "const_condition.xml", "loop_carried.xml"] {
         let (_, wf) = parsed(name);
         let structural = emerald::analysis::lints::structural_findings(&wf);
         assert_eq!(
