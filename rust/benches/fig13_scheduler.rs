@@ -68,6 +68,16 @@
 //! queueing model, with ≥ 2 element offloads in flight concurrently
 //! on distinct VMs and every offload's `ActivityStarted` naming the
 //! VM it executed on — while the gathered list stays identical.
+//!
+//! A tenth section (**Fig 13j**) runs the chain on a **hostile
+//! cloud** (`docs/FAULTS.md`): priced tiers with provisioning delays
+//! and seeded spot prices, plus a seeded preemption plan that kills
+//! the first two leased VMs mid-offload. Bounded retry-elsewhere must
+//! complete the run with the exact fault-free result — strictly
+//! beating the fail-the-run baseline, which errors out on the first
+//! preemption — paying a visible recovery overhead over the polite
+//! cloud, and a budgeted rerun must never overshoot its budget
+//! (float-exact).
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
@@ -78,10 +88,12 @@ use emerald::cloud::{CloudTier, Platform, PlatformConfig};
 use emerald::engine::activity::need_num;
 use emerald::engine::{ActivityRegistry, DataflowDispatch, Engine, Event, RunReport, Services};
 use emerald::expr::Value;
+use emerald::faults::{FaultConfig, FaultPlan};
 use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
 use emerald::partitioner::{self, PartitionOptions};
 use emerald::scheduler::{
     admission_cap, simulate_makespan, simulate_plan, NodeSpec, Objective, SchedulePolicy,
+    SpotModel,
 };
 use emerald::workflow::{dag, xaml, StepKind};
 
@@ -417,6 +429,83 @@ fn run_priced(
         })
         .collect();
     Ok((report.sim_time, report.spend, executed, mgr.stats()))
+}
+
+/// Fig 13j's fixed fault seed: the section is a deterministic A/B, so
+/// the seed is pinned rather than read from the environment.
+const FAULT_SEED: u64 = 0xFA17;
+
+/// One sequential chain run on the hostile pool — priced tiers with
+/// provisioning delays and seeded spot prices — under a seeded
+/// preemption plan that kills the first two leased VMs mid-offload
+/// (`preempt_rate` 1.0 capped at `max_preemptions` 2, so the schedule
+/// is seed-independent). `faulted = false` is the polite-cloud
+/// baseline on the identical pool. Returns the run outcome and the
+/// manager's stats: with `recover = (0, false)` (fail-the-run) the
+/// first preemption surfaces as the workflow error.
+fn run_hostile(
+    faulted: bool,
+    retries: usize,
+    recover_local: bool,
+) -> anyhow::Result<(anyhow::Result<RunReport>, emerald::migration::MigrationStats)> {
+    let (engine, mgr) = hostile_stack(retries, recover_local, faulted, None)?;
+    let wf = xaml::parse(CHAIN_WORKFLOW)?;
+    let (part, _) = partitioner::partition(&wf)?;
+    let outcome = engine.run(&part);
+    Ok((outcome, mgr.stats()))
+}
+
+/// Engine + manager on the hostile pool, shared by the fig13j arms.
+fn hostile_stack(
+    retries: usize,
+    recover_local: bool,
+    faulted: bool,
+    budget: Option<f64>,
+) -> anyhow::Result<(Engine, Arc<MigrationManager>)> {
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![
+            CloudTier::priced(2, 4.0, 0.5).with_boot(Duration::from_millis(5)),
+            CloudTier::priced(2, 8.0, 1.0),
+        ],
+        spot: Some(SpotModel::new(FAULT_SEED, 0.4)),
+        ..Default::default()
+    })?;
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.budget = budget;
+    cfg.preempt_retries = retries;
+    cfg.preempt_local = recover_local;
+    if faulted {
+        cfg.faults = Some(FaultPlan::new(FaultConfig {
+            seed: FAULT_SEED,
+            preempt_rate: 1.0,
+            max_preemptions: Some(2),
+        })?);
+    }
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services).with_offload(mgr.clone());
+    Ok((engine, mgr))
+}
+
+/// Two back-to-back hostile chain runs on ONE budgeted manager (the
+/// warm + measured idiom of [`run_priced`]): the warm run consumes
+/// budget and seeds the cost history, so the measured run's later
+/// projections are real money rather than estimate-less zeros.
+/// Returns the manager's cumulative stats across both runs.
+fn run_hostile_budgeted(budget: f64) -> anyhow::Result<emerald::migration::MigrationStats> {
+    let (engine, mgr) = hostile_stack(2, true, true, Some(budget))?;
+    let wf = xaml::parse(CHAIN_WORKFLOW)?;
+    let (part, _) = partitioner::partition(&wf)?;
+    for _ in 0..2 {
+        let report = engine.run(&part)?;
+        assert!(
+            report.lines.iter().any(|l| l == "result=5"),
+            "budget pressure may push steps local but never change results: {:?}",
+            report.lines
+        );
+    }
+    Ok(mgr.stats())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -988,6 +1077,112 @@ fn main() -> anyhow::Result<()> {
         "Fig 13i model: scattered makespan {:.3}s vs serial-on-fastest {:.3}s",
         scatter_mk.as_secs_f64(),
         serial_mk.as_secs_f64()
+    );
+
+    // -- Fig 13j: hostile cloud — seeded preemption + boot delays +
+    //    spot prices. Retry-elsewhere completes with the exact
+    //    fault-free result; the fail-the-run baseline errors on the
+    //    first preemption; a budgeted rerun never overshoots. --
+    let (polite, polite_stats) = run_hostile(false, 2, true)?;
+    let polite = polite?;
+    assert!(polite.lines.iter().any(|l| l == "result=5"), "{:?}", polite.lines);
+
+    let (retry, retry_stats) = run_hostile(true, 2, true)?;
+    let retry = retry?;
+    assert!(
+        retry.lines.iter().any(|l| l == "result=5"),
+        "recovery must preserve the fault-free result: {:?}",
+        retry.lines
+    );
+    assert_eq!(retry_stats.preempted, 2, "both injected preemptions hit");
+    assert_eq!(retry_stats.preempt_retried, 2, "both recovered by relocation");
+    assert_eq!(retry_stats.preempt_local, 0, "no step fell back local");
+    assert_eq!(retry_stats.offloads, 4, "every chain step still offloads");
+    assert!(
+        retry.events.iter().any(|e| matches!(e, Event::OffloadPreempted { .. })),
+        "the trace must record the injected preemptions"
+    );
+    assert!(
+        retry.events.iter().any(|e| matches!(e, Event::OffloadRetried { .. })),
+        "the trace must record the relocations"
+    );
+    assert!(
+        retry.sim_time > polite.sim_time,
+        "recovery is not free: relocations re-ship the request and re-boot \
+         cold VMs ({:?} vs polite {:?})",
+        retry.sim_time,
+        polite.sim_time
+    );
+
+    // Fail-the-run baseline: no retries, no local recovery — the first
+    // preemption surfaces as the workflow error. Retry-elsewhere
+    // strictly beats it: one finishes with the right answer, the
+    // other never finishes at all.
+    let (failed, failed_stats) = run_hostile(true, 0, false)?;
+    let fail_err = failed.expect_err("fail-the-run must surface the preemption");
+    assert!(
+        format!("{fail_err:#}").contains("preempted"),
+        "the error must name the cause: {fail_err:#}"
+    );
+    assert_eq!(failed_stats.offloads, 0, "the failed run commits no offload");
+    assert_eq!(failed_stats.spend, 0.0, "the failed run commits no spend");
+
+    // The budget boundary, float-exact: a probe pass under a generous
+    // cap records what two hostile runs (warm + measured) actually
+    // spend; a second, identical stack gets EXACTLY that number as its
+    // budget. The mirrored flow lands its last admission exactly on
+    // the boundary — the gate admits it (a projection landing on the
+    // budget is in) and the ledger must never pass it. No epsilon.
+    let probe = run_hostile_budgeted(4.0)?;
+    assert!(probe.spend > 0.0, "the probe pass must spend real money");
+    assert!(probe.spend <= 4.0, "the generous cap must not bind");
+    let capped_stats = run_hostile_budgeted(probe.spend)?;
+    assert!(
+        capped_stats.spend <= probe.spend,
+        "budget overshot: spent {} of {}",
+        capped_stats.spend,
+        probe.spend
+    );
+
+    let mut hostile_series = Series::new(
+        "Fig 13j: hostile cloud, retry-elsewhere vs fail-the-run (seeded faults)",
+        "seconds (simulated) / money (spend)",
+    );
+    hostile_series.row(
+        "polite cloud (no faults)",
+        vec![
+            ("sim".into(), polite.sim_time.as_secs_f64()),
+            ("spend".into(), polite_stats.spend),
+            ("completed".into(), 1.0),
+        ],
+    );
+    hostile_series.row(
+        "hostile, retry-elsewhere",
+        vec![
+            ("sim".into(), retry.sim_time.as_secs_f64()),
+            ("spend".into(), retry_stats.spend),
+            ("completed".into(), 1.0),
+        ],
+    );
+    hostile_series.row(
+        "hostile, fail-the-run",
+        vec![("spend".into(), failed_stats.spend), ("completed".into(), 0.0)],
+    );
+    hostile_series.row(
+        "hostile ×2 (warm + measured), budget = probe spend",
+        vec![
+            ("spend".into(), capped_stats.spend),
+            ("budget".into(), probe.spend),
+            ("completed".into(), 1.0),
+        ],
+    );
+    hostile_series.print();
+    traj.record(&hostile_series);
+    println!(
+        "Fig 13j: {} preemptions survived by relocation (recovery overhead \
+         {:+.1}% sim vs polite); fail-the-run aborted with zero progress",
+        retry_stats.preempted,
+        100.0 * (retry.sim_time.as_secs_f64() / polite.sim_time.as_secs_f64() - 1.0),
     );
 
     println!(

@@ -10,8 +10,10 @@
 //! local_nodes = 10
 //! local_speed = 1.0
 //! # Heterogeneous cloud pool: one entry per tier (price optional,
-//! # cost per reference-second of work, default 0.0 = free).
-//! tiers = [{ nodes = 15, speed = 4.0, price = 0.1 }, { nodes = 10, speed = 8.0 }]
+//! # cost per reference-second of work, default 0.0 = free; boot
+//! # optional, provisioning delay in ms charged on the first lease of
+//! # a cold VM, default 0).
+//! tiers = [{ nodes = 15, speed = 4.0, price = 0.1, boot = 30000 }, { nodes = 10, speed = 8.0 }]
 //! # ...or the legacy one-tier shorthand (mutually exclusive):
 //! # cloud_nodes = 25
 //! # cloud_speed = 4.0
@@ -44,6 +46,14 @@
 //! steal = false            # idle-VM work stealing
 //! signing_key = ""         # non-empty enables request signing
 //! codec = "raw"            # raw | deflate
+//!
+//! [faults]                 # hostile-cloud model (docs/FAULTS.md)
+//! seed = 1337              # seeds the fault AND spot-price streams
+//! preempt_rate = 0.25      # P(placement attempt is preempted)
+//! # max_preemptions = 8    # cap on injected faults (absent = unbounded)
+//! spot_amplitude = 0.5     # relative spot-price excursion (0 = fixed)
+//! retries = 2              # retry-elsewhere relocations per offload
+//! recover_local = true     # false = fail the run when retries exhaust
 //! ```
 //!
 //! Supported grammar: `[section]` headers, `key = value` with string /
@@ -57,14 +67,55 @@ use anyhow::{bail, Context, Result};
 
 use crate::cloud::{CloudTier, PlatformConfig};
 use crate::engine::DataflowDispatch;
+use crate::faults::{FaultConfig, FaultPlan};
 use crate::mdss::Codec;
 use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
-use crate::scheduler::{Objective, SchedulePolicy};
+use crate::scheduler::{Objective, SchedulePolicy, SpotModel};
 
 /// A parsed config file: section -> key -> raw value.
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct ConfigFile {
     sections: BTreeMap<String, BTreeMap<String, ConfigValue>>,
+}
+
+/// Parsed `[faults]` section — the hostile-cloud model knobs (see
+/// `docs/FAULTS.md`). One `seed` drives both the preemption stream
+/// and the spot-price stream, so a single number replays the whole
+/// scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultsSpec {
+    /// `[faults] seed`: seed of the deterministic fault and
+    /// spot-price streams.
+    pub seed: u64,
+    /// `[faults] preempt_rate`: probability in `[0, 1]` that an
+    /// offload placement attempt is preempted mid-flight.
+    pub preempt_rate: f64,
+    /// `[faults] spot_amplitude`: relative amplitude of per-grant
+    /// spot-price excursions (`0.0` = fixed base prices).
+    pub spot_amplitude: f64,
+    /// `[faults] max_preemptions`: cap on total injected preemptions
+    /// (`None` = unbounded).
+    pub max_preemptions: Option<u64>,
+    /// `[faults] retries`: retry-elsewhere relocations per offload.
+    pub retries: usize,
+    /// `[faults] recover_local`: recover preempted offloads by local
+    /// execution when retries exhaust (`false` fails the run).
+    pub recover_local: bool,
+}
+
+impl Default for FaultsSpec {
+    /// The polite cloud: nothing fires, prices stay fixed, and the
+    /// recovery knobs match [`ManagerConfig::new`]'s defaults.
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            preempt_rate: 0.0,
+            spot_amplitude: 0.0,
+            max_preemptions: None,
+            retries: 2,
+            recover_local: true,
+        }
+    }
 }
 
 /// Engine execution options from the `[engine]` section.
@@ -333,7 +384,7 @@ impl ConfigFile {
                         );
                     };
                     for key in t.keys() {
-                        if key != "nodes" && key != "speed" && key != "price" {
+                        if key != "nodes" && key != "speed" && key != "price" && key != "boot" {
                             bail!("[platform] tiers[{i}]: unknown key {key:?}");
                         }
                     }
@@ -363,7 +414,20 @@ impl ConfigFile {
                         }
                         None => 0.0,
                     };
-                    tiers.push(CloudTier::priced(nodes, speed, price));
+                    let boot = match t.get("boot") {
+                        Some(ConfigValue::Num(ms)) if ms.is_finite() && *ms >= 0.0 => {
+                            Duration::from_secs_f64(*ms / 1e3)
+                        }
+                        Some(ConfigValue::Num(ms)) => bail!(
+                            "[platform] tiers[{i}].boot must be a non-negative number \
+                             of milliseconds, got {ms}"
+                        ),
+                        Some(v) => {
+                            bail!("[platform] tiers[{i}].boot must be a number, got {}", v.kind())
+                        }
+                        None => Duration::ZERO,
+                    };
+                    tiers.push(CloudTier::priced(nodes, speed, price).with_boot(boot));
                 }
                 Ok(tiers)
             }
@@ -398,6 +462,62 @@ impl ConfigFile {
                     / 1e3,
             ),
             schedule,
+            // Spot-price dynamics ride on the `[faults]` seed so one
+            // number replays the whole hostile-cloud scenario.
+            spot: {
+                let f = self.faults()?;
+                (f.spot_amplitude > 0.0).then(|| SpotModel::new(f.seed, f.spot_amplitude))
+            },
+        })
+    }
+
+    /// Parse the `[faults]` section — the hostile-cloud model (see
+    /// `docs/FAULTS.md`). An absent section yields the polite-cloud
+    /// default: nothing fires, prices stay fixed.
+    pub fn faults(&self) -> Result<FaultsSpec> {
+        let d = FaultsSpec::default();
+        let seed = match self.get("faults", "seed") {
+            None => d.seed,
+            Some(ConfigValue::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as u64,
+            Some(ConfigValue::Num(n)) => {
+                bail!("[faults] seed must be a non-negative integer, got {n}")
+            }
+            Some(v) => bail!("[faults] seed must be a number, got {}", v.kind()),
+        };
+        let preempt_rate = self.num("faults", "preempt_rate", d.preempt_rate)?;
+        if !(0.0..=1.0).contains(&preempt_rate) {
+            bail!("[faults] preempt_rate must be in [0, 1], got {preempt_rate}");
+        }
+        let spot_amplitude = self.num("faults", "spot_amplitude", d.spot_amplitude)?;
+        if !spot_amplitude.is_finite() || spot_amplitude < 0.0 {
+            bail!(
+                "[faults] spot_amplitude must be a non-negative finite number, \
+                 got {spot_amplitude}"
+            );
+        }
+        let max_preemptions = match self.get("faults", "max_preemptions") {
+            None => None,
+            Some(ConfigValue::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            Some(ConfigValue::Num(n)) => {
+                bail!("[faults] max_preemptions must be a non-negative integer, got {n}")
+            }
+            Some(v) => bail!("[faults] max_preemptions must be a number, got {}", v.kind()),
+        };
+        let retries = match self.get("faults", "retries") {
+            None => d.retries,
+            Some(ConfigValue::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as usize,
+            Some(ConfigValue::Num(n)) => {
+                bail!("[faults] retries must be a non-negative integer, got {n}")
+            }
+            Some(v) => bail!("[faults] retries must be a number, got {}", v.kind()),
+        };
+        Ok(FaultsSpec {
+            seed,
+            preempt_rate,
+            spot_amplitude,
+            max_preemptions,
+            retries,
+            recover_local: self.boolean("faults", "recover_local", d.recover_local)?,
         })
     }
 
@@ -481,6 +601,19 @@ impl ConfigFile {
         if !key.is_empty() {
             cfg.signing = Some(SigningKey::new(key.into_bytes()));
         }
+        // Hostile-cloud knobs ride in from `[faults]`: a fresh
+        // FaultPlan per manager (plans hold attempt counters, so
+        // sharing one across runs would shift the stream).
+        let f = self.faults()?;
+        cfg.preempt_retries = f.retries;
+        cfg.preempt_local = f.recover_local;
+        if f.preempt_rate > 0.0 {
+            cfg.faults = Some(FaultPlan::new(FaultConfig {
+                seed: f.seed,
+                preempt_rate: f.preempt_rate,
+                max_preemptions: f.max_preemptions,
+            })?);
+        }
         Ok(cfg)
     }
 
@@ -528,6 +661,17 @@ impl ConfigFile {
                 "decay_after",
                 "signing_key",
                 "codec",
+            ],
+        ),
+        (
+            "faults",
+            &[
+                "seed",
+                "preempt_rate",
+                "spot_amplitude",
+                "max_preemptions",
+                "retries",
+                "recover_local",
             ],
         ),
     ];

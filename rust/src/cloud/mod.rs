@@ -51,7 +51,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::scheduler::{Lease, NodeScheduler, NodeSpec, Objective, SchedulePolicy};
+use crate::scheduler::{Lease, NodeScheduler, NodeSpec, Objective, SchedulePolicy, SpotModel};
 
 /// One homogeneous slice of the cloud pool: `nodes` VMs at `speed`
 /// (relative to a speed-1.0 local reference node), each charging
@@ -66,19 +66,33 @@ pub struct CloudTier {
     /// (0.0 = free, the paper's model). An offload's spend is
     /// `price × reference work`, independent of the VM's speed — a
     /// fast expensive VM costs the same as a slow expensive VM for the
-    /// same task, it just finishes sooner.
+    /// same task, it just finishes sooner. With
+    /// [`PlatformConfig::spot`] set this is the *base* price the spot
+    /// series fluctuates around.
     pub price: f64,
+    /// Provisioning/boot delay of every VM in this tier: simulated
+    /// time the *first* lease on a cold VM waits before the machine is
+    /// usable (`boot` tier key, milliseconds, in the config file;
+    /// default zero = pre-provisioned, the paper's model). A VM killed
+    /// by preemption goes cold again — its replacement pays the delay
+    /// anew (Juve et al. measure this overhead on EC2).
+    pub boot: Duration,
 }
 
 impl CloudTier {
     /// New free tier spec (price 0.0 — the paper's cost model).
     pub fn new(nodes: usize, speed: f64) -> Self {
-        Self { nodes, speed, price: 0.0 }
+        Self { nodes, speed, price: 0.0, boot: Duration::ZERO }
     }
 
     /// New priced tier spec.
     pub fn priced(nodes: usize, speed: f64, price: f64) -> Self {
-        Self { nodes, speed, price }
+        Self { nodes, speed, price, boot: Duration::ZERO }
+    }
+
+    /// The same tier with a provisioning delay on every VM.
+    pub fn with_boot(self, boot: Duration) -> Self {
+        Self { boot, ..self }
     }
 }
 
@@ -105,6 +119,12 @@ pub struct PlatformConfig {
     /// reproduces the seed, `LeastLoadedBlind` the speed-blind PR-1
     /// policy).
     pub schedule: SchedulePolicy,
+    /// Optional spot-style price dynamics: a seeded deterministic
+    /// series replaces each tier's fixed `price` at lease time
+    /// (`[faults] spot_amplitude` / `spot seed`; see
+    /// [`crate::scheduler::SpotModel`]). `None` (the default) keeps
+    /// fixed pricing byte for byte.
+    pub spot: Option<SpotModel>,
 }
 
 impl Default for PlatformConfig {
@@ -116,6 +136,7 @@ impl Default for PlatformConfig {
             wan_bandwidth: 200.0e6 / 8.0,
             wan_latency: Duration::from_millis(10),
             schedule: SchedulePolicy::LeastLoaded,
+            spot: None,
         }
     }
 }
@@ -147,7 +168,10 @@ impl PlatformConfig {
     pub fn cloud_specs(&self) -> Vec<NodeSpec> {
         self.tiers
             .iter()
-            .flat_map(|t| std::iter::repeat(NodeSpec::new(t.speed, t.price)).take(t.nodes))
+            .flat_map(|t| {
+                std::iter::repeat(NodeSpec::new(t.speed, t.price).with_boot(t.boot))
+                    .take(t.nodes)
+            })
             .collect()
     }
 
@@ -177,6 +201,9 @@ impl PlatformConfig {
                     tier.price
                 );
             }
+        }
+        if let Some(spot) = &self.spot {
+            spot.validate().context("platform config")?;
         }
         Ok(())
     }
@@ -212,7 +239,8 @@ impl Platform {
             .enumerate()
             .map(|(index, speed)| Arc::new(Node::new(NodeKind::Cloud, index, speed)))
             .collect();
-        let cloud_sched = NodeScheduler::priced(config.schedule, config.cloud_specs());
+        let cloud_sched =
+            NodeScheduler::priced_spot(config.schedule, config.cloud_specs(), config.spot);
         Ok(Arc::new(Self {
             config,
             network,

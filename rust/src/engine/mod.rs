@@ -94,6 +94,20 @@ pub enum Event {
     /// their traces unchanged), so the trace records both where priced
     /// work ran and what it cost.
     OffloadCharged { step: String, node: String, spend: f64 },
+    /// The VM holding this step's offload lease was preempted
+    /// mid-flight by the seeded fault plan (`node` is the VM that
+    /// died). Followed by an `OffloadRetried` (the work moved to a
+    /// surviving VM), an `OffloadRecoveredLocal` (retries exhausted,
+    /// ran locally), or a workflow error when recovery is disabled.
+    OffloadPreempted { step: String, node: String },
+    /// After a preemption the offload re-pinned to `node` (the
+    /// retry-elsewhere path) and the round trip continued there.
+    OffloadRetried { step: String, node: String },
+    /// After a preemption the offload fell back to local execution
+    /// (retries exhausted, no surviving VM admissible, or the budget
+    /// vetoed every relocation). Semantically invisible: the step's
+    /// results and `RunReport.lines` match the fault-free run.
+    OffloadRecoveredLocal { step: String },
     /// A WriteLine emitted a line.
     Line { text: String },
 }
@@ -227,6 +241,12 @@ pub struct OffloadOutcome {
     /// observed reference work); surfaced as an
     /// [`Event::OffloadCharged`] when non-zero.
     pub spend: f64,
+    /// Recovery trail of a round trip that survived preemption:
+    /// [`Event::OffloadPreempted`]/[`Event::OffloadRetried`] pairs in
+    /// the order they happened, replayed into the trace before the
+    /// `ActivityStarted` of the surviving VM. Empty on a fault-free
+    /// trip.
+    pub recovery: Vec<Event>,
 }
 
 /// What the migration manager decided to do with a remotable step.
@@ -241,6 +261,22 @@ pub enum OffloadVerdict {
         /// Human-readable decline reason (surfaced as an
         /// [`Event::Line`]).
         reason: String,
+    },
+    /// The step's VM was preempted and the retry-elsewhere path could
+    /// not re-place it (retries exhausted, single-VM pool, or budget
+    /// veto): the engine runs the step locally. Unlike
+    /// [`OffloadVerdict::Declined`] this emits **no notice line** —
+    /// recovery is semantically invisible, so `RunReport.lines` stays
+    /// byte-identical to the fault-free run; the preemption trail
+    /// lands in the event trace instead.
+    RecoveredLocal {
+        /// What exhausted the recovery (diagnostics; carried on the
+        /// trailing [`Event::OffloadRecoveredLocal`]'s context, not as
+        /// a line).
+        reason: String,
+        /// The `OffloadPreempted`/`OffloadRetried`/
+        /// `OffloadRecoveredLocal` trail to replay into the trace.
+        events: Vec<Event>,
     },
 }
 
@@ -1078,6 +1114,25 @@ impl Engine {
                 ctx.event(Event::Resumed { step: target.display_name.clone() });
                 return Ok(sim);
             }
+            OffloadVerdict::RecoveredLocal { reason, events } => {
+                // Preemption recovery fell back to local execution.
+                // The preemption trail goes into the trace, but — in
+                // contrast to a decline — NO line is pushed: recovery
+                // must be invisible in `RunReport.lines`, which the
+                // fault-equivalence property tests pin down.
+                for e in events {
+                    ctx.event(e);
+                }
+                ctx.event(Event::LocalExecution { step: target.display_name.clone() });
+                if self.verbose {
+                    println!(
+                        "[emerald] offload recovered locally after preemption: {reason}"
+                    );
+                }
+                let sim = self.exec(target, ctx)?;
+                ctx.event(Event::Resumed { step: target.display_name.clone() });
+                return Ok(sim);
+            }
         };
 
         {
@@ -1090,6 +1145,12 @@ impl Engine {
                     format!("re-integrating output '{name}' of '{}'", target.display_name)
                 })?;
             }
+        }
+        // A round trip that survived preemption replays its
+        // OffloadPreempted/OffloadRetried trail before the start event
+        // of the VM that finally ran it.
+        for e in &outcome.recovery {
+            ctx.event(e.clone());
         }
         // Record where the work actually ran: the worker reports the
         // pinned VM, which by construction is the scheduler's lease —

@@ -1,0 +1,234 @@
+//! Seeded fault injection for the simulated cloud — the hostile-cloud
+//! model (`[faults]` config section / `--fault-seed`).
+//!
+//! The polite cloud the paper evaluates against never kills a VM; real
+//! clouds do, and spot-priced capacity does so *by contract*. This
+//! module injects **mid-offload VM preemption** deterministically: a
+//! [`FaultPlan`] is a pure function of its seed, the step name, and a
+//! per-step attempt counter, so a chaos run is byte-for-byte
+//! replayable from its seed alone (`docs/FAULTS.md`).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism.** The decision for attempt *k* of step *s* is
+//!    `hash(seed, fnv(s), k) < rate` — it does not depend on wall
+//!    time, thread interleaving, or how many *other* steps offloaded
+//!    first. Two runs with the same seed and the same per-step attempt
+//!    sequence make identical decisions; in sequential mode the whole
+//!    trace (including `OffloadPreempted` / `OffloadRetried` events)
+//!    is byte-identical across runs, which the repeat-run test in
+//!    `tests/failure_injection.rs` pins.
+//! 2. **Replayability.** A failing chaos seed from CI
+//!    (`EMERALD_FAULT_SEED`) reproduces locally with the same config —
+//!    nothing else feeds the plan.
+//! 3. **Boundedness.** [`FaultConfig::max_preemptions`] caps the total
+//!    number of injected faults so a hostile rate cannot starve a
+//!    retrying workflow forever.
+//!
+//! The migration manager consults [`FaultPlan::preempts`] once per
+//! placement attempt (initial lease and each retry-elsewhere
+//! relocation), so a step can be preempted repeatedly until its
+//! retries exhaust — exactly the worst case the recovery path must
+//! survive.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+/// Configuration of a [`FaultPlan`] (`[faults]` in the config file).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the deterministic fault stream. Same seed + same config
+    /// ⇒ same faults, always.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that any given offload placement is
+    /// preempted mid-flight (`[faults] preempt_rate`).
+    pub preempt_rate: f64,
+    /// Cap on the total number of injected preemptions across the
+    /// plan's lifetime; `None` = unbounded.
+    pub max_preemptions: Option<u64>,
+}
+
+impl FaultConfig {
+    /// A plan that injects nothing (rate 0.0) — the polite cloud.
+    pub fn none() -> Self {
+        Self { seed: 0, preempt_rate: 0.0, max_preemptions: None }
+    }
+
+    /// The `--fault-seed N` shorthand: a moderately hostile cloud
+    /// (every fourth placement dies, unbounded) driven by `seed`.
+    pub fn seeded(seed: u64) -> Self {
+        Self { seed, preempt_rate: 0.25, max_preemptions: None }
+    }
+
+    /// Reject rates outside `[0, 1]` (NaN included).
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.preempt_rate) {
+            bail!(
+                "fault config: preempt_rate must be in [0, 1], got {}",
+                self.preempt_rate
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Interior state: per-step attempt counters plus the global fired
+/// count, under one lock so the `max_preemptions` check and the
+/// counter bump are atomic.
+#[derive(Debug, Default)]
+struct PlanState {
+    attempts: BTreeMap<String, u64>,
+    fired: u64,
+}
+
+/// A deterministic, seeded preemption schedule (see the module doc).
+///
+/// Shared `Arc`-style between the CLI, the migration manager, and test
+/// harnesses; interior counters make it single-use — build a fresh
+/// plan per run to replay a seed.
+#[derive(Debug)]
+pub struct FaultPlan {
+    config: FaultConfig,
+    state: Mutex<PlanState>,
+}
+
+/// SplitMix64 finalizer — the same mixer `quickprop` seeds its
+/// generator with; full avalanche, so consecutive attempt indices give
+/// independent-looking decisions.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the step name: folds the *identity* of the step into
+/// the stream so renaming a step re-rolls its faults but reordering
+/// unrelated steps does not.
+fn fnv(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// `mix` output mapped onto `[0, 1)`.
+fn unit(z: u64) -> f64 {
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// Build a plan from a validated config.
+    pub fn new(config: FaultConfig) -> Result<Arc<Self>> {
+        config.validate()?;
+        Ok(Arc::new(Self { config, state: Mutex::new(PlanState::default()) }))
+    }
+
+    /// The `--fault-seed` shorthand plan ([`FaultConfig::seeded`]).
+    pub fn seeded(seed: u64) -> Arc<Self> {
+        Self::new(FaultConfig::seeded(seed)).expect("seeded() config is valid")
+    }
+
+    /// The config the plan was built from.
+    pub fn config(&self) -> FaultConfig {
+        self.config
+    }
+
+    /// Decide whether the *next* placement attempt of `step` is
+    /// preempted, advancing the step's attempt counter. Deterministic:
+    /// attempt *k* of step *s* always gets the same verdict under the
+    /// same seed, no matter what other steps did in between.
+    pub fn preempts(&self, step: &str) -> bool {
+        if self.config.preempt_rate <= 0.0 {
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        let k = st.attempts.entry(step.to_string()).or_insert(0);
+        let attempt = *k;
+        *k += 1;
+        if let Some(max) = self.config.max_preemptions {
+            if st.fired >= max {
+                return false;
+            }
+        }
+        let z = mix(self.config.seed ^ fnv(step).wrapping_add(attempt.wrapping_mul(0x9e3779b97f4a7c15)));
+        let hit = unit(z) < self.config.preempt_rate;
+        if hit {
+            st.fired += 1;
+        }
+        hit
+    }
+
+    /// Total preemptions injected so far.
+    pub fn fired(&self) -> u64 {
+        self.state.lock().unwrap().fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let decisions = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::seeded(seed);
+            (0..64).map(|i| plan.preempts(&format!("s{}", i % 8))).collect()
+        };
+        assert_eq!(decisions(7), decisions(7), "a seed fully determines the stream");
+        assert_ne!(decisions(7), decisions(8), "different seeds differ");
+    }
+
+    #[test]
+    fn decisions_are_per_step_independent_of_interleaving() {
+        // Run the same per-step attempt sequences in two different
+        // global orders: each step must see the same verdicts.
+        let a = FaultPlan::seeded(42);
+        let b = FaultPlan::seeded(42);
+        let mut va = Vec::new();
+        for _ in 0..8 {
+            va.push(("x", a.preempts("x")));
+        }
+        for _ in 0..8 {
+            va.push(("y", a.preempts("y")));
+        }
+        let mut vb = Vec::new();
+        for _ in 0..8 {
+            vb.push(("y", b.preempts("y")));
+            vb.push(("x", b.preempts("x")));
+        }
+        let of = |v: &[(&str, bool)], s: &str| -> Vec<bool> {
+            v.iter().filter(|(n, _)| *n == s).map(|(_, h)| *h).collect()
+        };
+        assert_eq!(of(&va, "x"), of(&vb, "x"));
+        assert_eq!(of(&va, "y"), of(&vb, "y"));
+    }
+
+    #[test]
+    fn rate_bounds_enforced() {
+        assert!(FaultPlan::new(FaultConfig { seed: 0, preempt_rate: 1.5, max_preemptions: None })
+            .is_err());
+        assert!(FaultPlan::new(FaultConfig { seed: 0, preempt_rate: f64::NAN, max_preemptions: None })
+            .is_err());
+        let never = FaultPlan::new(FaultConfig::none()).unwrap();
+        assert!((0..100).all(|_| !never.preempts("s")), "rate 0.0 never fires");
+        let always =
+            FaultPlan::new(FaultConfig { seed: 1, preempt_rate: 1.0, max_preemptions: None })
+                .unwrap();
+        assert!((0..100).all(|_| always.preempts("s")), "rate 1.0 always fires");
+    }
+
+    #[test]
+    fn max_preemptions_caps_the_plan() {
+        let plan =
+            FaultPlan::new(FaultConfig { seed: 3, preempt_rate: 1.0, max_preemptions: Some(2) })
+                .unwrap();
+        let hits: usize = (0..10).filter(|_| plan.preempts("s")).count();
+        assert_eq!(hits, 2, "the cap bounds total injected faults");
+        assert_eq!(plan.fired(), 2);
+    }
+}

@@ -57,7 +57,12 @@
 //! stealing, a deterministic makespan/spend planner and
 //! budget-capped admission rules, replacing the seed's blind
 //! round-robin (see `benches/fig13_scheduler.rs` for the A/B
-//! comparisons).
+//! comparisons). [`faults`] — the hostile-cloud model: a seeded,
+//! deterministic `FaultPlan` injects mid-offload VM preemption
+//! (`[faults]` / `--fault-seed`); together with per-tier provisioning
+//! delay and spot-style price dynamics in [`scheduler`]/[`cloud`], it
+//! drives the retry-elsewhere recovery path in [`migration`] (see
+//! `docs/FAULTS.md`).
 //!
 //! Substrates (offline environment, see DESIGN.md §1): [`jsonmini`],
 //! [`xmlmini`], [`expr`], [`cli`], [`quickprop`], [`benchkit`],
@@ -104,6 +109,7 @@ pub mod cli;
 pub mod cloud;
 pub mod engine;
 pub mod expr;
+pub mod faults;
 pub mod jsonmini;
 pub mod mdss;
 pub mod metrics;

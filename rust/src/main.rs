@@ -42,7 +42,7 @@ USAGE:
   emerald validate <workflow.xml>
   emerald check <workflow.xml> [--platform <file>]
   emerald partition <workflow.xml> [--out <file>] [--batch] [--dataflow] [--ir]
-  emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--ir] [--workers N] [--policy mdss|bundle] [--tcp <addr>]
+  emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--ir] [--workers N] [--policy mdss|bundle] [--fault-seed N] [--tcp <addr>]
   emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--ir] [--alpha0 X]
   emerald serve
   emerald info
@@ -216,6 +216,13 @@ fn build_engine(
     // --policy overrides the config file.
     if args.options.contains_key("policy") {
         mgr_cfg.policy = policy_of(args)?;
+    }
+    // --fault-seed N overrides [faults]: the shorthand hostile cloud
+    // (preempt_rate 0.25, unbounded) driven by the given seed — the
+    // retry/recovery knobs from the config file still apply.
+    if args.options.contains_key("fault-seed") {
+        let seed: u64 = args.opt_parse("fault-seed", 0)?;
+        mgr_cfg.faults = Some(emerald::faults::FaultPlan::seeded(seed));
     }
     let mgr = match args.options.get("tcp") {
         Some(addr) => MigrationManager::with_config(

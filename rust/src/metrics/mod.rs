@@ -148,6 +148,9 @@ impl<'a> RunMetrics<'a> {
                     ("spend", Value::num(m.spend)),
                     ("budget_declined", Value::num(m.budget_declined as f64)),
                     ("stolen", Value::num(m.stolen as f64)),
+                    ("preempted", Value::num(m.preempted as f64)),
+                    ("preempt_retried", Value::num(m.preempt_retried as f64)),
+                    ("preempt_local", Value::num(m.preempt_local as f64)),
                 ]),
             ));
         }

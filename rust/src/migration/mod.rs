@@ -108,7 +108,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cloud::{Node, NodeKind};
 use crate::engine::{
-    ActivityRegistry, Engine, OffloadHandler, OffloadOutcome, OffloadVerdict, Services,
+    ActivityRegistry, Engine, Event, OffloadHandler, OffloadOutcome, OffloadVerdict, Services,
 };
 use crate::expr::Value;
 use crate::mdss::{CloudState, Uri};
@@ -194,6 +194,23 @@ pub struct ManagerConfig {
     /// still projects real spend. `None` (the default) keeps verdicts
     /// live forever — a declined step is then never re-probed.
     pub decay_after: Option<u64>,
+    /// Seeded preemption schedule (`[faults]` / `--fault-seed`): when
+    /// set, the manager consults the plan once per placement attempt
+    /// and a hit kills the leased VM mid-offload, triggering the
+    /// retry-elsewhere recovery below. `None` (the default) is the
+    /// paper's polite cloud — zero overhead on the offload path.
+    pub faults: Option<Arc<crate::faults::FaultPlan>>,
+    /// Bounded retry-elsewhere (`[faults] retries`): after a
+    /// preemption, relocate the lease to a surviving VM and re-pin,
+    /// re-sign and re-send — at most this many times per offload.
+    /// Each relocation re-charges the uplink (the request ships
+    /// again) and is budget-capped like the steal pass.
+    pub preempt_retries: usize,
+    /// When retries exhaust — or no affordable VM survives — recover
+    /// by executing the step locally (`[faults] recover_local`, the
+    /// default) instead of failing the workflow. `false` is the
+    /// fail-the-run baseline the fig13j bench compares against.
+    pub preempt_local: bool,
 }
 
 impl ManagerConfig {
@@ -212,6 +229,9 @@ impl ManagerConfig {
             budget: None,
             steal: false,
             decay_after: None,
+            faults: None,
+            preempt_retries: 2,
+            preempt_local: true,
         }
     }
 }
@@ -260,6 +280,16 @@ pub struct MigrationStats {
     /// Offloads whose lease was re-pinned by the work-stealing pass
     /// before packaging.
     pub stolen: u64,
+    /// Injected VM preemptions survived by this manager's offloads
+    /// (each one killed a leased VM mid-flight).
+    pub preempted: u64,
+    /// Successful retry-elsewhere relocations after a preemption (the
+    /// offload re-pinned to a surviving VM and completed remotely).
+    pub preempt_retried: u64,
+    /// Preempted offloads that exhausted their retries (or found no
+    /// affordable surviving VM) and recovered by local execution.
+    /// Always a subset of `declined`.
+    pub preempt_local: u64,
 }
 
 impl MigrationStats {
@@ -282,6 +312,9 @@ impl MigrationStats {
         self.spend += d.spend;
         self.budget_declined += d.budget_declined;
         self.stolen += d.stolen;
+        self.preempted += d.preempted;
+        self.preempt_retried += d.preempt_retried;
+        self.preempt_local += d.preempt_local;
     }
 }
 
@@ -524,6 +557,23 @@ impl MigrationManager {
     /// Cumulative statistics.
     pub fn stats(&self) -> MigrationStats {
         *self.stats.lock().unwrap()
+    }
+
+    /// Snapshot of the budget ledger as `(committed, reserved)`.
+    ///
+    /// Invariants the chaos tests pin: after every offload settles (or
+    /// fails) `reserved` is `0.0` — reservations are released by RAII
+    /// on every exit path — and `committed` tracks
+    /// [`MigrationStats::spend`]: both totals accumulate exactly the
+    /// same per-offload charges, each through a single commit point
+    /// (`settle` / `absorb`), so a mid-offload failure can never leave
+    /// them apart by a charge. Serialized runs agree bit-for-bit;
+    /// concurrent runs may interleave the two accumulations in
+    /// different orders, so agreement there is up to float
+    /// re-association.
+    pub fn ledger(&self) -> (f64, f64) {
+        let led = self.ledger.lock().unwrap();
+        (led.committed, led.reserved)
     }
 
     /// URIs referenced by the input values.
@@ -950,20 +1000,121 @@ impl MigrationManager {
                 }
             }
         }
-        let node = self
-            .services
-            .platform
-            .cloud_node_at(lease.node)
-            .with_context(|| format!("resolving the leased VM for '{}'", step.display_name))?;
-
-        // 3. Package (+ pin + sign) + uplink.
+        // 3. Package once; pin + sign + uplink *per placement attempt*.
+        //    Under the hostile-cloud model ([`ManagerConfig::faults`])
+        //    the leased VM can be preempted after the request shipped:
+        //    the manager then relocates the lease to a surviving VM
+        //    ([`Lease::evacuate`]), re-pins, re-signs (`sign`
+        //    overwrites the tag) and re-sends — re-charging the uplink,
+        //    because the bytes really cross the WAN again. Relocations
+        //    are bounded by [`ManagerConfig::preempt_retries`] and
+        //    budget-capped exactly like the steal pass; when they
+        //    exhaust, the step recovers locally
+        //    ([`OffloadVerdict::RecoveredLocal`]) or — with
+        //    `preempt_local` off — fails the run (the fig13j
+        //    baseline).
         let mut req = OffloadRequest::package(step, inputs, writes);
-        req.node = Some(PinnedNode { index: node.index, speed: node.speed });
-        if let Some(key) = &self.config.signing {
-            req.sign(key);
-        }
-        let req_bytes = req.encode();
-        sim += net.transfer(req_bytes.len() as u64);
+        let mut recovery: Vec<Event> = Vec::new();
+        let mut relocations = 0usize;
+        let mut uplink_bytes = 0u64;
+        let (req_bytes, node) = loop {
+            let node = self
+                .services
+                .platform
+                .cloud_node_at(lease.node)
+                .with_context(|| format!("resolving the leased VM for '{}'", step.display_name))?;
+            req.node = Some(PinnedNode { index: node.index, speed: node.speed });
+            if let Some(key) = &self.config.signing {
+                req.sign(key);
+            }
+            let bytes = req.encode();
+            uplink_bytes += bytes.len() as u64;
+            sim += net.transfer(bytes.len() as u64);
+
+            // 3b. Does this placement survive the hostile cloud?
+            let preempted = self
+                .config
+                .faults
+                .as_ref()
+                .is_some_and(|fp| fp.preempts(&step.display_name));
+            if !preempted {
+                break (bytes, node);
+            }
+            delta.preempted += 1;
+            recovery.push(Event::OffloadPreempted {
+                step: step.display_name.clone(),
+                node: node.name(),
+            });
+            // The killed VM must provision again before serving anyone
+            // — occupancy is untouched (this lease still owns its slot
+            // until it evacuates or drops, exactly once either way).
+            self.services.platform.cloud_scheduler().invalidate(lease.node);
+
+            let relocated = if relocations < self.config.preempt_retries {
+                match self.config.budget {
+                    Some(b) => {
+                        // Same single-critical-section discipline as
+                        // the steal pass above: cap read, evacuation
+                        // and re-projection are atomic against
+                        // concurrent admissions and steals.
+                        let mut ledger = self.ledger.lock().unwrap();
+                        let cap = (b - ledger.committed
+                            - (ledger.reserved - reservation.amount))
+                            .max(0.0);
+                        match lease.evacuate(Some(cap)) {
+                            Some(_) => {
+                                let projected =
+                                    work_est.map_or(0.0, |w| lease.price * w.as_secs_f64());
+                                reservation.adjust_locked(&mut ledger, projected);
+                                true
+                            }
+                            None => false,
+                        }
+                    }
+                    None => lease.evacuate(None).is_some(),
+                }
+            } else {
+                false
+            };
+            if relocated {
+                relocations += 1;
+                delta.preempt_retried += 1;
+                let target = self
+                    .services
+                    .platform
+                    .cloud_node_at(lease.node)
+                    .with_context(|| {
+                        format!("resolving the relocated VM for '{}'", step.display_name)
+                    })?;
+                recovery.push(Event::OffloadRetried {
+                    step: step.display_name.clone(),
+                    node: target.name(),
+                });
+                continue;
+            }
+
+            // Retries exhausted, or no affordable survivor.
+            if self.config.preempt_local {
+                delta.declined += 1;
+                delta.preempt_local += 1;
+                recovery.push(Event::OffloadRecoveredLocal {
+                    step: step.display_name.clone(),
+                });
+                return Ok(OffloadVerdict::RecoveredLocal {
+                    reason: format!(
+                        "cloud VM preempted {} time(s) running '{}'; \
+                         retries exhausted — recovering locally",
+                        delta.preempted, step.display_name
+                    ),
+                    events: recovery,
+                });
+            }
+            bail!(
+                "cloud VM preempted while executing '{}' and local recovery \
+                 is disabled ([faults] recover_local = false)",
+                step.display_name
+            );
+        };
 
         // 4. Execute remotely with retries; real bytes through the
         //    transport either way.
@@ -1014,7 +1165,12 @@ impl MigrationManager {
         //     it. For a machine-independent policy comparison use
         //     `scheduler::simulate_makespan`.
         let position = lease.position;
-        let queue_sim = remote_sim * position as u32;
+        // Provisioning delay rides in the same bucket: a cold VM's
+        // boot time (charged at most once per warm-up by the lease)
+        // is, like queueing, a transient placement artifact rather
+        // than intrinsic round-trip cost — `record_costs` below must
+        // not let either tip the cost gate.
+        let queue_sim = remote_sim * position as u32 + lease.take_boot();
         sim += queue_sim;
         // Money: the leased (post-steal) node's price × the observed
         // reference work. Charged from the lease because prices are
@@ -1053,7 +1209,9 @@ impl MigrationManager {
         reservation.settle(&self.ledger, spend);
 
         delta.offloads = 1;
-        delta.protocol_bytes = (req_bytes.len() + resp_bytes.len()) as u64;
+        // Uplink bytes count every shipped placement attempt — a
+        // preempted-and-relocated request crossed the WAN each time.
+        delta.protocol_bytes = uplink_bytes + resp_bytes.len() as u64;
         delta.queued = u64::from(position > 0);
         delta.queue_sim = queue_sim;
         delta.batched_steps = req.batch.saturating_sub(1);
@@ -1070,6 +1228,7 @@ impl MigrationManager {
             node: resp.node,
             billed_node,
             spend,
+            recovery,
         }))
     }
 }

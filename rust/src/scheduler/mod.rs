@@ -122,25 +122,109 @@ pub enum Objective {
 }
 
 /// One node of a scheduling pool: a speed factor (reference = 1.0)
-/// plus a price per reference-second of work (0.0 = free).
+/// plus a price per reference-second of work (0.0 = free) and a
+/// provisioning/boot delay charged on the first lease of a cold VM.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeSpec {
     /// Speed factor of the node (reference = 1.0).
     pub speed: f64,
-    /// Cost per reference-second of work executed on the node.
+    /// Cost per reference-second of work executed on the node. With a
+    /// [`SpotModel`] on the scheduler this is the *base* price the
+    /// spot series fluctuates around.
     pub price: f64,
+    /// Provisioning delay of a **cold** VM: simulated time from "lease
+    /// granted" to "VM ready" (Juve et al. measure tens of seconds to
+    /// minutes of exactly this on EC2). Charged once — the first lease
+    /// a slot grants accrues it into [`Lease::take_boot`]; the slot is
+    /// warm afterwards until [`NodeScheduler::invalidate`] marks it
+    /// cold again (a preempted VM's replacement boots from scratch).
+    pub boot: Duration,
 }
 
 impl NodeSpec {
-    /// New node spec.
+    /// New node spec (no boot delay — VMs are pre-provisioned, the
+    /// paper's model).
     pub fn new(speed: f64, price: f64) -> Self {
-        Self { speed, price }
+        Self { speed, price, boot: Duration::ZERO }
     }
 
     /// A free node (price 0.0) — the paper's cost model.
     pub fn free(speed: f64) -> Self {
-        Self { speed, price: 0.0 }
+        Self::new(speed, 0.0)
     }
+
+    /// The same spec with a provisioning delay.
+    pub fn with_boot(self, boot: Duration) -> Self {
+        Self { boot, ..self }
+    }
+}
+
+/// Deterministic spot-style price dynamics (`[faults] spot_amplitude`).
+///
+/// Each node's effective price is re-rolled **per grant** from a
+/// seeded hash of `(seed, node, grant counter)`:
+///
+/// ```text
+/// price = base × (1 + amplitude × u)    u ∈ [-1, 1), then clamped ≥ 0
+/// ```
+///
+/// so the series is a pure function of the seed and the sequence of
+/// grants on that node — no wall clock, fully replayable. The budget
+/// ledger and [`Objective::Cost`]/[`Objective::Weighted`] placement
+/// read the effective price at lease time ([`Lease::price`] carries
+/// it); [`NodeScheduler::prices`] keeps reporting base prices. A free
+/// node (base 0.0) stays free under any amplitude.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotModel {
+    /// Seed of the price series.
+    pub seed: u64,
+    /// Relative fluctuation half-width (0.0 = fixed prices; 0.5 means
+    /// effective prices range over `[0.5, 1.5) × base`). Must be
+    /// non-negative and finite.
+    pub amplitude: f64,
+}
+
+impl SpotModel {
+    /// New spot model.
+    pub fn new(seed: u64, amplitude: f64) -> Self {
+        Self { seed, amplitude }
+    }
+
+    /// Reject non-finite or negative amplitudes.
+    pub fn validate(&self) -> Result<()> {
+        if !self.amplitude.is_finite() || self.amplitude < 0.0 {
+            bail!(
+                "spot model: amplitude must be a non-negative finite number, got {}",
+                self.amplitude
+            );
+        }
+        Ok(())
+    }
+
+    /// Effective price of the `grant`-th lease on `node`, given the
+    /// node's base price.
+    pub fn price_at(&self, node: usize, grant: u64, base: f64) -> f64 {
+        if self.amplitude == 0.0 || base == 0.0 {
+            return base;
+        }
+        let z = spot_mix(
+            self.seed
+                ^ (node as u64 + 1).wrapping_mul(0x9e3779b97f4a7c15)
+                ^ grant.wrapping_mul(0xbf58476d1ce4e5b9),
+        );
+        // z >> 11 has 53 uniform bits; map onto [-1, 1).
+        let u = (z >> 11) as f64 / (1u64 << 52) as f64 - 1.0;
+        (base * (1.0 + self.amplitude * u)).max(0.0)
+    }
+}
+
+/// SplitMix64 finalizer (same construction as `faults::FaultPlan`'s
+/// mixer; duplicated privately so the scheduler stays self-contained).
+fn spot_mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -152,8 +236,17 @@ struct Slot {
     pending_us: f64,
     /// Speed factor of this node (reference = 1.0).
     speed: f64,
-    /// Price per reference-second of work on this node.
+    /// Base price per reference-second of work on this node.
     price: f64,
+    /// Provisioning delay of a cold VM on this slot (µs of simulated
+    /// time; see [`NodeSpec::boot`]).
+    boot_us: f64,
+    /// True while the slot's VM is unprovisioned: the next lease to
+    /// land here accrues `boot_us` and warms the slot.
+    cold: bool,
+    /// Leases ever granted on (or moved onto) this slot — the spot
+    /// price series' per-node cursor.
+    grants: u64,
 }
 
 /// Occupancy-tracking scheduler over a (possibly heterogeneous) pool.
@@ -161,6 +254,7 @@ pub struct NodeScheduler {
     policy: SchedulePolicy,
     rr: AtomicUsize,
     slots: Mutex<Vec<Slot>>,
+    spot: Option<SpotModel>,
 }
 
 /// Dry-run result of [`NodeScheduler::preview`].
@@ -170,7 +264,9 @@ pub struct LeasePreview {
     pub node: usize,
     /// Speed factor of that node.
     pub speed: f64,
-    /// Price per reference-second of work on that node.
+    /// Price per reference-second of work on that node — the
+    /// *effective* (spot) price the next grant would charge when the
+    /// scheduler carries a [`SpotModel`], the base price otherwise.
     pub price: f64,
     /// Simulated time until that node's pending estimated work drains
     /// (`pending / speed`).
@@ -193,9 +289,15 @@ pub struct Lease {
     /// VM the scheduler chose.
     pub speed: f64,
     /// Price per reference-second of work on the leased node (what the
-    /// migration manager charges the run's budget).
+    /// migration manager charges the run's budget). Under a
+    /// [`SpotModel`] this is the effective spot price sampled at grant
+    /// (or at the last re-pin).
     pub price: f64,
     estimate_us: f64,
+    /// Provisioning delay accrued by this lease: non-zero when the
+    /// grant (or a later re-pin) landed on a cold slot. Drained by
+    /// [`Lease::take_boot`].
+    boot_us: f64,
 }
 
 impl NodeScheduler {
@@ -216,6 +318,21 @@ impl NodeScheduler {
     /// — failing at construction beats a NaN surfacing in a later
     /// placement computation.
     pub fn priced(policy: SchedulePolicy, specs: Vec<NodeSpec>) -> Arc<Self> {
+        Self::priced_spot(policy, specs, None)
+    }
+
+    /// As [`Self::priced`], but with an optional [`SpotModel`] whose
+    /// seeded series replaces each node's fixed price at grant time
+    /// (`None` reproduces fixed pricing byte for byte). Panics on an
+    /// invalid model, like the spec assertions.
+    pub fn priced_spot(
+        policy: SchedulePolicy,
+        specs: Vec<NodeSpec>,
+        spot: Option<SpotModel>,
+    ) -> Arc<Self> {
+        if let Some(s) = &spot {
+            s.validate().expect("spot model must be valid");
+        }
         Arc::new(Self {
             policy,
             rr: AtomicUsize::new(0),
@@ -238,10 +355,14 @@ impl NodeScheduler {
                             pending_us: 0.0,
                             speed: spec.speed,
                             price: spec.price,
+                            boot_us: spec.boot.as_secs_f64() * 1e6,
+                            cold: spec.boot > Duration::ZERO,
+                            grants: 0,
                         }
                     })
                     .collect(),
             ),
+            spot,
         })
     }
 
@@ -280,14 +401,32 @@ impl NodeScheduler {
         (slot.pending_us + estimate_us) / slot.speed
     }
 
+    /// The price the *next* grant on slot `i` would charge: the spot
+    /// series' sample at the slot's grant cursor when a model is
+    /// configured, the fixed base price otherwise.
+    fn eff_price(&self, i: usize, slot: &Slot) -> f64 {
+        match &self.spot {
+            Some(s) => s.price_at(i, slot.grants, slot.price),
+            None => slot.price,
+        }
+    }
+
+    /// Per-slot effective prices under the current grant cursors (one
+    /// snapshot per placement decision, taken inside the slots lock so
+    /// scoring and granting read the same sample).
+    fn eff_prices(&self, slots: &[Slot]) -> Vec<f64> {
+        slots.iter().enumerate().map(|(i, s)| self.eff_price(i, s)).collect()
+    }
+
     /// The pre-grant [`LeasePreview`] of `node` under the current
     /// occupancy (shared by the dry-run preview and the combined
-    /// preview+lease path, so the two can never disagree).
-    fn preview_of(slots: &[Slot], node: usize) -> LeasePreview {
+    /// preview+lease path, so the two can never disagree). `prices`
+    /// are the effective per-slot prices of this decision.
+    fn preview_of(slots: &[Slot], prices: &[f64], node: usize) -> LeasePreview {
         LeasePreview {
             node,
             speed: slots[node].speed,
-            price: slots[node].price,
+            price: prices[node],
             wait: Duration::from_secs_f64(slots[node].pending_us / slots[node].speed / 1e6),
             active: slots[node].active,
         }
@@ -295,12 +434,18 @@ impl NodeScheduler {
 
     /// The node the policy selects under the given occupancy. `rr` is
     /// the round-robin cursor value to use (callers decide whether the
-    /// cursor advances). Only [`SchedulePolicy::LeastLoaded`] honours
-    /// a non-time `objective`.
+    /// cursor advances); `prices` the effective per-slot prices (spot
+    /// or base). Only [`SchedulePolicy::LeastLoaded`] honours a
+    /// non-time `objective`. Boot delay is deliberately **not** part
+    /// of the score: it is charged at most once per slot, so folding
+    /// it in would make placement depend on fault history — the
+    /// simulated provisioning cost lands on the lease instead
+    /// ([`Lease::take_boot`]).
     fn choose(
         policy: SchedulePolicy,
         objective: Objective,
         slots: &[Slot],
+        prices: &[f64],
         estimate_us: f64,
         rr: usize,
     ) -> usize {
@@ -321,14 +466,14 @@ impl NodeScheduler {
                 // Primary score per node under the objective; lower
                 // wins, ties go to fewer active leases, then to the
                 // faster node, then to the lower index.
-                let score = |s: &Slot| -> (f64, f64) {
+                let score = |i: usize, s: &Slot| -> (f64, f64) {
                     match objective {
                         Objective::Time => (Self::eft(s, estimate_us), 0.0),
                         // Spend = price × reference work, which is the
                         // same on every node of equal price — so the
                         // primary key is the price itself, with finish
                         // time deciding among equally-priced nodes.
-                        Objective::Cost => (s.price, Self::eft(s, estimate_us)),
+                        Objective::Cost => (prices[i], Self::eft(s, estimate_us)),
                         // Price breaks weighted-score ties, so an
                         // estimate-less lease (whose spend term is
                         // zero on every node) still prefers the
@@ -336,15 +481,15 @@ impl NodeScheduler {
                         // of silently degenerating to pure Time.
                         Objective::Weighted(w) => (
                             Self::eft(s, estimate_us) / 1e6
-                                + w * s.price * estimate_us / 1e6,
-                            s.price,
+                                + w * prices[i] * estimate_us / 1e6,
+                            prices[i],
                         ),
                     }
                 };
                 let mut best = 0usize;
                 for i in 1..slots.len() {
-                    let cand = (score(&slots[i]), slots[i].active);
-                    let incumbent = (score(&slots[best]), slots[best].active);
+                    let cand = (score(i, &slots[i]), slots[i].active);
+                    let incumbent = (score(best, &slots[best]), slots[best].active);
                     if cand < incumbent
                         || (cand == incumbent && slots[i].speed > slots[best].speed)
                     {
@@ -398,16 +543,21 @@ impl NodeScheduler {
             SchedulePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed),
             _ => 0,
         };
-        let node = Self::choose(self.policy, objective, &slots, estimate_us, rr);
-        let preview = Self::preview_of(&slots, node);
+        let prices = self.eff_prices(&slots);
+        let node = Self::choose(self.policy, objective, &slots, &prices, estimate_us, rr);
+        let preview = Self::preview_of(&slots, &prices, node);
         let position = slots[node].active;
         let speed = slots[node].speed;
-        let price = slots[node].price;
+        let price = prices[node];
         slots[node].active += 1;
         slots[node].pending_us += estimate_us;
+        slots[node].grants += 1;
+        // First lease on a cold VM pays the provisioning delay and
+        // warms the slot for everyone after it.
+        let boot_us = if slots[node].cold { slots[node].cold = false; slots[node].boot_us } else { 0.0 };
         Ok((
             preview,
-            Lease { sched: self.clone(), node, position, speed, price, estimate_us },
+            Lease { sched: self.clone(), node, position, speed, price, estimate_us, boot_us },
         ))
     }
 
@@ -436,14 +586,33 @@ impl NodeScheduler {
             return None;
         }
         let estimate_us = estimate.map_or(0.0, |d| d.as_secs_f64() * 1e6);
+        let prices = self.eff_prices(&slots);
         let node = Self::choose(
             self.policy,
             objective,
             &slots,
+            &prices,
             estimate_us,
             self.rr.load(Ordering::Relaxed),
         );
-        Some(Self::preview_of(&slots, node))
+        Some(Self::preview_of(&slots, &prices, node))
+    }
+
+    /// Mark `node`'s VM as **dead**: the simulated machine behind the
+    /// slot was preempted, and its replacement must boot from scratch —
+    /// the slot goes cold again (a no-op for slots with no configured
+    /// boot delay). Occupancy is *not* touched: the preempted lease
+    /// still owns its slot entry and releases (or moves) it exactly
+    /// once via [`Lease::evacuate`] / drop — invalidation and release
+    /// are deliberately separate so a kill can never double-free a
+    /// slot. Out-of-range indices are ignored.
+    pub fn invalidate(&self, node: usize) {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(slot) = slots.get_mut(node) {
+            if slot.boot_us > 0.0 {
+                slot.cold = true;
+            }
+        }
     }
 }
 
@@ -515,7 +684,10 @@ impl Lease {
                 // force, only free nodes are safe targets for an
                 // estimate-less lease — otherwise the projected 0.0
                 // would let the move bust the budget unboundedly.
-                if slot.price * est_secs > cap || (est_us == 0.0 && slot.price > 0.0) {
+                // Candidates are judged at their *effective* (spot)
+                // price, the one the move would actually charge.
+                let price = self.sched.eff_price(i, slot);
+                if price * est_secs > cap || (est_us == 0.0 && price > 0.0) {
                     continue;
                 }
             }
@@ -535,15 +707,95 @@ impl Lease {
             }
         }
         let target = best?;
+        self.move_to(&mut slots, target);
+        Some(cur)
+    }
+
+    /// Move this lease's occupancy from its current slot onto `target`
+    /// (which must differ), updating the lease's pin, price (at the
+    /// target's effective spot price), position, and boot accrual —
+    /// the single place occupancy ever migrates between slots, shared
+    /// by [`Self::try_steal`] and [`Self::evacuate`] so the vacated
+    /// slot is decremented exactly once per move.
+    fn move_to(&mut self, slots: &mut [Slot], target: usize) {
+        let cur = self.node;
+        let est_us = self.estimate_us;
+        let price = self.sched.eff_price(target, &slots[target]);
         slots[cur].active -= 1;
         slots[cur].pending_us = (slots[cur].pending_us - est_us).max(0.0);
+        self.position = slots[target].active;
         slots[target].active += 1;
         slots[target].pending_us += est_us;
+        slots[target].grants += 1;
+        if slots[target].cold {
+            slots[target].cold = false;
+            self.boot_us += slots[target].boot_us;
+        }
         self.node = target;
         self.speed = slots[target].speed;
-        self.price = slots[target].price;
-        self.position = 0;
-        Some(cur)
+        self.price = price;
+    }
+
+    /// **Forced relocation** off a dead VM: unlike [`Self::try_steal`]
+    /// — an opportunistic optimization that requires the lease to be
+    /// queued, the target idle, and the finish strictly sooner — this
+    /// is the recovery path after the leased VM was preempted
+    /// ([`NodeScheduler::invalidate`]): the work *must* leave, so any
+    /// surviving node is a candidate, queued or not, faster or not.
+    /// Among candidates inside the spend cap (same rules as
+    /// `try_steal`: projected `effective price × estimated reference
+    /// work` must fit, and an estimate-less lease may only move to
+    /// free nodes) the earliest-finishing node wins, ties to the
+    /// faster one. Returns the node the lease moved *to*, or `None`
+    /// when no other node is admissible (single-VM pool, or every
+    /// alternative busts the cap) — the caller then falls back to
+    /// local execution or fails the run.
+    ///
+    /// Note the current (dead) slot keeps its base accounting until
+    /// the move or the drop: release happens exactly once either way,
+    /// which is what the idle-slot ledger regression tests pin down.
+    pub fn evacuate(&mut self, spend_cap: Option<f64>) -> Option<usize> {
+        let mut slots = self.sched.slots.lock().unwrap();
+        let cur = self.node;
+        let est_us = self.estimate_us;
+        let est_secs = est_us / 1e6;
+        let mut best: Option<usize> = None;
+        for (i, slot) in slots.iter().enumerate() {
+            if i == cur {
+                continue;
+            }
+            if let Some(cap) = spend_cap {
+                let price = self.sched.eff_price(i, slot);
+                if price * est_secs > cap || (est_us == 0.0 && price > 0.0) {
+                    continue;
+                }
+            }
+            let finish = (slot.pending_us + est_us) / slot.speed;
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bf = (slots[b].pending_us + est_us) / slots[b].speed;
+                    finish < bf || (finish == bf && slot.speed > slots[b].speed)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let target = best?;
+        self.move_to(&mut slots, target);
+        Some(target)
+    }
+
+    /// Drain the provisioning delay this lease has accrued (grant on a
+    /// cold VM, or relocation onto one): returns the simulated boot
+    /// time exactly once and zeroes the accrual, so callers charging
+    /// it into a run's simulated clock cannot double-bill a retry
+    /// chain that crossed several cold VMs.
+    pub fn take_boot(&mut self) -> Duration {
+        let us = self.boot_us;
+        self.boot_us = 0.0;
+        Duration::from_secs_f64(us / 1e6)
     }
 }
 
@@ -1202,5 +1454,178 @@ mod tests {
         assert_eq!(admission_cap(&[], &[1.0; 4], &tasks), 0);
         assert_eq!(admission_cap(&[2.0], &[], &tasks), 5);
         assert_eq!(admission_cap(&[2.0], &[1.0], &[]), 0);
+    }
+
+    #[test]
+    fn boot_is_charged_on_first_lease_and_after_invalidation_only() {
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::free(1.0).with_boot(Duration::from_millis(30))],
+        );
+        let mut a = sched.lease(None).unwrap();
+        assert_eq!(a.take_boot(), Duration::from_millis(30), "cold VM boots on first lease");
+        assert_eq!(a.take_boot(), Duration::ZERO, "boot drains exactly once");
+        drop(a);
+        let mut b = sched.lease(None).unwrap();
+        assert_eq!(b.take_boot(), Duration::ZERO, "warm VM needs no boot");
+        drop(b);
+        sched.invalidate(0);
+        let mut c = sched.lease(None).unwrap();
+        assert_eq!(c.take_boot(), Duration::from_millis(30), "a killed VM re-provisions");
+        drop(c);
+    }
+
+    #[test]
+    fn invalidate_never_touches_occupancy() {
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::free(1.0).with_boot(Duration::from_millis(10)), NodeSpec::free(1.0)],
+        );
+        let lease = sched.lease(Some(Duration::from_millis(50))).unwrap();
+        let before = sched.active();
+        sched.invalidate(lease.node);
+        sched.invalidate(lease.node); // idempotent
+        sched.invalidate(99); // out of range: ignored
+        assert_eq!(sched.active(), before, "a kill must not release the slot");
+        drop(lease);
+        assert_eq!(sched.active(), vec![0, 0], "the drop releases it exactly once");
+    }
+
+    #[test]
+    fn evacuate_relocates_and_releases_the_dead_slot_exactly_once() {
+        let sched =
+            NodeScheduler::heterogeneous(SchedulePolicy::LeastLoaded, vec![4.0, 2.0]);
+        let mut lease = sched.lease(Some(Duration::from_millis(80))).unwrap();
+        assert_eq!(lease.node, 0);
+        sched.invalidate(0);
+        // Unlike try_steal, evacuation needs no queue and no strictly
+        // better target: the work MUST leave the dead VM.
+        assert_eq!(lease.evacuate(None), Some(1));
+        assert_eq!(lease.node, 1);
+        assert_eq!(sched.active(), vec![0, 1], "occupancy moved, not duplicated");
+        drop(lease);
+        assert_eq!(sched.active(), vec![0, 0]);
+    }
+
+    #[test]
+    fn evacuate_on_a_single_vm_pool_or_over_cap_returns_none() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 1);
+        let mut only = sched.lease(Some(Duration::from_millis(10))).unwrap();
+        assert_eq!(only.evacuate(None), None, "nowhere to go");
+        assert_eq!(sched.active(), vec![1], "the lease still owns its slot");
+        drop(only);
+        // Priced pool: the cap vetoes the only alternative, and the
+        // boundary is inclusive (80 ms × 10.0 = 0.8 exactly).
+        let sched = NodeScheduler::priced(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::free(2.0), NodeSpec::new(8.0, 10.0)],
+        );
+        let mut lease =
+            sched.lease_with(Some(Duration::from_millis(80)), Objective::Cost).unwrap();
+        assert_eq!(lease.node, 0);
+        assert_eq!(lease.evacuate(Some(0.5)), None, "0.8 projected > 0.5 cap");
+        assert_eq!(lease.evacuate(Some(0.8)), Some(1), "landing on the cap is allowed");
+        drop(lease);
+        assert_eq!(sched.active(), vec![0, 0]);
+    }
+
+    #[test]
+    fn spot_prices_are_deterministic_seeded_and_clamped() {
+        let m = SpotModel::new(7, 0.5);
+        let series: Vec<f64> = (0..16).map(|g| m.price_at(0, g, 1.0)).collect();
+        let again: Vec<f64> = (0..16).map(|g| m.price_at(0, g, 1.0)).collect();
+        assert_eq!(series, again, "same seed, node and grant -> same price");
+        assert!(series.iter().any(|p| *p != 1.0), "amplitude must move prices");
+        assert!(series.iter().all(|p| (0.5..=1.5).contains(p)), "{series:?}");
+        let other: Vec<f64> =
+            (0..16).map(|g| SpotModel::new(8, 0.5).price_at(0, g, 1.0)).collect();
+        assert_ne!(series, other, "different seeds differ");
+        // Degenerate cases short-circuit to the base price.
+        assert_eq!(SpotModel::new(7, 0.0).price_at(3, 9, 2.0), 2.0);
+        assert_eq!(m.price_at(3, 9, 0.0), 0.0, "free stays free");
+        assert!(SpotModel::new(0, -0.1).validate().is_err());
+        assert!(SpotModel::new(0, f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn spot_prices_flow_into_leases_and_flat_pools_are_untouched() {
+        let spot = SpotModel::new(11, 0.5);
+        let sched = NodeScheduler::priced_spot(
+            SchedulePolicy::LeastLoaded,
+            vec![NodeSpec::new(1.0, 2.0)],
+            Some(spot),
+        );
+        let a = sched.lease(None).unwrap();
+        assert_eq!(a.price, spot.price_at(0, 0, 2.0), "first grant reads the series at 0");
+        drop(a);
+        let b = sched.lease(None).unwrap();
+        assert_eq!(b.price, spot.price_at(0, 1, 2.0), "each grant advances the series");
+        drop(b);
+        assert_eq!(sched.prices(), vec![2.0], "prices() keeps reporting base prices");
+        // No spot model: the base price, byte-identical to a flat pool.
+        let flat =
+            NodeScheduler::priced(SchedulePolicy::LeastLoaded, vec![NodeSpec::new(1.0, 2.0)]);
+        assert_eq!(flat.lease(None).unwrap().price, 2.0);
+    }
+
+    /// Satellite regression for the idle-slot ledger under preemption:
+    /// random kill/evacuate/drop interleavings may neither leak a slot
+    /// nor double-free one, and fault-free live placement must match
+    /// [`simulate_plan`]'s occupancy exactly.
+    #[test]
+    fn slot_ledger_balances_and_matches_the_plan_under_preemption() {
+        forall(40, |g| {
+            let n = g.usize_in(1..=4);
+            let specs: Vec<NodeSpec> = (0..n)
+                .map(|_| {
+                    NodeSpec::free(1.0)
+                        .with_boot(Duration::from_millis(g.usize_in(0..=5) as u64))
+                })
+                .collect();
+            let sched = NodeScheduler::priced(SchedulePolicy::LeastLoaded, specs.clone());
+            let count = g.usize_in(1..=12);
+            // Powers of two: every subset of tasks sums to a distinct
+            // pending total, so on a homogeneous pool the live eft
+            // scores can never tie and the correspondence with the
+            // plan (both computed in exact arithmetic) is exact.
+            let tasks: Vec<Duration> =
+                (0..count).map(|i| Duration::from_micros(1 << i)).collect();
+            let plan =
+                simulate_plan(SchedulePolicy::LeastLoaded, Objective::Time, &specs, &tasks)
+                    .unwrap();
+            let mut leases: Vec<Lease> = Vec::new();
+            for (k, t) in tasks.iter().enumerate() {
+                let lease = sched.lease(Some(*t)).unwrap();
+                assert_eq!(
+                    lease.node, plan.placements[k],
+                    "live placement must match the plan (task {k})"
+                );
+                leases.push(lease);
+                assert_eq!(sched.active().iter().sum::<usize>(), leases.len());
+            }
+            // Preemption storm: kill random VMs, evacuate their
+            // leases, drop a few — the ledger must balance after
+            // every single operation.
+            for _ in 0..g.usize_in(0..=8) {
+                if leases.is_empty() {
+                    break;
+                }
+                let victim = g.usize_in(0..=leases.len() - 1);
+                let dead = leases[victim].node;
+                sched.invalidate(dead);
+                let _ = leases[victim].evacuate(None);
+                assert_eq!(
+                    sched.active().iter().sum::<usize>(),
+                    leases.len(),
+                    "kill + evacuate must neither leak nor double-free a slot"
+                );
+                if g.bool() {
+                    leases.swap_remove(g.usize_in(0..=leases.len() - 1));
+                    assert_eq!(sched.active().iter().sum::<usize>(), leases.len());
+                }
+            }
+            drop(leases);
+            assert_eq!(sched.active(), vec![0; n], "every slot released exactly once");
+        });
     }
 }

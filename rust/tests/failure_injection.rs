@@ -1,18 +1,461 @@
-//! Integration: failure paths — the coordinator must fail loudly and
-//! descriptively, never hang or corrupt state.
+//! Integration: failure paths + the deterministic chaos harness.
+//!
+//! Two layers:
+//!
+//! 1. **Failure paths** (the original suite): the coordinator must
+//!    fail loudly and descriptively, never hang or corrupt state —
+//!    and after ANY failure the migration ledgers must be clean: zero
+//!    committed spend, zero leaked reservations, stats and budget
+//!    ledger in agreement ([`assert_no_leaks`]).
+//! 2. **Chaos harness** ([`chaos`]): run a workflow under a seeded
+//!    hostile cloud — mid-offload VM preemption ([`FaultPlan`]),
+//!    provisioning delays and spot prices — across all three engine
+//!    modes (sequential, dataflow, IR), asserting that recovery is
+//!    *semantically invisible*: `RunReport.lines` stays byte-identical
+//!    to the fault-free run, no `MigrationStats` are half-applied, and
+//!    the `AccessValidator` stays clean.
+//!
+//! The chaos seed comes from `EMERALD_FAULT_SEED` (the CI smoke step
+//! runs a small seed matrix); a failing seed replays locally with
+//! `EMERALD_FAULT_SEED=<seed> cargo test -q --test failure_injection`.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
-use emerald::cloud::Platform;
-use emerald::engine::{ActivityRegistry, Engine, OffloadHandler, OffloadVerdict, Services};
+use emerald::analysis::AccessValidator;
+use emerald::cloud::{CloudTier, Platform, PlatformConfig};
+use emerald::engine::activity::need_num;
+use emerald::engine::{
+    ActivityRegistry, Engine, Event, OffloadHandler, OffloadVerdict, RunReport, Services,
+};
 use emerald::expr::Value;
-use emerald::migration::{DataPolicy, MigrationManager};
+use emerald::faults::{FaultConfig, FaultPlan};
+use emerald::migration::{
+    DataPolicy, ManagerConfig, MigrationManager, MigrationStats, Transport,
+};
 use emerald::partitioner;
-use emerald::workflow::{xaml, Step};
+use emerald::quickprop::{forall, Gen};
+use emerald::scheduler::SpotModel;
+use emerald::workflow::{xaml, Step, StepKind, Workflow};
+
+// ---------------------------------------------------------------------------
+// Harness plumbing
+// ---------------------------------------------------------------------------
+
+/// The chaos seed: `EMERALD_FAULT_SEED` (the CI matrix), or a fixed
+/// default so a plain `cargo test` is deterministic too.
+fn env_seed() -> u64 {
+    std::env::var("EMERALD_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE5EE)
+}
 
 fn services() -> Arc<Services> {
     Services::without_runtime(Platform::paper_testbed())
+}
+
+/// A hostile 4-VM priced pool: two tiers, provisioning delays on the
+/// cheap one, spot prices seeded alongside the fault stream — the
+/// full hostile-cloud configuration of `docs/FAULTS.md`.
+fn hostile_platform(seed: u64) -> Arc<Platform> {
+    Platform::new(PlatformConfig {
+        tiers: vec![
+            CloudTier::priced(2, 4.0, 0.5).with_boot(Duration::from_millis(5)),
+            CloudTier::priced(2, 8.0, 1.0),
+        ],
+        spot: Some(SpotModel::new(seed, 0.5)),
+        ..PlatformConfig::default()
+    })
+    .unwrap()
+}
+
+fn registry() -> Arc<ActivityRegistry> {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("calc.op", |_c, inputs| {
+        let x = need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x * 2.0 + 1.0))].into())
+    });
+    reg.register_fn("load.work", |ctx, inputs| {
+        let ms = need_num(inputs, "ms")?;
+        let x = need_num(inputs, "x")?;
+        ctx.charge_compute(Duration::from_millis(ms as u64));
+        Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+    });
+    Arc::new(reg)
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Mode {
+    Sequential,
+    Dataflow,
+    Ir,
+}
+
+const MODES: [Mode; 3] = [Mode::Sequential, Mode::Dataflow, Mode::Ir];
+
+struct ChaosRun {
+    report: RunReport,
+    stats: MigrationStats,
+}
+
+/// After ANY run — success, recovery, or failure — the migration
+/// ledgers must be whole: every reservation released (RAII on every
+/// exit path) and the budget ledger's committed total in lockstep
+/// with the stats ledger. Both totals accumulate the same per-offload
+/// charges through single commit points, so a half-applied offload
+/// would put them apart by a whole charge; concurrent runs may merely
+/// reorder the additions, so agreement is asserted up to float
+/// re-association there and bit-for-bit for serialized runs.
+fn assert_no_leaks(mgr: &MigrationManager, serialized: bool) {
+    let stats = mgr.stats();
+    let (committed, reserved) = mgr.ledger();
+    assert_eq!(reserved, 0.0, "a reservation leaked past its offload");
+    if serialized {
+        assert_eq!(committed, stats.spend, "stats and budget ledgers must agree");
+    } else {
+        let scale = committed.abs().max(stats.spend.abs()).max(1.0);
+        assert!(
+            (committed - stats.spend).abs() <= 1e-9 * scale,
+            "stats ({}) and budget ({committed}) ledgers disagree by a charge",
+            stats.spend
+        );
+    }
+}
+
+/// One chaos run: `wf` on the hostile platform under `faults`, in the
+/// given engine mode, with bounded retry-elsewhere + local recovery.
+/// Asserts the per-run invariants (clean validator, whole ledgers,
+/// self-consistent stats) and returns the report for cross-run
+/// comparisons.
+fn chaos_with(faults: FaultConfig, budget: Option<f64>, wf: &Workflow, mode: Mode) -> ChaosRun {
+    let (part, _) = partitioner::partition(wf).unwrap();
+    let svcs = Services::without_runtime(hostile_platform(faults.seed));
+    let reg = registry();
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.budget = budget;
+    cfg.preempt_retries = 2;
+    cfg.preempt_local = true;
+    if faults.preempt_rate > 0.0 {
+        cfg.faults = Some(FaultPlan::new(faults).unwrap());
+    }
+    let mgr = MigrationManager::in_proc_with_config(svcs.clone(), reg.clone(), cfg);
+    let validator = AccessValidator::new();
+    let engine = Engine::new(reg, svcs)
+        .with_offload(mgr.clone())
+        .with_validator(validator.clone());
+    let engine = match mode {
+        Mode::Sequential => engine,
+        Mode::Dataflow => engine.with_dataflow(true),
+        Mode::Ir => engine.with_ir(true),
+    };
+    let report = engine.run(&part).unwrap();
+    validator.assert_clean();
+    let stats = mgr.stats();
+    let serialized = matches!(mode, Mode::Sequential);
+    assert_no_leaks(&mgr, serialized);
+    if serialized {
+        assert_eq!(report.spend, stats.spend, "engine and manager spend must agree");
+    }
+    assert!(
+        stats.preempt_local <= stats.declined,
+        "local recoveries are a subset of declines ({mode:?})"
+    );
+    ChaosRun { report, stats }
+}
+
+/// The chaos harness: run `wf` fault-free (sequential reference), then
+/// under the seeded fault stream in all three engine modes. Recovery
+/// must be invisible — every run's lines match the reference byte for
+/// byte (the final `out-…` dumps make line equality imply final-store
+/// equality for generated workflows). Returns the reference lines.
+fn chaos(seed: u64, faults: FaultConfig, wf: &Workflow) -> Vec<String> {
+    let baseline = chaos_with(FaultConfig::none(), None, wf, Mode::Sequential);
+    for mode in MODES {
+        let run = chaos_with(FaultConfig { seed, ..faults }, None, wf, mode);
+        assert_eq!(
+            run.report.lines, baseline.report.lines,
+            "recovery must be invisible in lines ({mode:?}, seed {seed})"
+        );
+    }
+    baseline.report.lines
+}
+
+// ---------------------------------------------------------------------------
+// Generated workflows (satellite 2)
+// ---------------------------------------------------------------------------
+
+const VARS: [&str; 4] = ["a", "b", "c", "d"];
+
+fn gen_expr(g: &mut Gen) -> String {
+    fn operand(g: &mut Gen) -> String {
+        if g.bool() {
+            (*g.choose(&VARS)).to_string()
+        } else {
+            g.i64_in(0..=9).to_string()
+        }
+    }
+    let a = operand(g);
+    match g.usize_in(0..=2) {
+        0 => a,
+        1 => format!("{a} + {}", operand(g)),
+        _ => format!("{a} * {}", operand(g)),
+    }
+}
+
+fn gen_assign(g: &mut Gen, name: String) -> Step {
+    Step::new(name, StepKind::Assign { to: g.choose(&VARS).to_string(), value: gen_expr(g) })
+}
+
+fn gen_invoke(g: &mut Gen, name: String) -> Step {
+    Step::new(
+        name,
+        StepKind::InvokeActivity {
+            activity: "calc.op".into(),
+            inputs: vec![("x".into(), (*g.choose(&VARS)).to_string())],
+            outputs: vec![("y".into(), g.choose(&VARS).to_string())],
+        },
+    )
+}
+
+/// Random sequence children: assigns and invokes (roughly half
+/// remotable — the fault stream's targets), WriteLines, `If`
+/// barriers, nested sequences. Remotable steps never emit lines, so
+/// a recovered-local step is line-invisible by construction.
+fn gen_step(g: &mut Gen, idx: usize) -> Step {
+    match g.usize_in(0..=8) {
+        0..=2 => {
+            let s = gen_assign(g, format!("s{idx}"));
+            if g.bool() {
+                s.remotable()
+            } else {
+                s
+            }
+        }
+        3 | 4 => {
+            let s = gen_invoke(g, format!("a{idx}"));
+            if g.bool() {
+                s.remotable()
+            } else {
+                s
+            }
+        }
+        5 | 6 => Step::new(format!("w{idx}"), StepKind::WriteLine { text: gen_expr(g) }),
+        7 => Step::new(
+            format!("if{idx}"),
+            StepKind::If {
+                condition: format!("{} % 2 == 0", gen_expr(g)),
+                then_branch: Box::new(gen_assign(g, format!("t{idx}"))),
+                else_branch: if g.bool() {
+                    Some(Box::new(gen_assign(g, format!("e{idx}"))))
+                } else {
+                    None
+                },
+            },
+        ),
+        _ => Step::new(
+            format!("seq{idx}"),
+            StepKind::Sequence(vec![
+                gen_assign(g, format!("n{idx}a")),
+                gen_invoke(g, format!("n{idx}b")).remotable(),
+            ]),
+        ),
+    }
+}
+
+fn gen_workflow(g: &mut Gen) -> Workflow {
+    let n = g.usize_in(1..=10);
+    let mut steps: Vec<Step> = (0..n).map(|i| gen_step(g, i)).collect();
+    // Dump every variable at the end: line equality then implies
+    // final-store equality.
+    for v in VARS {
+        steps.push(Step::new(
+            format!("out-{v}"),
+            StepKind::WriteLine { text: format!("'{v}=' + str({v})") },
+        ));
+    }
+    let mut wf = Workflow::new("gen", Step::new("main", StepKind::Sequence(steps)));
+    for (i, v) in VARS.iter().enumerate() {
+        wf = wf.var(*v, Some(&(i + 1).to_string()));
+    }
+    wf
+}
+
+/// Satellite property: under seeded preemption with bounded
+/// retry-elsewhere and local recovery, a random workflow's final
+/// store and program-order lines are identical to the fault-free run
+/// — in sequential, dataflow, and IR mode alike.
+#[test]
+fn property_recovery_preserves_results_across_modes() {
+    let base = env_seed();
+    forall(25, |g: &mut Gen| {
+        let wf = gen_workflow(g);
+        let seed = base ^ g.u64();
+        chaos(
+            seed,
+            FaultConfig { seed, preempt_rate: 0.4, max_preemptions: None },
+            &wf,
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Determinism and budget under preemption
+// ---------------------------------------------------------------------------
+
+/// Sequential chain of four remotable compute steps (distinct names).
+const CHAIN: &str = r#"<Workflow Name="chaos-chain">
+  <Workflow.Variables>
+    <Variable Name="s1"/><Variable Name="s2"/><Variable Name="s3"/><Variable Name="s4"/>
+  </Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="c-1" Activity="load.work" In.ms="80" In.x="1"
+                    Out.y="s1" Remotable="true"/>
+    <InvokeActivity DisplayName="c-2" Activity="load.work" In.ms="80" In.x="s1"
+                    Out.y="s2" Remotable="true"/>
+    <InvokeActivity DisplayName="c-3" Activity="load.work" In.ms="80" In.x="s2"
+                    Out.y="s3" Remotable="true"/>
+    <InvokeActivity DisplayName="c-4" Activity="load.work" In.ms="80" In.x="s3"
+                    Out.y="s4" Remotable="true"/>
+    <WriteLine Text="'result=' + str(s4)"/>
+  </Sequence>
+</Workflow>"#;
+
+/// As [`CHAIN`], but every step shares one display name: after the
+/// first (serialized, estimate-less) sighting the cost history gives
+/// every later offload an exact spend projection, which is what makes
+/// the budget boundary test float-exact.
+const SAME_NAME_CHAIN: &str = r#"<Workflow Name="chaos-budget">
+  <Workflow.Variables>
+    <Variable Name="s1"/><Variable Name="s2"/><Variable Name="s3"/><Variable Name="s4"/>
+  </Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="work" Activity="load.work" In.ms="80" In.x="1"
+                    Out.y="s1" Remotable="true"/>
+    <InvokeActivity DisplayName="work" Activity="load.work" In.ms="80" In.x="s1"
+                    Out.y="s2" Remotable="true"/>
+    <InvokeActivity DisplayName="work" Activity="load.work" In.ms="80" In.x="s2"
+                    Out.y="s3" Remotable="true"/>
+    <InvokeActivity DisplayName="work" Activity="load.work" In.ms="80" In.x="s3"
+                    Out.y="s4" Remotable="true"/>
+    <WriteLine Text="'result=' + str(s4)"/>
+  </Sequence>
+</Workflow>"#;
+
+/// Same seed + same config ⇒ byte-identical trace, preemption and
+/// retry events included — on two completely fresh stacks.
+#[test]
+fn repeat_runs_with_the_same_seed_are_byte_identical() {
+    let seed = env_seed();
+    let wf = xaml::parse(CHAIN).unwrap();
+    for rate in [0.5, 1.0] {
+        let faults = FaultConfig { seed, preempt_rate: rate, max_preemptions: None };
+        let a = chaos_with(faults, None, &wf, Mode::Sequential);
+        let b = chaos_with(faults, None, &wf, Mode::Sequential);
+        assert_eq!(
+            format!("{:?}", a.report.events),
+            format!("{:?}", b.report.events),
+            "same seed + config must replay a byte-identical trace (rate {rate})"
+        );
+        assert_eq!(format!("{:?}", a.stats), format!("{:?}", b.stats));
+    }
+    // At rate 1.0 every placement dies: initial + both relocations,
+    // then local recovery — the full recovery trail, guaranteed to
+    // appear for every seed.
+    let always = FaultConfig { seed, preempt_rate: 1.0, max_preemptions: None };
+    let run = chaos_with(always, None, &wf, Mode::Sequential);
+    assert!(run.stats.preempted > 0, "rate 1.0 must fire");
+    assert_eq!(run.stats.preempt_local, 4, "all four steps recover locally");
+    let has = |f: fn(&Event) -> bool| run.report.events.iter().any(f);
+    assert!(has(|e| matches!(e, Event::OffloadPreempted { .. })));
+    assert!(has(|e| matches!(e, Event::OffloadRetried { .. })));
+    assert!(has(|e| matches!(e, Event::OffloadRecoveredLocal { .. })));
+    assert_eq!(
+        run.report.lines.last().map(String::as_str),
+        Some("result=5"),
+        "a fully-preempted chain still computes the right answer"
+    );
+}
+
+/// The spend ledger under preemption: landing exactly on the budget
+/// is admitted, crossing it is not — float-exact, no epsilon.
+#[test]
+fn budget_is_never_overshot_under_preemption() {
+    let seed = env_seed();
+    let wf = xaml::parse(SAME_NAME_CHAIN).unwrap();
+    let faults = FaultConfig { seed, preempt_rate: 0.3, max_preemptions: None };
+
+    // Reference: unbudgeted hostile run — whatever it spends becomes
+    // the budget of the second run, so the boundary is exactly
+    // reachable.
+    let free = chaos_with(faults, None, &wf, Mode::Sequential);
+    let spend0 = free.stats.spend;
+
+    // Budget = the reference spend: the run must complete and may
+    // spend AT MOST that much (exact f64 comparison — the gate admits
+    // the boundary, never past it; relocations are budget-capped too).
+    let capped = chaos_with(faults, Some(spend0), &wf, Mode::Sequential);
+    assert!(
+        capped.stats.spend <= spend0,
+        "budget overshot: spent {} of {}",
+        capped.stats.spend,
+        spend0
+    );
+    assert_eq!(
+        capped.report.lines.last().map(String::as_str),
+        Some("result=5"),
+        "budget pressure may push steps local but never change results"
+    );
+
+    // Budget 0.0 is the offload kill-switch: zero spend, exactly.
+    let blocked = chaos_with(faults, Some(0.0), &wf, Mode::Sequential);
+    assert_eq!(blocked.stats.spend, 0.0);
+    assert_eq!(blocked.stats.offloads, 0);
+    assert!(blocked.stats.budget_declined > 0);
+    assert_eq!(
+        blocked.report.lines.last().map(String::as_str),
+        Some("result=5"),
+        "an offload-free run still computes the right answer"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Failure paths, ported onto the harness (satellites 1 and 4)
+// ---------------------------------------------------------------------------
+
+/// Run `xml` on the hostile platform with an in-proc manager and
+/// expect a failure. `always` fragments must appear in the error both
+/// fault-free and under the seeded fault stream (recovery may turn a
+/// remote failure into the local flavor of the same error — the step
+/// name survives either way); `strict` fragments are asserted on the
+/// fault-free run only. After every failure: zero committed spend,
+/// zero leaked reservations.
+fn failure_case(xml: &str, strict: &[&str], always: &[&str]) {
+    let wf = xaml::parse(xml).unwrap();
+    let (part, _) = partitioner::partition(&wf).unwrap();
+    let seed = env_seed();
+    for faults in [None, Some(FaultConfig { seed, preempt_rate: 0.5, max_preemptions: None })] {
+        let svcs = Services::without_runtime(hostile_platform(seed));
+        let reg = registry();
+        let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+        if let Some(f) = faults {
+            cfg.faults = Some(FaultPlan::new(f).unwrap());
+        }
+        let mgr = MigrationManager::in_proc_with_config(svcs.clone(), reg.clone(), cfg);
+        let engine = Engine::new(reg, svcs).with_offload(mgr.clone());
+        let err = format!("{:#}", engine.run(&part).unwrap_err());
+        for frag in always {
+            assert!(err.contains(frag), "missing {frag:?} in: {err} (faults: {faults:?})");
+        }
+        if faults.is_none() {
+            for frag in strict {
+                assert!(err.contains(frag), "missing {frag:?} in: {err}");
+            }
+        }
+        assert_eq!(mgr.stats().spend, 0.0, "a failed run must commit zero spend");
+        assert_no_leaks(&mgr, true);
+    }
 }
 
 #[test]
@@ -31,30 +474,43 @@ fn unregistered_activity_fails_locally_with_context() {
 
 #[test]
 fn unregistered_activity_fails_remotely_with_context() {
-    let reg = Arc::new(ActivityRegistry::new());
-    let svcs = services();
-    let mgr = MigrationManager::in_proc(svcs.clone(), reg.clone(), DataPolicy::Mdss);
-    let engine = Engine::new(reg, svcs).with_offload(mgr);
-    let wf = xaml::parse(
+    failure_case(
         r#"<Workflow><Sequence>
              <InvokeActivity Activity="ghost.step" Remotable="true" />
            </Sequence></Workflow>"#,
-    )
-    .unwrap();
-    let (part, _) = partitioner::partition(&wf).unwrap();
-    let err = format!("{:#}", engine.run(&part).unwrap_err());
-    assert!(err.contains("remote execution failed"), "{err}");
-    assert!(err.contains("ghost.step"), "{err}");
+        &["remote execution failed"],
+        &["ghost.step"],
+    );
 }
 
 #[test]
 fn activity_error_propagates_across_the_wire() {
+    // The exploding activity isn't in `registry()`, so the error here
+    // is the unregistered flavor — registered-but-failing activities
+    // get their own case below to keep the ported shape intact.
+    failure_case(
+        r#"<Workflow><Sequence>
+             <InvokeActivity Activity="explode" Remotable="true" />
+           </Sequence></Workflow>"#,
+        &["remote execution failed"],
+        &["explode"],
+    );
+
+    // Registered activity whose body fails: the original error text
+    // must survive the wire (and the recovery path).
     let mut reg = ActivityRegistry::new();
     reg.register_fn("explode", |_c, _i| anyhow::bail!("kaboom at step 7"));
     let reg = Arc::new(reg);
-    let svcs = services();
-    let mgr = MigrationManager::in_proc(svcs.clone(), reg.clone(), DataPolicy::Mdss);
-    let engine = Engine::new(reg, svcs).with_offload(mgr);
+    let svcs = Services::without_runtime(hostile_platform(env_seed()));
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.faults = Some(FaultPlan::new(FaultConfig {
+        seed: env_seed(),
+        preempt_rate: 0.5,
+        max_preemptions: None,
+    })
+    .unwrap());
+    let mgr = MigrationManager::in_proc_with_config(svcs.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, svcs).with_offload(mgr.clone());
     let wf = xaml::parse(
         r#"<Workflow><Sequence>
              <InvokeActivity Activity="explode" Remotable="true" />
@@ -64,6 +520,24 @@ fn activity_error_propagates_across_the_wire() {
     let (part, _) = partitioner::partition(&wf).unwrap();
     let err = format!("{:#}", engine.run(&part).unwrap_err());
     assert!(err.contains("kaboom at step 7"), "{err}");
+    assert_eq!(mgr.stats().spend, 0.0);
+    assert_no_leaks(&mgr, true);
+}
+
+#[test]
+fn offload_with_unassigned_input_fails_cleanly() {
+    // `x` is declared but never assigned before the remotable step;
+    // the engine rejects the offload before any packaging happens.
+    failure_case(
+        r#"<Workflow>
+             <Workflow.Variables><Variable Name="x"/><Variable Name="y"/></Workflow.Variables>
+             <Sequence>
+               <InvokeActivity Activity="calc.op" In.x="x" Out.y="y" Remotable="true" />
+             </Sequence>
+           </Workflow>"#,
+        &[],
+        &["has no value"],
+    );
 }
 
 /// An offload handler that always reports a dead worker.
@@ -95,27 +569,51 @@ fn dead_worker_surfaces_as_workflow_error() {
     assert!(err.contains("unreachable"), "{err}");
 }
 
+/// A byte transport whose every request fails.
+struct DeadTransport;
+impl Transport for DeadTransport {
+    fn request(&self, _bytes: &[u8]) -> anyhow::Result<Vec<u8>> {
+        anyhow::bail!("cloud node unreachable: connection refused")
+    }
+}
+
+/// The manager-level dead-worker case (satellite 4): a failed round
+/// trip — with a budget on, so a reservation was actually held — must
+/// leave zero committed spend and zero leaked reservations. Under the
+/// fault stream the run may instead recover locally and succeed; the
+/// ledgers must be equally clean either way.
 #[test]
-fn offload_with_unassigned_input_fails_cleanly() {
-    let mut reg = ActivityRegistry::new();
-    reg.register_fn("id", |_c, i| Ok(i.clone()));
-    let reg = Arc::new(reg);
-    let svcs = services();
-    let mgr = MigrationManager::in_proc(svcs.clone(), reg.clone(), DataPolicy::Mdss);
-    let engine = Engine::new(reg, svcs).with_offload(mgr);
-    // `x` is declared but never assigned before the remotable step.
-    let wf = xaml::parse(
-        r#"<Workflow>
-             <Workflow.Variables><Variable Name="x"/><Variable Name="y"/></Workflow.Variables>
-             <Sequence>
-               <InvokeActivity Activity="id" In.v="x" Out.v="y" Remotable="true" />
-             </Sequence>
-           </Workflow>"#,
-    )
-    .unwrap();
+fn dead_transport_commits_no_spend_and_leaks_no_reservation() {
+    let seed = env_seed();
+    let wf = xaml::parse(CHAIN).unwrap();
     let (part, _) = partitioner::partition(&wf).unwrap();
-    let err = format!("{:#}", engine.run(&part).unwrap_err());
-    assert!(err.contains("has no value"), "{err}");
+    for faults in [None, Some(FaultConfig { seed, preempt_rate: 0.5, max_preemptions: None })] {
+        let svcs = Services::without_runtime(hostile_platform(seed));
+        let reg = registry();
+        let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+        cfg.attempts = 2;
+        cfg.budget = Some(10.0);
+        if let Some(f) = faults {
+            cfg.faults = Some(FaultPlan::new(f).unwrap());
+        }
+        let mgr =
+            MigrationManager::with_config(svcs.clone(), Box::new(DeadTransport), cfg);
+        let engine = Engine::new(reg, svcs).with_offload(mgr.clone());
+        match engine.run(&part) {
+            Err(e) => {
+                let err = format!("{e:#}");
+                assert!(err.contains("unreachable"), "{err}");
+            }
+            // Preempted before the transport was ever reached, then
+            // recovered locally: a legal chaos outcome.
+            Ok(report) => {
+                assert!(faults.is_some(), "fault-free run must hit the dead transport");
+                assert_eq!(report.lines.last().map(String::as_str), Some("result=5"));
+            }
+        }
+        assert_eq!(mgr.stats().spend, 0.0, "no round trip completed, so no spend");
+        assert_no_leaks(&mgr, true);
+    }
 }
 
 #[test]
