@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use emerald::benchkit::Series;
+use emerald::benchkit::{Series, Trajectory};
 use emerald::cloud::{NodeKind, Platform};
 use emerald::engine::activity::need_uri;
 use emerald::engine::{ActivityRegistry, Engine, Services};
@@ -84,6 +84,7 @@ fn scenario(
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut traj = Trajectory::new("fig10_mdss");
     println!("== Fig 10: MDSS reduces data transferred per offload ({REPEATS} offloads) ==");
     let sizes = [1usize, 8, 32];
     let mut bytes_rows: Vec<(String, Vec<(String, f64)>)> = vec![
@@ -118,12 +119,14 @@ fn main() -> anyhow::Result<()> {
         s1.row(&name, points);
     }
     s1.print();
+    traj.record(&s1);
 
     let mut s2 = Series::new("Fig 10: simulated time for 5 offloads", "seconds (simulated)");
     for (name, points) in time_rows {
         s2.row(&name, points);
     }
     s2.print();
+    traj.record(&s2);
 
     // The paper's claim: with a fresh cloud copy, only task code moves.
     let cold = bytes_rows[0].1.last().unwrap().1;
@@ -135,5 +138,9 @@ fn main() -> anyhow::Result<()> {
         "\nFig 10 headline: 5 offloads of a 32 MiB step move {bundle:.0} MiB without MDSS, \
          {cold:.0} MiB with cold MDSS, {presync:.3} MiB pre-synced"
     );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fig10.json");
+    traj.write(&out)?;
+    println!("trajectory written to {}", out.display());
     Ok(())
 }

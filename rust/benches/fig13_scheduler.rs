@@ -78,6 +78,16 @@
 //! preemption — paying a visible recovery overhead over the polite
 //! cloud, and a budgeted rerun must never overshoot its budget
 //! (float-exact).
+//!
+//! An eleventh section (**Fig 13k**) A/Bs the **cloud-resident data
+//! plane** (`[migration] resident`) on a 3-hop chained offload whose
+//! string payload doubles at every hop. With residency on, the two
+//! intermediates park in the worker's node-local MDSS segment and the
+//! chain passes `mdss://resident/...` references hop to hop, so
+//! resident must strictly beat ship-every-hop live AND in the
+//! transfer-aware placement model, the WAN ledger must prove the
+//! intermediate bytes never crossed the wire on the cloud-to-cloud
+//! edges, and run teardown must release every resident (zero leaks).
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
@@ -85,15 +95,15 @@ use std::time::Duration;
 
 use emerald::benchkit::{Series, Trajectory};
 use emerald::cloud::{CloudTier, Platform, PlatformConfig};
-use emerald::engine::activity::need_num;
+use emerald::engine::activity::{need_num, need_str};
 use emerald::engine::{ActivityRegistry, DataflowDispatch, Engine, Event, RunReport, Services};
 use emerald::expr::Value;
 use emerald::faults::{FaultConfig, FaultPlan};
 use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
 use emerald::partitioner::{self, PartitionOptions};
 use emerald::scheduler::{
-    admission_cap, simulate_makespan, simulate_plan, NodeSpec, Objective, SchedulePolicy,
-    SpotModel,
+    admission_cap, simulate_makespan, simulate_plan, simulate_plan_with_transfers, NodeSpec,
+    Objective, SchedulePolicy, SpotModel,
 };
 use emerald::workflow::{dag, xaml, StepKind};
 
@@ -171,6 +181,16 @@ fn registry() -> Arc<ActivityRegistry> {
         std::thread::sleep(Duration::from_millis(10));
         ctx.charge_compute(Duration::from_millis(ms as u64));
         Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+    });
+    // Fig 13k's payload grower: doubles its input string, so every hop
+    // of the chain moves twice the bytes of the one before — exactly
+    // the shape where shipping intermediates home between offloads
+    // wastes the most WAN.
+    reg.register_fn("text.double", |ctx, inputs| {
+        let ms = need_num(inputs, "ms")?;
+        let s = need_str(inputs, "s")?;
+        ctx.charge_compute(Duration::from_millis(ms as u64));
+        Ok([("y".to_string(), Value::Str(format!("{s}{s}")))].into())
     });
     Arc::new(reg)
 }
@@ -508,11 +528,83 @@ fn run_hostile_budgeted(budget: f64) -> anyhow::Result<emerald::migration::Migra
     Ok(mgr.stats())
 }
 
+/// Fig 13k workload: a 3-hop chained offload over doubling string
+/// payloads. The seed grows locally to 512 chars, then `hop-1`..`hop-3`
+/// double it remotely: `s1` (1 KiB) and `s2` (2 KiB) are each written
+/// by one offload and read only by the next, so the IR classifies them
+/// cloud-to-cloud and — with `[migration] resident` on — they never
+/// come home. Only the seed goes up and only `s3` (4 KiB, read by the
+/// local WriteLine) comes back down.
+const RESIDENT_WORKFLOW: &str = r#"<Workflow Name="fig13k">
+  <Workflow.Variables>
+    <Variable Name="x"/>
+    <Variable Name="s1"/><Variable Name="s2"/><Variable Name="s3"/>
+  </Workflow.Variables>
+  <Sequence>
+    <Assign DisplayName="seed" To="x"
+            Value="'0123456789abcdef0123456789abcdef0123456789abcdef0123456789abcdef'"/>
+    <Assign DisplayName="grow-1" To="x" Value="x + x"/>
+    <Assign DisplayName="grow-2" To="x" Value="x + x"/>
+    <Assign DisplayName="grow-3" To="x" Value="x + x"/>
+    <InvokeActivity DisplayName="hop-1" Activity="text.double" In.ms="40" In.s="x"
+                    Out.y="s1" Remotable="true"/>
+    <InvokeActivity DisplayName="hop-2" Activity="text.double" In.ms="40" In.s="s1"
+                    Out.y="s2" Remotable="true"/>
+    <InvokeActivity DisplayName="hop-3" Activity="text.double" In.ms="40" In.s="s2"
+                    Out.y="s3" Remotable="true"/>
+    <WriteLine Text="'len=' + str(len(s3))"/>
+  </Sequence>
+</Workflow>"#;
+
+/// Content lengths of the two cloud-to-cloud intermediates (`s1`,
+/// `s2`): the seed literal is 64 chars and doubles three times locally
+/// to 512 before the remote hops take over.
+const S1_LEN: u64 = 1024;
+const S2_LEN: u64 = 2048;
+
+/// One Fig 13k run on the mixed 2-tier pool over a deliberately thin
+/// WAN (250 KB/s — payload time dwarfs the 10 ms latency, so the bytes
+/// the data plane saves are visible in the makespan). Returns the run
+/// report, the manager's stats, the post-teardown resident count and
+/// the WAN ledger.
+fn run_resident(
+    resident: bool,
+) -> anyhow::Result<(
+    RunReport,
+    emerald::migration::MigrationStats,
+    usize,
+    emerald::cloud::NetworkLedger,
+)> {
+    let platform = Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::new(2, 2.0), CloudTier::new(2, 8.0)],
+        wan_bandwidth: 250_000.0,
+        ..Default::default()
+    })?;
+    let services = Services::without_runtime(platform);
+    let reg = registry();
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.resident = resident;
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg, services.clone()).with_offload(mgr.clone());
+    let wf = xaml::parse(RESIDENT_WORKFLOW)?;
+    let (part, rep) = partitioner::partition(&wf)?;
+    assert_eq!(rep.migration_points, 3);
+    assert_eq!(rep.resident_vars, 2, "s1 and s2 qualify; s3 is read locally");
+    let report = engine.run(&part)?;
+    assert!(
+        report.lines.iter().any(|l| l == "len=4096"),
+        "residency must not change results: {:?}",
+        report.lines
+    );
+    let leaked = mgr.leaked_residents();
+    Ok((report, mgr.stats(), leaked, services.platform.network.ledger()))
+}
+
 fn main() -> anyhow::Result<()> {
     println!("== Fig 13: load-aware scheduling + batched offload round trips ==");
     // Every printed series is also recorded here and committed as
     // BENCH_fig13.json, so scheduler regressions show up as diffs.
-    let mut traj = Trajectory::new("fig13");
+    let mut traj = Trajectory::new("fig13_scheduler");
 
     // -- End-to-end: seed baseline vs this PR's scheduler + batching --
     let (baseline, baseline_offloads) = run(SchedulePolicy::RoundRobin, false)?;
@@ -689,6 +781,11 @@ fn main() -> anyhow::Result<()> {
     let mut steal_cfg = ManagerConfig::new(DataPolicy::Mdss);
     steal_cfg.objective = Objective::Cost;
     steal_cfg.steal = true;
+    // Ship values between hops: the chain's intermediates qualify for
+    // residency, and data gravity would (correctly) veto the steal
+    // pass this section exists to demonstrate — fig13k covers the
+    // resident side of that tradeoff.
+    steal_cfg.resident = false;
     let backlog = Some(Duration::from_secs(2));
     let (stolen_sim, stolen_spend, stolen_nodes, stolen_stats) =
         run_priced(steal_pool(), steal_cfg, backlog)?;
@@ -703,6 +800,7 @@ fn main() -> anyhow::Result<()> {
     let mut capped_cfg = ManagerConfig::new(DataPolicy::Mdss);
     capped_cfg.objective = Objective::Cost;
     capped_cfg.steal = true;
+    capped_cfg.resident = false; // same A/B conditions as the stolen arm
     capped_cfg.budget = Some(1.0); // warm run spends ~0.32; 0.68 left < 0.8 upgrade
     let (capped_sim, capped_spend, capped_nodes, capped_stats) =
         run_priced(steal_pool(), capped_cfg, backlog)?;
@@ -1183,6 +1281,134 @@ fn main() -> anyhow::Result<()> {
          {:+.1}% sim vs polite); fail-the-run aborted with zero progress",
         retry_stats.preempted,
         100.0 * (retry.sim_time.as_secs_f64() / polite.sim_time.as_secs_f64() - 1.0),
+    );
+
+    // -- Fig 13k: cloud-resident data plane. The 3-hop doubling chain
+    //    with residency on (intermediates parked cloud-side, passed by
+    //    reference) vs the ship-every-hop baseline
+    //    (`[migration] resident = false`). Resident must win live AND
+    //    in the transfer-aware model, the WAN ledger must prove the
+    //    intermediates never crossed the wire, and teardown must
+    //    release every resident. --
+    let (ship_run, ship_stats, ship_leaked, ship_net) = run_resident(false)?;
+    let (res_run, res_stats, res_leaked, res_net) = run_resident(true)?;
+    assert_eq!(res_run.lines, ship_run.lines, "the data plane must not change results");
+    assert_eq!((res_run.offload_count(), ship_run.offload_count()), (3, 3));
+    assert!(
+        res_run.sim_time < ship_run.sim_time,
+        "reference passing must strictly beat ship-every-hop live: {:?} vs {:?}",
+        res_run.sim_time,
+        ship_run.sim_time
+    );
+    // Residency bookkeeping: both intermediates were published, both
+    // were released at run teardown, and nothing leaked in either arm.
+    assert_eq!(res_stats.residents_published, 2, "s1 and s2 stay cloud-side");
+    assert_eq!(res_stats.residents_released, 2, "run teardown frees both");
+    assert_eq!(ship_stats.residents_published, 0, "the baseline ships values");
+    assert_eq!((res_leaked, ship_leaked), (0, 0), "no resident survives its run");
+    // The chained hops resolve their inputs from the node-local MDSS
+    // segment (fresh cloud-side copies — data hits, not syncs).
+    assert!(
+        res_stats.data_hits >= 2,
+        "hop-2 and hop-3 must resolve their inputs cloud-side: {} hits",
+        res_stats.data_hits
+    );
+    // The wire trace: ship-every-hop crosses each intermediate twice
+    // (response down, next request up); resident passes ~60-byte
+    // references instead. The ledger must show at least one full
+    // crossing of each intermediate's content saved.
+    assert!(
+        res_net.bytes + S1_LEN + S2_LEN <= ship_net.bytes,
+        "the intermediates' bytes must never cross the wire on \
+         cloud-to-cloud edges: resident {} B vs ship {} B",
+        res_net.bytes,
+        ship_net.bytes
+    );
+    // Data gravity pins the whole chain onto the VM holding its
+    // inputs; with the pool idle both arms co-locate on the fastest VM
+    // and the trace names it for every hop.
+    assert_eq!(executed(&res_run), vec!["cloud-2"; 3], "the chain stays on its data");
+    assert_eq!(executed(&ship_run), vec!["cloud-2"; 3]);
+
+    // The same A/B through the transfer-aware placement model: three
+    // 40 ms hops where value shipping pays each input's WAN time on
+    // every node, while the resident plan pays it only for the seed
+    // (the intermediates are already wherever the chain runs).
+    let est_net = emerald::cloud::SimNetwork::new(250_000.0, Duration::from_millis(10));
+    let est = |bytes: u64| est_net.estimate(bytes);
+    let resident_pool = [
+        NodeSpec::new(2.0, 1.0),
+        NodeSpec::new(2.0, 1.0),
+        NodeSpec::new(8.0, 1.0),
+        NodeSpec::new(8.0, 1.0),
+    ];
+    let hop_tasks = [ms(40); 3];
+    let ship_transfers =
+        vec![vec![est(512); 4], vec![est(S1_LEN); 4], vec![est(S2_LEN); 4]];
+    let res_transfers =
+        vec![vec![est(512); 4], vec![Duration::ZERO; 4], vec![Duration::ZERO; 4]];
+    let ship_plan = simulate_plan_with_transfers(
+        SchedulePolicy::LeastLoaded,
+        Objective::Time,
+        &resident_pool,
+        &hop_tasks,
+        &ship_transfers,
+    )?;
+    let res_plan = simulate_plan_with_transfers(
+        SchedulePolicy::LeastLoaded,
+        Objective::Time,
+        &resident_pool,
+        &hop_tasks,
+        &res_transfers,
+    )?;
+    assert!(
+        res_plan.makespan < ship_plan.makespan,
+        "model: reference passing must beat value shipping: {:?} vs {:?}",
+        res_plan.makespan,
+        ship_plan.makespan
+    );
+
+    let mut resident_series = Series::new(
+        "Fig 13k: 3-hop chained offload, ship-every-hop vs cloud-resident references",
+        "seconds (simulated) / WAN bytes",
+    );
+    resident_series.row(
+        "ship-every-hop ([migration] resident = false)",
+        vec![
+            ("sim".into(), ship_run.sim_time.as_secs_f64()),
+            ("wan_bytes".into(), ship_net.bytes as f64),
+        ],
+    );
+    resident_series.row(
+        "cloud-resident references (default)",
+        vec![
+            ("sim".into(), res_run.sim_time.as_secs_f64()),
+            ("wan_bytes".into(), res_net.bytes as f64),
+        ],
+    );
+    resident_series.row(
+        "reduction %",
+        vec![
+            (
+                "sim".into(),
+                100.0 * (1.0 - res_run.sim_time.as_secs_f64() / ship_run.sim_time.as_secs_f64()),
+            ),
+            (
+                "wan_bytes".into(),
+                100.0 * (1.0 - res_net.bytes as f64 / ship_net.bytes as f64),
+            ),
+        ],
+    );
+    resident_series.print();
+    traj.record(&resident_series);
+    println!(
+        "Fig 13k: {} B on the wire resident vs {} B shipping ({} B of \
+         intermediates kept cloud-side); {} residents published, {} released, 0 leaked",
+        res_net.bytes,
+        ship_net.bytes,
+        ship_net.bytes - res_net.bytes,
+        res_stats.residents_published,
+        res_stats.residents_released,
     );
 
     println!(

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use emerald::benchkit::{fmt_dur, Bench};
+use emerald::benchkit::{fmt_dur, Bench, Series, Trajectory};
 use emerald::expr::Value;
 use emerald::migration::protocol::OffloadRequest;
 use emerald::runtime::{HostTensor, Runtime};
@@ -102,5 +102,32 @@ fn main() -> anyhow::Result<()> {
         (compile_forward.as_secs_f64() / exec_hit.as_secs_f64()) as u64,
         benchkit::fmt_dur(stats[3].1.mean),
     );
+
+    // Fold the per-case stats into a Series so the trajectory file
+    // diffs like the figure benches' (BENCHES.md).
+    let mut traj = Trajectory::new("runtime_micro");
+    let mut series = Series::new("E7: coordinator hot-path costs", "microseconds");
+    series.row(
+        "cold compile",
+        vec![
+            ("vecadd".into(), compile_vecadd.as_secs_f64() * 1e6),
+            ("forward_demo".into(), compile_forward.as_secs_f64() * 1e6),
+        ],
+    );
+    for (label, st) in &stats {
+        series.row(
+            label,
+            vec![
+                ("mean".into(), st.mean.as_secs_f64() * 1e6),
+                ("p50".into(), st.p50.as_secs_f64() * 1e6),
+                ("p95".into(), st.p95.as_secs_f64() * 1e6),
+            ],
+        );
+    }
+    series.print();
+    traj.record(&series);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_micro.json");
+    traj.write(&out)?;
+    println!("trajectory written to {}", out.display());
     Ok(())
 }

@@ -218,10 +218,7 @@ impl Trajectory {
             ("bench", Value::str(self.bench.clone())),
             (
                 "note",
-                Value::str(format!(
-                    "generated by: cargo bench --bench {}_scheduler",
-                    self.bench
-                )),
+                Value::str(format!("generated by: cargo bench --bench {}", self.bench)),
             ),
             ("series", Value::Arr(self.series.clone())),
         ]);

@@ -44,6 +44,11 @@
 //! # decay_after = 20       # cost-model staleness decay, in offload
 //! #                        # attempts (absent = records live forever)
 //! steal = false            # idle-VM work stealing
+//! resident = true          # cloud-resident data plane: chained
+//!                          # offloads pass intermediates by reference
+//!                          # (false = ship-every-hop baseline)
+//! compress_min = 4096      # payloads below this many bytes skip the
+//!                          # wire codec (0 = always compress)
 //! signing_key = ""         # non-empty enables request signing
 //! codec = "raw"            # raw | deflate
 //!
@@ -597,6 +602,15 @@ impl ConfigFile {
             }
             Some(v) => bail!("[migration] decay_after must be a number, got {}", v.kind()),
         };
+        cfg.resident = self.boolean("migration", "resident", cfg.resident)?;
+        cfg.compress_min = match self.get("migration", "compress_min") {
+            None => cfg.compress_min,
+            Some(ConfigValue::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as u64,
+            Some(ConfigValue::Num(n)) => {
+                bail!("[migration] compress_min must be a non-negative integer, got {n}")
+            }
+            Some(v) => bail!("[migration] compress_min must be a number, got {}", v.kind()),
+        };
         let key = self.string("migration", "signing_key", "")?;
         if !key.is_empty() {
             cfg.signing = Some(SigningKey::new(key.into_bytes()));
@@ -661,6 +675,8 @@ impl ConfigFile {
                 "decay_after",
                 "signing_key",
                 "codec",
+                "resident",
+                "compress_min",
             ],
         ),
         (
@@ -903,6 +919,29 @@ mod tests {
             "[migration]\nbudget = \"lots\"",
             "[migration]\nweight = 0.5", // weight without weighted
             "[migration]\nobjective = \"weighted\"\nweight = -2.0",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(cfg.migration().is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parses_resident_and_compress_min() {
+        // Defaults: residency on, 4 KiB compression cutoff.
+        let m = ConfigFile::parse("").unwrap().migration().unwrap();
+        assert!(m.resident);
+        assert_eq!(m.compress_min, 4096);
+        let cfg =
+            ConfigFile::parse("[migration]\nresident = false\ncompress_min = 0").unwrap();
+        let m = cfg.migration().unwrap();
+        assert!(!m.resident);
+        assert_eq!(m.compress_min, 0);
+        // Rejections.
+        for bad in [
+            "[migration]\nresident = 1",
+            "[migration]\ncompress_min = -1",
+            "[migration]\ncompress_min = 2.5",
+            "[migration]\ncompress_min = \"big\"",
         ] {
             let cfg = ConfigFile::parse(bad).unwrap();
             assert!(cfg.migration().is_err(), "should reject {bad:?}");

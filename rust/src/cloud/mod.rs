@@ -324,8 +324,25 @@ impl Platform {
         estimate: Option<Duration>,
         objective: Objective,
     ) -> Result<(crate::scheduler::LeasePreview, Lease)> {
+        self.cloud_lease_preview_transfer(estimate, objective, &[])
+    }
+
+    /// As [`Self::cloud_lease_preview_with`], but biased by a per-node
+    /// **transfer cost** vector: `transfer_us[i]` is the extra
+    /// simulated µs placing this offload on cloud node `i` would pay
+    /// to pull its resident inputs there (zero for nodes already
+    /// holding them). The migration manager derives the vector from
+    /// the resident registry and the network model, so chained
+    /// offloads gravitate to the VM that already holds their
+    /// intermediates. An empty slice is the locality-blind placement.
+    pub fn cloud_lease_preview_transfer(
+        &self,
+        estimate: Option<Duration>,
+        objective: Objective,
+        transfer_us: &[f64],
+    ) -> Result<(crate::scheduler::LeasePreview, Lease)> {
         self.cloud_sched
-            .lease_with_preview(estimate, objective)
+            .lease_with_preview_transfer(estimate, objective, transfer_us)
             .context("scheduling offload on the cloud pool")
     }
 

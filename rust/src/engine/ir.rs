@@ -140,15 +140,21 @@ pub(super) fn run_ir(engine: &Engine, root: &Step, ctx: &Ctx) -> Result<Duration
         engine.worker_pool(n),
     );
     // Program-order splice: the trace is identical to the tree walk's
-    // no matter how the schedule interleaved.
+    // no matter how the schedule interleaved. Reserve the exact total
+    // up front — per-node `append`s into an under-sized Vec re-copy
+    // the accumulated prefix once per node on wide graphs.
     {
         let mut out = ctx.lines.lock().unwrap();
+        let extra: usize = node_lines.iter().map(|l| l.lock().unwrap().len()).sum();
+        out.reserve(extra);
         for l in &node_lines {
             out.append(&mut l.lock().unwrap());
         }
     }
     {
         let mut out = ctx.events.lock().unwrap();
+        let extra: usize = node_events.iter().map(|e| e.lock().unwrap().len()).sum();
+        out.reserve(extra);
         for e in &node_events {
             out.append(&mut e.lock().unwrap());
         }
@@ -242,12 +248,16 @@ fn exec_scatter(engine: &Engine, step: &Step, ctx: &Ctx) -> Result<Duration> {
     );
     {
         let mut lout = ctx.lines.lock().unwrap();
+        let extra: usize = el_lines.iter().map(|l| l.lock().unwrap().len()).sum();
+        lout.reserve(extra);
         for l in &el_lines {
             lout.append(&mut l.lock().unwrap());
         }
     }
     {
         let mut eout = ctx.events.lock().unwrap();
+        let extra: usize = el_events.iter().map(|e| e.lock().unwrap().len()).sum();
+        eout.reserve(extra);
         for e in &el_events {
             eout.append(&mut e.lock().unwrap());
         }
@@ -575,10 +585,21 @@ fn exec_loop(engine: &Engine, step: &Step, ctx: &Ctx) -> Result<Duration> {
     }
     // Splice in creation order: Cond(0), iteration-0 units in DAG
     // (child) order, Cond(1), iteration-1 units, … — the sequential
-    // walk's program order.
+    // walk's program order. Reserved to the exact totals first so the
+    // per-task `append`s never re-copy the accumulated prefix (long
+    // pipelined loops splice one buffer pair per unit per iteration).
     {
         let mut lout = ctx.lines.lock().unwrap();
         let mut eout = ctx.events.lock().unwrap();
+        let (mut lsum, mut esum) = (0usize, 0usize);
+        for t in &state.tasks {
+            if let Some(b) = &t.bufs {
+                lsum += b.lines.lock().unwrap().len();
+                esum += b.events.lock().unwrap().len();
+            }
+        }
+        lout.reserve(lsum);
+        eout.reserve(esum);
         for t in &state.tasks {
             if let Some(b) = &t.bufs {
                 lout.append(&mut b.lines.lock().unwrap());

@@ -291,6 +291,34 @@ pub trait OffloadHandler: Send + Sync {
         inputs: BTreeMap<String, Value>,
         writes: &[String],
     ) -> Result<OffloadVerdict>;
+
+    /// As [`Self::offload`], with the run's **residency plan** for
+    /// this step: the subset of `writes` whose every consumer is
+    /// another offload (cloud-to-cloud hazard edges, classified from
+    /// the IR's read/write sets), which a resident-aware handler keeps
+    /// cloud-side and returns by reference instead of by value. The
+    /// default ignores the plan and ships values — handlers that
+    /// implement only [`Self::offload`] keep their exact historical
+    /// behaviour.
+    fn offload_with(
+        &self,
+        step: &Step,
+        inputs: BTreeMap<String, Value>,
+        writes: &[String],
+        resident: &[String],
+    ) -> Result<OffloadVerdict> {
+        let _ = resident;
+        self.offload(step, inputs, writes)
+    }
+
+    /// End-of-run hook: release every cloud-resident intermediate this
+    /// run published. The engine calls it on success **and** failure
+    /// paths of [`Engine::run`], so residents can never outlive their
+    /// run. The default is a no-op for handlers without a resident
+    /// data plane.
+    fn run_teardown(&self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// How dataflow mode turns the dependence DAG into running threads
@@ -351,6 +379,12 @@ pub struct Engine {
     /// unit and check containment in the unit's static effect sets
     /// (see [`Self::with_validator`]).
     validator: Option<Arc<AccessValidator>>,
+    /// This run's residency plan: variables whose every consumer is
+    /// another offload node (cloud-to-cloud edges, classified by
+    /// [`crate::workflow::ir::Ir::resident_vars`] at run start when an
+    /// offload handler is attached; empty otherwise). Offload sites
+    /// read it to tell the handler which writes may stay cloud-side.
+    residents: Mutex<std::collections::BTreeSet<String>>,
     verbose: bool,
 }
 
@@ -428,6 +462,7 @@ impl Engine {
             dispatch: DataflowDispatch::default(),
             workers: None,
             validator: None,
+            residents: Mutex::new(std::collections::BTreeSet::new()),
             verbose: false,
         }
     }
@@ -586,12 +621,38 @@ impl Engine {
                 .with_context(|| format!("declaring workflow variable '{}'", v.name))?;
         }
 
-        let sim_time = if self.ir {
+        // Residency plan: with an offload handler attached, classify
+        // which variables travel exclusively cloud-to-cloud (every
+        // consumer is another offload node) so those writes can stay
+        // resident cloud-side. Workflows the IR cannot compile simply
+        // get an empty plan — value shipping, the historical behaviour.
+        *self.residents.lock().unwrap() = if self.offload.is_some() {
+            crate::workflow::ir::Ir::compile(&wf.root)
+                .map(|ir| ir.resident_vars())
+                .unwrap_or_default()
+        } else {
+            Default::default()
+        };
+
+        let run_result = if self.ir {
             ir::run_ir(self, &wf.root, &ctx)
         } else {
             self.exec(&wf.root, &ctx)
+        };
+
+        // Residency teardown runs on success AND failure: published
+        // intermediates must never outlive their run, whatever path it
+        // exits by. A teardown failure only surfaces when the run
+        // itself succeeded — it must not mask the run's own error.
+        if let Some(handler) = &self.offload {
+            let teardown = handler.run_teardown();
+            if run_result.is_ok() {
+                teardown.context("releasing cloud-resident intermediates at run end")?;
+            }
         }
-        .with_context(|| format!("running workflow '{}'", wf.name))?;
+
+        let sim_time =
+            run_result.with_context(|| format!("running workflow '{}'", wf.name))?;
 
         let stamped = events.into_inner().unwrap();
         let mut events = Vec::with_capacity(stamped.len());
@@ -1041,15 +1102,22 @@ impl Engine {
         };
         // Splice the per-unit output back in program order: lines and
         // the event trace are identical to what sequential execution
-        // of the same schedule would report.
+        // of the same schedule would report. The destination is
+        // reserved to the exact total first — per-unit `append`s into
+        // an under-sized Vec re-allocate the whole accumulated prefix
+        // once per unit, which on wide schedules dominated the splice.
         {
             let mut out = ctx.lines.lock().unwrap();
+            let extra: usize = unit_lines.iter().map(|l| l.lock().unwrap().len()).sum();
+            out.reserve(extra);
             for l in &unit_lines {
                 out.append(&mut l.lock().unwrap());
             }
         }
         {
             let mut out = ctx.events.lock().unwrap();
+            let extra: usize = unit_events.iter().map(|e| e.lock().unwrap().len()).sum();
+            out.reserve(extra);
             for e in &unit_events {
                 out.append(&mut e.lock().unwrap());
             }
@@ -1091,8 +1159,14 @@ impl Engine {
         }
         ctx.event(Event::OffloadRequested { step: target.display_name.clone() });
         let writes: Vec<String> = io.writes.iter().cloned().collect();
+        // The residency plan for this step: which of its writes travel
+        // exclusively to later offloads (classified once per run).
+        let resident: Vec<String> = {
+            let plan = self.residents.lock().unwrap();
+            writes.iter().filter(|w| plan.contains(*w)).cloned().collect()
+        };
         let verdict = handler
-            .offload(target, inputs, &writes)
+            .offload_with(target, inputs.clone(), &writes, &resident)
             .with_context(|| format!("offloading step '{}'", target.display_name))?;
 
         let outcome = match verdict {
@@ -1110,7 +1184,10 @@ impl Engine {
                 }
                 ctx.event(Event::Line { text: line.clone() });
                 ctx.lines.lock().unwrap().push(line);
-                let sim = self.exec(target, ctx)?;
+                // Resident references among the inputs must become
+                // values before local execution can read them.
+                let fetch = self.materialize_residents(&inputs, ctx)?;
+                let sim = fetch + self.exec(target, ctx)?;
                 ctx.event(Event::Resumed { step: target.display_name.clone() });
                 return Ok(sim);
             }
@@ -1129,7 +1206,12 @@ impl Engine {
                         "[emerald] offload recovered locally after preemption: {reason}"
                     );
                 }
-                let sim = self.exec(target, ctx)?;
+                // Re-materialize resident inputs (the preempted node's
+                // residents were demoted to the local store, so this
+                // reads the local copy at zero cost; a still-resident
+                // value pays one metered fetch-on-miss).
+                let fetch = self.materialize_residents(&inputs, ctx)?;
+                let sim = fetch + self.exec(target, ctx)?;
                 ctx.event(Event::Resumed { step: target.display_name.clone() });
                 return Ok(sim);
             }
@@ -1182,6 +1264,44 @@ impl Engine {
         });
         ctx.event(Event::Resumed { step: target.display_name.clone() });
         Ok(outcome.sim)
+    }
+
+    /// A local fallback (decline or preemption recovery) is about to
+    /// execute a step whose inputs may still be **resident
+    /// references** from an earlier offload in the chain. Swap each
+    /// `mdss://resident/…` input for its value in the store —
+    /// fetch-on-miss into the local tier, metered when the bytes must
+    /// cross the WAN, zero when a preemption demotion already staged
+    /// the local copy — so local execution reads real values. Returns
+    /// the simulated fetch time. A no-op (and zero) for value-shipping
+    /// runs, whose inputs never contain resident URIs.
+    fn materialize_residents(
+        &self,
+        inputs: &BTreeMap<String, Value>,
+        ctx: &Ctx,
+    ) -> Result<Duration> {
+        let mdss = &self.services.mdss;
+        let mut sim = Duration::ZERO;
+        for (name, value) in inputs {
+            let Value::Uri(raw) = value else { continue };
+            let Ok(uri) = crate::mdss::Uri::parse(raw) else { continue };
+            if uri.namespace() != "resident" {
+                continue;
+            }
+            let (item, fetch) = mdss
+                .get(crate::cloud::NodeKind::Local, &uri)
+                .with_context(|| format!("materializing resident input {raw} locally"))?;
+            sim += fetch;
+            let text = std::str::from_utf8(&item.payload)
+                .with_context(|| format!("resident payload for {raw} is not UTF-8"))?;
+            let val =
+                crate::migration::protocol::value_from_json(&crate::jsonmini::parse(text)?)
+                    .with_context(|| format!("decoding resident payload for {raw}"))?;
+            ctx.store.lock().unwrap().set(ctx.frame, name, val).with_context(|| {
+                format!("re-materializing resident input '{name}' for local execution")
+            })?;
+        }
+        Ok(sim)
     }
 
     fn invoke(&self, step: &Step, ctx: &Ctx) -> Result<Duration> {

@@ -78,6 +78,12 @@ pub struct Mdss {
     codec: Codec,
     clock: AtomicU64,
     stats: Mutex<SyncStats>,
+    /// Payloads strictly below this many bytes skip the codec and
+    /// cross the wire raw: on sub-threshold payloads the vendored LZ77
+    /// pass costs more than the bytes it saves (`runtime_micro`
+    /// measures the crossover), and tiny inputs often *expand* under
+    /// compression. Zero disables the bypass.
+    compress_min: AtomicU64,
 }
 
 impl Mdss {
@@ -96,12 +102,28 @@ impl Mdss {
             codec,
             clock: AtomicU64::new(1),
             stats: Mutex::new(SyncStats::default()),
+            compress_min: AtomicU64::new(0),
         })
     }
 
+    /// Set the small-payload compression bypass threshold (bytes):
+    /// payloads strictly smaller cross the wire uncompressed
+    /// (`[migration] compress_min`). Zero disables the bypass.
+    pub fn set_compress_min(&self, bytes: u64) {
+        self.compress_min.store(bytes, Ordering::Relaxed);
+    }
+
     /// Meter one payload crossing the WAN under the active codec.
+    /// Sub-threshold payloads (see [`Self::set_compress_min`]) are
+    /// metered at their raw length — the compression pass is skipped
+    /// entirely on both ends.
     fn wire_transfer(&self, payload: &[u8]) -> Result<(u64, Duration)> {
-        let wire = self.codec.wire_len(payload)?;
+        let min = self.compress_min.load(Ordering::Relaxed);
+        let wire = if min > 0 && (payload.len() as u64) < min {
+            payload.len() as u64
+        } else {
+            self.codec.wire_len(payload)?
+        };
         Ok((wire, self.net.transfer(wire)))
     }
 
@@ -247,6 +269,29 @@ impl Mdss {
         Ok(total)
     }
 
+    /// Drop one URI from one tier (no network). Returns whether the
+    /// tier held it.
+    pub fn remove(&self, side: NodeKind, uri: &Uri) -> bool {
+        self.store(side).remove(uri)
+    }
+
+    /// Drop every URI under `namespace` from **both** tiers and return
+    /// how many items were released. Run teardown sweeps the
+    /// `resident` namespace through this so no published intermediate
+    /// — including stray local copies cached by fetch-on-miss —
+    /// outlives its run.
+    pub fn sweep_namespace(&self, namespace: &str) -> usize {
+        let mut released = 0;
+        for store in [&self.local, &self.cloud] {
+            for uri in store.uris() {
+                if uri.namespace() == namespace && store.remove(&uri) {
+                    released += 1;
+                }
+            }
+        }
+        released
+    }
+
     /// Cumulative sync statistics.
     pub fn stats(&self) -> SyncStats {
         *self.stats.lock().unwrap()
@@ -341,6 +386,39 @@ mod tests {
         let (item, _) = m.get(NodeKind::Cloud, &uri).unwrap();
         assert_eq!(item.payload.len(), 100_000);
         assert!(item.verify());
+    }
+
+    #[test]
+    fn sweep_namespace_clears_both_tiers_and_counts() {
+        let m = mdss();
+        m.put(NodeKind::Cloud, &u("mdss://resident/n0-1/s1"), vec![1]);
+        m.put(NodeKind::Cloud, &u("mdss://resident/n0-2/s2"), vec![2]);
+        m.put(NodeKind::Local, &u("mdss://resident/n0-1/s1"), vec![1]);
+        m.put(NodeKind::Local, &u("mdss://at/model"), vec![9]);
+        assert_eq!(m.sweep_namespace("resident"), 3);
+        assert_eq!(m.count(NodeKind::Cloud), 0);
+        assert_eq!(m.count(NodeKind::Local), 1, "other namespaces survive the sweep");
+        assert_eq!(m.sweep_namespace("resident"), 0, "idempotent once clean");
+        assert!(m.remove(NodeKind::Local, &u("mdss://at/model")));
+        assert!(!m.remove(NodeKind::Local, &u("mdss://at/model")));
+    }
+
+    #[test]
+    fn small_payloads_bypass_the_codec() {
+        let net = Arc::new(SimNetwork::new(1e6, Duration::ZERO));
+        let m = Mdss::with_codec(net, Codec::Deflate);
+        m.set_compress_min(4096);
+        // Sub-threshold: metered at raw length (16 B), not the codec's
+        // framed/compressed length.
+        let uri = u("mdss://x/tiny");
+        m.put(NodeKind::Local, &uri, vec![7u8; 16]);
+        let s = m.synchronize(&uri).unwrap();
+        assert_eq!(s.bytes_up, 16, "tiny payload crosses raw");
+        // At-threshold payloads still compress (constant field).
+        let big = u("mdss://x/big");
+        m.put(NodeKind::Local, &big, vec![0u8; 4096]);
+        let s2 = m.synchronize(&big).unwrap();
+        assert!(s2.bytes_up < 4096, "compressed bytes: {}", s2.bytes_up);
     }
 
     #[test]

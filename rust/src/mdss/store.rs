@@ -67,6 +67,13 @@ impl Store {
         self.items.lock().unwrap().get(uri).cloned()
     }
 
+    /// Drop an item from this tier. Returns whether it was present
+    /// (resident-teardown accounting wants the count of real
+    /// releases, not of sweep attempts).
+    pub fn remove(&self, uri: &Uri) -> bool {
+        self.items.lock().unwrap().remove(uri).is_some()
+    }
+
     /// Version only (freshness checks without copying payloads).
     pub fn version(&self, uri: &Uri) -> Option<Version> {
         self.items.lock().unwrap().get(uri).map(|i| i.version)

@@ -151,6 +151,9 @@ impl<'a> RunMetrics<'a> {
                     ("preempted", Value::num(m.preempted as f64)),
                     ("preempt_retried", Value::num(m.preempt_retried as f64)),
                     ("preempt_local", Value::num(m.preempt_local as f64)),
+                    ("residents_published", Value::num(m.residents_published as f64)),
+                    ("residents_released", Value::num(m.residents_released as f64)),
+                    ("residents_invalidated", Value::num(m.residents_invalidated as f64)),
                 ]),
             ));
         }
@@ -237,6 +240,7 @@ mod tests {
         assert!(v.get("migration").is_ok());
         assert!(v.get("migration").unwrap().get("spend").is_ok());
         assert!(v.get("migration").unwrap().get("stolen").is_ok());
+        assert!(v.get("migration").unwrap().get("residents_published").is_ok());
         assert!(v.get("network").is_ok());
         assert!(v.get("mdss").is_err()); // not attached
         assert_eq!(

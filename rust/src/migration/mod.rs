@@ -211,6 +211,24 @@ pub struct ManagerConfig {
     /// default) instead of failing the workflow. `false` is the
     /// fail-the-run baseline the fig13j bench compares against.
     pub preempt_local: bool,
+    /// Cloud-resident data plane (`[migration] resident`, default on):
+    /// intermediates consumed only by later offloads stay published in
+    /// the cloud worker's node-local MDSS segment and travel between
+    /// chained offloads **by reference** — the response carries an
+    /// `mdss://resident/…` URI instead of the value bytes, and
+    /// placement gains a data-gravity term pulling the consumer onto
+    /// the VM that already holds them. `false` is the ship-every-hop
+    /// baseline (every intermediate crosses the WAN twice), the A/B
+    /// arm the fig13k bench and the residency property tests compare
+    /// against.
+    pub resident: bool,
+    /// Small-payload compression bypass (`[migration] compress_min`,
+    /// bytes): MDSS payloads strictly smaller than this cross the wire
+    /// uncompressed — below the cutoff the codec's framing overhead
+    /// and CPU cost outweigh any byte savings. Zero disables the
+    /// bypass (every payload goes through the codec, the historical
+    /// behaviour). Applied to the shared MDSS at manager construction.
+    pub compress_min: u64,
 }
 
 impl ManagerConfig {
@@ -232,6 +250,8 @@ impl ManagerConfig {
             faults: None,
             preempt_retries: 2,
             preempt_local: true,
+            resident: true,
+            compress_min: 4096,
         }
     }
 }
@@ -290,6 +310,18 @@ pub struct MigrationStats {
     /// affordable surviving VM) and recovered by local execution.
     /// Always a subset of `declined`.
     pub preempt_local: u64,
+    /// Intermediates published into the cloud-resident data plane —
+    /// each one is a result value that stayed cloud-side and travelled
+    /// to its consumer by reference instead of crossing the WAN twice.
+    pub residents_published: u64,
+    /// Residents released by run teardown (every publish must be
+    /// matched by a release or an invalidation — the leak invariant
+    /// the failure-injection tests pin).
+    pub residents_released: u64,
+    /// Residents demoted to the local tier because their home VM was
+    /// preempted — recovery re-materializes the value from the local
+    /// copy instead of losing it with the node.
+    pub residents_invalidated: u64,
 }
 
 impl MigrationStats {
@@ -315,6 +347,9 @@ impl MigrationStats {
         self.preempted += d.preempted;
         self.preempt_retried += d.preempt_retried;
         self.preempt_local += d.preempt_local;
+        self.residents_published += d.residents_published;
+        self.residents_released += d.residents_released;
+        self.residents_invalidated += d.residents_invalidated;
     }
 }
 
@@ -489,6 +524,18 @@ impl Drop for FirstSightPass<'_> {
     }
 }
 
+/// One entry in the manager's resident registry: where a published
+/// intermediate lives ([`protocol::ResidentNote::node`] — the cloud VM
+/// whose node-local MDSS segment holds it) and how big its serialized
+/// payload is. Placement reads the registry to price pulling the value
+/// onto each candidate VM; preemption recovery and run teardown drain
+/// it.
+#[derive(Debug, Clone, Copy)]
+struct ResidentEntry {
+    node: usize,
+    bytes: u64,
+}
+
 /// Local-side migration manager.
 pub struct MigrationManager {
     services: Arc<Services>,
@@ -498,6 +545,12 @@ pub struct MigrationManager {
     history: Mutex<CostHistory>,
     ledger: Mutex<SpendLedger>,
     first_sight: FirstSightGate,
+    /// Live cloud-resident intermediates, keyed by their
+    /// `mdss://resident/…` URI. Every publish lands here and every
+    /// teardown sweep or preemption demotion removes it — an entry
+    /// that survives [`OffloadHandler::run_teardown`] is a leak
+    /// ([`Self::leaked_residents`]).
+    residents: Mutex<BTreeMap<String, ResidentEntry>>,
 }
 
 impl MigrationManager {
@@ -516,6 +569,10 @@ impl MigrationManager {
         transport: Box<dyn Transport>,
         config: ManagerConfig,
     ) -> Arc<Self> {
+        // The bypass threshold lives on the shared MDSS so both wire
+        // directions (sync up, fetch-on-miss down) skip the codec for
+        // sub-threshold payloads.
+        services.mdss.set_compress_min(config.compress_min);
         Arc::new(Self {
             services,
             transport,
@@ -524,6 +581,7 @@ impl MigrationManager {
             history: Mutex::new(Default::default()),
             ledger: Mutex::new(Default::default()),
             first_sight: FirstSightGate { busy: Mutex::new(false), cv: Condvar::new() },
+            residents: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -574,6 +632,83 @@ impl MigrationManager {
     pub fn ledger(&self) -> (f64, f64) {
         let led = self.ledger.lock().unwrap();
         (led.committed, led.reserved)
+    }
+
+    /// Number of cloud-resident intermediates still registered. After
+    /// [`OffloadHandler::run_teardown`] this is zero on **every** path
+    /// — success, decline, preemption recovery and transport failure
+    /// alike (the failure-injection suite asserts it); a non-zero
+    /// count after teardown is a leak.
+    pub fn leaked_residents(&self) -> usize {
+        self.residents.lock().unwrap().len()
+    }
+
+    /// Data-gravity term for the scheduler: per-cloud-node extra
+    /// simulated µs placing this offload on that node would pay to
+    /// pull its resident inputs there. A resident is free on its home
+    /// VM and costs one estimated transfer of its payload anywhere
+    /// else, so chained offloads gravitate to the VM that already
+    /// holds their intermediates. Empty (locality-blind placement)
+    /// when no input is resident.
+    fn transfer_penalties(&self, inputs: &BTreeMap<String, Value>) -> Vec<f64> {
+        let registry = self.residents.lock().unwrap();
+        if registry.is_empty() {
+            return Vec::new();
+        }
+        let nodes = self.services.platform.cloud_size();
+        let net = &self.services.platform.network;
+        let mut penalties = Vec::new();
+        for value in inputs.values() {
+            let Value::Uri(u) = value else { continue };
+            let Some(entry) = registry.get(u) else { continue };
+            if penalties.is_empty() {
+                penalties = vec![0.0; nodes];
+            }
+            let pull_us = net.estimate(entry.bytes).as_secs_f64() * 1e6;
+            for (i, p) in penalties.iter_mut().enumerate() {
+                if i != entry.node {
+                    *p += pull_us;
+                }
+            }
+        }
+        penalties
+    }
+
+    /// Preemption hit the VM at `node`: every resident homed there
+    /// dies with its node-local segment. Recovery **demotes** each one
+    /// to the local tier first — one metered downlink per resident
+    /// (the bytes really cross the WAN to escape the dying node), then
+    /// the cloud copy is dropped and the registry entry released — so
+    /// re-materialization after recovery reads the local copy instead
+    /// of failing on a missing URI.
+    fn demote_residents(
+        &self,
+        node: usize,
+        delta: &mut MigrationStats,
+    ) -> Result<Duration> {
+        let doomed: Vec<(String, ResidentEntry)> = {
+            let registry = self.residents.lock().unwrap();
+            registry
+                .iter()
+                .filter(|(_, e)| e.node == node)
+                .map(|(u, e)| (u.clone(), *e))
+                .collect()
+        };
+        let mdss = &self.services.mdss;
+        let mut sim = Duration::ZERO;
+        for (raw, _) in &doomed {
+            let uri = Uri::parse(raw)?;
+            // Fetch-on-miss into the local tier (metered), then drop
+            // the doomed cloud copy.
+            let (_, fetch) = mdss
+                .get(NodeKind::Local, &uri)
+                .with_context(|| format!("demoting resident {raw} off preempted VM"))?;
+            sim += fetch;
+            mdss.remove(NodeKind::Cloud, &uri);
+            self.residents.lock().unwrap().remove(raw);
+            delta.residents_invalidated += 1;
+        }
+        Ok(sim)
     }
 
     /// URIs referenced by the input values.
@@ -772,13 +907,42 @@ impl OffloadHandler for MigrationManager {
         inputs: BTreeMap<String, Value>,
         writes: &[String],
     ) -> Result<OffloadVerdict> {
+        self.offload_with(step, inputs, writes, &[])
+    }
+
+    fn offload_with(
+        &self,
+        step: &Step,
+        inputs: BTreeMap<String, Value>,
+        writes: &[String],
+        resident: &[String],
+    ) -> Result<OffloadVerdict> {
         // Every counter for this offload accumulates in a local delta
         // and commits exactly once — success, decline or error — so a
         // mid-offload failure can't leave half-applied stats.
         let mut delta = MigrationStats::default();
-        let result = self.offload_inner(step, inputs, writes, &mut delta);
+        let result = self.offload_inner(step, inputs, writes, resident, &mut delta);
         self.stats.lock().unwrap().absorb(&delta);
         result
+    }
+
+    /// End-of-run residency sweep: drop every `resident`-namespace
+    /// item from both MDSS tiers (including stray local copies cached
+    /// by fetch-on-miss) and drain the registry. Runs on success *and*
+    /// failure paths, so no published intermediate outlives its run —
+    /// [`Self::leaked_residents`] is zero afterwards, always.
+    fn run_teardown(&self) -> Result<()> {
+        self.services.mdss.sweep_namespace("resident");
+        let drained = {
+            let mut registry = self.residents.lock().unwrap();
+            let n = registry.len() as u64;
+            registry.clear();
+            n
+        };
+        if drained > 0 {
+            self.stats.lock().unwrap().residents_released += drained;
+        }
+        Ok(())
     }
 }
 
@@ -788,6 +952,7 @@ impl MigrationManager {
         step: &Step,
         inputs: BTreeMap<String, Value>,
         writes: &[String],
+        resident: &[String],
         delta: &mut MigrationStats,
     ) -> Result<OffloadVerdict> {
         // Staleness clock: one tick per offload attempt, so cost
@@ -834,12 +999,24 @@ impl MigrationManager {
         //     simply drops the lease, releasing the slot. Skipped
         //     entirely when neither gate is on: the probe costs a
         //     slots lock plus an O(pool) policy scan per offload.
+        // Data gravity: when any input is a cloud-resident reference,
+        // every candidate VM is scored with the estimated time to pull
+        // the resident payloads there (zero on their home VM), so the
+        // consumer lands where its data already lives. Computed once
+        // and shared by both lease paths below.
+        let penalties = if self.config.resident {
+            self.transfer_penalties(&inputs)
+        } else {
+            Vec::new()
+        };
+        let data_gravity = penalties.iter().any(|p| *p > 0.0);
+
         let mut reservation = SpendReservation::none();
         let early_lease = if self.config.budget.is_some() || self.config.admission {
             let (preview, lease) = self
                 .services
                 .platform
-                .cloud_lease_preview_with(work_est, self.config.objective)
+                .cloud_lease_preview_transfer(work_est, self.config.objective, &penalties)
                 .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?;
 
             // 0c. Budget gate: a run that has already spent its budget
@@ -956,7 +1133,8 @@ impl MigrationManager {
             None => self
                 .services
                 .platform
-                .cloud_lease_with(work_est, self.config.objective)
+                .cloud_lease_preview_transfer(work_est, self.config.objective, &penalties)
+                .map(|(_, lease)| lease)
                 .with_context(|| format!("leasing a cloud VM for '{}'", step.display_name))?,
         };
 
@@ -965,8 +1143,12 @@ impl MigrationManager {
         //     re-pin it there — bounded by the remaining budget, so a
         //     cost-placed lease only upgrades to an expensive fast VM
         //     when the run can afford it. The re-pinned node is what
-        //     gets packaged, signed and executed below.
-        if self.config.steal {
+        //     gets packaged, signed and executed below. Skipped under
+        //     data gravity: the steal scores pure queue depth, and
+        //     yanking a consumer off the VM that holds its resident
+        //     inputs would silently re-add the transfer the placement
+        //     just avoided.
+        if self.config.steal && !data_gravity {
             match self.config.budget {
                 Some(b) => {
                     // ONE ledger critical section covers the cap read,
@@ -1014,6 +1196,15 @@ impl MigrationManager {
         //    `preempt_local` off — fails the run (the fig13j
         //    baseline).
         let mut req = OffloadRequest::package(step, inputs, writes);
+        // Residency plan: writes the IR classified as cloud-to-cloud
+        // travel in the request so the worker publishes them node-side
+        // and answers with references instead of value bytes. The list
+        // rides inside the signature (`signable` folds it), so a
+        // tampered plan fails verification like tampered task code.
+        if self.config.resident {
+            req.resident =
+                resident.iter().filter(|r| writes.contains(*r)).cloned().collect();
+        }
         let mut recovery: Vec<Event> = Vec::new();
         let mut relocations = 0usize;
         let mut uplink_bytes = 0u64;
@@ -1049,6 +1240,11 @@ impl MigrationManager {
             // — occupancy is untouched (this lease still owns its slot
             // until it evacuates or drops, exactly once either way).
             self.services.platform.cloud_scheduler().invalidate(lease.node);
+            // The node-local MDSS segment dies with the VM: demote its
+            // residents to the local tier (metered — the bytes really
+            // cross the WAN to survive) so recovery re-materializes
+            // them instead of failing on missing URIs.
+            sim += self.demote_residents(lease.node, delta)?;
 
             let relocated = if relocations < self.config.preempt_retries {
                 match self.config.budget {
@@ -1153,6 +1349,21 @@ impl MigrationManager {
         let remote_sim = Duration::from_micros(resp.remote_sim_us);
         sim += remote_sim;
 
+        // 4a. Register the intermediates the worker kept resident:
+        //     placement of the next offload in the chain reads the
+        //     registry for its data-gravity term, and teardown (or a
+        //     preemption of their home VM) releases them.
+        if !resp.residents.is_empty() {
+            let mut registry = self.residents.lock().unwrap();
+            for note in &resp.residents {
+                registry.insert(
+                    note.uri.clone(),
+                    ResidentEntry { node: note.node, bytes: note.bytes },
+                );
+            }
+            delta.residents_published = resp.residents.len() as u64;
+        }
+
         // 4b. Queueing delay: a VM runs one offload at a time in
         //     simulated time, so a lease granted behind `position`
         //     in-flight offloads waits for comparable work to drain.
@@ -1233,9 +1444,26 @@ impl MigrationManager {
     }
 }
 
+/// Home VM of a resident URI — `mdss://resident/n<idx>-<seq>/<var>`
+/// names the node whose local segment published it in its second path
+/// segment. `None` for URIs not in that shape (foreign namespaces,
+/// legacy data URIs).
+fn resident_home(uri: &Uri) -> Option<usize> {
+    let mut segs = uri.as_str().strip_prefix("mdss://")?.split('/');
+    let _ns = segs.next()?;
+    let tag = segs.next()?.strip_prefix('n')?;
+    let (idx, _) = tag.split_once('-')?;
+    idx.parse().ok()
+}
+
 /// Cloud-side worker: receives packaged steps and executes them.
 pub struct CloudWorker {
     engine: Engine,
+    services: Arc<Services>,
+    /// Uniquifier for published resident URIs: two publishes of the
+    /// same variable name (loop iterations, retried requests) must
+    /// never alias, so every publish burns one sequence number.
+    seq: std::sync::atomic::AtomicU64,
     /// When set, reject any request that doesn't carry a valid tag
     /// (future-work §6 security).
     pub require_key: Option<SigningKey>,
@@ -1251,9 +1479,52 @@ impl CloudWorker {
     /// Unwrapped constructor (callers that need to set `require_key`).
     pub fn new_inner(services: Arc<Services>, registry: Arc<ActivityRegistry>) -> Self {
         Self {
-            engine: Engine::new(registry, services).on_tier(NodeKind::Cloud),
+            engine: Engine::new(registry, services.clone()).on_tier(NodeKind::Cloud),
+            services,
+            seq: std::sync::atomic::AtomicU64::new(0),
             require_key: None,
         }
+    }
+
+    /// Swap resident references in the inputs for their values: each
+    /// `mdss://resident/…` URI is read from the cloud tier —
+    /// zero-cost when the executing VM's tier already holds it fresh,
+    /// a metered fetch-on-miss from the local copy otherwise (the
+    /// re-materialization path after a preemption demoted it) — plus
+    /// an estimated intra-cloud hop when the value is homed on a
+    /// *different* VM than the pinned executor (locality-aware
+    /// placement makes this the exception, not the rule; the hop is
+    /// LAN time, not WAN ledger bytes). Returns the simulated time
+    /// spent resolving.
+    fn materialize_inputs(
+        &self,
+        inputs: &mut BTreeMap<String, Value>,
+        pin: Option<usize>,
+    ) -> Result<Duration> {
+        let mdss = &self.services.mdss;
+        let net = &self.services.platform.network;
+        let mut sim = Duration::ZERO;
+        for value in inputs.values_mut() {
+            let Value::Uri(raw) = value else { continue };
+            let uri = Uri::parse(raw)?;
+            if uri.namespace() != "resident" {
+                continue;
+            }
+            let (item, fetch) = mdss
+                .get(NodeKind::Cloud, &uri)
+                .with_context(|| format!("materializing resident input {raw}"))?;
+            sim += fetch;
+            if let (Some(home), Some(exec)) = (resident_home(&uri), pin) {
+                if home != exec {
+                    sim += net.estimate(item.payload.len() as u64);
+                }
+            }
+            let text = std::str::from_utf8(&item.payload)
+                .with_context(|| format!("resident payload for {raw} is not UTF-8"))?;
+            *value = protocol::value_from_json(&crate::jsonmini::parse(text)?)
+                .with_context(|| format!("decoding resident payload for {raw}"))?;
+        }
+        Ok(sim)
     }
 
     /// Execute one request.
@@ -1279,12 +1550,53 @@ impl CloudWorker {
                 .then(|| Arc::new(Node::new(NodeKind::Cloud, p.index, p.speed)))
         });
         let executed_on = pin.as_ref().map(|n| n.name());
-        match self.engine.exec_subtree_on(&step, req.inputs.clone(), pin) {
+        let pin_index = pin.as_ref().map(|n| n.index);
+
+        // Resident references among the inputs resolve to their values
+        // before execution — fetch-on-miss, charged to the response's
+        // simulated time.
+        let mut inputs = req.inputs.clone();
+        let resolve_sim = match self.materialize_inputs(&mut inputs, pin_index) {
+            Ok(d) => d,
+            Err(e) => return OffloadResponse::err(format!("{e:#}")),
+        };
+
+        match self.engine.exec_subtree_on(&step, inputs, pin) {
             Ok((mut outputs, sim, lines)) => {
                 // Only the declared writes travel back.
                 outputs.retain(|k, _| req.writes.contains(k));
-                let mut resp = OffloadResponse::ok(outputs, sim, lines);
+                // Publish the writes the manager classified as
+                // cloud-to-cloud travel into this VM's segment and
+                // replace them with references — the value bytes stay
+                // resident; only the URI rides the response. Legacy
+                // requests (empty plan) and pin-less placements ship
+                // values exactly as before.
+                let mut residents = Vec::new();
+                if let Some(home) = pin_index {
+                    for var in &req.resident {
+                        let Some(val) = outputs.get(var) else { continue };
+                        let payload = crate::jsonmini::to_string(&protocol::value_to_json(val))
+                            .into_bytes();
+                        let bytes = payload.len() as u64;
+                        let seq =
+                            self.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let raw = format!("mdss://resident/n{home}-{seq}/{var}");
+                        let uri = match Uri::parse(&raw) {
+                            Ok(u) => u,
+                            Err(e) => {
+                                return OffloadResponse::err(format!(
+                                    "publishing resident '{var}': {e:#}"
+                                ))
+                            }
+                        };
+                        self.services.mdss.put(NodeKind::Cloud, &uri, payload);
+                        outputs.insert(var.clone(), Value::Uri(raw.clone()));
+                        residents.push(protocol::ResidentNote { uri: raw, bytes, node: home });
+                    }
+                }
+                let mut resp = OffloadResponse::ok(outputs, sim + resolve_sim, lines);
                 resp.node = executed_on;
+                resp.residents = residents;
                 resp
             }
             Err(e) => OffloadResponse::err(format!("{e:#}")),

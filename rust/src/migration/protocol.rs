@@ -63,9 +63,17 @@ pub struct OffloadRequest {
     /// The leased cloud VM every activity in the request executes on
     /// (set by the migration manager after taking its scheduler lease).
     pub node: Option<PinnedNode>,
+    /// Writes whose values may stay **cloud-resident**: instead of
+    /// shipping these back by value, the worker publishes them into
+    /// its node-local MDSS segment and returns an `mdss://resident/…`
+    /// reference (the manager lists only writes that feed another
+    /// remotable step — cloud-to-cloud hazard edges). Empty = ship
+    /// everything by value (the A/B baseline and the legacy wire
+    /// behaviour). Requests from older peers decode as empty.
+    pub resident: Vec<String>,
     /// Optional authentication tag over task code + inputs + writes
-    /// (+ the placement pin when present; future-work §6, see
-    /// [`super::security`]).
+    /// (+ the placement pin and the resident list when present;
+    /// future-work §6, see [`super::security`]).
     pub sig: Option<String>,
 }
 
@@ -97,8 +105,28 @@ pub struct OffloadResponse {
     /// the request carried a placement pin. Lets the local engine's
     /// trace record the node that actually ran the work.
     pub node: Option<String>,
+    /// One note per output the worker kept cloud-resident instead of
+    /// shipping by value (the matching entry in [`Self::outputs`] is a
+    /// [`Value::Uri`] reference). The manager's residency registry is
+    /// built from these. Empty for value-shipping peers.
+    pub residents: Vec<ResidentNote>,
     /// Error message when remote execution failed.
     pub error: Option<String>,
+}
+
+/// Bookkeeping for one value published cloud-resident by the worker:
+/// where it lives and how big it is — everything the manager's
+/// registry needs for data-locality placement penalties, preemption
+/// demotion, and leak-free teardown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidentNote {
+    /// The `mdss://resident/…` reference the response's output carries.
+    pub uri: String,
+    /// Serialized payload size in bytes (feeds the scheduler's
+    /// transfer-cost term and the demotion wire charge).
+    pub bytes: u64,
+    /// Global cloud-node index the value is homed on.
+    pub node: usize,
 }
 
 /// Encode a workflow [`Value`] (tagged).
@@ -155,6 +183,7 @@ impl OffloadRequest {
             writes: writes.to_vec(),
             batch: batch_len(step),
             node: None,
+            resident: Vec::new(),
             sig: None,
         }
     }
@@ -174,6 +203,15 @@ impl OffloadRequest {
             msg.extend_from_slice(b"node");
             msg.extend_from_slice(&(n.index as u64).to_le_bytes());
             msg.extend_from_slice(&n.speed.to_bits().to_le_bytes());
+        }
+        // Folded only when present, like the pin: signatures over
+        // resident-free requests stay byte-compatible with older peers.
+        if !self.resident.is_empty() {
+            msg.extend_from_slice(b"resident");
+            for r in &self.resident {
+                msg.extend_from_slice(r.as_bytes());
+                msg.push(0);
+            }
         }
         msg
     }
@@ -202,6 +240,10 @@ impl OffloadRequest {
                 J::Arr(self.writes.iter().map(|w| J::str(w.clone())).collect()),
             ),
             ("batch", J::num(self.batch as f64)),
+            (
+                "resident",
+                J::Arr(self.resident.iter().map(|r| J::str(r.clone())).collect()),
+            ),
             (
                 "node",
                 match &self.node {
@@ -252,6 +294,16 @@ impl OffloadRequest {
                     speed: v.get("speed")?.as_f64()?,
                 }),
             },
+            // Wire-compatible with value-shipping peers: absent ->
+            // nothing stays resident.
+            resident: match j.get_opt("resident") {
+                None | Some(J::Null) => Vec::new(),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|r| Ok(r.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+            },
             sig: match j.get_opt("sig") {
                 None | Some(J::Null) => None,
                 Some(s) => Some(s.as_str()?.to_string()),
@@ -279,6 +331,7 @@ impl OffloadResponse {
             remote_sim_us: remote_sim.as_micros() as u64,
             lines,
             node: None,
+            residents: Vec::new(),
             error: None,
         }
     }
@@ -290,6 +343,7 @@ impl OffloadResponse {
             remote_sim_us: 0,
             lines: Vec::new(),
             node: None,
+            residents: Vec::new(),
             error: Some(msg),
         }
     }
@@ -310,6 +364,21 @@ impl OffloadResponse {
                     Some(n) => J::str(n.clone()),
                     None => J::Null,
                 },
+            ),
+            (
+                "residents",
+                J::Arr(
+                    self.residents
+                        .iter()
+                        .map(|r| {
+                            J::obj([
+                                ("uri", J::str(r.uri.clone())),
+                                ("bytes", J::num(r.bytes as f64)),
+                                ("node", J::num(r.node as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
             (
                 "error",
@@ -341,6 +410,20 @@ impl OffloadResponse {
             node: match j.get_opt("node") {
                 None | Some(J::Null) => None,
                 Some(n) => Some(n.as_str()?.to_string()),
+            },
+            residents: match j.get_opt("residents") {
+                None | Some(J::Null) => Vec::new(),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|r| {
+                        Ok(ResidentNote {
+                            uri: r.get("uri")?.as_str()?.to_string(),
+                            bytes: r.get("bytes")?.as_f64()? as u64,
+                            node: r.get("node")?.as_usize()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
             },
             error: match j.get("error")? {
                 J::Null => None,
@@ -410,6 +493,61 @@ mod tests {
         assert!(back.verify(&key));
         back.node = Some(PinnedNode { index: 0, speed: 0.5 });
         assert!(!back.verify(&key), "redirecting the pin must invalidate the tag");
+    }
+
+    #[test]
+    fn resident_list_roundtrips_and_is_signed() {
+        let key = crate::migration::security::SigningKey::new(b"k".to_vec());
+        let mut req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &["s1".into()]);
+        req.resident = vec!["s1".to_string()];
+        req.sign(&key);
+        let back = OffloadRequest::decode(&req.encode()).unwrap();
+        assert_eq!(back.resident, vec!["s1".to_string()]);
+        assert!(back.verify(&key));
+        // Dropping the resident list (forcing a value ship) must
+        // invalidate the tag — the reference-passing decision is part
+        // of what the cloud acts on.
+        let mut tampered = OffloadRequest::decode(&req.encode()).unwrap();
+        tampered.resident.clear();
+        assert!(!tampered.verify(&key));
+    }
+
+    #[test]
+    fn legacy_request_without_resident_field_decodes_empty() {
+        let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        let legacy = String::from_utf8(req.encode())
+            .unwrap()
+            .replace("\"resident\": [],", "")
+            .replace("\"resident\":[],", "");
+        assert!(!legacy.contains("resident"), "field must be gone from the legacy form");
+        let back = OffloadRequest::decode(legacy.as_bytes()).unwrap();
+        assert_eq!(back.resident, Vec::<String>::new());
+        // A resident-free request signs identically with or without
+        // the field, so older peers verify it unchanged.
+        assert_eq!(req.signable(), back.signable());
+    }
+
+    #[test]
+    fn resident_notes_roundtrip_and_legacy_decode() {
+        let mut resp = OffloadResponse::ok(
+            [("s1".to_string(), Value::Uri("mdss://resident/n2-1/s1".into()))].into(),
+            std::time::Duration::from_micros(5),
+            Vec::new(),
+        );
+        resp.residents =
+            vec![ResidentNote { uri: "mdss://resident/n2-1/s1".into(), bytes: 64, node: 2 }];
+        let back = OffloadResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(back, resp);
+        // Responses from value-shipping peers (no residents field)
+        // decode with an empty list.
+        let plain = OffloadResponse::err("boom".into());
+        let legacy = String::from_utf8(plain.encode())
+            .unwrap()
+            .replace("\"residents\": [],", "")
+            .replace("\"residents\":[],", "");
+        assert!(!legacy.contains("residents"));
+        let back = OffloadResponse::decode(legacy.as_bytes()).unwrap();
+        assert!(back.residents.is_empty());
     }
 
     #[test]

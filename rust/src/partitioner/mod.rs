@@ -82,6 +82,14 @@ pub struct PartitionReport {
     pub batches: usize,
     /// Total remotable steps carried inside fused batches.
     pub batched_steps: usize,
+    /// Variables classified **cloud-to-cloud** on the partitioned
+    /// output: written by one offload unit and read only by other
+    /// offload units ([`crate::workflow::ir::Ir::resident_vars`]).
+    /// These are the hazard edges the migration manager turns into
+    /// `mdss://` reference-passing under `[migration] resident`;
+    /// everything else (local↔cloud edges) ships by value. Zero when
+    /// the workflow defeats IR compilation.
+    pub resident_vars: usize,
 }
 
 /// Partitioner knobs.
@@ -126,12 +134,22 @@ pub fn partition_with(
     rewrite(&mut out.root, opts, &mut stats, false);
     out.renumber();
 
+    // Classify the partitioned output's hazard edges: variables that
+    // flow offload -> offload only are candidates for cloud-resident
+    // reference-passing. One classifier serves the partitioner, the
+    // manager and the engine (`workflow::ir`), so the report can never
+    // disagree with what execution does.
+    let resident_vars = crate::workflow::ir::Ir::compile(&out.root)
+        .map(|ir| ir.resident_vars().len())
+        .unwrap_or(0);
+
     let report = PartitionReport {
         migration_points: stats.inserted,
         steps_before,
         steps_after: out.size(),
         batches: stats.batches,
         batched_steps: stats.batched_steps,
+        resident_vars,
     };
     Ok((out, report))
 }
@@ -381,6 +399,21 @@ mod tests {
         assert_eq!(fused.kind_name(), "Sequence");
         assert_eq!(fused.children().len(), 3);
         assert!(fused.display_name.starts_with("batch("));
+    }
+
+    #[test]
+    fn report_classifies_cloud_to_cloud_edges() {
+        // a flows offload -> offload only; b is read by a local step.
+        let w = wf(vec![
+            assign("a", "1").remotable(),
+            assign("b", "a + 1").remotable(),
+            assign("c", "b"),
+        ]);
+        let (_, report) = partition(&w).unwrap();
+        assert_eq!(report.resident_vars, 1, "only 'a' stays cloud-to-cloud");
+        // All-local workflows classify zero.
+        let (_, local) = partition(&wf(vec![assign("a", "1"), assign("b", "a")])).unwrap();
+        assert_eq!(local.resident_vars, 0);
     }
 
     #[test]

@@ -441,6 +441,14 @@ impl NodeScheduler {
     /// it in would make placement depend on fault history — the
     /// simulated provisioning cost lands on the lease instead
     /// ([`Lease::take_boot`]).
+    ///
+    /// `transfer_us` is the **data-locality term**: per-node extra
+    /// simulated µs this placement would pay to move the task's input
+    /// bytes onto that node (zero for the node already holding them —
+    /// the migration manager derives it from residency locations and
+    /// payload sizes). Empty = no data gravity, the historical score,
+    /// byte for byte. Only the EFT policy folds it in; the blind and
+    /// round-robin baselines stay blind by design.
     fn choose(
         policy: SchedulePolicy,
         objective: Objective,
@@ -448,7 +456,9 @@ impl NodeScheduler {
         prices: &[f64],
         estimate_us: f64,
         rr: usize,
+        transfer_us: &[f64],
     ) -> usize {
+        let xfer = |i: usize| transfer_us.get(i).copied().unwrap_or(0.0);
         match policy {
             SchedulePolicy::RoundRobin => rr % slots.len(),
             SchedulePolicy::LeastLoadedBlind => {
@@ -468,19 +478,19 @@ impl NodeScheduler {
                 // faster node, then to the lower index.
                 let score = |i: usize, s: &Slot| -> (f64, f64) {
                     match objective {
-                        Objective::Time => (Self::eft(s, estimate_us), 0.0),
+                        Objective::Time => (Self::eft(s, estimate_us) + xfer(i), 0.0),
                         // Spend = price × reference work, which is the
                         // same on every node of equal price — so the
                         // primary key is the price itself, with finish
                         // time deciding among equally-priced nodes.
-                        Objective::Cost => (prices[i], Self::eft(s, estimate_us)),
+                        Objective::Cost => (prices[i], Self::eft(s, estimate_us) + xfer(i)),
                         // Price breaks weighted-score ties, so an
                         // estimate-less lease (whose spend term is
                         // zero on every node) still prefers the
                         // cheapest of equally-finishing nodes instead
                         // of silently degenerating to pure Time.
                         Objective::Weighted(w) => (
-                            Self::eft(s, estimate_us) / 1e6
+                            (Self::eft(s, estimate_us) + xfer(i)) / 1e6
                                 + w * prices[i] * estimate_us / 1e6,
                             prices[i],
                         ),
@@ -534,6 +544,22 @@ impl NodeScheduler {
         estimate: Option<Duration>,
         objective: Objective,
     ) -> Result<(LeasePreview, Lease)> {
+        self.lease_with_preview_transfer(estimate, objective, &[])
+    }
+
+    /// As [`Self::lease_with_preview`], but biased by a per-node
+    /// **transfer cost**: `transfer_us[i]` is the extra simulated µs
+    /// placement on node `i` would pay to move the task's input bytes
+    /// there (zero for nodes already holding them). The migration
+    /// manager derives the vector from resident-value locations and
+    /// sizes, turning the EFT score into a data-gravity score. An
+    /// empty slice reproduces [`Self::lease_with_preview`] exactly.
+    pub fn lease_with_preview_transfer(
+        self: &Arc<Self>,
+        estimate: Option<Duration>,
+        objective: Objective,
+        transfer_us: &[f64],
+    ) -> Result<(LeasePreview, Lease)> {
         let mut slots = self.slots.lock().unwrap();
         if slots.is_empty() {
             bail!("no nodes available to schedule on (node count is 0)");
@@ -544,7 +570,8 @@ impl NodeScheduler {
             _ => 0,
         };
         let prices = self.eff_prices(&slots);
-        let node = Self::choose(self.policy, objective, &slots, &prices, estimate_us, rr);
+        let node =
+            Self::choose(self.policy, objective, &slots, &prices, estimate_us, rr, transfer_us);
         let preview = Self::preview_of(&slots, &prices, node);
         let position = slots[node].active;
         let speed = slots[node].speed;
@@ -594,6 +621,7 @@ impl NodeScheduler {
             &prices,
             estimate_us,
             self.rr.load(Ordering::Relaxed),
+            &[],
         );
         Some(Self::preview_of(&slots, &prices, node))
     }
@@ -867,6 +895,31 @@ pub fn simulate_plan(
     specs: &[NodeSpec],
     tasks: &[Duration],
 ) -> Result<Plan> {
+    simulate_plan_with_transfers(policy, objective, specs, tasks, &[])
+}
+
+/// As [`simulate_plan`], but with a per-task, per-node **transfer
+/// matrix**: `transfers[k][i]` is the extra wall-clock `Duration` task
+/// `k` pays *before computing* when placed on node `i` — the time to
+/// move its input bytes there (zero for the node already holding
+/// them). Missing rows or entries mean zero, so an empty matrix
+/// reproduces [`simulate_plan`] exactly.
+///
+/// The transfer charge lands on the chosen node's finish time under
+/// **every** policy (the bytes move wherever the task lands), but only
+/// [`SchedulePolicy::LeastLoaded`] *considers* it when choosing — the
+/// blind baselines stay blind, mirroring the live selector. Transfers
+/// are wire time, not billed compute, so spend is unaffected.
+pub fn simulate_plan_with_transfers(
+    policy: SchedulePolicy,
+    objective: Objective,
+    specs: &[NodeSpec],
+    tasks: &[Duration],
+    transfers: &[Vec<Duration>],
+) -> Result<Plan> {
+    let xfer = |k: usize, i: usize| -> Duration {
+        transfers.get(k).and_then(|row| row.get(i)).copied().unwrap_or(Duration::ZERO)
+    };
     if tasks.is_empty() {
         return Ok(Plan { makespan: Duration::ZERO, spend: 0.0, placements: Vec::new() });
     }
@@ -904,8 +957,8 @@ pub fn simulate_plan(
                 // exact Duration arithmetic; cost compares prices
                 // first; weighted folds spend into a seconds score.
                 let better = |i: usize, best: usize| -> bool {
-                    let fi = finish[i] + scale(*task, specs[i].speed);
-                    let fb = finish[best] + scale(*task, specs[best].speed);
+                    let fi = finish[i] + scale(*task, specs[i].speed) + xfer(k, i);
+                    let fb = finish[best] + scale(*task, specs[best].speed) + xfer(k, best);
                     match objective {
                         Objective::Time => {
                             fi < fb || (fi == fb && specs[i].speed > specs[best].speed)
@@ -939,7 +992,7 @@ pub fn simulate_plan(
                 best
             }
         };
-        finish[node] += scale(*task, specs[node].speed);
+        finish[node] += scale(*task, specs[node].speed) + xfer(k, node);
         load[node] += *task;
         spend += specs[node].price * task.as_secs_f64();
         placements.push(node);
@@ -1399,6 +1452,72 @@ mod tests {
             &tasks
         )
         .is_err());
+    }
+
+    #[test]
+    fn transfer_matrix_steers_placement_toward_the_data() {
+        let ms = Duration::from_millis;
+        // Two equal nodes; without data gravity the first task lands
+        // on node 0 by the lowest-index tie-break.
+        let specs = [NodeSpec::free(1.0), NodeSpec::free(1.0)];
+        let tasks = [ms(100)];
+        let base = simulate_plan(SchedulePolicy::LeastLoaded, Objective::Time, &specs, &tasks)
+            .unwrap();
+        assert_eq!(base.placements, vec![0]);
+        // The task's input bytes live on node 1: pulling them onto
+        // node 0 would cost 50 ms, staying home costs nothing.
+        let transfers = vec![vec![ms(50), ms(0)]];
+        let pulled = simulate_plan_with_transfers(
+            SchedulePolicy::LeastLoaded,
+            Objective::Time,
+            &specs,
+            &tasks,
+            &transfers,
+        )
+        .unwrap();
+        assert_eq!(pulled.placements, vec![1], "placement must follow the data");
+        assert_eq!(pulled.makespan, ms(100));
+        // The blind baseline ignores the matrix when choosing but
+        // still pays the wire time where it lands.
+        let blind = simulate_plan_with_transfers(
+            SchedulePolicy::LeastLoadedBlind,
+            Objective::Time,
+            &specs,
+            &tasks,
+            &transfers,
+        )
+        .unwrap();
+        assert_eq!(blind.placements, vec![0]);
+        assert_eq!(blind.makespan, ms(150));
+        // An empty matrix reproduces simulate_plan exactly.
+        let empty = simulate_plan_with_transfers(
+            SchedulePolicy::LeastLoaded,
+            Objective::Time,
+            &specs,
+            &tasks,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(empty.placements, base.placements);
+        assert_eq!(empty.makespan, base.makespan);
+    }
+
+    #[test]
+    fn live_lease_honours_the_transfer_bias() {
+        let sched = NodeScheduler::new(SchedulePolicy::LeastLoaded, 2);
+        let est = Some(Duration::from_millis(100));
+        // Input bytes homed on node 1: the transfer vector makes node
+        // 0 look 50 ms worse and the lease follows the data.
+        let (p, l) = sched
+            .lease_with_preview_transfer(est, Objective::Time, &[50_000.0, 0.0])
+            .unwrap();
+        assert_eq!(l.node, 1);
+        assert_eq!(p.node, 1);
+        drop(l);
+        // Without the bias the tie-break picks node 0 — the empty
+        // slice is the historical behaviour.
+        let (_, l) = sched.lease_with_preview(est, Objective::Time).unwrap();
+        assert_eq!(l.node, 0);
     }
 
     #[test]

@@ -279,6 +279,43 @@ impl Ir {
     pub fn may_writes(&self) -> BTreeSet<String> {
         self.nodes.iter().flat_map(|n| n.io.writes.iter().cloned()).collect()
     }
+
+    /// Variables whose hazard edges are all **cloud-to-cloud**: written
+    /// by an offload unit and read by at least one node, with *every*
+    /// reader an offload unit. These intermediates never need to exist
+    /// locally, so the migration manager may keep them cloud-resident
+    /// and pass `mdss://` references between chained offloads instead
+    /// of shipping the bytes through the local store twice per hop.
+    ///
+    /// The classification is deliberately conservative:
+    /// * a read from any non-offload node (a local leaf, a `WriteLine`,
+    ///   or a control region — whose `io` folds in its whole body and
+    ///   condition) disqualifies the variable, so anything a local
+    ///   evaluation might touch ships by value;
+    /// * a write nobody reads is excluded too — final outputs always
+    ///   come home by value, reference or not.
+    pub fn resident_vars(&self) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        for node in &self.nodes {
+            if node.kind != NodeKind::Offload {
+                continue;
+            }
+            for v in &node.io.writes {
+                let mut readers = 0usize;
+                let mut all_offload = true;
+                for other in &self.nodes {
+                    if other.io.reads.contains(v) {
+                        readers += 1;
+                        all_offload &= other.kind == NodeKind::Offload;
+                    }
+                }
+                if readers > 0 && all_offload {
+                    out.insert(v.clone());
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -473,6 +510,45 @@ mod tests {
             );
             assert!(ir.edge_count() <= dag.edge_count());
         }
+    }
+
+    #[test]
+    fn resident_vars_are_exactly_the_cloud_to_cloud_edges() {
+        // [mp; s1=x+x ; mp; s2=s1+s1 ; mp; s3=s2+s2 ; show s3]:
+        // s1 and s2 flow offload -> offload only; s3 is read by a local
+        // WriteLine and must ship by value; x is written locally.
+        let root = seq(
+            "main",
+            vec![
+                assign("x", "1"),
+                mp(),
+                assign("s1", "x + x").remotable(),
+                mp(),
+                assign("s2", "s1 + s1").remotable(),
+                mp(),
+                assign("s3", "s2 + s2").remotable(),
+                Step::new("show", StepKind::WriteLine { text: "str(s3)".into() }),
+            ],
+        );
+        let ir = Ir::compile(&root).unwrap();
+        let resident: Vec<&str> = ir.resident_vars().iter().map(|s| s.as_str()).collect();
+        assert_eq!(resident, vec!["s1", "s2"]);
+
+        // A control region reading the intermediate disqualifies it:
+        // the If's io folds the condition read of s1.
+        let gated = seq(
+            "main",
+            vec![
+                assign("x", "1"),
+                mp(),
+                assign("s1", "x + x").remotable(),
+                iff("s1 > 0", assign("y", "1")),
+                mp(),
+                assign("s2", "s1 + s1").remotable(),
+            ],
+        );
+        let ir = Ir::compile(&gated).unwrap();
+        assert!(ir.resident_vars().is_empty(), "region reader and dead s2/y writes");
     }
 
     #[test]

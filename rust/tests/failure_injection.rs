@@ -108,10 +108,22 @@ struct ChaosRun {
 /// would put them apart by a whole charge; concurrent runs may merely
 /// reorder the additions, so agreement is asserted up to float
 /// re-association there and bit-for-bit for serialized runs.
+///
+/// The resident ledger must be equally whole: run teardown (which the
+/// engine drives on success *and* failure paths) sweeps every
+/// cloud-resident intermediate, and each published resident exits the
+/// registry exactly once — released at teardown or invalidated when
+/// its home VM was preempted.
 fn assert_no_leaks(mgr: &MigrationManager, serialized: bool) {
     let stats = mgr.stats();
     let (committed, reserved) = mgr.ledger();
     assert_eq!(reserved, 0.0, "a reservation leaked past its offload");
+    assert_eq!(mgr.leaked_residents(), 0, "a resident value leaked past run teardown");
+    assert_eq!(
+        stats.residents_published,
+        stats.residents_released + stats.residents_invalidated,
+        "every published resident must be released or invalidated, never lost"
+    );
     if serialized {
         assert_eq!(committed, stats.spend, "stats and budget ledgers must agree");
     } else {
@@ -130,11 +142,24 @@ fn assert_no_leaks(mgr: &MigrationManager, serialized: bool) {
 /// self-consistent stats) and returns the report for cross-run
 /// comparisons.
 fn chaos_with(faults: FaultConfig, budget: Option<f64>, wf: &Workflow, mode: Mode) -> ChaosRun {
+    chaos_with_resident(faults, budget, true, wf, mode)
+}
+
+/// As [`chaos_with`], with the cloud-resident data plane switched on
+/// or off — the residency A/B the satellite tests drive.
+fn chaos_with_resident(
+    faults: FaultConfig,
+    budget: Option<f64>,
+    resident: bool,
+    wf: &Workflow,
+    mode: Mode,
+) -> ChaosRun {
     let (part, _) = partitioner::partition(wf).unwrap();
     let svcs = Services::without_runtime(hostile_platform(faults.seed));
     let reg = registry();
     let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
     cfg.budget = budget;
+    cfg.resident = resident;
     cfg.preempt_retries = 2;
     cfg.preempt_local = true;
     if faults.preempt_rate > 0.0 {
@@ -418,6 +443,163 @@ fn budget_is_never_overshot_under_preemption() {
         Some("result=5"),
         "an offload-free run still computes the right answer"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Cloud-resident data plane under faults (residency satellite)
+// ---------------------------------------------------------------------------
+
+/// Kind + step/text of an event, with node placements, simulated
+/// durations and spends erased: residency legitimately changes *where*
+/// work runs (data gravity) and *how long* round trips take, never
+/// *what* runs or in what order.
+fn event_shape(e: &Event) -> String {
+    match e {
+        Event::ActivityStarted { step, .. } => format!("started:{step}"),
+        Event::ActivityFinished { step, .. } => format!("finished:{step}"),
+        Event::Suspended { step } => format!("suspended:{step}"),
+        Event::OffloadRequested { step } => format!("requested:{step}"),
+        Event::OffloadFinished { step, .. } => format!("offloaded:{step}"),
+        Event::Resumed { step } => format!("resumed:{step}"),
+        Event::LocalExecution { step } => format!("local:{step}"),
+        Event::OffloadCharged { step, .. } => format!("charged:{step}"),
+        Event::OffloadPreempted { step, .. } => format!("preempted:{step}"),
+        Event::OffloadRetried { step, .. } => format!("retried:{step}"),
+        Event::OffloadRecoveredLocal { step } => format!("recovered:{step}"),
+        Event::Line { text } => format!("line:{text}"),
+    }
+}
+
+fn shapes(r: &RunReport) -> Vec<String> {
+    r.events.iter().map(event_shape).collect()
+}
+
+/// The tentpole A/B on the chaos chain: cloud-resident references and
+/// ship-every-hop produce byte-identical lines and the same event
+/// kind/step sequence — in every engine mode, fault-free and under
+/// seeded preemption. The 80 ms steps keep the cost gate open in both
+/// arms, so the comparison is exact, not decline-dependent. Zero
+/// leaked residents and a balanced resident ledger are asserted inside
+/// every run by [`assert_no_leaks`].
+#[test]
+fn residency_is_invisible_on_the_chaos_chain() {
+    let seed = env_seed();
+    let wf = xaml::parse(CHAIN).unwrap();
+
+    // Fault-free reference: s1..s3 stay cloud-side, s4 comes home.
+    let polite = chaos_with_resident(FaultConfig::none(), None, true, &wf, Mode::Sequential);
+    assert_eq!(polite.stats.residents_published, 3, "s1..s3 qualify for residency");
+    assert_eq!(polite.stats.residents_released, 3, "teardown releases the whole chain");
+    assert_eq!(polite.stats.residents_invalidated, 0, "no VM died, nothing demoted");
+
+    for rate in [0.0, 0.5, 1.0] {
+        let faults = FaultConfig { seed, preempt_rate: rate, max_preemptions: None };
+        for mode in MODES {
+            let res = chaos_with_resident(faults, None, true, &wf, mode);
+            let ship = chaos_with_resident(faults, None, false, &wf, mode);
+            assert_eq!(
+                res.report.lines, ship.report.lines,
+                "residency must not change lines ({mode:?}, rate {rate}, seed {seed})"
+            );
+            assert_eq!(
+                res.report.lines.last().map(String::as_str),
+                Some("result=5"),
+                "the chain must compute the right answer ({mode:?}, rate {rate})"
+            );
+            assert_eq!(
+                shapes(&res.report),
+                shapes(&ship.report),
+                "residency must not change the event sequence ({mode:?}, rate {rate}, seed {seed})"
+            );
+            assert_eq!(
+                ship.stats.residents_published, 0,
+                "resident = false must ship every intermediate home"
+            );
+        }
+    }
+}
+
+/// Satellite property: residency is semantically invisible on random
+/// workflows too. Generated workflows dump every variable at the end,
+/// so line equality implies final-store equality; event shapes are not
+/// compared here because the cost gate may legally flip a marginal
+/// offload between the arms (their observed round-trip costs differ —
+/// that is the whole point of residency).
+#[test]
+fn property_residency_preserves_results_across_modes() {
+    let base = env_seed();
+    forall(15, |g: &mut Gen| {
+        let wf = gen_workflow(g);
+        let seed = base ^ g.u64();
+        for rate in [0.0, 0.4] {
+            let faults = FaultConfig { seed, preempt_rate: rate, max_preemptions: None };
+            for mode in MODES {
+                let res = chaos_with_resident(faults, None, true, &wf, mode);
+                let ship = chaos_with_resident(faults, None, false, &wf, mode);
+                assert_eq!(
+                    res.report.lines, ship.report.lines,
+                    "residency must not change results ({mode:?}, rate {rate}, seed {seed})"
+                );
+                assert_eq!(ship.stats.residents_published, 0);
+            }
+        }
+    });
+}
+
+/// Preempting a resident's *home VM* mid-chain: the dying node's
+/// residents are demoted to the local tier (invalidated, one metered
+/// downlink each), and the retried offload re-materializes its input
+/// from the local copy — the recovery is result-invisible.
+///
+/// The fault stream is a pure function of (seed, step name, attempt),
+/// so the scenario is staged by *probing* a twin plan for step names
+/// with the right verdicts under the current seed: `calm` survives its
+/// first placement and parks `s1` cloud-side; `doomed` reads `s1`,
+/// gets pulled onto its home VM by data gravity, and is preempted
+/// there on its first placement — the VM dies with `s1` aboard.
+#[test]
+fn preempting_a_residents_home_vm_demotes_and_rematerializes() {
+    let seed = env_seed();
+    let faults = FaultConfig { seed, preempt_rate: 0.5, max_preemptions: None };
+    let probe = FaultPlan::new(faults).unwrap();
+    let calm = (0..64)
+        .map(|i| format!("calm-{i}"))
+        .find(|n| !probe.preempts(n))
+        .expect("some first placement survives within 64 candidates");
+    let doomed = (0..64)
+        .map(|i| format!("doomed-{i}"))
+        .find(|n| probe.preempts(n))
+        .expect("some first placement is preempted within 64 candidates");
+
+    let xml = format!(
+        r#"<Workflow Name="demote">
+  <Workflow.Variables><Variable Name="s1"/><Variable Name="s2"/></Workflow.Variables>
+  <Sequence>
+    <InvokeActivity DisplayName="{calm}" Activity="load.work" In.ms="80" In.x="1"
+                    Out.y="s1" Remotable="true"/>
+    <InvokeActivity DisplayName="{doomed}" Activity="load.work" In.ms="80" In.x="s1"
+                    Out.y="s2" Remotable="true"/>
+    <WriteLine Text="'result=' + str(s2)"/>
+  </Sequence>
+</Workflow>"#
+    );
+    let wf = xaml::parse(&xml).unwrap();
+    let run = chaos_with_resident(faults, None, true, &wf, Mode::Sequential);
+    assert_eq!(
+        run.report.lines,
+        vec!["result=3"],
+        "recovery from a dead home VM must be result-invisible"
+    );
+    assert_eq!(run.stats.residents_published, 1, "{calm} parks s1 cloud-side");
+    assert_eq!(
+        run.stats.residents_invalidated, 1,
+        "preempting the home VM must demote s1 ({doomed}, seed {seed})"
+    );
+    assert_eq!(
+        run.stats.residents_released, 0,
+        "s1 was already demoted, so teardown has nothing left to release"
+    );
+    assert!(run.stats.preempted >= 1, "the staged preemption must fire");
 }
 
 // ---------------------------------------------------------------------------

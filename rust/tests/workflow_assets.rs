@@ -79,8 +79,29 @@ fn conditional_offload_asset_offloads_in_loops_and_branches() {
 }
 
 #[test]
+fn fig_chain_asset_keeps_intermediates_cloud_resident() {
+    let wf = xaml::parse(&asset("fig_chain.xml")).unwrap();
+    let (part, rep) = partitioner::partition(&wf).unwrap();
+    assert_eq!(rep.migration_points, 3);
+    assert_eq!(rep.resident_vars, 2, "s1 and s2 qualify for residency; s3 comes home");
+
+    let reg = Arc::new(ActivityRegistry::new());
+    let services = Services::without_runtime(Platform::paper_testbed());
+    let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+    let report =
+        Engine::new(reg, services).with_offload(mgr.clone()).run(&part).unwrap();
+    // seed is 28 chars; three doublings make 224.
+    assert_eq!(report.lines, vec!["len=224"]);
+    assert_eq!(report.offload_count(), 3);
+    let stats = mgr.stats();
+    assert_eq!(stats.residents_published, 2, "s1 and s2 stay cloud-side");
+    assert_eq!(stats.residents_released, 2, "run teardown releases both");
+    assert_eq!(mgr.leaked_residents(), 0, "no resident survives the run");
+}
+
+#[test]
 fn all_assets_roundtrip_through_the_codec() {
-    for name in ["greeting.xml", "fig7_scopes.xml", "conditional_offload.xml"] {
+    for name in ["greeting.xml", "fig7_scopes.xml", "conditional_offload.xml", "fig_chain.xml"] {
         let wf = xaml::parse(&asset(name)).unwrap();
         let back = xaml::parse(&xaml::to_xml(&wf)).unwrap();
         assert_eq!(back, wf, "{name} does not round-trip");
