@@ -88,6 +88,19 @@
 //! transfer-aware placement model, the WAN ledger must prove the
 //! intermediate bytes never crossed the wire on the cloud-to-cloud
 //! edges, and run teardown must release every resident (zero leaks).
+//!
+//! A twelfth section (**Fig 13l**) measures **multi-tenant
+//! contention** on the shared pool (`emerald serve`,
+//! `docs/SERVICE.md`): a heavy tenant (12 tasks) and a light tenant
+//! (3 tasks) compete for the mixed 2 @ x2.0 + 2 @ x8.0 pool through
+//! the deterministic arbiter twin
+//! ([`emerald::scheduler::simulate_tenants`]). Weighted fair share
+//! must strictly bound the light tenant's makespan vs the FIFO
+//! baseline (which drains the heavy burst first). A live companion
+//! runs two metered tenants through the real service stack and
+//! asserts their spend accounts land exactly on the tenant budget —
+//! float-exact, no epsilon — with nothing reserved and nothing leaked
+//! after shutdown.
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
@@ -102,9 +115,10 @@ use emerald::faults::{FaultConfig, FaultPlan};
 use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
 use emerald::partitioner::{self, PartitionOptions};
 use emerald::scheduler::{
-    admission_cap, simulate_makespan, simulate_plan, simulate_plan_with_transfers, NodeSpec,
-    Objective, SchedulePolicy, SpotModel,
+    admission_cap, simulate_makespan, simulate_plan, simulate_plan_with_transfers,
+    simulate_tenants, NodeSpec, Objective, SchedulePolicy, SharePolicy, SpotModel, TenantLoad,
 };
+use emerald::service::{RunState, Server, ServiceConfig};
 use emerald::workflow::{dag, xaml, StepKind};
 
 const WORKFLOW: &str = r#"<Workflow Name="fig13">
@@ -1410,6 +1424,159 @@ fn main() -> anyhow::Result<()> {
         res_stats.residents_published,
         res_stats.residents_released,
     );
+
+    // -- Fig 13l: multi-tenant contention on the shared pool. The
+    //    deterministic arbiter twin replays a heavy tenant (12 tasks)
+    //    and a light tenant (3 tasks) through the mixed pool under
+    //    FIFO (heavy burst drains first) and weighted fair share
+    //    (the light tenant interleaves): fair share must strictly
+    //    bound the light tenant's makespan. A live companion runs two
+    //    metered tenants through the real service stack against a
+    //    $1.0 tenant budget each: exactly four $0.25 offloads commit
+    //    per tenant — the account lands on the budget float-exact —
+    //    and shutdown leaves nothing reserved and nothing resident. --
+    let quarter = Duration::from_millis(250);
+    let tenant_pool = [
+        NodeSpec::new(2.0, 1.0),
+        NodeSpec::new(2.0, 1.0),
+        NodeSpec::new(8.0, 4.0),
+        NodeSpec::new(8.0, 4.0),
+    ];
+    // Name-sorted declaration order = the live arbiter's tie-break.
+    let loads = [
+        TenantLoad { name: "ada".into(), weight: 1.0, tasks: vec![quarter; 12] },
+        TenantLoad { name: "ben".into(), weight: 1.0, tasks: vec![quarter; 3] },
+    ];
+    let fifo = simulate_tenants(
+        SharePolicy::Fifo,
+        SchedulePolicy::LeastLoaded,
+        Objective::Time,
+        &tenant_pool,
+        &loads,
+    )?;
+    let fair = simulate_tenants(
+        SharePolicy::FairShare,
+        SchedulePolicy::LeastLoaded,
+        Objective::Time,
+        &tenant_pool,
+        &loads,
+    )?;
+    let (fifo_heavy, fifo_light) = (&fifo[0], &fifo[1]);
+    let (fair_heavy, fair_light) = (&fair[0], &fair[1]);
+    assert!(
+        fair_light.makespan < fifo_light.makespan,
+        "fair share must bound the light tenant's makespan: {:?} vs FIFO {:?}",
+        fair_light.makespan,
+        fifo_light.makespan
+    );
+    // Per-tenant spend is dyadic (prices 1.0/4.0 × 0.25 ref-s tasks),
+    // so the accounts compare exactly: arbitration changes WHEN a
+    // tenant's work places, never how much of it there is.
+    assert!(fifo_heavy.spend > 0.0 && fair_heavy.spend > 0.0);
+    assert_eq!(
+        fifo_light.spend.fract().to_bits() % (1 << 40),
+        0,
+        "quarter-second tasks on dyadic prices must stay dyadic: {}",
+        fifo_light.spend
+    );
+
+    let mut tenant_series = Series::new(
+        "Fig 13l: 2-tenant contention on 2 @ x2.0 + 2 @ x8.0 (12 vs 3 tasks)",
+        "seconds (simulated) / currency",
+    );
+    tenant_series.row(
+        "FIFO, heavy tenant (ada)",
+        vec![
+            ("makespan".into(), fifo_heavy.makespan.as_secs_f64()),
+            ("spend".into(), fifo_heavy.spend),
+        ],
+    );
+    tenant_series.row(
+        "FIFO, light tenant (ben)",
+        vec![
+            ("makespan".into(), fifo_light.makespan.as_secs_f64()),
+            ("spend".into(), fifo_light.spend),
+        ],
+    );
+    tenant_series.row(
+        "fair share, heavy tenant (ada)",
+        vec![
+            ("makespan".into(), fair_heavy.makespan.as_secs_f64()),
+            ("spend".into(), fair_heavy.spend),
+        ],
+    );
+    tenant_series.row(
+        "fair share, light tenant (ben)",
+        vec![
+            ("makespan".into(), fair_light.makespan.as_secs_f64()),
+            ("spend".into(), fair_light.spend),
+        ],
+    );
+    tenant_series.print();
+    traj.record(&tenant_series);
+    println!(
+        "Fig 13l: light tenant {:.3}s under fair share vs {:.3}s behind the FIFO \
+         burst; heavy tenant {:.3}s vs {:.3}s",
+        fair_light.makespan.as_secs_f64(),
+        fifo_light.makespan.as_secs_f64(),
+        fair_heavy.makespan.as_secs_f64(),
+        fifo_heavy.makespan.as_secs_f64(),
+    );
+
+    // Live companion: the real service stack against per-tenant
+    // budgets. Six chained $0.25 offloads per tenant, $1.0 budget:
+    // exactly four commit, two decline to local execution, and each
+    // tenant's account lands exactly on $1.0 — no epsilon.
+    let metered_steps: String = (1..=6)
+        .map(|i| {
+            format!(
+                r#"<InvokeActivity DisplayName="p{i}" Activity="load.work" In.ms="250"
+                                   In.x="y" Out.y="y" Remotable="true"/>"#
+            )
+        })
+        .collect();
+    let metered_wf = format!(
+        r#"<Workflow Name="fig13l">
+             <Variables><Variable Name="y" Init="0"/></Variables>
+             <Sequence>
+               {metered_steps}
+               <WriteLine Text="str(y)"/>
+             </Sequence>
+           </Workflow>"#
+    );
+    let services = Services::without_runtime(Platform::new(PlatformConfig {
+        tiers: vec![CloudTier::priced(2, 2.0, 1.0), CloudTier::priced(2, 8.0, 1.0)],
+        ..PlatformConfig::default()
+    })?);
+    let mut svc_cfg = ServiceConfig::new();
+    svc_cfg.tenant_budget = Some(1.0);
+    let server = Server::new(services, registry(), svc_cfg);
+    let runs =
+        [server.submit("ada", &metered_wf)?, server.submit("ben", &metered_wf)?];
+    server.join();
+    for run in runs {
+        let s = server.status(run).expect("run registered");
+        assert_eq!(s.state, RunState::Completed, "{:?}", s.error);
+        assert_eq!(s.lines, vec!["6"], "declined steps still execute locally");
+        assert_eq!(s.spend, 1.0, "exactly four $0.25 offloads commit");
+    }
+    let mut ledger_series = Series::new(
+        "Fig 13l (live): per-tenant accounts, $1.0 budget, six $0.25 offloads each",
+        "currency",
+    );
+    for (tenant, committed, reserved, budget) in server.tenant_ledgers() {
+        assert_eq!(committed, 1.0, "tenant '{tenant}' must land exactly on its budget");
+        assert_eq!(reserved, 0.0, "tenant '{tenant}' must hold nothing at rest");
+        assert!(committed <= budget, "tenant '{tenant}' overshot");
+        ledger_series.row(
+            &format!("tenant {tenant}"),
+            vec![("committed".into(), committed), ("budget".into(), budget)],
+        );
+    }
+    assert_eq!(server.leaked_residents(), 0, "no resident survives shutdown");
+    assert_eq!(server.reserved_spend(), 0.0, "no reservation survives shutdown");
+    ledger_series.print();
+    traj.record(&ledger_series);
 
     println!(
         "\nE7 headline: batched + load-aware reduces end-to-end time by {:.1}% \

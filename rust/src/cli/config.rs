@@ -52,6 +52,13 @@
 //! signing_key = ""         # non-empty enables request signing
 //! codec = "raw"            # raw | deflate
 //!
+//! [service]                # multi-run service (docs/SERVICE.md)
+//! share = "fair"           # fair | fifo — cross-tenant admission
+//! # budget = 5.0           # per-tenant spend cap across all of a
+//! #                        # tenant's runs (absent = unlimited; the
+//! #                        # [migration] budget stays per-run)
+//! # weights = { ada = 2.0 }  # fair-share weights (default 1.0)
+//!
 //! [faults]                 # hostile-cloud model (docs/FAULTS.md)
 //! seed = 1337              # seeds the fault AND spot-price streams
 //! preempt_rate = 0.25      # P(placement attempt is preempted)
@@ -75,7 +82,7 @@ use crate::engine::DataflowDispatch;
 use crate::faults::{FaultConfig, FaultPlan};
 use crate::mdss::Codec;
 use crate::migration::{DataPolicy, Decision, ManagerConfig, SigningKey};
-use crate::scheduler::{Objective, SchedulePolicy, SpotModel};
+use crate::scheduler::{Objective, SchedulePolicy, SharePolicy, SpotModel};
 
 /// A parsed config file: section -> key -> raw value.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -631,6 +638,56 @@ impl ConfigFile {
         Ok(cfg)
     }
 
+    /// Build a [`crate::service::ServiceConfig`] from the `[service]`
+    /// section. The per-run manager template comes from `[migration]`
+    /// and the execution mode from `[engine]`, so one file configures
+    /// the whole multi-run service (see `docs/SERVICE.md`).
+    pub fn service(&self) -> Result<crate::service::ServiceConfig> {
+        let mut cfg = crate::service::ServiceConfig::new();
+        cfg.manager = self.migration()?;
+        let engine = self.engine()?;
+        cfg.dataflow = engine.dataflow;
+        cfg.ir = engine.ir;
+        cfg.share = match self.string("service", "share", "fair")?.as_str() {
+            "fair" => SharePolicy::FairShare,
+            "fifo" => SharePolicy::Fifo,
+            other => bail!("[service] share must be fair|fifo, got {other:?}"),
+        };
+        cfg.tenant_budget = match self.get("service", "budget") {
+            None => None,
+            Some(ConfigValue::Num(b)) if b.is_finite() && *b >= 0.0 => Some(*b),
+            Some(ConfigValue::Num(b)) => {
+                bail!("[service] budget must be a non-negative finite number, got {b}")
+            }
+            Some(v) => bail!("[service] budget must be a number, got {}", v.kind()),
+        };
+        cfg.weights = match self.get("service", "weights") {
+            None => Vec::new(),
+            Some(ConfigValue::Table(t)) => {
+                let mut out = Vec::new();
+                for (tenant, v) in t {
+                    match v {
+                        ConfigValue::Num(w) if w.is_finite() && *w > 0.0 => {
+                            out.push((tenant.clone(), *w))
+                        }
+                        ConfigValue::Num(w) => {
+                            bail!(
+                                "[service] weights.{tenant} must be positive and finite, got {w}"
+                            )
+                        }
+                        v => bail!(
+                            "[service] weights.{tenant} must be a number, got {}",
+                            v.kind()
+                        ),
+                    }
+                }
+                out
+            }
+            Some(v) => bail!("[service] weights must be an inline table, got {}", v.kind()),
+        };
+        Ok(cfg)
+    }
+
     /// MDSS wire codec from the `[migration]` section.
     pub fn codec(&self) -> Result<Codec> {
         match self.string("migration", "codec", "raw")?.as_str() {
@@ -660,6 +717,7 @@ impl ConfigFile {
             ],
         ),
         ("engine", &["dataflow", "dispatch", "ir", "workers"]),
+        ("service", &["share", "budget", "weights"]),
         (
             "migration",
             &[
@@ -1021,6 +1079,46 @@ mod tests {
         // Pathological nesting is a parse error, not a stack overflow.
         let deep = format!("[x]\na = {}1{}", "[".repeat(100_000), "]".repeat(100_000));
         assert!(ConfigFile::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn parses_service_section() {
+        // Defaults: fair share, no tenant budget, no weights, and the
+        // [migration]/[engine] sections feed the templates.
+        let cfg = ConfigFile::parse("").unwrap();
+        let s = cfg.service().unwrap();
+        assert_eq!(s.share, SharePolicy::FairShare);
+        assert_eq!(s.tenant_budget, None);
+        assert!(s.weights.is_empty());
+        assert!(!s.dataflow && !s.ir);
+        let cfg = ConfigFile::parse(
+            "[engine]\ndataflow = true\n\
+             [migration]\nbudget = 1.5\n\
+             [service]\nshare = \"fifo\"\nbudget = 5.0\nweights = { ada = 2.0, grace = 1.0 }",
+        )
+        .unwrap();
+        let s = cfg.service().unwrap();
+        assert_eq!(s.share, SharePolicy::Fifo);
+        assert_eq!(s.tenant_budget, Some(5.0));
+        assert_eq!(
+            s.weights,
+            vec![("ada".to_string(), 2.0), ("grace".to_string(), 1.0)]
+        );
+        assert!(s.dataflow);
+        assert_eq!(s.manager.budget, Some(1.5), "per-run budget rides in from [migration]");
+        assert!(cfg.check_keys().is_ok(), "[service] keys must be known");
+        // Rejections.
+        for bad in [
+            "[service]\nshare = \"priority\"",
+            "[service]\nbudget = -1.0",
+            "[service]\nbudget = \"lots\"",
+            "[service]\nweights = { ada = 0.0 }",
+            "[service]\nweights = { ada = \"high\" }",
+            "[service]\nweights = [1.0]",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(cfg.service().is_err(), "should reject {bad:?}");
+        }
     }
 
     #[test]

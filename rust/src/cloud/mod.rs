@@ -239,8 +239,16 @@ impl Platform {
             .enumerate()
             .map(|(index, speed)| Arc::new(Node::new(NodeKind::Cloud, index, speed)))
             .collect();
-        let cloud_sched =
-            NodeScheduler::priced_spot(config.schedule, config.cloud_specs(), config.spot);
+        // One scheduler shard per tier: leases preview the whole pool
+        // but commit under a tier-local lock, so concurrent runs
+        // placing onto different tiers never serialize on one mutex.
+        let tier_sizes: Vec<usize> = config.tiers.iter().map(|t| t.nodes).collect();
+        let cloud_sched = NodeScheduler::sharded(
+            config.schedule,
+            config.cloud_specs(),
+            config.spot,
+            &tier_sizes,
+        );
         Ok(Arc::new(Self {
             config,
             network,

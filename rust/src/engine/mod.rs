@@ -48,7 +48,7 @@ pub use activity::{Activity, ActivityCtx, ActivityRegistry, Services};
 pub use state::{FrameId, VarStore};
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -351,6 +351,79 @@ pub enum DataflowDispatch {
     Wavefront,
 }
 
+/// Identity of one workflow run inside a shared process: the run id,
+/// the tenant that submitted it, and the cooperative cancellation
+/// flag. Service mode ([`crate::service`]) threads one of these
+/// through the engine and the migration manager of every concurrent
+/// run, so per-run state (resident URIs, teardown sweeps, arbiter
+/// accounting) is namespaced by run and a run can be cancelled from
+/// outside. [`RunContext::solo`] — the default everywhere — is the
+/// historical single-run-per-process identity: empty tag, never
+/// cancelled, byte-identical behaviour to the pre-service runtime.
+#[derive(Debug, Clone)]
+pub struct RunContext {
+    id: u64,
+    tenant: String,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RunContext {
+    /// The single-run-per-process identity (id 0, no tenant, empty
+    /// tag). This is the default for every engine and manager, and it
+    /// keeps solo traces and wire bytes identical to the pre-service
+    /// runtime.
+    pub fn solo() -> Self {
+        Self { id: 0, tenant: String::new(), cancel: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// A service-mode run identity. `id` must be non-zero (0 is the
+    /// solo identity).
+    pub fn service(id: u64, tenant: impl Into<String>) -> Self {
+        assert!(id != 0, "run id 0 is reserved for the solo identity");
+        Self { id, tenant: tenant.into(), cancel: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Run id (0 for the solo identity).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Tenant that submitted the run (empty for the solo identity).
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Namespace tag for run-scoped resources (resident URIs, MDSS
+    /// sweeps): empty for the solo identity — legacy names stay
+    /// byte-identical — and `r<id>` for service runs.
+    pub fn tag(&self) -> String {
+        if self.id == 0 {
+            String::new()
+        } else {
+            format!("r{}", self.id)
+        }
+    }
+
+    /// Request cooperative cancellation: the engine refuses to start
+    /// further steps and the manager aborts in-flight offloads at
+    /// their next checkpoint (lease released, reservation settled at
+    /// zero, residents swept by the run teardown).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Has this run been cancelled?
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for RunContext {
+    fn default() -> Self {
+        Self::solo()
+    }
+}
+
 /// The workflow execution engine.
 pub struct Engine {
     registry: Arc<ActivityRegistry>,
@@ -385,6 +458,11 @@ pub struct Engine {
     /// offload handler is attached; empty otherwise). Offload sites
     /// read it to tell the handler which writes may stay cloud-side.
     residents: Mutex<std::collections::BTreeSet<String>>,
+    /// This engine's run identity ([`RunContext::solo`] by default):
+    /// service mode gives each concurrent run its own context, whose
+    /// cancellation flag the tree walk checks before starting every
+    /// step.
+    run: RunContext,
     verbose: bool,
 }
 
@@ -463,8 +541,24 @@ impl Engine {
             workers: None,
             validator: None,
             residents: Mutex::new(std::collections::BTreeSet::new()),
+            run: RunContext::solo(),
             verbose: false,
         }
+    }
+
+    /// Execute under a run identity (service mode): namespaces the
+    /// run's cloud-side resources and makes the tree walk honor the
+    /// context's cancellation flag. The default is
+    /// [`RunContext::solo`], which behaves exactly like the
+    /// pre-service runtime.
+    pub fn in_run(mut self, run: RunContext) -> Self {
+        self.run = run;
+        self
+    }
+
+    /// This engine's run identity.
+    pub fn run_context(&self) -> &RunContext {
+        &self.run
     }
 
     /// Attach a migration manager.
@@ -768,6 +862,14 @@ impl Engine {
     }
 
     fn exec(&self, step: &Step, ctx: &Ctx) -> Result<Duration> {
+        // Cooperative cancellation checkpoint: a cancelled run starts
+        // no further steps. Steps already executing finish (or hit
+        // the manager's own mid-offload checkpoint); the error
+        // propagates out through `run`, whose teardown still sweeps
+        // the run's cloud residents.
+        if self.run.cancelled() {
+            bail!("run cancelled (run {}, step '{}')", self.run.id(), step.display_name);
+        }
         // Open this step's scope if it declares variables.
         let frame = if step.variables.is_empty() {
             ctx.frame

@@ -62,7 +62,13 @@
 //! (`[faults]` / `--fault-seed`); together with per-tier provisioning
 //! delay and spot-style price dynamics in [`scheduler`]/[`cloud`], it
 //! drives the retry-elsewhere recovery path in [`migration`] (see
-//! `docs/FAULTS.md`).
+//! `docs/FAULTS.md`). [`service`] — the multi-run workflow service
+//! (`emerald serve --selftest`, see `docs/SERVICE.md`): N concurrent
+//! runs share one process, one MDSS and one **sharded** scheduler,
+//! each under its own [`engine::RunContext`] (per-run stores, traces,
+//! spend ledgers, resident namespaces, cooperative cancellation),
+//! with per-tenant budgets and weighted fair-share arbitration
+//! ([`scheduler::TenantArbiter`]) across the shared pool.
 //!
 //! Substrates (offline environment, see DESIGN.md §1): [`jsonmini`],
 //! [`xmlmini`], [`expr`], [`cli`], [`quickprop`], [`benchkit`],
@@ -118,6 +124,7 @@ pub mod partitioner;
 pub mod quickprop;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod workflow;
 pub mod xmlmini;
 

@@ -15,8 +15,17 @@
 //!   into single offload round trips).
 //! * `at --mesh <m> [--iters N] [--offload] [--batch]` — run the
 //!   built-in Adjoint Tomography application (paper §4).
-//! * `serve` — start a cloud-side worker on loopback TCP and print its
-//!   address (for `run --tcp`).
+//! * `serve [--platform <file>]` — start the multi-run workflow
+//!   service on loopback TCP and print its address: one shared
+//!   platform and sharded scheduler hosting N concurrent runs, with
+//!   per-tenant fair-share arbitration and budgets from the
+//!   `[service]` config section. The port answers run-lifecycle
+//!   messages (submit/status/cancel, signed) *and* plain offload
+//!   requests (for `run --tcp`). With `--selftest`, instead drive the
+//!   service stack once (four concurrent runs, two tenants, one
+//!   cancelled mid-offload over the signed wire) and assert its leak
+//!   invariants — the CI serve-mode smoke test (see
+//!   `docs/SERVICE.md`).
 //! * `info` — show artifact manifest + platform configuration.
 
 use std::sync::Arc;
@@ -27,9 +36,7 @@ use emerald::analysis::{self, Severity};
 use emerald::cli::Args;
 use emerald::cloud::Platform;
 use emerald::engine::{ActivityRegistry, Engine, Services};
-use emerald::migration::{
-    serve_tcp, CloudWorker, DataPolicy, MigrationManager, TcpTransport,
-};
+use emerald::migration::{serve_tcp, DataPolicy, MigrationManager, TcpTransport};
 use emerald::partitioner::{self, PartitionOptions};
 use emerald::runtime::Runtime;
 use emerald::workflow::{validate, xaml};
@@ -44,7 +51,7 @@ USAGE:
   emerald partition <workflow.xml> [--out <file>] [--batch] [--dataflow] [--ir]
   emerald run <workflow.xml> [--offload] [--batch] [--dataflow] [--ir] [--workers N] [--policy mdss|bundle] [--fault-seed N] [--tcp <addr>]
   emerald at [--mesh demo|small|large] [--iters N] [--offload] [--batch] [--dataflow] [--ir] [--alpha0 X]
-  emerald serve
+  emerald serve [--platform <file>] [--selftest]
   emerald info
 ";
 
@@ -296,12 +303,28 @@ fn cmd_at(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(_args: &Args) -> Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
+    // `--selftest`: exercise the multi-run service end to end (shared
+    // platform + sharded scheduler, concurrent tenants, signed
+    // lifecycle wire, mid-offload cancellation) and fail on any leak.
+    if args.flag("selftest") {
+        let report = emerald::service::selftest()?;
+        print!("{report}");
+        println!("serve selftest OK");
+        return Ok(());
+    }
+    // The multi-run service: one shared platform/scheduler/worker, N
+    // concurrent hosted runs, tenant arbitration and budgets from the
+    // `[service]` config section. The TCP endpoint serves both wire
+    // protocols — run-lifecycle messages (submit/status/cancel) and
+    // plain offload requests (for `run --tcp` clients) — on one port.
+    let cfg = config_of(args)?;
+    let service_cfg = cfg.service()?;
     let runtime = Arc::new(Runtime::new(artifact_dir())?);
-    let services = Services::with_runtime(runtime, Platform::paper_testbed());
-    let worker = CloudWorker::new(services, registry_with_at());
-    let addr = serve_tcp(worker)?;
-    println!("cloud worker listening on {addr} (ctrl-c to stop)");
+    let services = services_of(&cfg, Some(runtime))?;
+    let server = emerald::service::Server::new(services, registry_with_at(), service_cfg);
+    let addr = serve_tcp(emerald::service::WireEndpoint::new(server))?;
+    println!("emerald service listening on {addr} (ctrl-c to stop)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -352,7 +375,7 @@ fn cmd_info(_args: &Args) -> Result<()> {
 }
 
 fn main() {
-    let args = Args::from_env(&["offload", "verbose", "batch", "dataflow", "ir"]);
+    let args = Args::from_env(&["offload", "verbose", "batch", "dataflow", "ir", "selftest"]);
     let result = match args.subcommand() {
         Some("validate") => cmd_validate(&args),
         Some("check") => cmd_check(&args),

@@ -292,6 +292,47 @@ impl Mdss {
         released
     }
 
+    /// Drop every `resident`-namespace URI belonging to one run from
+    /// **both** tiers and return how many items were released. Run
+    /// teardown in a shared process must sweep only its own residents:
+    /// service-mode runs publish under
+    /// `mdss://resident/<run>-n<node>-<seq>/<var>`, so the sweep
+    /// matches on the `<run>-n` path prefix. An empty `run` tag is the
+    /// solo identity and sweeps the whole `resident` namespace —
+    /// exactly the historical [`Self::sweep_namespace`] behaviour.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use std::time::Duration;
+    /// use emerald::cloud::{NodeKind, SimNetwork};
+    /// use emerald::mdss::{Mdss, Uri};
+    ///
+    /// let m = Mdss::new(Arc::new(SimNetwork::new(1e6, Duration::from_millis(1))));
+    /// let a = Uri::parse("mdss://resident/r1-n0-0/x")?;
+    /// let b = Uri::parse("mdss://resident/r2-n0-0/x")?;
+    /// m.put(NodeKind::Cloud, &a, vec![1]);
+    /// m.put(NodeKind::Cloud, &b, vec![2]);
+    /// assert_eq!(m.sweep_resident_run("r1"), 1); // run 2's item survives
+    /// assert_eq!(m.count(NodeKind::Cloud), 1);
+    /// assert_eq!(m.sweep_resident_run(""), 1);   // solo sweep takes the rest
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn sweep_resident_run(&self, run: &str) -> usize {
+        if run.is_empty() {
+            return self.sweep_namespace("resident");
+        }
+        let prefix = format!("mdss://resident/{run}-n");
+        let mut released = 0;
+        for store in [&self.local, &self.cloud] {
+            for uri in store.uris() {
+                if uri.as_str().starts_with(&prefix) && store.remove(&uri) {
+                    released += 1;
+                }
+            }
+        }
+        released
+    }
+
     /// Cumulative sync statistics.
     pub fn stats(&self) -> SyncStats {
         *self.stats.lock().unwrap()

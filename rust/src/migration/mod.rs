@@ -108,11 +108,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::cloud::{Node, NodeKind};
 use crate::engine::{
-    ActivityRegistry, Engine, Event, OffloadHandler, OffloadOutcome, OffloadVerdict, Services,
+    ActivityRegistry, Engine, Event, OffloadHandler, OffloadOutcome, OffloadVerdict, RunContext,
+    Services,
 };
 use crate::expr::Value;
 use crate::mdss::{CloudState, Uri};
-use crate::scheduler::Objective;
+use crate::scheduler::{Objective, TenantArbiter};
 use crate::workflow::Step;
 
 /// Data-placement policy (E4 ablation).
@@ -229,6 +230,30 @@ pub struct ManagerConfig {
     /// bypass (every payload goes through the codec, the historical
     /// behaviour). Applied to the shared MDSS at manager construction.
     pub compress_min: u64,
+    /// Identity of the run this manager serves (service mode, see
+    /// [`crate::service`]). The default — [`RunContext::solo`] — is
+    /// the historical single-run-per-process identity: empty run tag
+    /// (resident URIs and wire bytes unchanged), never cancelled. A
+    /// service run's context namespaces the worker's resident URIs,
+    /// scopes [`OffloadHandler::run_teardown`]'s sweep to this run,
+    /// and adds two cooperative-cancellation checkpoints to the
+    /// offload path (before leasing and after the response lands).
+    pub run: RunContext,
+    /// Per-tenant budget shared by every run the tenant has in flight
+    /// (`[service] budget`, see [`crate::service`]). Enforced with the
+    /// same committed+reserved reservation machinery as the per-run
+    /// [`Self::budget`]: both gates must admit, each holds its own
+    /// reservation for the round trip, and steals/evacuations are
+    /// capped by the tighter of the two remaining budgets. `None` (the
+    /// default) = no tenant cap.
+    pub tenant_budget: Option<Arc<TenantBudget>>,
+    /// Cross-tenant admission arbiter shared by every manager in the
+    /// service process ([`crate::scheduler::TenantArbiter`]). When
+    /// set, each offload checks in with its tenant's virtual-time
+    /// account before taking a scheduler lease, so a heavy tenant
+    /// cannot starve a light one of placement slots. `None` (the
+    /// default) = uncontended FIFO, the solo behaviour.
+    pub arbiter: Option<Arc<TenantArbiter>>,
 }
 
 impl ManagerConfig {
@@ -252,6 +277,9 @@ impl ManagerConfig {
             preempt_local: true,
             resident: true,
             compress_min: 4096,
+            run: RunContext::solo(),
+            tenant_budget: None,
+            arbiter: None,
         }
     }
 }
@@ -481,6 +509,44 @@ impl Drop for SpendReservation<'_> {
             let mut led = ledger.lock().unwrap();
             led.reserved = (led.reserved - self.amount).max(0.0);
         }
+    }
+}
+
+/// Per-**tenant** spend account (service mode): one budget and one
+/// committed+reserved ledger shared — via `Arc` in
+/// [`ManagerConfig::tenant_budget`] — by every manager the tenant's
+/// concurrent runs own. The offload path holds a [`SpendReservation`]
+/// against this ledger alongside the per-run one, so concurrent runs
+/// of one tenant cannot collectively overshoot the tenant's budget any
+/// more than concurrent offloads of one run can overshoot the run's.
+#[derive(Debug)]
+pub struct TenantBudget {
+    budget: f64,
+    ledger: Mutex<SpendLedger>,
+}
+
+impl TenantBudget {
+    /// New account with the given budget ($). Must be non-negative
+    /// and finite.
+    pub fn new(budget: f64) -> Arc<Self> {
+        assert!(
+            budget.is_finite() && budget >= 0.0,
+            "tenant budget must be non-negative and finite"
+        );
+        Arc::new(Self { budget, ledger: Mutex::new(SpendLedger::default()) })
+    }
+
+    /// The configured budget ($).
+    pub fn budget(&self) -> f64 {
+        self.budget
+    }
+
+    /// Snapshot of the account as `(committed, reserved)` — same
+    /// invariants as [`MigrationManager::ledger`], summed across every
+    /// run charging this tenant.
+    pub fn ledger(&self) -> (f64, f64) {
+        let led = self.ledger.lock().unwrap();
+        (led.committed, led.reserved)
     }
 }
 
@@ -853,7 +919,9 @@ impl MigrationManager {
         step: &Step,
     ) -> (Option<Duration>, Option<(Duration, Duration)>, FirstSightPass<'_>) {
         let (work, cost) = self.estimates(step);
-        if self.config.budget.is_none() || work.is_some() {
+        let budgeted =
+            self.config.budget.is_some() || self.config.tenant_budget.is_some();
+        if !budgeted || work.is_some() {
             return (work, cost, FirstSightPass::none());
         }
         {
@@ -926,13 +994,18 @@ impl OffloadHandler for MigrationManager {
         result
     }
 
-    /// End-of-run residency sweep: drop every `resident`-namespace
-    /// item from both MDSS tiers (including stray local copies cached
-    /// by fetch-on-miss) and drain the registry. Runs on success *and*
-    /// failure paths, so no published intermediate outlives its run —
-    /// [`Self::leaked_residents`] is zero afterwards, always.
+    /// End-of-run residency sweep: drop every resident item this run
+    /// published from both MDSS tiers (including stray local copies
+    /// cached by fetch-on-miss) and drain the registry. Runs on
+    /// success *and* failure paths — cancellation included — so no
+    /// published intermediate outlives its run:
+    /// [`Self::leaked_residents`] is zero afterwards, always. The solo
+    /// identity's empty tag sweeps the whole `resident` namespace (the
+    /// historical behaviour); a service run sweeps only its own
+    /// `resident/r<id>-…` names, leaving concurrent runs' residents
+    /// untouched.
     fn run_teardown(&self) -> Result<()> {
-        self.services.mdss.sweep_namespace("resident");
+        self.services.mdss.sweep_resident_run(&self.config.run.tag());
         let drained = {
             let mut registry = self.residents.lock().unwrap();
             let n = registry.len() as u64;
@@ -955,6 +1028,17 @@ impl MigrationManager {
         resident: &[String],
         delta: &mut MigrationStats,
     ) -> Result<OffloadVerdict> {
+        // Cancellation checkpoint (service mode): a cancelled run
+        // takes no new leases and reserves no new spend. Nothing is
+        // held yet, so there is nothing to release.
+        if self.config.run.cancelled() {
+            bail!(
+                "run {} cancelled before offloading '{}'",
+                self.config.run.id(),
+                step.display_name
+            );
+        }
+
         // Staleness clock: one tick per offload attempt, so cost
         // records that stop being refreshed age out under
         // `decay_after` even when every attempt is declined.
@@ -990,6 +1074,22 @@ impl MigrationManager {
         //     ledger at/past the budget. Skipped without a budget.
         let (work_est, cost_est, _first_sight) = self.first_sighting_pass(step);
 
+        // 0c-arb. Cross-tenant arbitration (service mode): check in
+        //     with the shared arbiter before taking any lease. Under
+        //     fair share, an offload from the tenant with the lowest
+        //     weighted virtual time proceeds immediately; others block
+        //     until their account is cheapest — so a heavy tenant
+        //     drains the pool no faster than its weight allows. The
+        //     charge is the reference-work estimate (zero for first
+        //     sightings: unknown work rides free once, then its
+        //     observed cost is charged from the next offload on).
+        if let Some(arb) = &self.config.arbiter {
+            arb.admit(
+                self.config.run.tenant(),
+                work_est.unwrap_or(Duration::ZERO),
+            );
+        }
+
         // 0c/0d. Budget and admission gates share ONE scheduler
         //     critical section: when either gate is on, the manager
         //     previews *and takes* the lease atomically
@@ -1012,7 +1112,11 @@ impl MigrationManager {
         let data_gravity = penalties.iter().any(|p| *p > 0.0);
 
         let mut reservation = SpendReservation::none();
-        let early_lease = if self.config.budget.is_some() || self.config.admission {
+        let mut tenant_res = SpendReservation::none();
+        let gated = self.config.budget.is_some()
+            || self.config.admission
+            || self.config.tenant_budget.is_some();
+        let early_lease = if gated {
             let (preview, lease) = self
                 .services
                 .platform
@@ -1065,6 +1169,44 @@ impl MigrationManager {
                 ledger.reserved += projected;
                 drop(ledger);
                 reservation = SpendReservation::held(&self.ledger, projected);
+            }
+
+            // 0c-ten. Tenant budget gate (service mode): the same
+            //     committed+reserved discipline as the run gate above,
+            //     against the account every run of this tenant shares.
+            //     Both gates must admit; a tenant decline releases the
+            //     probe lease and lets the run reservation (if held)
+            //     unwind by RAII.
+            if let Some(tb) = &self.config.tenant_budget {
+                let projected = work_est.map_or(0.0, |w| preview.price * w.as_secs_f64());
+                let mut tled = tb.ledger.lock().unwrap();
+                let (committed, reserved) = (tled.committed, tled.reserved);
+                if committed >= tb.budget
+                    || committed + reserved + projected > tb.budget
+                {
+                    drop(tled);
+                    lease.cancel();
+                    delta.declined += 1;
+                    delta.budget_declined += 1;
+                    let inflight = if reserved > 0.0 {
+                        format!(" (+{reserved:.3} in flight)")
+                    } else {
+                        String::new()
+                    };
+                    return Ok(OffloadVerdict::Declined {
+                        reason: format!(
+                            "tenant budget: '{}' spent {committed:.3}{inflight} of \
+                             {:.3}, projected +{projected:.3} for '{}' — executing \
+                             locally",
+                            self.config.run.tenant(),
+                            tb.budget,
+                            step.display_name
+                        ),
+                    });
+                }
+                tled.reserved += projected;
+                drop(tled);
+                tenant_res = SpendReservation::held(&tb.ledger, projected);
             }
 
             // 0d. Admission control: if the projected queueing behind
@@ -1149,36 +1291,44 @@ impl MigrationManager {
         //     inputs would silently re-add the transfer the placement
         //     just avoided.
         if self.config.steal && !data_gravity {
-            match self.config.budget {
-                Some(b) => {
-                    // ONE ledger critical section covers the cap read,
-                    // the steal and the re-projection — a concurrent
-                    // sibling's admission or steal cannot interleave
-                    // between them, so the collective reservation can
-                    // never exceed the budget. (Lock order is always
-                    // ledger → slots, never the reverse; `try_steal`
-                    // touches only the scheduler's slots lock.)
-                    let mut ledger = self.ledger.lock().unwrap();
-                    // Remaining budget net of committed spend and the
-                    // *other* in-flight reservations (the steal
-                    // replaces this offload's own projection, so it
-                    // doesn't count against itself).
-                    let cap = (b - ledger.committed - (ledger.reserved - reservation.amount))
-                        .max(0.0);
-                    if lease.try_steal(Some(cap)).is_some() {
-                        delta.stolen += 1;
-                        // The re-pin changed the projected spend: keep
-                        // the reservation in step so concurrent
-                        // admissions see the dearer placement.
-                        let projected =
-                            work_est.map_or(0.0, |w| lease.price * w.as_secs_f64());
-                        reservation.adjust_locked(&mut ledger, projected);
-                    }
+            // ONE critical section per ledger covers the cap read, the
+            // steal and the re-projection — a concurrent sibling's
+            // admission or steal cannot interleave between them, so
+            // the collective reservation can never exceed either
+            // budget. (Lock order is always run ledger → tenant ledger
+            // → slots, never the reverse; `try_steal` touches only the
+            // scheduler's slots lock. Budget-less runs lock nothing.)
+            let mut run_led =
+                self.config.budget.is_some().then(|| self.ledger.lock().unwrap());
+            let mut ten_led = self
+                .config
+                .tenant_budget
+                .as_ref()
+                .map(|tb| (tb, tb.ledger.lock().unwrap()));
+            // Remaining budget net of committed spend and the *other*
+            // in-flight reservations (the steal replaces this
+            // offload's own projection, so it doesn't count against
+            // itself) — the tighter of the run and tenant caps.
+            let mut cap: Option<f64> = None;
+            if let (Some(b), Some(led)) = (self.config.budget, &run_led) {
+                cap = Some((b - led.committed - (led.reserved - reservation.amount)).max(0.0));
+            }
+            if let Some((tb, led)) = &ten_led {
+                let t = (tb.budget - led.committed - (led.reserved - tenant_res.amount))
+                    .max(0.0);
+                cap = Some(cap.map_or(t, |c| c.min(t)));
+            }
+            if lease.try_steal(cap).is_some() {
+                delta.stolen += 1;
+                // The re-pin changed the projected spend: keep the
+                // reservations in step so concurrent admissions see
+                // the dearer placement.
+                let projected = work_est.map_or(0.0, |w| lease.price * w.as_secs_f64());
+                if let Some(led) = &mut run_led {
+                    reservation.adjust_locked(led, projected);
                 }
-                None => {
-                    if lease.try_steal(None).is_some() {
-                        delta.stolen += 1;
-                    }
+                if let Some((_, led)) = &mut ten_led {
+                    tenant_res.adjust_locked(led, projected);
                 }
             }
         }
@@ -1205,6 +1355,11 @@ impl MigrationManager {
             req.resident =
                 resident.iter().filter(|r| writes.contains(*r)).cloned().collect();
         }
+        // Run namespace tag: the worker publishes this request's
+        // residents under `mdss://resident/<tag>-n<node>-<seq>/…`, so
+        // concurrent runs sharing the cloud MDSS cannot collide. The
+        // solo identity's empty tag stays off the wire entirely.
+        req.run = self.config.run.tag();
         let mut recovery: Vec<Event> = Vec::new();
         let mut relocations = 0usize;
         let mut uplink_bytes = 0u64;
@@ -1247,27 +1402,43 @@ impl MigrationManager {
             sim += self.demote_residents(lease.node, delta)?;
 
             let relocated = if relocations < self.config.preempt_retries {
-                match self.config.budget {
-                    Some(b) => {
-                        // Same single-critical-section discipline as
-                        // the steal pass above: cap read, evacuation
-                        // and re-projection are atomic against
-                        // concurrent admissions and steals.
-                        let mut ledger = self.ledger.lock().unwrap();
-                        let cap = (b - ledger.committed
-                            - (ledger.reserved - reservation.amount))
-                            .max(0.0);
-                        match lease.evacuate(Some(cap)) {
-                            Some(_) => {
-                                let projected =
-                                    work_est.map_or(0.0, |w| lease.price * w.as_secs_f64());
-                                reservation.adjust_locked(&mut ledger, projected);
-                                true
-                            }
-                            None => false,
+                // Same single-critical-section discipline as the steal
+                // pass above: cap reads, evacuation and re-projection
+                // are atomic against concurrent admissions and steals,
+                // under the same run ledger → tenant ledger → slots
+                // lock order.
+                let mut run_led =
+                    self.config.budget.is_some().then(|| self.ledger.lock().unwrap());
+                let mut ten_led = self
+                    .config
+                    .tenant_budget
+                    .as_ref()
+                    .map(|tb| (tb, tb.ledger.lock().unwrap()));
+                let mut cap: Option<f64> = None;
+                if let (Some(b), Some(led)) = (self.config.budget, &run_led) {
+                    cap = Some(
+                        (b - led.committed - (led.reserved - reservation.amount)).max(0.0),
+                    );
+                }
+                if let Some((tb, led)) = &ten_led {
+                    let t = (tb.budget - led.committed
+                        - (led.reserved - tenant_res.amount))
+                        .max(0.0);
+                    cap = Some(cap.map_or(t, |c| c.min(t)));
+                }
+                match lease.evacuate(cap) {
+                    Some(_) => {
+                        let projected =
+                            work_est.map_or(0.0, |w| lease.price * w.as_secs_f64());
+                        if let Some(led) = &mut run_led {
+                            reservation.adjust_locked(led, projected);
                         }
+                        if let Some((_, led)) = &mut ten_led {
+                            tenant_res.adjust_locked(led, projected);
+                        }
+                        true
                     }
-                    None => lease.evacuate(None).is_some(),
+                    None => false,
                 }
             } else {
                 false
@@ -1343,6 +1514,20 @@ impl MigrationManager {
             return Err(err.context("offload transport failed"));
         };
         let resp = OffloadResponse::decode(&resp_bytes)?;
+        // Cancellation checkpoint (service mode): abort before
+        // re-integrating a response for a run that was cancelled while
+        // the request was in flight. Unwinding releases everything
+        // held: the lease drops (slot freed), both spend reservations
+        // drop (settled at zero — nothing committed for work the run
+        // will never integrate), and any residents the worker already
+        // published are swept by the run teardown.
+        if self.config.run.cancelled() {
+            bail!(
+                "run {} cancelled during the offload of '{}'",
+                self.config.run.id(),
+                step.display_name
+            );
+        }
         if let Some(err) = resp.error {
             bail!("remote execution failed: {err}");
         }
@@ -1418,6 +1603,9 @@ impl MigrationManager {
         // the ledger's committed total in line with the stats ledger
         // (the reservation alone is released, by its Drop).
         reservation.settle(&self.ledger, spend);
+        if let Some(tb) = &self.config.tenant_budget {
+            tenant_res.settle(&tb.ledger, spend);
+        }
 
         delta.offloads = 1;
         // Uplink bytes count every shipped placement attempt — a
@@ -1445,13 +1633,19 @@ impl MigrationManager {
 }
 
 /// Home VM of a resident URI — `mdss://resident/n<idx>-<seq>/<var>`
-/// names the node whose local segment published it in its second path
-/// segment. `None` for URIs not in that shape (foreign namespaces,
-/// legacy data URIs).
+/// (solo) or `mdss://resident/r<run>-n<idx>-<seq>/<var>` (service
+/// mode) names the node whose local segment published it in its
+/// second path segment. Unambiguous because run tags start with `r`
+/// and never contain `-n`. `None` for URIs not in either shape
+/// (foreign namespaces, legacy data URIs).
 fn resident_home(uri: &Uri) -> Option<usize> {
     let mut segs = uri.as_str().strip_prefix("mdss://")?.split('/');
     let _ns = segs.next()?;
-    let tag = segs.next()?.strip_prefix('n')?;
+    let seg = segs.next()?;
+    let tag = match seg.strip_prefix('n') {
+        Some(t) => t,
+        None => seg.split_once("-n")?.1,
+    };
     let (idx, _) = tag.split_once('-')?;
     idx.parse().ok()
 }
@@ -1580,7 +1774,18 @@ impl CloudWorker {
                         let bytes = payload.len() as u64;
                         let seq =
                             self.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        let raw = format!("mdss://resident/n{home}-{seq}/{var}");
+                        // The request's run tag namespaces the URI:
+                        // concurrent runs each construct their own
+                        // worker-side sequence counter, so without the
+                        // tag two runs would mint identical names over
+                        // the shared cloud MDSS and silently read each
+                        // other's intermediates. Solo requests (empty
+                        // tag) keep the legacy shape byte for byte.
+                        let raw = if req.run.is_empty() {
+                            format!("mdss://resident/n{home}-{seq}/{var}")
+                        } else {
+                            format!("mdss://resident/{}-n{home}-{seq}/{var}", req.run)
+                        };
                         let uri = match Uri::parse(&raw) {
                             Ok(u) => u,
                             Err(e) => {
@@ -2022,6 +2227,161 @@ mod tests {
             .any(|e| matches!(e, crate::engine::Event::LocalExecution { .. })));
         assert_eq!(mgr.stats().declined, 1);
         assert_eq!(mgr.stats().offloads, 0);
+    }
+
+    #[test]
+    fn resident_home_parses_solo_and_run_scoped_uris() {
+        let h = |s: &str| resident_home(&Uri::parse(s).unwrap());
+        assert_eq!(h("mdss://resident/n3-7/x"), Some(3));
+        assert_eq!(h("mdss://resident/r12-n5-0/y"), Some(5));
+        assert_eq!(h("mdss://data/foo"), None);
+        assert_eq!(h("mdss://t/new"), None);
+    }
+
+    #[test]
+    fn concurrent_runs_never_collide_on_resident_uris() {
+        // Regression: each run's cloud worker mints resident URIs from
+        // its own sequence counter starting at zero, so two runs over
+        // one shared cloud MDSS used to publish identical
+        // `mdss://resident/n<node>-0/<var>` names and silently read
+        // each other's intermediates. The run tag namespaces them.
+        use crate::workflow::StepKind;
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let reg = registry();
+        let mk = |id: u64, tenant: &str| {
+            let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+            cfg.run = RunContext::service(id, tenant);
+            let worker = CloudWorker::new(services.clone(), reg.clone());
+            MigrationManager::with_config(
+                services.clone(),
+                Box::new(InProcTransport::new(worker)),
+                cfg,
+            )
+        };
+        let m1 = mk(1, "a");
+        let m2 = mk(2, "b");
+        let step = Step::new(
+            "sq",
+            StepKind::InvokeActivity {
+                activity: "math.square".into(),
+                inputs: vec![("x".into(), "x".into())],
+                outputs: vec![("y".into(), "y".into())],
+            },
+        )
+        .remotable();
+        let offload = |m: &MigrationManager, x: f64| {
+            let verdict = m
+                .offload_with(
+                    &step,
+                    [("x".to_string(), Value::Num(x))].into(),
+                    &["y".to_string()],
+                    &["y".to_string()],
+                )
+                .unwrap();
+            match verdict {
+                OffloadVerdict::Executed(o) => match o.outputs.get("y") {
+                    Some(Value::Uri(u)) => u.clone(),
+                    other => panic!("expected a resident reference, got {other:?}"),
+                },
+                other => panic!("expected an executed offload, got {other:?}"),
+            }
+        };
+        let u1 = offload(&m1, 2.0);
+        let u2 = offload(&m2, 3.0);
+        assert_ne!(u1, u2, "concurrent runs minted the same resident URI");
+        assert!(u1.starts_with("mdss://resident/r1-n"), "{u1}");
+        assert!(u2.starts_with("mdss://resident/r2-n"), "{u2}");
+        // Both payloads coexist on the shared cloud MDSS.
+        let p1 = Uri::parse(&u1).unwrap();
+        let p2 = Uri::parse(&u2).unwrap();
+        assert!(services.mdss.peek(NodeKind::Cloud, &p1).is_some());
+        assert!(services.mdss.peek(NodeKind::Cloud, &p2).is_some());
+        // Teardown is run-scoped: run 1's sweep must not touch run 2.
+        m1.run_teardown().unwrap();
+        assert_eq!(m1.leaked_residents(), 0);
+        assert!(services.mdss.peek(NodeKind::Cloud, &p1).is_none());
+        assert!(
+            services.mdss.peek(NodeKind::Cloud, &p2).is_some(),
+            "run 1's teardown swept run 2's resident"
+        );
+        m2.run_teardown().unwrap();
+        assert_eq!(m2.leaked_residents(), 0);
+        assert!(services.mdss.peek(NodeKind::Cloud, &p2).is_none());
+    }
+
+    #[test]
+    fn cancellation_mid_offload_releases_lease_reservation_and_residents() {
+        // The run is cancelled while its request executes remotely
+        // (the activity flips the flag, so the cancellation lands
+        // exactly between uplink and re-integration). The offload must
+        // fail without committing anything: lease released, both
+        // ledger totals at zero, and the resident the worker already
+        // published swept by teardown.
+        use crate::workflow::StepKind;
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let ctx = RunContext::service(7, "t");
+        let mut reg = ActivityRegistry::new();
+        let cancel_ctx = ctx.clone();
+        reg.register_fn("sq.cancelling", move |_c, inputs| {
+            cancel_ctx.cancel();
+            let x = need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x * x))].into())
+        });
+        let reg = Arc::new(reg);
+        let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+        cfg.run = ctx.clone();
+        cfg.budget = Some(10.0);
+        let mgr = MigrationManager::in_proc_with_config(services.clone(), reg, cfg);
+        let step = Step::new(
+            "sq",
+            StepKind::InvokeActivity {
+                activity: "sq.cancelling".into(),
+                inputs: vec![("x".into(), "x".into())],
+                outputs: vec![("y".into(), "y".into())],
+            },
+        )
+        .remotable();
+        let err = mgr
+            .offload_with(
+                &step,
+                [("x".to_string(), Value::Num(3.0))].into(),
+                &["y".to_string()],
+                &["y".to_string()],
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
+        // The reservation settled at zero: nothing committed, nothing
+        // still reserved, no spend recorded.
+        assert_eq!(mgr.ledger(), (0.0, 0.0));
+        assert_eq!(mgr.stats().spend, 0.0);
+        assert_eq!(mgr.stats().offloads, 0);
+        // The lease was released: every VM previews idle (hold each
+        // lease while probing so a leaked slot cannot hide behind an
+        // idle neighbour).
+        let mut held = Vec::new();
+        for _ in 0..services.platform.cloud_size() {
+            let (p, l) = services
+                .platform
+                .cloud_lease_preview_transfer(None, Objective::Time, &[])
+                .unwrap();
+            assert_eq!(
+                (p.active, p.wait),
+                (0, Duration::ZERO),
+                "a cancelled offload leaked its lease"
+            );
+            held.push(l);
+        }
+        drop(held);
+        // The worker's published resident was never registered (the
+        // checkpoint fires before registration) and the run-scoped
+        // sweep clears it from the store.
+        mgr.run_teardown().unwrap();
+        assert_eq!(mgr.leaked_residents(), 0);
+        assert_eq!(services.mdss.count(NodeKind::Cloud), 0);
+        // Fresh offloads from this manager stay refused.
+        assert!(mgr
+            .offload_with(&step, [("x".to_string(), Value::Num(2.0))].into(), &[], &[])
+            .is_err());
     }
 
     #[test]

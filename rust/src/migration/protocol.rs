@@ -10,6 +10,42 @@
 //! Encoding: JSON (jsonmini) with the step subtree embedded as XML
 //! text, so the exact developer-visible step definition round-trips
 //! ("packaged as before and shipped back").
+//!
+//! Service mode adds *run-lifecycle* messages on the same signed
+//! wire: [`RunRequest`] (submit / status / cancel, see
+//! [`crate::service`]) and its [`RunReply`].
+//!
+//! ```
+//! use std::collections::BTreeMap;
+//! use emerald::migration::protocol::{OffloadRequest, RunOp, RunRequest};
+//! use emerald::migration::security::SigningKey;
+//! use emerald::workflow::{Step, StepKind};
+//!
+//! // Package a step, sign it, and round-trip it over the wire.
+//! let step = Step::new(
+//!     "double",
+//!     StepKind::InvokeActivity {
+//!         activity: "math.double".into(),
+//!         inputs: vec![("x".into(), "x".into())],
+//!         outputs: vec![("y".into(), "y".into())],
+//!     },
+//! );
+//! let key = SigningKey::new(b"secret".to_vec());
+//! let mut req = OffloadRequest::package(&step, BTreeMap::new(), &["y".to_string()]);
+//! req.sign(&key);
+//! let back = OffloadRequest::decode(&req.encode())?;
+//! assert!(back.verify(&key));
+//! assert_eq!(back.step()?.display_name, "double");
+//!
+//! // Run-lifecycle messages ride the same signed wire.
+//! let mut sub = RunRequest::new(RunOp::Submit {
+//!     tenant: "alice".into(),
+//!     workflow_xml: "<Workflow/>".into(),
+//! });
+//! sub.sign(&key);
+//! assert!(RunRequest::decode(&sub.encode())?.verify(&key));
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -71,9 +107,17 @@ pub struct OffloadRequest {
     /// everything by value (the A/B baseline and the legacy wire
     /// behaviour). Requests from older peers decode as empty.
     pub resident: Vec<String>,
+    /// Namespace tag of the submitting run (`r<id>`, service mode):
+    /// the worker publishes this request's residents under
+    /// `mdss://resident/<run>-n<node>-<seq>/…`, so two concurrent runs
+    /// sharing a cloud node's MDSS segment can never collide. Empty =
+    /// the solo identity: the field stays off the wire entirely
+    /// (encoding, signature and resident URIs are byte-identical to
+    /// pre-service peers).
+    pub run: String,
     /// Optional authentication tag over task code + inputs + writes
-    /// (+ the placement pin and the resident list when present;
-    /// future-work §6, see [`super::security`]).
+    /// (+ the placement pin, the resident list and the run tag when
+    /// present; future-work §6, see [`super::security`]).
     pub sig: Option<String>,
 }
 
@@ -184,6 +228,7 @@ impl OffloadRequest {
             batch: batch_len(step),
             node: None,
             resident: Vec::new(),
+            run: String::new(),
             sig: None,
         }
     }
@@ -213,6 +258,14 @@ impl OffloadRequest {
                 msg.push(0);
             }
         }
+        // The run tag namespaces the worker's resident URIs, so a
+        // tampered tag must fail verification like a tampered pin.
+        // Folded only when non-empty: solo signatures are unchanged.
+        if !self.run.is_empty() {
+            msg.extend_from_slice(b"run");
+            msg.extend_from_slice(self.run.as_bytes());
+            msg.push(0);
+        }
         msg
     }
 
@@ -231,7 +284,7 @@ impl OffloadRequest {
 
     /// Serialize.
     pub fn encode(&self) -> Vec<u8> {
-        jsonmini::to_string(&J::obj([
+        let mut fields = vec![
             ("kind", J::str("offload_request")),
             ("step_xml", J::str(self.step_xml.clone())),
             ("inputs", map_to_json(&self.inputs)),
@@ -261,8 +314,14 @@ impl OffloadRequest {
                     None => J::Null,
                 },
             ),
-        ]))
-        .into_bytes()
+        ];
+        // Emitted only when non-empty so solo-mode requests stay
+        // byte-identical to pre-service peers (request length feeds
+        // the simulated uplink charge and the protocol-bytes stat).
+        if !self.run.is_empty() {
+            fields.push(("run", J::str(self.run.clone())));
+        }
+        jsonmini::to_string(&J::obj(fields)).into_bytes()
     }
 
     /// Deserialize.
@@ -303,6 +362,12 @@ impl OffloadRequest {
                     .iter()
                     .map(|r| Ok(r.as_str()?.to_string()))
                     .collect::<Result<_>>()?,
+            },
+            // Wire-compatible with pre-service peers: absent -> the
+            // solo identity (legacy resident URIs).
+            run: match j.get_opt("run") {
+                None | Some(J::Null) => String::new(),
+                Some(v) => v.as_str()?.to_string(),
             },
             sig: match j.get_opt("sig") {
                 None | Some(J::Null) => None,
@@ -425,6 +490,211 @@ impl OffloadResponse {
                     })
                     .collect::<Result<_>>()?,
             },
+            error: match j.get("error")? {
+                J::Null => None,
+                e => Some(e.as_str()?.to_string()),
+            },
+        })
+    }
+}
+
+/// Operation carried by a [`RunRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunOp {
+    /// Start a workflow; the service replies with the assigned run id.
+    Submit {
+        /// Billing identity the run's cloud spend is ledgered under
+        /// (per-tenant budgets and fair-share weight, see
+        /// [`crate::service`]).
+        tenant: String,
+        /// The workflow as XAML text — the same packaging as task
+        /// code, just a whole document instead of a subtree.
+        workflow_xml: String,
+    },
+    /// Query the lifecycle state of a run.
+    Status {
+        /// Run id from the submit reply.
+        run: u64,
+    },
+    /// Request cooperative cancellation of a run. The service flips
+    /// the run's [`crate::engine::RunContext`] flag; the run observes
+    /// it at the next step boundary or offload checkpoint.
+    Cancel {
+        /// Run id from the submit reply.
+        run: u64,
+    },
+}
+
+/// Run-lifecycle request (submit / status / cancel), travelling over
+/// the same signed wire as [`OffloadRequest`]. Authentication reuses
+/// [`super::security`]: the tag covers the operation and every field
+/// the service acts on, so a relayed submit cannot be retargeted to
+/// another tenant and a status probe cannot be rewritten into a
+/// cancellation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRequest {
+    /// The requested operation.
+    pub op: RunOp,
+    /// Optional authentication tag over [`Self::signable`].
+    pub sig: Option<String>,
+}
+
+impl RunRequest {
+    /// Unsigned request around an operation.
+    pub fn new(op: RunOp) -> Self {
+        Self { op, sig: None }
+    }
+
+    /// The canonical byte string authentication covers: the operation
+    /// name, then its fields (NUL-separated strings, little-endian run
+    /// ids), mirroring [`OffloadRequest::signable`].
+    pub fn signable(&self) -> Vec<u8> {
+        let mut msg = Vec::new();
+        match &self.op {
+            RunOp::Submit { tenant, workflow_xml } => {
+                msg.extend_from_slice(b"submit");
+                msg.push(0);
+                msg.extend_from_slice(tenant.as_bytes());
+                msg.push(0);
+                msg.extend_from_slice(workflow_xml.as_bytes());
+            }
+            RunOp::Status { run } => {
+                msg.extend_from_slice(b"status");
+                msg.push(0);
+                msg.extend_from_slice(&run.to_le_bytes());
+            }
+            RunOp::Cancel { run } => {
+                msg.extend_from_slice(b"cancel");
+                msg.push(0);
+                msg.extend_from_slice(&run.to_le_bytes());
+            }
+        }
+        msg
+    }
+
+    /// Attach an authentication tag.
+    pub fn sign(&mut self, key: &super::security::SigningKey) {
+        self.sig = Some(key.sign(&self.signable()));
+    }
+
+    /// Verify the tag (false when absent or wrong).
+    pub fn verify(&self, key: &super::security::SigningKey) -> bool {
+        match &self.sig {
+            Some(tag) => key.verify(&self.signable(), tag),
+            None => false,
+        }
+    }
+
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut fields = vec![("kind", J::str("run_request"))];
+        match &self.op {
+            RunOp::Submit { tenant, workflow_xml } => {
+                fields.push(("op", J::str("submit")));
+                fields.push(("tenant", J::str(tenant.clone())));
+                fields.push(("workflow_xml", J::str(workflow_xml.clone())));
+            }
+            RunOp::Status { run } => {
+                fields.push(("op", J::str("status")));
+                fields.push(("run", J::num(*run as f64)));
+            }
+            RunOp::Cancel { run } => {
+                fields.push(("op", J::str("cancel")));
+                fields.push(("run", J::num(*run as f64)));
+            }
+        }
+        fields.push((
+            "sig",
+            match &self.sig {
+                Some(s) => J::str(s.clone()),
+                None => J::Null,
+            },
+        ));
+        jsonmini::to_string(&J::obj(fields)).into_bytes()
+    }
+
+    /// Deserialize.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes).context("run request is not utf-8")?;
+        let j = jsonmini::parse(text).context("parsing run request")?;
+        if j.get("kind")?.as_str()? != "run_request" {
+            bail!("not a run_request");
+        }
+        let op = match j.get("op")?.as_str()? {
+            "submit" => RunOp::Submit {
+                tenant: j.get("tenant")?.as_str()?.to_string(),
+                workflow_xml: j.get("workflow_xml")?.as_str()?.to_string(),
+            },
+            "status" => RunOp::Status { run: j.get("run")?.as_f64()? as u64 },
+            "cancel" => RunOp::Cancel { run: j.get("run")?.as_f64()? as u64 },
+            other => bail!("unknown run op {other:?}"),
+        };
+        Ok(Self {
+            op,
+            sig: match j.get_opt("sig") {
+                None | Some(J::Null) => None,
+                Some(s) => Some(s.as_str()?.to_string()),
+            },
+        })
+    }
+}
+
+/// Reply to a [`RunRequest`]: a lifecycle snapshot of one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReply {
+    /// Run id the reply concerns (assigned by the service on submit).
+    pub run: u64,
+    /// Lifecycle state: `running`, `completed`, `failed` or
+    /// `cancelled`.
+    pub state: String,
+    /// The run's WriteLine trace, present once it finished.
+    pub lines: Vec<String>,
+    /// Total cloud spend ledgered to the run so far ($).
+    pub spend: f64,
+    /// Error message for failed runs.
+    pub error: Option<String>,
+}
+
+impl RunReply {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        jsonmini::to_string(&J::obj([
+            ("kind", J::str("run_reply")),
+            ("run", J::num(self.run as f64)),
+            ("state", J::str(self.state.clone())),
+            (
+                "lines",
+                J::Arr(self.lines.iter().map(|l| J::str(l.clone())).collect()),
+            ),
+            ("spend", J::num(self.spend)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => J::str(e.clone()),
+                    None => J::Null,
+                },
+            ),
+        ]))
+        .into_bytes()
+    }
+
+    /// Deserialize.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes).context("run reply is not utf-8")?;
+        let j = jsonmini::parse(text).context("parsing run reply")?;
+        if j.get("kind")?.as_str()? != "run_reply" {
+            bail!("not a run_reply");
+        }
+        Ok(Self {
+            run: j.get("run")?.as_f64()? as u64,
+            state: j.get("state")?.as_str()?.to_string(),
+            lines: j
+                .get("lines")?
+                .as_arr()?
+                .iter()
+                .map(|l| Ok(l.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            spend: j.get("spend")?.as_f64()?,
             error: match j.get("error")? {
                 J::Null => None,
                 e => Some(e.as_str()?.to_string()),
@@ -639,5 +909,101 @@ mod tests {
         assert!(OffloadResponse::decode(&req.encode()).is_err());
         assert!(OffloadRequest::decode(b"{}").is_err());
         assert!(OffloadRequest::decode(&[0xFF, 0xFE]).is_err());
+        assert!(RunRequest::decode(&req.encode()).is_err());
+        assert!(RunReply::decode(b"{}").is_err());
+    }
+
+    #[test]
+    fn run_tag_roundtrips_and_is_signed() {
+        let key = crate::migration::security::SigningKey::new(b"k".to_vec());
+        let mut req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        req.run = "r7".to_string();
+        req.sign(&key);
+        let back = OffloadRequest::decode(&req.encode()).unwrap();
+        assert_eq!(back.run, "r7");
+        assert!(back.verify(&key));
+        // Retargeting the namespace (redirecting where residents land)
+        // must invalidate the tag, like redirecting the pin.
+        let mut tampered = OffloadRequest::decode(&req.encode()).unwrap();
+        tampered.run = "r8".to_string();
+        assert!(!tampered.verify(&key));
+    }
+
+    #[test]
+    fn solo_requests_keep_the_run_tag_off_the_wire() {
+        // An empty run tag is not encoded at all and folds nothing
+        // into the signature: solo-mode wire bytes and tags are
+        // byte-identical to pre-service peers (request length feeds
+        // the simulated uplink charge).
+        let req = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        assert_eq!(req.run, "");
+        let encoded = String::from_utf8(req.encode()).unwrap();
+        assert!(!encoded.contains("\"run\""));
+        let back = OffloadRequest::decode(encoded.as_bytes()).unwrap();
+        assert_eq!(back.run, "");
+        assert_eq!(req.signable(), back.signable());
+        let mut tagged = OffloadRequest::package(&sample_step(), BTreeMap::new(), &[]);
+        tagged.run = "r1".to_string();
+        assert_ne!(req.signable(), tagged.signable());
+    }
+
+    #[test]
+    fn run_request_roundtrip_all_ops() {
+        for op in [
+            RunOp::Submit { tenant: "alice".into(), workflow_xml: "<Workflow/>".into() },
+            RunOp::Status { run: 3 },
+            RunOp::Cancel { run: 9 },
+        ] {
+            let req = RunRequest::new(op);
+            let back = RunRequest::decode(&req.encode()).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn run_request_signature_covers_the_operation() {
+        let key = crate::migration::security::SigningKey::new(b"k".to_vec());
+        let mut req = RunRequest::new(RunOp::Submit {
+            tenant: "alice".into(),
+            workflow_xml: "<Workflow/>".into(),
+        });
+        assert!(!req.verify(&key), "unsigned must not verify");
+        req.sign(&key);
+        let back = RunRequest::decode(&req.encode()).unwrap();
+        assert!(back.verify(&key));
+        // Retargeting the tenant must invalidate the tag.
+        let mut tampered = back.clone();
+        tampered.op = RunOp::Submit {
+            tenant: "mallory".into(),
+            workflow_xml: "<Workflow/>".into(),
+        };
+        assert!(!tampered.verify(&key));
+        // Rewriting a status probe into a cancellation must too.
+        let mut probe = RunRequest::new(RunOp::Status { run: 3 });
+        probe.sign(&key);
+        let mut rewritten = probe.clone();
+        rewritten.op = RunOp::Cancel { run: 3 };
+        assert!(!rewritten.verify(&key));
+    }
+
+    #[test]
+    fn run_reply_roundtrip() {
+        let reply = RunReply {
+            run: 4,
+            state: "completed".into(),
+            lines: vec!["hi".into()],
+            spend: 0.25,
+            error: None,
+        };
+        let back = RunReply::decode(&reply.encode()).unwrap();
+        assert_eq!(back, reply);
+        let failed = RunReply {
+            run: 5,
+            state: "failed".into(),
+            lines: Vec::new(),
+            spend: 0.0,
+            error: Some("boom".into()),
+        };
+        assert_eq!(RunReply::decode(&failed.encode()).unwrap(), failed);
     }
 }

@@ -1,0 +1,745 @@
+//! The multi-run workflow service (`emerald serve`).
+//!
+//! One process, one shared [`crate::cloud::Platform`] (with its
+//! **sharded** [`crate::scheduler::NodeScheduler`]), one shared MDSS
+//! and one shared cloud worker — and N concurrent workflow runs on
+//! top, each executing under its own [`RunContext`]:
+//!
+//! * **Per-run isolation.** Every run gets its own engine (and so its
+//!   own variable store, trace buffer and event sequence) and its own
+//!   [`MigrationManager`] (its own spend ledger, cost history and
+//!   residency registry). The worker namespaces each run's resident
+//!   URIs by its run tag, and teardown sweeps only that namespace —
+//!   a run's lines and events are byte-identical to the same workflow
+//!   executed solo.
+//! * **Per-tenant arbitration.** All runs place leases on the one
+//!   shared scheduler. A [`TenantArbiter`] meters admission across
+//!   tenants (weighted fair share, or FIFO as the A/B baseline), and
+//!   an optional per-tenant [`TenantBudget`] caps each tenant's total
+//!   cloud spend across all of its runs with the same
+//!   committed+reserved reservation discipline as per-run budgets.
+//! * **Lifecycle over the signed wire.** Submit / status / cancel
+//!   travel as [`RunRequest`] messages ([`Server::handle_message`]),
+//!   authenticated with the same [`SigningKey`] machinery as offload
+//!   requests. Cancellation is cooperative: the run's context flag
+//!   flips, the engine refuses to start further steps, and in-flight
+//!   offloads abort at their next checkpoint with the lease released
+//!   and the spend reservations settled at zero.
+//!
+//! `emerald serve --selftest` ([`selftest`]) drives the whole stack:
+//! four concurrent runs from two tenants (one cancelled mid-offload),
+//! a rejected unsigned request, clean shutdown, and the leak
+//! invariants (zero residents, zero reserved spend) asserted at the
+//! end. See `docs/SERVICE.md`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cloud::Platform;
+use crate::engine::{ActivityRegistry, Engine, RunContext, Services};
+use crate::expr::Value;
+use crate::migration::protocol::{RunOp, RunReply, RunRequest};
+use crate::migration::transport::RequestHandler;
+use crate::migration::{
+    CloudWorker, DataPolicy, InProcTransport, ManagerConfig, MigrationManager, SigningKey,
+    TenantBudget,
+};
+use crate::partitioner;
+use crate::scheduler::{SharePolicy, TenantArbiter};
+use crate::workflow::xaml;
+
+/// Service configuration (the `[service]` table in `docs/CONFIG.md`).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Template for every run's [`MigrationManager`]: data policy,
+    /// decision model, objective, per-run budget, signing key (also
+    /// installed as the shared worker's required key), fault plan.
+    /// The service fills in the per-run fields (`run`,
+    /// `tenant_budget`, `arbiter`) itself.
+    pub manager: ManagerConfig,
+    /// Cross-tenant admission policy (`[service] share`): weighted
+    /// fair share, or FIFO as the A/B baseline.
+    pub share: SharePolicy,
+    /// Per-tenant spend budget in $ (`[service] budget`), applied to
+    /// every tenant on first submission. `None` = unlimited.
+    pub tenant_budget: Option<f64>,
+    /// Fair-share weights per tenant (`[service] weights`). Unlisted
+    /// tenants default to weight 1.0.
+    pub weights: Vec<(String, f64)>,
+    /// Execute submitted runs in dataflow mode (`[engine] dataflow`).
+    pub dataflow: bool,
+    /// Execute submitted runs in whole-workflow IR mode
+    /// (`[engine] ir`).
+    pub ir: bool,
+}
+
+impl ServiceConfig {
+    /// Defaults: MDSS data policy, fair-share arbitration, no tenant
+    /// budget, no weights, sequential execution.
+    pub fn new() -> Self {
+        Self {
+            manager: ManagerConfig::new(DataPolicy::Mdss),
+            share: SharePolicy::FairShare,
+            tenant_budget: None,
+            weights: Vec::new(),
+            dataflow: false,
+            ir: false,
+        }
+    }
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Lifecycle state of a submitted run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    /// Submitted and executing.
+    Running,
+    /// Finished successfully.
+    Completed,
+    /// Finished with an error.
+    Failed,
+    /// Cancelled before completion (cooperatively, at a step boundary
+    /// or an offload checkpoint).
+    Cancelled,
+}
+
+impl RunState {
+    /// Wire name (the [`RunReply::state`] string).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunState::Running => "running",
+            RunState::Completed => "completed",
+            RunState::Failed => "failed",
+            RunState::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Lifecycle snapshot of one run ([`Server::status`]).
+#[derive(Debug, Clone)]
+pub struct RunStatus {
+    /// Run id.
+    pub run: u64,
+    /// Submitting tenant.
+    pub tenant: String,
+    /// Current state.
+    pub state: RunState,
+    /// WriteLine trace (empty until the run completes).
+    pub lines: Vec<String>,
+    /// Cloud spend ledgered to the run so far ($; live while running,
+    /// final afterwards).
+    pub spend: f64,
+    /// Simulated end-to-end time (zero until the run completes).
+    pub sim_time: Duration,
+    /// Error message for failed or cancelled runs.
+    pub error: Option<String>,
+}
+
+/// Final outcome recorded by a run's thread.
+#[derive(Debug, Clone)]
+struct RunOutcome {
+    state: RunState,
+    lines: Vec<String>,
+    spend: f64,
+    sim_time: Duration,
+    error: Option<String>,
+}
+
+/// One submitted run's book-keeping.
+struct RunSlot {
+    ctx: RunContext,
+    tenant: String,
+    manager: Arc<MigrationManager>,
+    done: Option<RunOutcome>,
+}
+
+/// The multi-run workflow service (see the module doc).
+pub struct Server {
+    services: Arc<Services>,
+    registry: Arc<ActivityRegistry>,
+    /// ONE cloud worker shared by every run's in-process transport, so
+    /// all runs contend for (and are arbitrated over) the same cloud.
+    worker: Arc<CloudWorker>,
+    arbiter: Arc<TenantArbiter>,
+    config: ServiceConfig,
+    tenants: Mutex<BTreeMap<String, Arc<TenantBudget>>>,
+    runs: Mutex<BTreeMap<u64, RunSlot>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// New service over shared services and an activity registry.
+    pub fn new(
+        services: Arc<Services>,
+        registry: Arc<ActivityRegistry>,
+        config: ServiceConfig,
+    ) -> Arc<Self> {
+        let mut worker = CloudWorker::new_inner(services.clone(), registry.clone());
+        worker.require_key = config.manager.signing.clone();
+        let arbiter = TenantArbiter::new(config.share);
+        for (tenant, weight) in &config.weights {
+            arbiter.set_weight(tenant, *weight);
+        }
+        Arc::new(Self {
+            services,
+            registry,
+            worker: Arc::new(worker),
+            arbiter,
+            config,
+            tenants: Mutex::new(BTreeMap::new()),
+            runs: Mutex::new(BTreeMap::new()),
+            handles: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// The tenant's shared budget account, created on first use.
+    fn tenant_budget(&self, tenant: &str) -> Option<Arc<TenantBudget>> {
+        let budget = self.config.tenant_budget?;
+        let mut tenants = self.tenants.lock().unwrap();
+        Some(
+            tenants
+                .entry(tenant.to_string())
+                .or_insert_with(|| TenantBudget::new(budget))
+                .clone(),
+        )
+    }
+
+    /// Submit a workflow for `tenant`: parse, partition, and start it
+    /// on its own thread with its own engine and manager. Returns the
+    /// assigned run id; parse/partition errors fail the submission
+    /// synchronously (nothing is registered).
+    pub fn submit(self: &Arc<Self>, tenant: &str, workflow_xml: &str) -> Result<u64> {
+        let wf = xaml::parse(workflow_xml)
+            .with_context(|| format!("parsing workflow submitted by '{tenant}'"))?;
+        // Dataflow and IR mode overlap independent offload units, so
+        // partitioning fuses only dependent runs — same rule as the
+        // single-run CLI.
+        let opts = partitioner::PartitionOptions {
+            batch: false,
+            dataflow: self.config.dataflow || self.config.ir,
+        };
+        let (part, _) = partitioner::partition_with(&wf, opts)
+            .with_context(|| format!("partitioning workflow submitted by '{tenant}'"))?;
+
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let ctx = RunContext::service(id, tenant);
+        let mut cfg = self.config.manager.clone();
+        cfg.run = ctx.clone();
+        cfg.tenant_budget = self.tenant_budget(tenant);
+        cfg.arbiter = Some(self.arbiter.clone());
+        let manager = MigrationManager::with_config(
+            self.services.clone(),
+            Box::new(InProcTransport::new(self.worker.clone())),
+            cfg,
+        );
+        let engine = Engine::new(self.registry.clone(), self.services.clone())
+            .with_offload(manager.clone())
+            .with_dataflow(self.config.dataflow)
+            .with_ir(self.config.ir)
+            .in_run(ctx.clone());
+
+        self.runs.lock().unwrap().insert(
+            id,
+            RunSlot {
+                ctx: ctx.clone(),
+                tenant: tenant.to_string(),
+                manager: manager.clone(),
+                done: None,
+            },
+        );
+
+        let srv = Arc::clone(self);
+        let handle = std::thread::spawn(move || {
+            let outcome = match engine.run(&part) {
+                Ok(report) => RunOutcome {
+                    state: RunState::Completed,
+                    lines: report.lines,
+                    spend: report.spend,
+                    sim_time: report.sim_time,
+                    error: None,
+                },
+                Err(e) => RunOutcome {
+                    // A run that failed after its flag flipped was
+                    // cancelled; anything else is a real failure.
+                    state: if ctx.cancelled() {
+                        RunState::Cancelled
+                    } else {
+                        RunState::Failed
+                    },
+                    lines: Vec::new(),
+                    spend: manager.stats().spend,
+                    sim_time: Duration::ZERO,
+                    error: Some(format!("{e:#}")),
+                },
+            };
+            if let Some(slot) = srv.runs.lock().unwrap().get_mut(&id) {
+                slot.done = Some(outcome);
+            }
+        });
+        self.handles.lock().unwrap().push(handle);
+        Ok(id)
+    }
+
+    /// Lifecycle snapshot of a run (`None` for unknown ids).
+    pub fn status(&self, run: u64) -> Option<RunStatus> {
+        let runs = self.runs.lock().unwrap();
+        let slot = runs.get(&run)?;
+        Some(match &slot.done {
+            Some(out) => RunStatus {
+                run,
+                tenant: slot.tenant.clone(),
+                state: out.state,
+                lines: out.lines.clone(),
+                spend: out.spend,
+                sim_time: out.sim_time,
+                error: out.error.clone(),
+            },
+            None => RunStatus {
+                run,
+                tenant: slot.tenant.clone(),
+                state: RunState::Running,
+                lines: Vec::new(),
+                spend: slot.manager.stats().spend,
+                sim_time: Duration::ZERO,
+                error: None,
+            },
+        })
+    }
+
+    /// Request cooperative cancellation of a run. Returns `false` for
+    /// unknown ids; cancelling a finished run is a harmless no-op.
+    pub fn cancel(&self, run: u64) -> bool {
+        let runs = self.runs.lock().unwrap();
+        match runs.get(&run) {
+            Some(slot) => {
+                slot.ctx.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Wait for every submitted run to finish (clean shutdown).
+    pub fn join(&self) {
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Cloud-resident intermediates still registered across all runs.
+    /// Zero once every run has finished — teardown runs on success,
+    /// failure and cancellation alike.
+    pub fn leaked_residents(&self) -> usize {
+        let runs = self.runs.lock().unwrap();
+        runs.values().map(|s| s.manager.leaked_residents()).sum()
+    }
+
+    /// Spend still reserved (not yet committed or released) across
+    /// every run ledger and every tenant account. Zero at rest — every
+    /// reservation is released by RAII on every exit path.
+    pub fn reserved_spend(&self) -> f64 {
+        let runs = self.runs.lock().unwrap();
+        let from_runs: f64 = runs.values().map(|s| s.manager.ledger().1).sum();
+        let tenants = self.tenants.lock().unwrap();
+        let from_tenants: f64 = tenants.values().map(|t| t.ledger().1).sum();
+        from_runs + from_tenants
+    }
+
+    /// Per-tenant accounts as `(tenant, committed, reserved, budget)`.
+    pub fn tenant_ledgers(&self) -> Vec<(String, f64, f64, f64)> {
+        let tenants = self.tenants.lock().unwrap();
+        tenants
+            .iter()
+            .map(|(name, tb)| {
+                let (committed, reserved) = tb.ledger();
+                (name.clone(), committed, reserved, tb.budget())
+            })
+            .collect()
+    }
+
+    /// The cross-tenant arbiter (virtual-time inspection, weights).
+    pub fn arbiter(&self) -> &Arc<TenantArbiter> {
+        &self.arbiter
+    }
+
+    /// Handle one signed lifecycle message ([`RunRequest`] bytes in,
+    /// [`RunReply`] bytes out). When the service holds a signing key,
+    /// unsigned or tampered requests are rejected before any state
+    /// changes — the same trust boundary as offload requests.
+    pub fn handle_message(self: &Arc<Self>, bytes: &[u8]) -> Vec<u8> {
+        let fail = |run: u64, msg: String| RunReply {
+            run,
+            state: RunState::Failed.as_str().to_string(),
+            lines: Vec::new(),
+            spend: 0.0,
+            error: Some(msg),
+        };
+        let req = match RunRequest::decode(bytes) {
+            Ok(r) => r,
+            Err(e) => return fail(0, format!("{e:#}")).encode(),
+        };
+        if let Some(key) = &self.config.manager.signing {
+            if !req.verify(key) {
+                return fail(
+                    0,
+                    "authentication failed: lifecycle signature invalid or missing".into(),
+                )
+                .encode();
+            }
+        }
+        let reply = match req.op {
+            RunOp::Submit { tenant, workflow_xml } => {
+                match self.submit(&tenant, &workflow_xml) {
+                    Ok(run) => RunReply {
+                        run,
+                        state: RunState::Running.as_str().to_string(),
+                        lines: Vec::new(),
+                        spend: 0.0,
+                        error: None,
+                    },
+                    Err(e) => fail(0, format!("{e:#}")),
+                }
+            }
+            RunOp::Status { run } => match self.status(run) {
+                Some(s) => RunReply {
+                    run,
+                    state: s.state.as_str().to_string(),
+                    lines: s.lines,
+                    spend: s.spend,
+                    error: s.error,
+                },
+                None => fail(run, format!("unknown run {run}")),
+            },
+            RunOp::Cancel { run } => {
+                if self.cancel(run) {
+                    RunReply {
+                        run,
+                        state: "cancelling".to_string(),
+                        lines: Vec::new(),
+                        spend: 0.0,
+                        error: None,
+                    }
+                } else {
+                    fail(run, format!("unknown run {run}"))
+                }
+            }
+        };
+        reply.encode()
+    }
+}
+
+/// Byte-level wire endpoint: one [`RequestHandler`] (for
+/// [`crate::migration::serve_tcp`] or [`InProcTransport`]) serving
+/// both wire protocols on one port. Frames that decode as
+/// [`RunRequest`]s are run-lifecycle messages and go to
+/// [`Server::handle_message`]; every other frame falls through to the
+/// server's shared [`CloudWorker`] as an offload request — so a
+/// remote client drives submit/status/cancel over exactly the
+/// transport the offload path already uses.
+pub struct WireEndpoint {
+    server: Arc<Server>,
+}
+
+impl WireEndpoint {
+    /// Wrap a server for serving.
+    pub fn new(server: Arc<Server>) -> Arc<Self> {
+        Arc::new(Self { server })
+    }
+}
+
+impl RequestHandler for WireEndpoint {
+    fn handle(&self, bytes: &[u8]) -> Vec<u8> {
+        if RunRequest::decode(bytes).is_ok() {
+            self.server.handle_message(bytes)
+        } else {
+            self.server.worker.handle(bytes)
+        }
+    }
+}
+
+/// `emerald serve --selftest`: drive the full service stack once and
+/// assert its invariants. Four concurrent runs from two tenants share
+/// one platform and worker; one run blocks mid-offload on a gate, is
+/// cancelled over the signed wire, and then released; an unsigned
+/// request is rejected. After a clean shutdown every completed run's
+/// lines are checked, plus the leak invariants: zero resident
+/// intermediates, zero reserved spend, tenant accounts within budget.
+/// Returns a human-readable report; any violated invariant is an
+/// error. This is the CI serve-mode smoke test.
+pub fn selftest() -> Result<String> {
+    let services = Services::without_runtime(Platform::paper_testbed());
+
+    // Gate protocol for the to-be-cancelled run: 0 = not started,
+    // 1 = executing remotely (offload in flight), 2 = released.
+    let gate = Arc::new((Mutex::new(0u8), Condvar::new()));
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("svc.square", |c, inputs| {
+        c.charge_compute(Duration::from_millis(40));
+        let x = crate::engine::activity::need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x * x))].into())
+    });
+    let g = gate.clone();
+    reg.register_fn("svc.gate", move |_c, _inputs| {
+        let (lock, cv) = &*g;
+        let mut s = lock.lock().unwrap();
+        *s = 1;
+        cv.notify_all();
+        while *s < 2 {
+            s = cv.wait(s).unwrap();
+        }
+        Ok(BTreeMap::new())
+    });
+    let reg = Arc::new(reg);
+
+    let key = SigningKey::new(b"service-selftest".to_vec());
+    let mut config = ServiceConfig::new();
+    config.manager.signing = Some(key.clone());
+    config.share = SharePolicy::FairShare;
+    config.tenant_budget = Some(5.0);
+    config.weights = vec![("ada".to_string(), 2.0), ("grace".to_string(), 1.0)];
+    let server = Server::new(services, reg, config);
+
+    let square = |x: u32| {
+        format!(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity DisplayName="sq" Activity="svc.square" In.x="{x}"
+                                   Out.y="y" Remotable="true"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#
+        )
+    };
+    let gated = r#"<Workflow>
+                     <Sequence>
+                       <InvokeActivity DisplayName="gate" Activity="svc.gate"
+                                       Remotable="true"/>
+                       <WriteLine Text="'never printed'"/>
+                     </Sequence>
+                   </Workflow>"#;
+
+    let submit = |tenant: &str, wf: &str| -> Result<u64> {
+        let mut req = RunRequest::new(RunOp::Submit {
+            tenant: tenant.to_string(),
+            workflow_xml: wf.to_string(),
+        });
+        req.sign(&key);
+        let reply = RunReply::decode(&server.handle_message(&req.encode()))?;
+        if let Some(e) = reply.error {
+            bail!("submit for '{tenant}' failed: {e}");
+        }
+        Ok(reply.run)
+    };
+
+    let r1 = submit("ada", &square(2))?;
+    let r2 = submit("ada", &square(3))?;
+    let r3 = submit("grace", &square(4))?;
+    let r4 = submit("grace", gated)?;
+
+    // An unsigned lifecycle message must be rejected outright.
+    let rogue = RunRequest::new(RunOp::Cancel { run: r1 });
+    let reply = RunReply::decode(&server.handle_message(&rogue.encode()))?;
+    ensure!(
+        reply.error.as_deref().is_some_and(|e| e.contains("authentication")),
+        "unsigned cancel must be rejected, got {reply:?}"
+    );
+
+    // Wait until run 4's offload is executing remotely, cancel it over
+    // the signed wire, then release the gate — the manager hits its
+    // post-response checkpoint and aborts without committing anything.
+    {
+        let (lock, cv) = &*gate;
+        let mut s = lock.lock().unwrap();
+        while *s < 1 {
+            s = cv.wait(s).unwrap();
+        }
+    }
+    let mut cancel = RunRequest::new(RunOp::Cancel { run: r4 });
+    cancel.sign(&key);
+    let reply = RunReply::decode(&server.handle_message(&cancel.encode()))?;
+    ensure!(reply.error.is_none(), "cancel failed: {reply:?}");
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = 2;
+        cv.notify_all();
+    }
+
+    server.join();
+
+    let expect = |run: u64, lines: &[&str]| -> Result<RunStatus> {
+        let s = server.status(run).context("run vanished")?;
+        ensure!(
+            s.state == RunState::Completed,
+            "run {run} should complete, got {:?} ({:?})",
+            s.state,
+            s.error
+        );
+        ensure!(s.lines == lines, "run {run} lines: {:?}", s.lines);
+        Ok(s)
+    };
+    let s1 = expect(r1, &["4"])?;
+    let s2 = expect(r2, &["9"])?;
+    let s3 = expect(r3, &["16"])?;
+    let s4 = server.status(r4).context("run vanished")?;
+    ensure!(
+        s4.state == RunState::Cancelled,
+        "run {r4} should be cancelled, got {:?} ({:?})",
+        s4.state,
+        s4.error
+    );
+    ensure!(
+        server.leaked_residents() == 0,
+        "leaked {} resident intermediate(s)",
+        server.leaked_residents()
+    );
+    let reserved = server.reserved_spend();
+    ensure!(reserved == 0.0, "{reserved} $ still reserved after shutdown");
+    let mut report = String::from("serve selftest: 4 runs, 2 tenants, shared pool\n");
+    for s in [&s1, &s2, &s3, &s4] {
+        report.push_str(&format!(
+            "  run {} [{}] {}: lines={:?} spend=${:.3}\n",
+            s.run,
+            s.tenant,
+            s.state.as_str(),
+            s.lines,
+            s.spend
+        ));
+    }
+    for (tenant, committed, reserved, budget) in server.tenant_ledgers() {
+        ensure!(
+            committed <= budget && reserved == 0.0,
+            "tenant '{tenant}' account violated: committed {committed} reserved \
+             {reserved} budget {budget}"
+        );
+        report.push_str(&format!(
+            "  tenant {tenant}: committed=${committed:.3} of ${budget:.3}\n"
+        ));
+    }
+    report.push_str("  invariants: 0 leaked residents, $0 reserved — ok\n");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Arc<ActivityRegistry> {
+        let mut reg = ActivityRegistry::new();
+        reg.register_fn("svc.square", |c, inputs| {
+            c.charge_compute(Duration::from_millis(40));
+            let x = crate::engine::activity::need_num(inputs, "x")?;
+            Ok([("y".to_string(), Value::Num(x * x))].into())
+        });
+        Arc::new(reg)
+    }
+
+    fn square_wf(x: u32) -> String {
+        format!(
+            r#"<Workflow>
+                 <Variables><Variable Name="y"/></Variables>
+                 <Sequence>
+                   <InvokeActivity DisplayName="sq" Activity="svc.square" In.x="{x}"
+                                   Out.y="y" Remotable="true"/>
+                   <WriteLine Text="str(y)"/>
+                 </Sequence>
+               </Workflow>"#
+        )
+    }
+
+    #[test]
+    fn submit_status_cancel_lifecycle() {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let server = Server::new(services, registry(), ServiceConfig::new());
+        let id = server.submit("t", &square_wf(5)).unwrap();
+        server.join();
+        let s = server.status(id).unwrap();
+        assert_eq!(s.state, RunState::Completed);
+        assert_eq!(s.lines, vec!["25"]);
+        assert_eq!(s.tenant, "t");
+        assert!(server.status(999).is_none());
+        assert!(!server.cancel(999));
+        // Cancelling a finished run is a harmless no-op.
+        assert!(server.cancel(id));
+        assert_eq!(server.status(id).unwrap().state, RunState::Completed);
+        assert_eq!(server.leaked_residents(), 0);
+        assert_eq!(server.reserved_spend(), 0.0);
+    }
+
+    #[test]
+    fn bad_submissions_fail_synchronously() {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let server = Server::new(services, registry(), ServiceConfig::new());
+        assert!(server.submit("t", "<NotAWorkflow/>").is_err());
+        assert!(server.status(1).is_none(), "failed submit must register nothing");
+    }
+
+    #[test]
+    fn wire_lifecycle_roundtrip_unsigned_service() {
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let server = Server::new(services, registry(), ServiceConfig::new());
+        let sub = RunRequest::new(RunOp::Submit {
+            tenant: "t".to_string(),
+            workflow_xml: square_wf(3),
+        });
+        let reply = RunReply::decode(&server.handle_message(&sub.encode())).unwrap();
+        assert_eq!(reply.error, None);
+        let id = reply.run;
+        server.join();
+        let status = RunRequest::new(RunOp::Status { run: id });
+        let reply = RunReply::decode(&server.handle_message(&status.encode())).unwrap();
+        assert_eq!(reply.state, "completed");
+        assert_eq!(reply.lines, vec!["9"]);
+        let unknown = RunRequest::new(RunOp::Status { run: 12345 });
+        let reply = RunReply::decode(&server.handle_message(&unknown.encode())).unwrap();
+        assert!(reply.error.is_some());
+    }
+
+    #[test]
+    fn selftest_passes() {
+        let report = selftest().unwrap();
+        assert!(report.contains("cancelled"), "{report}");
+        assert!(report.contains("ok"), "{report}");
+    }
+
+    #[test]
+    fn concurrent_runs_match_solo_traces() {
+        // Each concurrent run's lines must be identical to the same
+        // workflow executed alone in its own process-equivalent.
+        let solo = |x: u32| {
+            let services = Services::without_runtime(Platform::paper_testbed());
+            let reg = registry();
+            let mgr = MigrationManager::in_proc(services.clone(), reg.clone(), DataPolicy::Mdss);
+            let engine = Engine::new(reg, services).with_offload(mgr);
+            engine
+                .run(&partitioner::partition(&xaml::parse(&square_wf(x)).unwrap()).unwrap().0)
+                .unwrap()
+                .lines
+        };
+        let services = Services::without_runtime(Platform::paper_testbed());
+        let server = Server::new(services, registry(), ServiceConfig::new());
+        let ids: Vec<u64> =
+            (2..6).map(|x| server.submit(&format!("t{x}"), &square_wf(x)).unwrap()).collect();
+        server.join();
+        for (id, x) in ids.iter().zip(2u32..6) {
+            let s = server.status(*id).unwrap();
+            assert_eq!(s.state, RunState::Completed);
+            assert_eq!(s.lines, solo(x), "run {id} diverged from its solo trace");
+        }
+        assert_eq!(server.leaked_residents(), 0);
+        assert_eq!(server.reserved_spend(), 0.0);
+    }
+}

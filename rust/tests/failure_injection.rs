@@ -16,7 +16,8 @@
 //!    the `AccessValidator` stays clean.
 //!
 //! The chaos seed comes from `EMERALD_FAULT_SEED` (the CI smoke step
-//! runs a small seed matrix); a failing seed replays locally with
+//! runs a small seed matrix, in single-run and concurrent-run mode
+//! alike); a failing seed replays locally with
 //! `EMERALD_FAULT_SEED=<seed> cargo test -q --test failure_injection`.
 
 use std::collections::BTreeMap;
@@ -37,6 +38,7 @@ use emerald::migration::{
 use emerald::partitioner;
 use emerald::quickprop::{forall, Gen};
 use emerald::scheduler::SpotModel;
+use emerald::service::{RunState, Server, ServiceConfig};
 use emerald::workflow::{xaml, Step, StepKind, Workflow};
 
 // ---------------------------------------------------------------------------
@@ -600,6 +602,52 @@ fn preempting_a_residents_home_vm_demotes_and_rematerializes() {
         "s1 was already demoted, so teardown has nothing left to release"
     );
     assert!(run.stats.preempted >= 1, "the staged preemption must fire");
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent-run chaos (service mode)
+// ---------------------------------------------------------------------------
+
+/// The chaos matrix in concurrent-run mode: three tenants run the
+/// chaos chain *simultaneously* through `emerald serve`'s run-scoped
+/// runtime, on ONE shared hostile platform under the seeded fault
+/// stream (`EMERALD_FAULT_SEED` — the CI matrix drives this test
+/// too). The per-step fault counters are shared, so which placements
+/// die depends on the interleaving — which is the point: recovery
+/// must be invisible for *every* run no matter whose VM dies, and
+/// shutdown must leave no reservation and no resident behind in any
+/// run's ledgers.
+#[test]
+fn chaos_concurrent_runs_recover_independently() {
+    let seed = env_seed();
+    let wf = xaml::parse(CHAIN).unwrap();
+    // Fault-free solo reference: the lines every chaotic run must
+    // still produce.
+    let baseline = chaos_with(FaultConfig::none(), None, &wf, Mode::Sequential);
+
+    let faults = FaultConfig { seed, preempt_rate: 0.5, max_preemptions: None };
+    let svcs = Services::without_runtime(hostile_platform(seed));
+    let mut config = ServiceConfig::new();
+    config.manager.preempt_retries = 2;
+    config.manager.preempt_local = true;
+    config.manager.faults = Some(FaultPlan::new(faults).unwrap());
+    let server = Server::new(svcs, registry(), config);
+
+    let runs: Vec<u64> = (1..=3)
+        .map(|t| server.submit(&format!("t{t}"), CHAIN).unwrap())
+        .collect();
+    server.join();
+
+    for run in runs {
+        let s = server.status(run).unwrap();
+        assert_eq!(s.state, RunState::Completed, "{:?}", s.error);
+        assert_eq!(
+            s.lines, baseline.report.lines,
+            "recovery must be invisible per run (run {run}, seed {seed})"
+        );
+    }
+    assert_eq!(server.leaked_residents(), 0, "no run may leak residents (seed {seed})");
+    assert_eq!(server.reserved_spend(), 0.0, "no run may leak reservations (seed {seed})");
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,271 @@
+//! Integration: the run-scoped runtime and the multi-run service —
+//! concurrent runs on one shared platform keep solo-identical traces,
+//! per-tenant spend accounts are float-exact, and cancellation leaves
+//! no residue (no leaked residents, no standing reservations).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use emerald::cloud::{CloudTier, Platform, PlatformConfig};
+use emerald::engine::activity::need_num;
+use emerald::engine::{
+    ActivityRegistry, Engine, Event, RunContext, RunReport, Services,
+};
+use emerald::expr::Value;
+use emerald::migration::{DataPolicy, ManagerConfig, MigrationManager};
+use emerald::partitioner;
+use emerald::service::{RunState, Server, ServiceConfig};
+use emerald::workflow::xaml;
+
+fn registry() -> Arc<ActivityRegistry> {
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("math.square", |c, inputs| {
+        c.charge_compute(Duration::from_millis(40));
+        let x = need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x * x))].into())
+    });
+    // 0.25 reference-seconds per call: on a $1/ref-s tier every call
+    // charges exactly $0.25 — dyadic, so ledger comparisons are exact.
+    reg.register_fn("pay.op", |c, inputs| {
+        c.charge_compute(Duration::from_millis(250));
+        let x = need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x + 1.0))].into())
+    });
+    Arc::new(reg)
+}
+
+fn square_wf(x: u32) -> String {
+    format!(
+        r#"<Workflow>
+             <Variables><Variable Name="y"/></Variables>
+             <Sequence>
+               <InvokeActivity DisplayName="sq" Activity="math.square" In.x="{x}"
+                               Out.y="y" Remotable="true"/>
+               <WriteLine Text="str(y)"/>
+             </Sequence>
+           </Workflow>"#
+    )
+}
+
+/// Six chained $0.25 offloads; a $1.0 tenant budget admits exactly
+/// four and declines two to local execution (same lines either way).
+fn metered_wf() -> String {
+    let steps: String = (1..=6)
+        .map(|i| {
+            format!(
+                r#"<InvokeActivity DisplayName="p{i}" Activity="pay.op" In.x="y"
+                                   Out.y="y" Remotable="true"/>"#
+            )
+        })
+        .collect();
+    format!(
+        r#"<Workflow>
+             <Variables><Variable Name="y" Init="0"/></Variables>
+             <Sequence>
+               {steps}
+               <WriteLine Text="str(y)"/>
+             </Sequence>
+           </Workflow>"#
+    )
+}
+
+/// Node names vary with live placement on a shared pool (a concurrent
+/// neighbour can take the VM the solo run would have gotten), so trace
+/// comparisons blank them; everything else — event kinds, order,
+/// steps, simulated durations, payloads, charges — must be identical.
+fn normalized(events: &[Event]) -> Vec<Event> {
+    events
+        .iter()
+        .cloned()
+        .map(|e| match e {
+            Event::ActivityStarted { step, .. } => {
+                Event::ActivityStarted { step, node: String::new() }
+            }
+            Event::OffloadCharged { step, spend, .. } => {
+                Event::OffloadCharged { step, node: String::new(), spend }
+            }
+            other => other,
+        })
+        .collect()
+}
+
+/// Run one workflow under its own run context + manager on shared
+/// services — the engine-level shape of one service run.
+fn run_scoped(
+    services: &Arc<Services>,
+    reg: &Arc<ActivityRegistry>,
+    ctx: RunContext,
+    wf_xml: &str,
+) -> RunReport {
+    let mut cfg = ManagerConfig::new(DataPolicy::Mdss);
+    cfg.run = ctx.clone();
+    let mgr = MigrationManager::in_proc_with_config(services.clone(), reg.clone(), cfg);
+    let engine = Engine::new(reg.clone(), services.clone())
+        .with_offload(mgr)
+        .in_run(ctx);
+    let (part, _) = partitioner::partition(&xaml::parse(wf_xml).unwrap()).unwrap();
+    engine.run(&part).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Tentpole acceptance: concurrent runs on one shared platform produce
+// the same lines and events as the same workflow executed solo.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_runs_keep_solo_identical_traces() {
+    let reg = registry();
+    // Solo baselines: the same run identities, each alone on a fresh
+    // platform. (The identity must match because the run tag rides on
+    // the wire, and request bytes feed the simulated transfer times —
+    // what this test isolates is the effect of *concurrency*.)
+    let solo: Vec<RunReport> = (2u32..6)
+        .map(|x| {
+            let services = Services::without_runtime(Platform::paper_testbed());
+            let ctx = RunContext::service(x as u64, format!("t{x}"));
+            run_scoped(&services, &reg, ctx, &square_wf(x))
+        })
+        .collect();
+
+    // The same four workflows concurrently, sharing ONE platform.
+    let services = Services::without_runtime(Platform::paper_testbed());
+    let handles: Vec<_> = (2u32..6)
+        .map(|x| {
+            let services = services.clone();
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                let ctx = RunContext::service(x as u64, format!("t{x}"));
+                run_scoped(&services, &reg, ctx, &square_wf(x))
+            })
+        })
+        .collect();
+    let concurrent: Vec<RunReport> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (s, c) in solo.iter().zip(&concurrent) {
+        assert_eq!(s.lines, c.lines, "lines must match the solo run");
+        assert_eq!(
+            normalized(&s.events),
+            normalized(&c.events),
+            "events (modulo placement) must match the solo run"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: per-tenant spend accounts are float-exact. Six $0.25
+// offloads against a $1.0 tenant budget commit exactly $1.0 — four
+// admitted, two declined to local execution — and the lines are the
+// same as an unmetered run.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tenant_budgets_are_float_exact_and_never_overshoot() {
+    let services = Services::without_runtime(
+        Platform::new(PlatformConfig {
+            tiers: vec![CloudTier::priced(2, 2.0, 1.0), CloudTier::priced(2, 8.0, 1.0)],
+            ..PlatformConfig::default()
+        })
+        .unwrap(),
+    );
+    let mut config = ServiceConfig::new();
+    config.tenant_budget = Some(1.0);
+    let server = Server::new(services, registry(), config);
+
+    let ada = server.submit("ada", &metered_wf()).unwrap();
+    let grace = server.submit("grace", &metered_wf()).unwrap();
+    server.join();
+
+    for run in [ada, grace] {
+        let s = server.status(run).unwrap();
+        assert_eq!(s.state, RunState::Completed, "{:?}", s.error);
+        assert_eq!(s.lines, vec!["6"], "declined steps still execute locally");
+        assert_eq!(s.spend, 1.0, "exactly four $0.25 offloads commit");
+    }
+    for (tenant, committed, reserved, budget) in server.tenant_ledgers() {
+        assert_eq!(committed, 1.0, "tenant '{tenant}' must commit exactly $1.0");
+        assert_eq!(reserved, 0.0, "tenant '{tenant}' must hold no reservations at rest");
+        assert_eq!(budget, 1.0);
+        assert!(committed <= budget, "tenant '{tenant}' overshot its budget");
+    }
+    assert_eq!(server.leaked_residents(), 0);
+    assert_eq!(server.reserved_spend(), 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Satellite: cancelling one run mid-offload releases its lease and
+// reservations, sweeps its residents, and leaves the surviving runs'
+// traces untouched (identical to their solo baselines).
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancellation_leaves_no_residue_and_spares_survivors() {
+    // Gate: 0 = idle, 1 = the doomed run is executing remotely,
+    // 2 = released.
+    let gate = Arc::new((Mutex::new(0u8), Condvar::new()));
+    let mut reg = ActivityRegistry::new();
+    reg.register_fn("math.square", |c, inputs| {
+        c.charge_compute(Duration::from_millis(40));
+        let x = need_num(inputs, "x")?;
+        Ok([("y".to_string(), Value::Num(x * x))].into())
+    });
+    let g = gate.clone();
+    reg.register_fn("gate.hold", move |_c, _inputs| {
+        let (lock, cv) = &*g;
+        let mut s = lock.lock().unwrap();
+        *s = 1;
+        cv.notify_all();
+        while *s < 2 {
+            s = cv.wait(s).unwrap();
+        }
+        Ok(Default::default())
+    });
+    let reg = Arc::new(reg);
+
+    let solo_lines: Vec<Vec<String>> = (2u32..4)
+        .map(|x| {
+            let services = Services::without_runtime(Platform::paper_testbed());
+            run_scoped(&services, &reg, RunContext::solo(), &square_wf(x)).lines
+        })
+        .collect();
+
+    let services = Services::without_runtime(Platform::paper_testbed());
+    let server = Server::new(services, reg, ServiceConfig::new());
+    let gated = r#"<Workflow>
+                     <Sequence>
+                       <InvokeActivity DisplayName="hold" Activity="gate.hold"
+                                       Remotable="true"/>
+                       <WriteLine Text="'never printed'"/>
+                     </Sequence>
+                   </Workflow>"#;
+    let doomed = server.submit("grace", gated).unwrap();
+    // Wait until the doomed run is executing remotely, then start the
+    // survivors, cancel the doomed run, and release the gate.
+    {
+        let (lock, cv) = &*gate;
+        let mut s = lock.lock().unwrap();
+        while *s < 1 {
+            s = cv.wait(s).unwrap();
+        }
+    }
+    let survivors: Vec<u64> =
+        (2u32..4).map(|x| server.submit("ada", &square_wf(x)).unwrap()).collect();
+    assert!(server.cancel(doomed));
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = 2;
+        cv.notify_all();
+    }
+    server.join();
+
+    let s = server.status(doomed).unwrap();
+    assert_eq!(s.state, RunState::Cancelled, "{:?}", s.error);
+    assert!(s.lines.is_empty(), "a cancelled run publishes no lines");
+    for (run, solo) in survivors.iter().zip(&solo_lines) {
+        let s = server.status(*run).unwrap();
+        assert_eq!(s.state, RunState::Completed, "{:?}", s.error);
+        assert_eq!(&s.lines, solo, "survivor trace must match its solo baseline");
+    }
+    assert_eq!(server.leaked_residents(), 0, "cancelled run must sweep its residents");
+    assert_eq!(server.reserved_spend(), 0.0, "no reservation may outlive its offload");
+}
